@@ -1,0 +1,59 @@
+use ecqx::exp;
+use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
+use ecqx::coordinator::trainer::evaluate;
+use ecqx::data::DataLoader;
+use ecqx::nn::QLayer;
+use ecqx::quant::Codebook;
+use ecqx::tensor::{Tensor, TensorI32};
+use std::collections::BTreeMap;
+fn main() -> anyhow::Result<()> {
+    let eng = exp::engine()?;
+    let e = exp::MLP_GSC;
+    let pre = exp::pretrained(&eng, &e, 17)?;
+    let mut state = pre.state;
+    let (train, val) = exp::datasets(&e, 17);
+    let tdl = DataLoader::new(&train, 128, true, 3);
+    let vdl = DataLoader::new(&val, 128, false, 3);
+    // accumulate relevances over 16 train batches
+    let art = eng.manifest.artifact("mlp_gsc_lrp")?.clone();
+    let mut acc: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    for (i, batch) in tdl.epoch(0).enumerate().take(16) {
+        let sc = Scalars { eqw: 0.0, ..Default::default() };
+        let inputs = bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &sc)?;
+        let outs = eng.call_named(&art.name, &inputs)?;
+        for (k, v) in outs {
+            if let Some(n) = k.strip_prefix("r_") {
+                let t = v.into_f32();
+                let e = acc.entry(n.to_string()).or_insert_with(|| vec![0.0; t.numel()]);
+                for (a, b) in e.iter_mut().zip(&t.data) { *a += b.abs(); }
+            }
+        }
+        let _ = i;
+    }
+    // per-layer: prune frac by |w| vs by relevance, eval
+    for frac in [0.5f64, 0.7, 0.8] {
+        for mode in ["magnitude", "relevance"] {
+            for name in state.qnames() {
+                let w = state.params[&name].clone();
+                let score: Vec<f32> = match mode {
+                    "magnitude" => w.data.iter().map(|x| x.abs()).collect(),
+                    _ => acc[&name].clone(),
+                };
+                let mut order: Vec<usize> = (0..w.numel()).collect();
+                order.sort_by(|&a, &b| score[a].partial_cmp(&score[b]).unwrap());
+                let cut = (w.numel() as f64 * frac) as usize;
+                let mut qw = w.data.clone();
+                let mut idx = vec![1i32; w.numel()];
+                for &i in &order[..cut] { qw[i] = 0.0; idx[i] = 0; }
+                state.qlayers.insert(name.clone(), QLayer {
+                    qw: Tensor::new(w.shape.clone(), qw),
+                    idx: TensorI32::new(w.shape.clone(), idx),
+                    codebook: Codebook::fit(&w.data, 4),
+                });
+            }
+            let ev = evaluate(&eng, &state, &vdl, ParamSource::Quantized)?;
+            println!("prune {:.0}% by {mode:<10} -> acc {:.4}", frac * 100.0, ev.accuracy);
+        }
+    }
+    Ok(())
+}

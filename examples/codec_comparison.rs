@@ -1,0 +1,77 @@
+//! Codec family comparison on a real quantized model: encode every layer
+//! of an ECQ-assigned MLP with the DeepCABAC-style coder and the
+//! baselines (bit-packing, Huffman, RLE, CSR size model, deflate), across
+//! sparsity levels — the codec-side evidence behind Figs. 9/10 and the
+//! paper's "highly compressible" claim.
+//!
+//! Run: `cargo run --release --example codec_comparison`
+
+use ecqx::codec::compare_codecs;
+use ecqx::exp;
+use ecqx::metrics::Table;
+use ecqx::quant::{assign_ref, Codebook};
+use ecqx::tensor::TensorI32;
+
+fn main() -> anyhow::Result<()> {
+    let engine = exp::engine()?;
+    let pre = exp::pretrained(&engine, &exp::MLP_GSC, 17)?;
+
+    // dimensionless lambda (coordinator semantics: scaled by step² below)
+    for (label, lam_dimless) in
+        [("low sparsity (lambda=0)", 0.0f32), ("high sparsity (lambda=14)", 14.0)]
+    {
+        println!("\n== {label} ==");
+        let mut table = Table::new(&[
+            "layer", "numel", "sparsity", "fp32 kB", "packed", "CABAC", "Huffman",
+            "RLE", "CSR", "deflate",
+        ]);
+        let mut tot = [0usize; 7];
+        for name in pre.state.qnames() {
+            let w = &pre.state.params[&name];
+            let cb = Codebook::fit(&w.data, 4);
+            let ones = vec![1.0f32; w.numel()];
+            let lam = lam_dimless * cb.step * cb.step;
+            let a = assign_ref(&w.data, &ones, &ones, &cb, lam);
+            let idx = TensorI32::new(w.shape.clone(), a.idx);
+            let zeros = idx.data.iter().filter(|&&i| i == 0).count();
+            let cmp = compare_codecs(&idx, 4);
+            let kb = |b: usize| format!("{:.1}", b as f64 / 1000.0);
+            table.row(&[
+                name.clone(),
+                w.numel().to_string(),
+                format!("{:.3}", zeros as f64 / w.numel() as f64),
+                kb(cmp.fp32),
+                kb(cmp.packed),
+                kb(cmp.cabac),
+                kb(cmp.huffman),
+                kb(cmp.rle),
+                kb(cmp.csr),
+                kb(cmp.deflate),
+            ]);
+            for (t, v) in tot.iter_mut().zip([
+                cmp.fp32, cmp.packed, cmp.cabac, cmp.huffman, cmp.rle, cmp.csr,
+                cmp.deflate,
+            ]) {
+                *t += v;
+            }
+        }
+        table.row(&[
+            "TOTAL".into(),
+            "".into(),
+            "".into(),
+            format!("{:.1}", tot[0] as f64 / 1000.0),
+            format!("{:.1}", tot[1] as f64 / 1000.0),
+            format!("{:.1}", tot[2] as f64 / 1000.0),
+            format!("{:.1}", tot[3] as f64 / 1000.0),
+            format!("{:.1}", tot[4] as f64 / 1000.0),
+            format!("{:.1}", tot[5] as f64 / 1000.0),
+            format!("{:.1}", tot[6] as f64 / 1000.0),
+        ]);
+        println!("{}", table.render());
+        println!(
+            "CABAC compression ratio vs fp32: {:.1}x",
+            tot[0] as f64 / tot[2] as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: load the AOT artifacts, quantize a pre-trained MLP with
+//! ECQ^x to 4 bit, and print the accuracy / sparsity / compression-ratio
+//! summary — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use ecqx::coordinator::binder::ParamSource;
+use ecqx::coordinator::trainer::evaluate;
+use ecqx::coordinator::{
+    compressed_size, compression_ratio, AssignConfig, Method, QatConfig, QatTrainer,
+};
+use ecqx::data::DataLoader;
+use ecqx::exp;
+
+fn main() -> anyhow::Result<()> {
+    // 1. PJRT engine over the HLO artifacts (python never runs from here on)
+    let engine = exp::engine()?;
+
+    // 2. pre-trained FP32 baseline (trained + cached on first use)
+    let model = exp::MLP_GSC;
+    let pre = exp::pretrained(&engine, &model, 17)?;
+    println!(
+        "baseline: {} params, val acc {:.4}",
+        pre.state.spec.total_params(),
+        pre.baseline_acc
+    );
+
+    // 3. synthetic GSC data loaders
+    let (train, val) = exp::datasets(&model, 17);
+    let spec = engine.manifest.model(model.name)?;
+    let train_dl = DataLoader::new(&train, spec.batch, true, 17);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 17);
+
+    // 4. ECQ^x quantization-aware training: 4 bit, entropy constraint
+    //    lambda, LRP target-sparsity p
+    let cfg = QatConfig {
+        assign: AssignConfig {
+            method: Method::Ecqx,
+            bits: 4,
+            lambda: 10.0,
+            p: 0.15,
+            ..Default::default()
+        },
+        epochs: 1,
+        lr: 4e-4,
+        ..Default::default()
+    };
+    let mut state = pre.state;
+    let outcome = QatTrainer::new(cfg).run(&engine, &mut state, &train_dl, &val_dl)?;
+
+    // 5. results
+    let ev = evaluate(&engine, &state, &val_dl, ParamSource::Quantized)?;
+    println!("\nquantized: val acc {:.4} (drop {:+.4})", ev.accuracy, ev.accuracy - pre.baseline_acc);
+    println!("sparsity:  {:.2}%", outcome.final_sparsity * 100.0);
+    println!(
+        "size:      {:.1} kB (CR {:.1}x vs {:.1} kB fp32)",
+        compressed_size(&state) as f64 / 1000.0,
+        compression_ratio(&state),
+        state.fp32_bytes() as f64 / 1000.0
+    );
+    Ok(())
+}

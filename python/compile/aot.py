@@ -1,0 +1,355 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts + manifest.
+
+Runs once at build time (`make artifacts`); the rust coordinator then loads
+`artifacts/*.hlo.txt` via PJRT and never touches python again.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest (artifacts/manifest.txt) is the single source of truth the
+rust side parses: model/param tables, artifact input/output signatures,
+and a source hash for incremental rebuilds.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ecqx_assign
+
+K_MAX = ecqx_assign.K_MAX
+
+# Power-of-two element-count buckets served by the shared assign kernel.
+ASSIGN_BUCKETS = [
+    1024,
+    2048,
+    4096,
+    16384,
+    32768,
+    65536,
+    131072,
+    262144,
+    524288,
+]
+
+
+def bucket_for(n):
+    for b in ASSIGN_BUCKETS:
+        if n <= b:
+            return b
+    raise ValueError(f"layer of {n} elements exceeds largest assign bucket")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt_shape(shape):
+    return "scalar" if len(shape) == 0 else "x".join(str(d) for d in shape)
+
+
+class Sig:
+    """Ordered flat input/output signature of one artifact."""
+
+    def __init__(self):
+        self.ins = []  # (name, dtype_str, shape)
+        self.outs = []
+
+    def add_in(self, name, shape, dtype="f32"):
+        self.ins.append((name, dtype, tuple(shape)))
+
+    def add_out(self, name, shape, dtype="f32"):
+        self.outs.append((name, dtype, tuple(shape)))
+
+    def in_specs(self):
+        dt = {"f32": jnp.float32, "i32": jnp.int32}
+        return [_spec(s, dt[d]) for (_, d, s) in self.ins]
+
+
+def _param_sig(sig, model, prefix="p_"):
+    for s in model.param_specs():
+        sig.add_in(prefix + s.name, s.shape)
+
+
+def build_model_artifacts(model):
+    """Return list of (name, lowered_fn, Sig) for one model."""
+    specs = model.param_specs()
+    names = [s.name for s in specs]
+    qnames = [s.name for s in specs if s.quantize]
+    bsz = model.batch
+    xshape = (bsz,) + model.input_shape
+    arts = []
+
+    def unflatten(args, groups):
+        """Split flat positional args into dicts per group of names."""
+        out = []
+        i = 0
+        for g in groups:
+            out.append({k: args[i + j] for j, k in enumerate(g)})
+            i += len(g)
+        return out, args[i:]
+
+    # ---- fp_train ----
+    sig = Sig()
+    _param_sig(sig, model)
+    for n in names:
+        sig.add_in("m_" + n, dict((s.name, s.shape) for s in specs)[n])
+    for n in names:
+        sig.add_in("v_" + n, dict((s.name, s.shape) for s in specs)[n])
+    sig.add_in("x", xshape)
+    sig.add_in("y", (bsz,), "i32")
+    sig.add_in("t", ())
+    sig.add_in("lr", ())
+
+    def fp_train(*args):
+        (p, m, v), rest = unflatten(args, [names, names, names])
+        x, y, t, lr = rest
+        np_, nm, nv, loss, corr = M.fp_train_step(model, p, m, v, x, y, t, lr)
+        return (
+            tuple(np_[n] for n in names)
+            + tuple(nm[n] for n in names)
+            + tuple(nv[n] for n in names)
+            + (loss, corr)
+        )
+
+    for pre in ("p_", "m_", "v_"):
+        for s in specs:
+            sig.add_out(pre + s.name, s.shape)
+    sig.add_out("loss", ())
+    sig.add_out("correct", ())
+    arts.append((f"{model.name}_fp_train", fp_train, sig))
+
+    # ---- ste_train ----
+    sig = Sig()
+    _param_sig(sig, model)
+    shp = dict((s.name, s.shape) for s in specs)
+    for n in qnames:
+        sig.add_in("q_" + n, shp[n])
+    for n in names:
+        sig.add_in("m_" + n, shp[n])
+    for n in names:
+        sig.add_in("v_" + n, shp[n])
+    sig.add_in("x", xshape)
+    sig.add_in("y", (bsz,), "i32")
+    sig.add_in("t", ())
+    sig.add_in("lr", ())
+    sig.add_in("gs", ())
+
+    def ste_train(*args):
+        (p, q, m, v), rest = unflatten(args, [names, qnames, names, names])
+        x, y, t, lr, gs = rest
+        np_, nm, nv, loss, corr = M.ste_train_step(
+            model, p, q, m, v, x, y, t, lr, gs
+        )
+        return (
+            tuple(np_[n] for n in names)
+            + tuple(nm[n] for n in names)
+            + tuple(nv[n] for n in names)
+            + (loss, corr)
+        )
+
+    for pre in ("p_", "m_", "v_"):
+        for s in specs:
+            sig.add_out(pre + s.name, s.shape)
+    sig.add_out("loss", ())
+    sig.add_out("correct", ())
+    arts.append((f"{model.name}_ste_train", ste_train, sig))
+
+    # ---- lrp ----
+    sig = Sig()
+    _param_sig(sig, model)
+    sig.add_in("x", xshape)
+    sig.add_in("y", (bsz,), "i32")
+    sig.add_in("eqw", ())
+
+    def lrp(*args):
+        (p,), rest = unflatten(args, [names])
+        x, y, eqw = rest
+        rws = M.lrp_step(model, p, x, y, eqw)
+        return tuple(rws[n] for n in qnames)
+
+    for n in qnames:
+        sig.add_out("r_" + n, shp[n])
+    arts.append((f"{model.name}_lrp", lrp, sig))
+
+    # ---- eval ----
+    sig = Sig()
+    _param_sig(sig, model)
+    sig.add_in("x", xshape)
+    sig.add_in("y", (bsz,), "i32")
+
+    def ev(*args):
+        (p,), rest = unflatten(args, [names])
+        x, y = rest
+        return M.eval_step(model, p, x, y)
+
+    sig.add_out("loss", ())
+    sig.add_out("correct", ())
+    arts.append((f"{model.name}_eval", ev, sig))
+
+    # ---- eval_actq (Fig. 1 activation-quantization probe) ----
+    if model.name in ("mlp_gsc", "vgg_cifar"):
+        sig = Sig()
+        _param_sig(sig, model)
+        sig.add_in("x", xshape)
+        sig.add_in("y", (bsz,), "i32")
+        sig.add_in("abits", ())
+        fn = M.eval_actq_mlp if model.name == "mlp_gsc" else M.eval_actq_vgg
+
+        def ev_actq(*args, _fn=fn):
+            (p,), rest = unflatten(args, [names])
+            x, y, abits = rest
+            return _fn(model, p, x, y, abits)
+
+        sig.add_out("loss", ())
+        sig.add_out("correct", ())
+        arts.append((f"{model.name}_eval_actq", ev_actq, sig))
+
+    # ---- eval_q: deployment-form gather eval (MLP only) ----
+    if model.name == "mlp_gsc":
+        onames = [s.name for s in specs if not s.quantize]
+        sig = Sig()
+        for n in qnames:
+            sig.add_in("idx_" + n, shp[n], "i32")
+        for n in qnames:
+            sig.add_in("cb_" + n, (K_MAX,))
+        for n in onames:
+            sig.add_in("p_" + n, shp[n])
+        sig.add_in("x", xshape)
+        sig.add_in("y", (bsz,), "i32")
+
+        def ev_q(*args):
+            (idx, cbs, po), rest = unflatten(args, [qnames, qnames, onames])
+            x, y = rest
+            return M.eval_gather_mlp(model, po, idx, cbs, x, y)
+
+        sig.add_out("loss", ())
+        sig.add_out("correct", ())
+        arts.append((f"{model.name}_eval_q", ev_q, sig))
+
+    return arts
+
+
+def build_assign_artifacts():
+    arts = []
+    for n in ASSIGN_BUCKETS:
+        sig = Sig()
+        sig.add_in("w", (n,))
+        sig.add_in("r", (n,))
+        sig.add_in("mask", (n,))
+        sig.add_in("centroids", (K_MAX,))
+        sig.add_in("cvalid", (K_MAX,))
+        sig.add_in("lam", ())
+
+        def assign(w, r, mask, cen, cv, lam):
+            return ecqx_assign.assign_full(w, r, mask, cen, cv, lam)
+
+        sig.add_out("idx", (n,), "i32")
+        sig.add_out("qw", (n,))
+        sig.add_out("counts", (K_MAX,))
+        arts.append((f"assign_{n}", assign, sig))
+    return arts
+
+
+def source_hash():
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    files = [os.path.join(base, "model.py"), os.path.join(base, "aot.py")]
+    kdir = os.path.join(base, "kernels")
+    files += sorted(
+        os.path.join(kdir, f) for f in os.listdir(kdir) if f.endswith(".py")
+    )
+    for f in files:
+        with open(f, "rb") as fh:
+            h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--models",
+        default="mlp_gsc,vgg_cifar,vgg_cifar_bn,resnet_voc",
+        help="comma-separated model list",
+    )
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    manifest_path = os.path.join(outdir, "manifest.txt")
+    h = source_hash()
+
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            first = f.readline().strip()
+        if first == f"hash {h}":
+            ok = True
+            with open(manifest_path) as f:
+                for line in f:
+                    if line.startswith("artifact "):
+                        fname = line.split("file=")[1].strip()
+                        if not os.path.exists(os.path.join(outdir, fname)):
+                            ok = False
+            if ok:
+                print(f"artifacts up to date (hash {h})")
+                return
+    model_names = args.models.split(",")
+
+    lines = [f"hash {h}"]
+    all_arts = []
+    for mn in model_names:
+        model = M.get_model(mn)
+        lines.append(
+            f"model {model.name} batch={model.batch} "
+            f"classes={model.num_classes} "
+            f"input={_fmt_shape(model.input_shape)}"
+        )
+        for s in model.param_specs():
+            lines.append(
+                f"param {s.name} f32 {_fmt_shape(s.shape)} "
+                f"init={s.init} quant={1 if s.quantize else 0}"
+            )
+        all_arts += build_model_artifacts(model)
+    all_arts += build_assign_artifacts()
+    lines.append(f"kmax {K_MAX}")
+    lines.append("buckets " + ",".join(str(b) for b in ASSIGN_BUCKETS))
+
+    for name, fn, sig in all_arts:
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        print(f"lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*sig.in_specs())
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        lines.append(f"artifact {name} file={fname}")
+        for n, d, s in sig.ins:
+            lines.append(f"in {n} {d} {_fmt_shape(s)}")
+        for n, d, s in sig.outs:
+            lines.append(f"out {n} {d} {_fmt_shape(s)}")
+        lines.append("end")
+
+    with open(manifest_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {len(all_arts)} artifacts + manifest to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""L1 Pallas kernel: the ECQ^x assignment function (Eq. 11 of the paper).
+
+Given the flattened full-precision weights of a layer, the centroid
+codebook, per-cluster entropy costs and per-weight relevance factors, the
+kernel computes for every weight the assignment cost to every centroid
+
+    cost[i, c] = (w_i - centroid_c)^2 + entcost_c          (c != 0)
+    cost[i, 0] = r_i * ((w_i - centroid_0)^2 + entcost_0)  (zero cluster)
+
+with entcost_c = -lambda^(l) * log2(P_c) (+inf for invalid codebook
+slots), and assigns each weight to the argmin centroid. `r_i` is the
+rho-scaled LRP relevance factor (== 1.0 everywhere for plain ECQ).
+
+Layout decisions (TPU-shaped, run under interpret=True on CPU):
+  * the flat weight vector streams through VMEM in BLK-element blocks,
+  * the codebook is tiny (K_MAX = 32 slots, slot 0 == zero centroid) and
+    resident across all grid steps,
+  * one artifact per power-of-two size bucket serves every layer and
+    every bit width: padding is masked out via `mask`, unused codebook
+    slots are +inf entcost.
+
+The surrounding two-phase probability computation (nearest-neighbour
+counts -> P_c) lives in `assign_full` below (L2, plain jnp) and is lowered
+into the same HLO artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Codebook capacity: 2^5 - 1 = 31 centroids (5 bit) padded to 32 lanes.
+K_MAX = 32
+# Elements streamed per grid step.
+BLK = 8192
+
+
+def _assign_kernel(w_ref, r_ref, cen_ref, entcost_ref, idx_ref, qw_ref):
+    w = w_ref[...]  # [BLK]
+    r = r_ref[...]  # [BLK]
+    cen = cen_ref[...]  # [K_MAX]
+    ent = entcost_ref[...]  # [K_MAX]
+    # [BLK, K_MAX] squared distances + information-content cost.
+    d2 = (w[:, None] - cen[None, :]) ** 2
+    cost = d2 + ent[None, :]
+    # Zero-cluster cost is scaled by the relevance factor (Eq. 11).
+    zero_cost = r * cost[:, 0]
+    cost = cost.at[:, 0].set(zero_cost)
+    idx = jnp.argmin(cost, axis=1).astype(jnp.int32)
+    idx_ref[...] = idx
+    qw_ref[...] = jnp.take(cen, idx, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("blk",))
+def assign_pallas(w, r, centroids, entcost, blk=BLK):
+    """Run the assignment kernel over a flat (padded) weight vector.
+
+    Args:
+      w: f32[N] flattened weights, N a multiple of blk.
+      r: f32[N] relevance factors for the zero cluster (1.0 == neutral).
+      centroids: f32[K_MAX], slot 0 must be the zero centroid.
+      entcost: f32[K_MAX], -lambda*log2(P_c); +BIG for invalid slots.
+
+    Returns:
+      (idx i32[N], qw f32[N]) centroid indices and dequantized weights.
+    """
+    n = w.shape[0]
+    blk = min(blk, n)
+    assert n % blk == 0, (n, blk)
+    grid = (n // blk,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((K_MAX,), lambda i: (0,)),
+            pl.BlockSpec((K_MAX,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(w, r, centroids, entcost)
+
+
+BIG = 1e30  # cost for invalid codebook slots
+P_EPS = 1e-9  # probability floor (empty clusters)
+
+
+def cluster_probs(w, mask, centroids, cvalid):
+    """Phase 1: nearest-neighbour cluster probabilities P_c.
+
+    P_c is the fraction of (valid) weights whose nearest centroid is c —
+    the source distribution the entropy constraint is computed from."""
+    d2 = (w[:, None] - centroids[None, :]) ** 2
+    d2 = d2 + (1.0 - cvalid)[None, :] * BIG
+    nn = jnp.argmin(d2, axis=1)
+    # scatter-add histogram (much cheaper than a one-hot matmul; §Perf)
+    counts = jnp.zeros(centroids.shape[0], jnp.float32).at[nn].add(mask)
+    total = jnp.maximum(jnp.sum(mask), 1.0)
+    return counts / total, counts
+
+
+def assign_full(w, r, mask, centroids, cvalid, lam):
+    """Full two-phase ECQ^x assignment for one layer (lowered to HLO).
+
+    Args:
+      w: f32[N] padded flat weights.
+      r: f32[N] relevance factors (zero-cluster cost scale).
+      mask: f32[N] 1 for real elements, 0 for bucket padding.
+      centroids: f32[K_MAX] codebook, slot 0 == 0.0.
+      cvalid: f32[K_MAX] 1 for valid slots.
+      lam: f32 scalar, the layer-scaled Lagrange multiplier lambda^(l).
+
+    Returns:
+      idx i32[N], qw f32[N], counts f32[K_MAX] (final assignment counts).
+    """
+    probs, _ = cluster_probs(w, mask, centroids, cvalid)
+    entcost = -lam * jnp.log2(jnp.maximum(probs, P_EPS))
+    entcost = entcost + (1.0 - cvalid) * BIG
+    idx, qw = assign_pallas(w, r, centroids, entcost)
+    # Padding elements are forced into the zero cluster and excluded from
+    # the reported counts.
+    idx = jnp.where(mask > 0.5, idx, 0)
+    qw = qw * mask
+    counts = jnp.zeros(centroids.shape[0], jnp.float32).at[idx].add(mask)
+    return idx, qw, counts

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: per-weight LRP relevance aggregation for dense layers.
+
+For the epsilon-rule on a dense layer (Eq. 5/6 of the paper), the
+relevance of weight w_ij aggregated over a batch is
+
+    R_w[i, j] = sum_b a[b, i] * w[i, j] * s[b, j]
+              = w[i, j] * (a^T @ s)[i, j]
+
+with s[b, j] = R_out[b, j] / (z[b, j] + eps * sign(z[b, j])) the
+"upstream modified gradient". The batch contraction is an MXU matmul;
+the elementwise scale by w is fused into the final K-step of the same
+kernel, so the whole aggregation is a single Pallas call.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _lrp_dense_kernel(a_ref, s_ref, w_ref, o_ref, *, nsteps):
+    """Accumulate (a^T s) tiles over the batch axis; scale by w at the end."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, s_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == nsteps - 1)
+    def _scale():
+        o_ref[...] *= w_ref[...]
+
+
+def _pad_to(x, multiples):
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, multiples)]
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "bb"))
+def lrp_dense_rw(a, s, w, bi=TILE, bj=TILE, bb=TILE):
+    """Per-weight relevance R_w = w * (a^T @ s) via the Pallas kernel.
+
+    Args:
+      a: f32[B, I] layer inputs.
+      s: f32[B, J] upstream relevance / stabilized pre-activations.
+      w: f32[I, J] layer weights.
+    Returns:
+      f32[I, J] batch-aggregated per-weight relevances.
+    """
+    bsz, i = a.shape
+    _, j = s.shape
+    assert w.shape == (i, j), (a.shape, s.shape, w.shape)
+    bi, bj, bb = min(bi, i), min(bj, j), min(bb, bsz)
+    ap = _pad_to(a, (bb, bi))
+    sp = _pad_to(s, (bb, bj))
+    wp = _pad_to(w, (bi, bj))
+    bp, ip = ap.shape
+    _, jp = sp.shape
+    nsteps = bp // bb
+    grid = (ip // bi, jp // bj, nsteps)
+    out = pl.pallas_call(
+        functools.partial(_lrp_dense_kernel, nsteps=nsteps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bi), lambda i_, j_, k_: (k_, i_)),
+            pl.BlockSpec((bb, bj), lambda i_, j_, k_: (k_, j_)),
+            pl.BlockSpec((bi, bj), lambda i_, j_, k_: (i_, j_)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i_, j_, k_: (i_, j_)),
+        out_shape=jax.ShapeDtypeStruct((ip, jp), jnp.float32),
+        interpret=True,
+    )(ap, sp, wp)
+    return out[:i, :j]
+
+
+def stabilize(z, eps):
+    """z + eps * sign(z) with sign(0) := 1 (paper Sec. 4.1)."""
+    sgn = jnp.where(z >= 0, 1.0, -1.0)
+    return z + eps * sgn

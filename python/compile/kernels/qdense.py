@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: tiled dense matmul for the quantized-dense hot path.
+
+The MXU-shaped workhorse of the stack. Every dense layer in every model
+(forward *and* the custom-VJP backward) routes through `matmul`, so the
+QAT hot path exercises the Pallas kernel end to end. `qdense` adds the
+bias; `qdense_gather` is the inference-time variant that dequantizes
+integer centroid indices through a codebook before the matmul (the
+"integer weights + look-up table" deployment mode of the paper).
+
+Kernels are lowered with interpret=True (CPU PJRT cannot run Mosaic
+custom-calls); the BlockSpec structure — (BM, BK) x (BK, BN) tiles with a
+K-accumulation grid axis — is the layout a real TPU would use, with the
+default 128 tile matching the MXU systolic array.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile edge: matches the 128x128 MXU systolic array.
+TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (BM, BN) output tile; grid axis 2 accumulates over K blocks."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, multiples):
+    """Zero-pad trailing dims of `x` up to the given multiples."""
+    pads = []
+    for dim, mult in zip(x.shape, multiples):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(a, b, bm=TILE, bk=TILE, bn=TILE):
+    """Pallas tiled matmul a @ b with zero-padding to tile multiples."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def pmatmul(a, b):
+    """Differentiable wrapper: Pallas matmul with a hand-written VJP
+    (pallas_call has no transpose rule), whose backward passes also run
+    through the Pallas kernel."""
+    return matmul(a, b)
+
+
+def _pmatmul_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _pmatmul_bwd(res, g):
+    a, b = res
+    return matmul(g, b.T), matmul(a.T, g)
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+def qdense(a, w, b):
+    """Dense layer y = a @ w + b through the Pallas matmul (differentiable)."""
+    return pmatmul(a, w) + b[None, :]
+
+
+def qdense_gather(a, idx, codebook, b):
+    """Inference-time quantized dense layer.
+
+    Weights are stored as int32 centroid indices `idx` (shape [I, J]) into
+    a per-layer `codebook` (shape [K]); they are dequantized by gather and
+    fed to the Pallas matmul. This is the deployment representation the
+    paper targets (integer weights + LUT)."""
+    w = jnp.take(codebook, idx, axis=0)
+    return matmul(a, w) + b[None, :]

@@ -1,0 +1,601 @@
+"""L2: JAX model definitions, LRP composite backward, and training steps.
+
+Three model families from the paper's evaluation:
+  * MLP_GSC    — 360-512-512-256-256-128-128-12 MLP (Google Speech Commands)
+  * VGG_CIFAR  — VGG-slim conv net for 32x32x3 (CIFAR-10), +BatchNorm variant
+  * RESNET_VOC — ResNet-lite with residual blocks + BN (Pascal VOC, 20 cls)
+
+Each model provides: a parameter specification (the single source of truth
+for the rust side, exported via the manifest), a forward pass whose dense
+layers run through the L1 Pallas matmul kernel, a composite-LRP backward
+(epsilon-rule for dense layers, alpha-beta rule with beta=1 for conv and
+BatchNorm layers — Sec. 4.1 of the paper) producing *per-weight*
+relevances, and the train/eval steps that are AOT-lowered to HLO text.
+
+Everything here is build-time Python; at experiment time only the rust
+coordinator runs, executing the lowered artifacts via PJRT.
+"""
+
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import qdense
+from .kernels.lrp_dense import lrp_dense_rw, stabilize
+
+EPS = 1e-6  # epsilon-rule stabilizer
+ALPHA, BETA = 2.0, 1.0  # alpha-beta rule parameters (paper: beta = 1)
+
+# name: parameter name; shape: tuple; init: he_in|zeros|ones;
+# quantize: True for weight tensors that ECQ(x) quantizes.
+ParamSpec = namedtuple("ParamSpec", "name shape init quantize")
+
+
+# --------------------------------------------------------------------------
+# shared building blocks
+# --------------------------------------------------------------------------
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    """NHWC x HWIO conv."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        (stride, stride),
+        padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+    )
+
+
+def bn_stats(x):
+    mu = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.var(x, axis=(0, 1, 2))
+    return mu, var
+
+
+def bn_fwd(x, gamma, beta):
+    """Batch-statistics BatchNorm (used in train and eval; see DESIGN.md)."""
+    mu, var = bn_stats(x)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * gamma + beta
+
+
+def softmax_xent(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def correct_count(logits, y):
+    return jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# LRP decomposition rules (Sec. 4.1)
+# --------------------------------------------------------------------------
+
+
+def lrp_relevance_init(logits, y, eqw):
+    """Initial relevance at the output layer.
+
+    Default (eqw=0): the target-class score f(x)_y, so samples are weighted
+    by prediction confidence. eqw=1: equally-weighted samples (R_n = 1,
+    the Fig. 4 setting)."""
+    onehot = jax.nn.one_hot(y, logits.shape[1], dtype=jnp.float32)
+    score = jnp.sum(onehot * logits, axis=1, keepdims=True)
+    weight = jnp.where(eqw > 0.5, 1.0, score)
+    return onehot * weight
+
+
+def lrp_dense_eps(a, w, b, r_out):
+    """Epsilon-rule for a dense layer -> (R_in, per-weight R_w).
+
+    R_w aggregation runs through the L1 Pallas kernel."""
+    z = jnp.matmul(a, w) + b[None, :]
+    s = r_out / stabilize(z, EPS)
+    r_in = a * jnp.matmul(s, w.T)
+    r_w = lrp_dense_rw(a, s, w)
+    return r_in, r_w
+
+
+def _conv_vjp_x(w, s, x_shape, stride, padding):
+    zeros = jnp.zeros(x_shape, jnp.float32)
+    _, vjp = jax.vjp(lambda t: conv2d(t, w, stride, padding), zeros)
+    return vjp(s)[0]
+
+
+def _conv_vjp_w(x, s, w_shape, stride, padding):
+    zeros = jnp.zeros(w_shape, jnp.float32)
+    _, vjp = jax.vjp(lambda t: conv2d(x, t, stride, padding), zeros)
+    return vjp(s)[0]
+
+
+def lrp_conv_ab(a, w, b, r_out, stride=1, padding="SAME"):
+    """Alpha-beta rule (alpha=2, beta=1) for a conv layer.
+
+    Positive/negative contribution split: (a_i w_ij)^+ = a+w+ + a-w-,
+    (a_i w_ij)^- = a+w- + a-w+. Relevance messages are aggregated over all
+    filter application contexts k (Eq. 7) via conv VJPs, per-weight
+    relevance via the `w (x) correlation(a, s)` identity."""
+    ap, an = jnp.maximum(a, 0.0), jnp.minimum(a, 0.0)
+    wp, wn = jnp.maximum(w, 0.0), jnp.minimum(w, 0.0)
+    bp, bn_ = jnp.maximum(b, 0.0), jnp.minimum(b, 0.0)
+    zp = conv2d(ap, wp, stride, padding) + conv2d(an, wn, stride, padding) + bp
+    zn = conv2d(ap, wn, stride, padding) + conv2d(an, wp, stride, padding) + bn_
+    sp = r_out / stabilize(zp, EPS)
+    sn = r_out / stabilize(zn, EPS)
+    xs, ws = a.shape, w.shape
+    r_in = ALPHA * (
+        ap * _conv_vjp_x(wp, sp, xs, stride, padding)
+        + an * _conv_vjp_x(wn, sp, xs, stride, padding)
+    ) - BETA * (
+        ap * _conv_vjp_x(wn, sn, xs, stride, padding)
+        + an * _conv_vjp_x(wp, sn, xs, stride, padding)
+    )
+    r_w = ALPHA * (
+        wp * _conv_vjp_w(ap, sp, ws, stride, padding)
+        + wn * _conv_vjp_w(an, sp, ws, stride, padding)
+    ) - BETA * (
+        wn * _conv_vjp_w(ap, sn, ws, stride, padding)
+        + wp * _conv_vjp_w(an, sn, ws, stride, padding)
+    )
+    return r_in, r_w
+
+
+def lrp_bn_ab(a, gamma, beta, r_out):
+    """Alpha-beta rule (beta=1) through a (non-canonized) BatchNorm layer.
+
+    BN acts as a per-channel diagonal linear map z = a*u + c with
+    u = gamma/sqrt(var+eps); the bias term absorbs its share of relevance
+    (paper Sec. 5.2.2: layers kept separate, not merged)."""
+    mu, var = bn_stats(a)
+    u = gamma / jnp.sqrt(var + 1e-5)
+    c = beta - mu * u
+    au = a * u
+    zp = jnp.maximum(au, 0.0) + jnp.maximum(c, 0.0)
+    zn = jnp.minimum(au, 0.0) + jnp.minimum(c, 0.0)
+    sp = r_out / stabilize(zp, EPS)
+    sn = r_out / stabilize(zn, EPS)
+    return ALPHA * jnp.maximum(au, 0.0) * sp - BETA * jnp.minimum(au, 0.0) * sn
+
+
+def lrp_maxpool(a, r_out, k=2):
+    """Winner-take-all redistribution through maxpool."""
+    z, vjp = jax.vjp(lambda t: maxpool(t, k), a)
+    s = r_out / stabilize(z, EPS)
+    return a * vjp(s)[0]
+
+
+def lrp_add(x1, x2, r_out):
+    """Proportional (epsilon) split over a residual addition."""
+    s = r_out / stabilize(x1 + x2, EPS)
+    return x1 * s, x2 * s
+
+
+def lrp_gap(a, r_out):
+    """Global average pooling: relevance proportional to contributions."""
+    z = jnp.mean(a, axis=(1, 2))
+    s = r_out / stabilize(z, EPS)
+    hw = a.shape[1] * a.shape[2]
+    return a * s[:, None, None, :] / hw
+
+
+# --------------------------------------------------------------------------
+# MLP_GSC
+# --------------------------------------------------------------------------
+
+MLP_DIMS = [360, 512, 512, 256, 256, 128, 128, 12]
+
+
+class MlpGsc:
+    """MLP for (synthetic) Google Speech Commands keyword spotting."""
+
+    name = "mlp_gsc"
+    batch = 128
+    input_shape = (360,)
+    num_classes = 12
+
+    def param_specs(self):
+        specs = []
+        for i, (din, dout) in enumerate(zip(MLP_DIMS[:-1], MLP_DIMS[1:])):
+            specs.append(ParamSpec(f"w{i}", (din, dout), "he_in", True))
+            specs.append(ParamSpec(f"b{i}", (dout,), "zeros", False))
+        return specs
+
+    def forward(self, p, x, collect=False):
+        nl = len(MLP_DIMS) - 1
+        acts = [x]
+        a = x
+        for i in range(nl):
+            z = qdense.qdense(a, p[f"w{i}"], p[f"b{i}"])
+            a = jax.nn.relu(z) if i < nl - 1 else z
+            if collect and i < nl - 1:
+                acts.append(a)
+        return (a, acts) if collect else a
+
+    def lrp(self, p, x, y, eqw):
+        """Composite LRP (epsilon-rule throughout; MLP has only dense
+        layers) -> per-weight relevances, batch-aggregated, signed."""
+        logits, acts = self.forward(p, x, collect=True)
+        r = lrp_relevance_init(logits, y, eqw)
+        nl = len(MLP_DIMS) - 1
+        rws = {}
+        for i in reversed(range(nl)):
+            r, rw = lrp_dense_eps(acts[i], p[f"w{i}"], p[f"b{i}"], r)
+            rws[f"w{i}"] = rw
+        return rws
+
+
+# --------------------------------------------------------------------------
+# VGG_CIFAR (plain and BatchNorm variants)
+# --------------------------------------------------------------------------
+
+VGG_CFG = [32, 32, "M", 64, 64, "M", 128, 128, "M"]
+VGG_FC = [2048, 256, 10]
+
+
+class VggCifar:
+    """VGG-slim for (synthetic) CIFAR-10; `bn=True` adds BatchNorm after
+    every conv layer (the Fig. 8 variant)."""
+
+    batch = 32
+    input_shape = (32, 32, 3)
+    num_classes = 10
+
+    def __init__(self, bn=False):
+        self.bn = bn
+        self.name = "vgg_cifar_bn" if bn else "vgg_cifar"
+
+    def param_specs(self):
+        specs = []
+        cin = 3
+        ci = 0
+        for v in VGG_CFG:
+            if v == "M":
+                continue
+            specs.append(ParamSpec(f"c{ci}", (3, 3, cin, v), "he_in", True))
+            specs.append(ParamSpec(f"cb{ci}", (v,), "zeros", False))
+            if self.bn:
+                specs.append(ParamSpec(f"g{ci}", (v,), "ones", False))
+                specs.append(ParamSpec(f"be{ci}", (v,), "zeros", False))
+            cin = v
+            ci += 1
+        for i, (din, dout) in enumerate(zip(VGG_FC[:-1], VGG_FC[1:])):
+            specs.append(ParamSpec(f"w{i}", (din, dout), "he_in", True))
+            specs.append(ParamSpec(f"b{i}", (dout,), "zeros", False))
+        return specs
+
+    def forward(self, p, x, collect=False):
+        cache = {"conv_in": [], "bn_in": [], "pool_in": []}
+        a = x
+        ci = 0
+        for v in VGG_CFG:
+            if v == "M":
+                if collect:
+                    cache["pool_in"].append(a)
+                a = maxpool(a)
+            else:
+                if collect:
+                    cache["conv_in"].append(a)
+                a = conv2d(a, p[f"c{ci}"]) + p[f"cb{ci}"]
+                if self.bn:
+                    if collect:
+                        cache["bn_in"].append(a)
+                    a = bn_fwd(a, p[f"g{ci}"], p[f"be{ci}"])
+                a = jax.nn.relu(a)
+                ci += 1
+        a = a.reshape(a.shape[0], -1)
+        cache["fc_in"] = [a]
+        a = jax.nn.relu(qdense.qdense(a, p["w0"], p["b0"]))
+        cache["fc_in"].append(a)
+        logits = qdense.qdense(a, p["w1"], p["b1"])
+        return (logits, cache) if collect else logits
+
+    def lrp(self, p, x, y, eqw):
+        """Composite LRP: epsilon-rule for dense, alpha-beta (beta=1) for
+        conv and BatchNorm layers."""
+        logits, cache = self.forward(p, x, collect=True)
+        r = lrp_relevance_init(logits, y, eqw)
+        rws = {}
+        r, rws["w1"] = lrp_dense_eps(cache["fc_in"][1], p["w1"], p["b1"], r)
+        r, rws["w0"] = lrp_dense_eps(cache["fc_in"][0], p["w0"], p["b0"], r)
+        # back through the conv stack
+        last = cache["conv_in"][-1].shape  # only for static structure
+        del last
+        conv_idx = sum(1 for v in VGG_CFG if v != "M") - 1
+        pool_idx = VGG_CFG.count("M") - 1
+        pre_flat = cache["pool_in"][-1]
+        # undo flatten: relevance at last pool output
+        r = r.reshape(maxpool(pre_flat).shape)
+        for v in reversed(VGG_CFG):
+            if v == "M":
+                r = lrp_maxpool(cache["pool_in"][pool_idx], r)
+                pool_idx -= 1
+            else:
+                if self.bn:
+                    r = lrp_bn_ab(
+                        cache["bn_in"][conv_idx],
+                        p[f"g{conv_idx}"],
+                        p[f"be{conv_idx}"],
+                        r,
+                    )
+                r, rw = lrp_conv_ab(
+                    cache["conv_in"][conv_idx],
+                    p[f"c{conv_idx}"],
+                    p[f"cb{conv_idx}"],
+                    r,
+                )
+                rws[f"c{conv_idx}"] = rw
+                conv_idx -= 1
+        return rws
+
+
+# --------------------------------------------------------------------------
+# RESNET_VOC (ResNet-lite with BasicBlocks + BN)
+# --------------------------------------------------------------------------
+
+
+class ResNetVoc:
+    """ResNet-lite: conv stem + 4 BasicBlocks (one strided with a 1x1
+    downsample path) + GAP + linear head; 20-class (synthetic) Pascal VOC."""
+
+    name = "resnet_voc"
+    batch = 32
+    input_shape = (32, 32, 3)
+    num_classes = 20
+
+    # (block_id, cin, cout, stride)
+    BLOCKS = [(0, 32, 32, 1), (1, 32, 32, 1), (2, 32, 64, 2), (3, 64, 64, 1)]
+
+    def param_specs(self):
+        specs = [
+            ParamSpec("stem", (3, 3, 3, 32), "he_in", True),
+            ParamSpec("stem_g", (32,), "ones", False),
+            ParamSpec("stem_be", (32,), "zeros", False),
+        ]
+        for bid, cin, cout, stride in self.BLOCKS:
+            specs.append(ParamSpec(f"b{bid}_c1", (3, 3, cin, cout), "he_in", True))
+            specs.append(ParamSpec(f"b{bid}_g1", (cout,), "ones", False))
+            specs.append(ParamSpec(f"b{bid}_be1", (cout,), "zeros", False))
+            specs.append(ParamSpec(f"b{bid}_c2", (3, 3, cout, cout), "he_in", True))
+            specs.append(ParamSpec(f"b{bid}_g2", (cout,), "ones", False))
+            specs.append(ParamSpec(f"b{bid}_be2", (cout,), "zeros", False))
+            if stride != 1 or cin != cout:
+                specs.append(ParamSpec(f"b{bid}_ds", (1, 1, cin, cout), "he_in", True))
+                specs.append(ParamSpec(f"b{bid}_dsg", (cout,), "ones", False))
+                specs.append(ParamSpec(f"b{bid}_dsbe", (cout,), "zeros", False))
+        specs.append(ParamSpec("fc_w", (64, 20), "he_in", True))
+        specs.append(ParamSpec("fc_b", (20,), "zeros", False))
+        return specs
+
+    def _block_fwd(self, p, bid, stride, has_ds, a, cache=None):
+        if cache is not None:
+            cache[f"b{bid}_in"] = a
+        h = conv2d(a, p[f"b{bid}_c1"], stride)
+        if cache is not None:
+            cache[f"b{bid}_bn1_in"] = h
+        h = jax.nn.relu(bn_fwd(h, p[f"b{bid}_g1"], p[f"b{bid}_be1"]))
+        if cache is not None:
+            cache[f"b{bid}_c2_in"] = h
+        h = conv2d(h, p[f"b{bid}_c2"])
+        if cache is not None:
+            cache[f"b{bid}_bn2_in"] = h
+        h = bn_fwd(h, p[f"b{bid}_g2"], p[f"b{bid}_be2"])
+        if has_ds:
+            s = conv2d(a, p[f"b{bid}_ds"], stride)
+            if cache is not None:
+                cache[f"b{bid}_dsbn_in"] = s
+            s = bn_fwd(s, p[f"b{bid}_dsg"], p[f"b{bid}_dsbe"])
+        else:
+            s = a
+        if cache is not None:
+            cache[f"b{bid}_main"] = h
+            cache[f"b{bid}_skip"] = s
+        return jax.nn.relu(h + s)
+
+    def forward(self, p, x, collect=False):
+        cache = {} if collect else None
+        if collect:
+            cache["stem_in"] = x
+        a = conv2d(x, p["stem"])
+        if collect:
+            cache["stem_bn_in"] = a
+        a = jax.nn.relu(bn_fwd(a, p["stem_g"], p["stem_be"]))
+        for bid, cin, cout, stride in self.BLOCKS:
+            has_ds = stride != 1 or cin != cout
+            a = self._block_fwd(p, bid, stride, has_ds, a, cache)
+        if collect:
+            cache["gap_in"] = a
+        a = jnp.mean(a, axis=(1, 2))
+        if collect:
+            cache["fc_in"] = a
+        logits = qdense.qdense(a, p["fc_w"], p["fc_b"])
+        return (logits, cache) if collect else logits
+
+    def lrp(self, p, x, y, eqw):
+        logits, cache = self.forward(p, x, collect=True)
+        r = lrp_relevance_init(logits, y, eqw)
+        rws = {}
+        r, rws["fc_w"] = lrp_dense_eps(cache["fc_in"], p["fc_w"], p["fc_b"], r)
+        r = lrp_gap(cache["gap_in"], r)
+        zero_b = jnp.zeros  # conv layers here have no bias
+        for bid, cin, cout, stride in reversed(self.BLOCKS):
+            has_ds = stride != 1 or cin != cout
+            r_main, r_skip = lrp_add(cache[f"b{bid}_main"], cache[f"b{bid}_skip"], r)
+            # main path: bn2 <- conv2 <- relu <- bn1 <- conv1
+            r_main = lrp_bn_ab(
+                cache[f"b{bid}_bn2_in"], p[f"b{bid}_g2"], p[f"b{bid}_be2"], r_main
+            )
+            r_main, rw = lrp_conv_ab(
+                cache[f"b{bid}_c2_in"],
+                p[f"b{bid}_c2"],
+                zero_b((cout,), jnp.float32),
+                r_main,
+            )
+            rws[f"b{bid}_c2"] = rw
+            r_main = lrp_bn_ab(
+                cache[f"b{bid}_bn1_in"], p[f"b{bid}_g1"], p[f"b{bid}_be1"], r_main
+            )
+            r_main, rw = lrp_conv_ab(
+                cache[f"b{bid}_in"],
+                p[f"b{bid}_c1"],
+                zero_b((cout,), jnp.float32),
+                r_main,
+                stride=stride,
+            )
+            rws[f"b{bid}_c1"] = rw
+            if has_ds:
+                r_skip = lrp_bn_ab(
+                    cache[f"b{bid}_dsbn_in"], p[f"b{bid}_dsg"], p[f"b{bid}_dsbe"], r_skip
+                )
+                r_skip, rw = lrp_conv_ab(
+                    cache[f"b{bid}_in"],
+                    p[f"b{bid}_ds"],
+                    zero_b((cout,), jnp.float32),
+                    r_skip,
+                    stride=stride,
+                )
+                rws[f"b{bid}_ds"] = rw
+            r = r_main + r_skip
+        r = lrp_bn_ab(cache["stem_bn_in"], p["stem_g"], p["stem_be"], r)
+        _, rws["stem"] = lrp_conv_ab(
+            cache["stem_in"], p["stem"], zero_b((32,), jnp.float32), r
+        )
+        return rws
+
+
+# --------------------------------------------------------------------------
+# Optimizer + training / eval steps (the AOT entry points)
+# --------------------------------------------------------------------------
+
+
+def adam_update(p, g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mh = m / (1.0 - b1**t)
+    vh = v / (1.0 - b2**t)
+    return p - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def fp_train_step(model, params, m, v, x, y, t, lr):
+    """Plain FP32 Adam step (pre-training / unquantized baseline)."""
+
+    def loss_fn(p):
+        logits = model.forward(p, x)
+        return softmax_xent(logits, y), logits
+
+    grads, logits = jax.grad(loss_fn, has_aux=True)(params)
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_p[k], new_m[k], new_v[k] = adam_update(
+            params[k], grads[k], m[k], v[k], t, lr
+        )
+    return new_p, new_m, new_v, softmax_xent(logits, y), correct_count(logits, y)
+
+
+def ste_train_step(model, params_fp, qw, m, v, x, y, t, lr, gs):
+    """ECQ(x) STE step (Fig. 5 steps 1, 3-5).
+
+    Forward/backward through the *quantized* model (quantized weight slots
+    hold `qw`), gradients of quantized weights optionally scaled by the
+    magnitude of their (non-zero) centroid value, then Adam-applied to the
+    full-precision background model."""
+    qnames = {s.name for s in model.param_specs() if s.quantize}
+
+    def loss_fn(p):
+        logits = model.forward(p, x)
+        return softmax_xent(logits, y), logits
+
+    eval_params = {k: (qw[k] if k in qnames else params_fp[k]) for k in params_fp}
+    grads, logits = jax.grad(loss_fn, has_aux=True)(eval_params)
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params_fp:
+        g = grads[k]
+        if k in qnames:
+            scale = jnp.where(qw[k] != 0.0, jnp.abs(qw[k]), 1.0)
+            g = g * jnp.where(gs > 0.5, scale, 1.0)
+        new_p[k], new_m[k], new_v[k] = adam_update(
+            params_fp[k], g, m[k], v[k], t, lr
+        )
+    return new_p, new_m, new_v, softmax_xent(logits, y), correct_count(logits, y)
+
+
+def eval_step(model, params, x, y):
+    logits = model.forward(params, x)
+    return softmax_xent(logits, y), correct_count(logits, y)
+
+
+def lrp_step(model, params, x, y, eqw):
+    """Per-weight LRP relevances of the (quantized) model for one batch."""
+    return model.lrp(params, x, y, eqw)
+
+
+def act_fake_quant(x, levels):
+    """Uniform fake-quantization of a non-negative activation tensor to
+    `levels` levels (per-tensor dynamic scale) — the Fig. 1 activation
+    sensitivity probe."""
+    mx = jnp.maximum(jnp.max(x), 1e-8)
+    s = mx / (levels - 1.0)
+    return jnp.round(x / s) * s
+
+
+def eval_actq_mlp(model, params, x, y, abits):
+    """MLP eval with uniformly quantized post-ReLU activations."""
+    levels = 2.0**abits
+    nl = len(MLP_DIMS) - 1
+    a = x
+    for i in range(nl):
+        z = qdense.qdense(a, params[f"w{i}"], params[f"b{i}"])
+        if i < nl - 1:
+            a = act_fake_quant(jax.nn.relu(z), levels)
+        else:
+            a = z
+    return softmax_xent(a, y), correct_count(a, y)
+
+
+def eval_actq_vgg(model, params, x, y, abits):
+    """VGG eval with uniformly quantized post-ReLU activations."""
+    levels = 2.0**abits
+    a = x
+    ci = 0
+    for vv in VGG_CFG:
+        if vv == "M":
+            a = maxpool(a)
+        else:
+            a = conv2d(a, params[f"c{ci}"]) + params[f"cb{ci}"]
+            a = act_fake_quant(jax.nn.relu(a), levels)
+            ci += 1
+    a = a.reshape(a.shape[0], -1)
+    a = act_fake_quant(jax.nn.relu(qdense.qdense(a, params["w0"], params["b0"])), levels)
+    logits = qdense.qdense(a, params["w1"], params["b1"])
+    return softmax_xent(logits, y), correct_count(logits, y)
+
+
+def eval_gather_mlp(model, params_other, idx, codebooks, x, y):
+    """MLP eval in deployment form: int32 centroid indices + per-layer
+    codebook, dequantized through the L1 gather kernel."""
+    nl = len(MLP_DIMS) - 1
+    a = x
+    for i in range(nl):
+        z = qdense.qdense_gather(
+            a, idx[f"w{i}"], codebooks[f"w{i}"], params_other[f"b{i}"]
+        )
+        a = jax.nn.relu(z) if i < nl - 1 else z
+    return softmax_xent(a, y), correct_count(a, y)
+
+
+MODELS = {
+    "mlp_gsc": MlpGsc,
+    "vgg_cifar": lambda: VggCifar(bn=False),
+    "vgg_cifar_bn": lambda: VggCifar(bn=True),
+    "resnet_voc": ResNetVoc,
+}
+
+
+def get_model(name):
+    return MODELS[name]()

@@ -1,0 +1,82 @@
+"""AOT pipeline: signatures, HLO text lowering, manifest consistency."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_bucket_for_monotone():
+    assert aot.bucket_for(1) == 1024
+    assert aot.bucket_for(1024) == 1024
+    assert aot.bucket_for(1025) == 2048
+    assert aot.bucket_for(524288) == 524288
+    with pytest.raises(ValueError):
+        aot.bucket_for(10**7)
+
+
+def test_every_quantized_layer_fits_a_bucket():
+    for name in M.MODELS:
+        m = M.get_model(name)
+        for s in m.param_specs():
+            if s.quantize:
+                n = int(np.prod(s.shape))
+                assert aot.bucket_for(n) >= n
+
+
+def test_signatures_consistent():
+    m = M.get_model("mlp_gsc")
+    arts = aot.build_model_artifacts(m)
+    names = [a[0] for a in arts]
+    for suffix in ["fp_train", "ste_train", "lrp", "eval", "eval_actq", "eval_q"]:
+        assert f"mlp_gsc_{suffix}" in names
+    by_name = {a[0]: a for a in arts}
+    _, _, sig = by_name["mlp_gsc_ste_train"]
+    in_names = [n for n, _, _ in sig.ins]
+    # FP params, quantized copies, moments, batch, scalars — in this order
+    assert in_names[0] == "p_w0"
+    assert "q_w0" in in_names and "m_w0" in in_names and "v_w0" in in_names
+    assert in_names[-5:] == ["x", "y", "t", "lr", "gs"]
+    out_names = [n for n, _, _ in sig.outs]
+    assert out_names[-2:] == ["loss", "correct"]
+    # outputs mirror the parameter inputs
+    n_params = len(m.param_specs())
+    assert len(out_names) == 3 * n_params + 2
+
+
+def test_lowering_small_artifact_produces_hlo_text():
+    # lower the smallest assign artifact and check it is parseable HLO text
+    arts = aot.build_assign_artifacts()
+    name, fn, sig = arts[0]
+    lowered = jax.jit(fn).lower(*sig.in_specs())
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # all six inputs appear as parameters
+    assert text.count("parameter(") >= 6
+
+
+def test_source_hash_stable():
+    h1 = aot.source_hash()
+    h2 = aot.source_hash()
+    assert h1 == h2 and len(h1) == 16
+
+
+def test_built_manifest_matches_models():
+    # if the artifacts have been built, validate the manifest contents
+    mdir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(mdir, "manifest.txt")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    text = open(mpath).read()
+    assert text.startswith("hash ")
+    for name in M.MODELS:
+        assert f"model {name} " in text
+    for b in aot.ASSIGN_BUCKETS:
+        assert f"artifact assign_{b} " in text
+        assert os.path.exists(os.path.join(mdir, f"assign_{b}.hlo.txt"))

@@ -1,0 +1,126 @@
+"""Algorithmic invariants of the ECQ^x assignment (jnp level), mirroring
+the rust property suite so both implementations pin the same semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ecqx_assign, ref
+from compile.kernels.ecqx_assign import K_MAX
+
+settings.register_profile("ci2", deadline=None, max_examples=10)
+settings.load_profile("ci2")
+
+
+def codebook(bits, step):
+    cen = np.zeros(K_MAX, np.float32)
+    cv = np.zeros(K_MAX, np.float32)
+    cv[0] = 1.0
+    for k in range(1, (1 << (bits - 1))):
+        cen[2 * k - 1], cen[2 * k] = k * step, -k * step
+        cv[2 * k - 1] = cv[2 * k] = 1.0
+    return jnp.asarray(cen), jnp.asarray(cv)
+
+
+def fitted(w, bits):
+    step = float(np.max(np.abs(w))) / ((1 << (bits - 1)) - 1)
+    return codebook(bits, max(step, 1e-6))
+
+
+@given(seed=st.integers(0, 2**31), bits=st.integers(2, 5))
+def test_lambda_zero_is_nearest_neighbour(seed, bits):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.1, 1024).astype(np.float32)
+    cen, cv = fitted(w, bits)
+    ones = jnp.ones(1024, jnp.float32)
+    idx, qw, _ = ecqx_assign.assign_full(jnp.asarray(w), ones, ones, cen, cv, 0.0)
+    # every weight must sit in its closest valid centroid
+    cen_np, cv_np = np.asarray(cen), np.asarray(cv)
+    d = (w[:, None] - cen_np[None, :]) ** 2 + (1 - cv_np)[None, :] * 1e30
+    np.testing.assert_array_equal(np.asarray(idx), d.argmin(axis=1))
+
+
+@given(seed=st.integers(0, 2**31))
+def test_sparsity_monotone_in_lambda(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.1, 2048).astype(np.float32)
+    cen, cv = fitted(w, 4)
+    ones = jnp.ones(2048, jnp.float32)
+    # skip draws where the zero cluster is not the NN mode
+    i0, _, c0 = ecqx_assign.assign_full(jnp.asarray(w), ones, ones, cen, cv, 0.0)
+    if int(np.asarray(c0).argmax()) != 0:
+        return
+    last = -1.0
+    for lam in [0.0, 1e-5, 1e-4, 5e-4]:
+        idx, _, _ = ecqx_assign.assign_full(jnp.asarray(w), ones, ones, cen, cv, lam)
+        sp = float(np.mean(np.asarray(idx) == 0))
+        assert sp >= last - 1e-9, f"sparsity dropped at lam={lam}"
+        last = sp
+
+
+@given(seed=st.integers(0, 2**31))
+def test_relevance_monotone(seed):
+    # raising a weight's relevance factor can only move it OUT of the zero
+    # cluster, never into it
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.1, 512).astype(np.float32)
+    cen, cv = fitted(w, 4)
+    ones = jnp.ones(512, jnp.float32)
+    lam = 2e-4
+    lo, _, _ = ecqx_assign.assign_full(
+        jnp.asarray(w), 0.3 * ones, ones, cen, cv, lam
+    )
+    hi, _, _ = ecqx_assign.assign_full(
+        jnp.asarray(w), 3.0 * ones, ones, cen, cv, lam
+    )
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    # weights kept (non-zero) at low relevance must also be kept at high
+    moved_in = np.logical_and(lo != 0, hi == 0).sum()
+    assert moved_in == 0, f"{moved_in} weights moved INTO zero as relevance rose"
+
+
+def test_counts_match_idx():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.1, 4096).astype(np.float32)
+    cen, cv = fitted(w, 3)
+    mask = jnp.asarray((np.arange(4096) < 3000).astype(np.float32))
+    r = jnp.ones(4096, jnp.float32)
+    idx, qw, counts = ecqx_assign.assign_full(jnp.asarray(w), r, mask, cen, cv, 1e-4)
+    idx, counts = np.asarray(idx), np.asarray(counts)
+    for c in range(K_MAX):
+        expect = np.sum((idx == c) & (np.arange(4096) < 3000))
+        # zero cluster also absorbs the masked padding in idx, but counts
+        # must only reflect valid elements
+        if c == 0:
+            assert counts[c] == np.sum((idx == 0) & (np.arange(4096) < 3000))
+        else:
+            assert counts[c] == expect
+
+
+def test_qw_consistent_with_idx():
+    rng = np.random.default_rng(1)
+    w = rng.normal(0, 0.1, 1024).astype(np.float32)
+    cen, cv = fitted(w, 5)
+    ones = jnp.ones(1024, jnp.float32)
+    idx, qw, _ = ecqx_assign.assign_full(jnp.asarray(w), ones, ones, cen, cv, 1e-4)
+    np.testing.assert_allclose(
+        np.asarray(qw), np.asarray(cen)[np.asarray(idx)], rtol=1e-6
+    )
+
+
+def test_jnp_ref_and_pallas_agree_on_large_bucket():
+    # the largest bucket exercises the multi-block grid path
+    rng = np.random.default_rng(2)
+    n = 16384
+    w = rng.normal(0, 0.1, n).astype(np.float32)
+    r = rng.uniform(0.5, 2.0, n).astype(np.float32)
+    cen, cv = fitted(w, 4)
+    ones = jnp.ones(n, jnp.float32)
+    i1, q1, c1 = ecqx_assign.assign_full(
+        jnp.asarray(w), jnp.asarray(r), ones, cen, cv, 3e-4
+    )
+    i2, q2, c2 = ref.assign_ref(jnp.asarray(w), jnp.asarray(r), ones, cen, cv, 3e-4)
+    mism = int(np.sum(np.asarray(i1) != np.asarray(i2)))
+    assert mism <= 16, mism
+    np.testing.assert_allclose(np.asarray(c1).sum(), n)

@@ -1,0 +1,124 @@
+"""LRP invariants (Sec. 4.1): conservation, rule semantics, composite
+behaviour across the model families."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def test_dense_eps_conservation():
+    # For a linear layer with zero bias, relevance is conserved:
+    # sum_ij R_w = sum_j R_out (small eps absorption aside).
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(0.5, 1.0, (6, 10)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.4, (10, 4)), jnp.float32)
+    b = jnp.zeros(4, jnp.float32)
+    r_out = jnp.asarray(rng.uniform(0, 1, (6, 4)), jnp.float32)
+    r_in, r_w = M.lrp_dense_eps(a, w, b, r_out)
+    np.testing.assert_allclose(
+        float(jnp.sum(r_w)), float(jnp.sum(r_out)), rtol=1e-3
+    )
+    np.testing.assert_allclose(
+        float(jnp.sum(r_in)), float(jnp.sum(r_out)), rtol=1e-3
+    )
+
+
+def test_conv_ab_conservation():
+    # alpha - beta = 1 keeps relevance approximately conserved through a
+    # conv layer (bias zero, eps small).
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(0.3, 1.0, (2, 8, 8, 3)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.3, (3, 3, 3, 5)), jnp.float32)
+    b = jnp.zeros(5, jnp.float32)
+    r_out = jnp.asarray(rng.uniform(0, 1, (2, 8, 8, 5)), jnp.float32)
+    r_in, r_w = M.lrp_conv_ab(a, w, b, r_out)
+    total = float(jnp.sum(r_out))
+    np.testing.assert_allclose(float(jnp.sum(r_in)), total, rtol=0.05)
+    np.testing.assert_allclose(float(jnp.sum(r_w)), total, rtol=0.05)
+
+
+def test_conv_ab_beta_branch_vanishes_on_positive_paths():
+    # With purely positive inputs and weights the beta branch is empty, so
+    # the rule degenerates to alpha * proportional decomposition: total
+    # relevance = alpha * sum(R_out) (the known alpha-beta imbalance when
+    # a layer has no negative contributions).
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.uniform(0.1, 1.0, (1, 6, 6, 2)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.05, 0.3, (3, 3, 2, 4)), jnp.float32)
+    b = jnp.zeros(4, jnp.float32)
+    r_out = jnp.ones((1, 6, 6, 4), jnp.float32)
+    r_in, r_w = M.lrp_conv_ab(a, w, b, r_out)
+    assert float(jnp.min(r_w)) >= -1e-4
+    np.testing.assert_allclose(
+        float(jnp.sum(r_in)), M.ALPHA * float(jnp.sum(r_out)), rtol=0.02
+    )
+    np.testing.assert_allclose(
+        float(jnp.sum(r_w)), M.ALPHA * float(jnp.sum(r_out)), rtol=0.02
+    )
+
+
+def test_maxpool_winner_take_all():
+    a = jnp.zeros((1, 4, 4, 1), jnp.float32).at[0, 1, 1, 0].set(5.0)
+    r_out = jnp.ones((1, 2, 2, 1), jnp.float32)
+    r_in = M.lrp_maxpool(a, r_out)
+    # the single max element of window (0,0) receives its relevance
+    np.testing.assert_allclose(float(r_in[0, 1, 1, 0]), 1.0, rtol=1e-4)
+    # nothing leaks to zero elements
+    assert float(jnp.sum(jnp.abs(r_in))) < 1.0 + 1e-3 + 3.0  # other windows all-zero
+
+
+def test_add_split_proportional():
+    x1 = jnp.asarray([3.0])
+    x2 = jnp.asarray([1.0])
+    r1, r2 = M.lrp_add(x1, x2, jnp.asarray([4.0]))
+    np.testing.assert_allclose(float(r1[0]), 3.0, rtol=1e-4)
+    np.testing.assert_allclose(float(r2[0]), 1.0, rtol=1e-4)
+
+
+def test_gap_distributes_by_contribution():
+    a = jnp.ones((1, 2, 2, 1), jnp.float32).at[0, 0, 0, 0].set(4.0)
+    r_out = jnp.ones((1, 1), jnp.float32)
+    r_in = M.lrp_gap(a, r_out)
+    np.testing.assert_allclose(float(jnp.sum(r_in)), 1.0, rtol=1e-4)
+    assert float(r_in[0, 0, 0, 0]) > float(r_in[0, 1, 1, 0])
+
+
+def test_relevance_init_modes():
+    logits = jnp.asarray([[1.0, 2.0, -3.0], [0.5, -1.0, 4.0]])
+    y = jnp.asarray([1, 2], jnp.int32)
+    r_eq = M.lrp_relevance_init(logits, y, jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(r_eq), [[0, 1, 0], [0, 0, 1]])
+    r_sc = M.lrp_relevance_init(logits, y, jnp.float32(0.0))
+    np.testing.assert_allclose(np.asarray(r_sc), [[0, 2, 0], [0, 0, 4]])
+
+
+@pytest.mark.parametrize("name", ["mlp_gsc", "vgg_cifar_bn", "resnet_voc"])
+def test_model_lrp_total_relevance_reasonable(name):
+    # Composite LRP over the whole model: total per-weight relevance stays
+    # within a small factor of the initial relevance (eps/bias absorption
+    # and the alpha-beta split prevent exact conservation).
+    m = M.get_model(name)
+    rng = np.random.default_rng(3)
+    p = {}
+    for s in m.param_specs():
+        if s.init == "he_in":
+            fan_in = int(np.prod(s.shape[:-1])) or 1
+            p[s.name] = jnp.asarray(
+                rng.normal(0, np.sqrt(2.0 / fan_in), s.shape), jnp.float32
+            )
+        elif s.init == "ones":
+            p[s.name] = jnp.ones(s.shape, jnp.float32)
+        else:
+            p[s.name] = jnp.zeros(s.shape, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4,) + m.input_shape), jnp.float32)
+    y = jnp.asarray(rng.integers(0, m.num_classes, 4), jnp.int32)
+    rws = m.lrp(p, x, y, jnp.float32(1.0))
+    total = sum(float(jnp.sum(rw)) for rw in rws.values())
+    n_layers = len(rws)
+    # initial relevance is 1 per sample; each quantized layer aggregates
+    # a comparable share — demand the right order of magnitude
+    assert np.isfinite(total)
+    assert abs(total) < 50.0 * n_layers, total

@@ -1,0 +1,174 @@
+//! Ablation — pruning criterion quality (the DESIGN.md §5 ablation):
+//! prune each layer of the pre-trained MLP to a fixed fraction by
+//! (a) weight magnitude, (b) LRP relevance (validation-set aggregated),
+//! (c) random, and evaluate without any re-training.
+//!
+//! This isolates the paper's core claim (Sec. 4.2, Fig. 4): relevance
+//! identifies prunable weights that magnitude misses, with the gap
+//! opening in the high-sparsity regime. Also ablates STE gradient
+//! scaling (Fig. 5 step 3).
+
+use ecqx::bench::{figure_header, series_row};
+use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
+use ecqx::coordinator::trainer::evaluate;
+use ecqx::coordinator::{AssignConfig, Method, QatConfig, QatTrainer};
+use ecqx::data::DataLoader;
+use ecqx::exp;
+use ecqx::nn::QLayer;
+use ecqx::quant::Codebook;
+use ecqx::tensor::{Tensor, TensorI32};
+use ecqx::util::Rng;
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Ablation", "pruning criterion: magnitude vs LRP relevance vs random");
+    let engine = exp::engine()?;
+    let model = exp::MLP_GSC;
+    let pre = exp::pretrained(&engine, &model, 17)?;
+    let spec = engine.manifest.model(model.name)?.clone();
+    let (train, val) = exp::datasets(&model, 17);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 3);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 3);
+
+    // validation-aggregated relevances (score-weighted)
+    let art = engine.manifest.artifact("mlp_gsc_lrp")?.clone();
+    let mut rel: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    for batch in train_dl.epoch(0).take(16) {
+        let sc = Scalars::default();
+        let inputs = bind_inputs(&art, &pre.state, ParamSource::Fp, Some(&batch), &sc)?;
+        for (k, v) in engine.call_named(&art.name, &inputs)? {
+            if let Some(n) = k.strip_prefix("r_") {
+                let t = v.into_f32();
+                let e = rel.entry(n.to_string()).or_insert_with(|| vec![0.0; t.numel()]);
+                for (a, b) in e.iter_mut().zip(&t.data) {
+                    *a += b.abs();
+                }
+            }
+        }
+    }
+
+    let mut rng = Rng::new(99);
+    for frac in [0.5f64, 0.7, 0.8, 0.9] {
+        for mode in ["magnitude", "relevance", "random"] {
+            let mut state = exp::pretrained(&engine, &model, 17)?.state;
+            for name in state.qnames() {
+                let w = state.params[&name].clone();
+                let score: Vec<f32> = match mode {
+                    "magnitude" => w.data.iter().map(|x| x.abs()).collect(),
+                    "relevance" => rel[&name].clone(),
+                    _ => (0..w.numel()).map(|_| rng.f32()).collect(),
+                };
+                let mut order: Vec<usize> = (0..w.numel()).collect();
+                order.sort_by(|&a, &b| score[a].partial_cmp(&score[b]).unwrap());
+                let cut = (w.numel() as f64 * frac) as usize;
+                let mut qw = w.data.clone();
+                let mut idx = vec![1i32; w.numel()];
+                for &i in &order[..cut] {
+                    qw[i] = 0.0;
+                    idx[i] = 0;
+                }
+                state.qlayers.insert(
+                    name.clone(),
+                    QLayer {
+                        qw: Tensor::new(w.shape.clone(), qw),
+                        idx: TensorI32::new(w.shape.clone(), idx),
+                        codebook: Codebook::fit(&w.data, 4),
+                    },
+                );
+            }
+            let ev = evaluate(&engine, &state, &val_dl, ParamSource::Quantized)?;
+            series_row(
+                "criterion",
+                &[
+                    ("frac", format!("{frac:.1}")),
+                    ("mode", mode.into()),
+                    ("acc", format!("{:.4}", ev.accuracy)),
+                ],
+            );
+        }
+    }
+
+    // structured (row/column) vs unstructured pruning at matched sparsity
+    // (paper §2: structure constraints cost accuracy at equal sparsity)
+    println!();
+    use ecqx::quant::structured::{sparsify_structured, GroupKind, GroupSaliency};
+    for frac in [0.5f64, 0.7] {
+        for (label, kind) in [("rows", GroupKind::Row), ("cols", GroupKind::Column)] {
+            let mut state = exp::pretrained(&engine, &model, 17)?.state;
+            for name in state.qnames() {
+                let w = state.params[&name].clone();
+                let res = sparsify_structured(&w, None, kind, GroupSaliency::L1, frac);
+                let idx: Vec<i32> =
+                    res.weights.data.iter().map(|&v| (v != 0.0) as i32).collect();
+                state.qlayers.insert(
+                    name.clone(),
+                    QLayer {
+                        qw: res.weights.clone(),
+                        idx: TensorI32::new(w.shape.clone(), idx),
+                        codebook: Codebook::fit(&w.data, 4),
+                    },
+                );
+            }
+            let ev = evaluate(&engine, &state, &val_dl, ParamSource::Quantized)?;
+            series_row(
+                "structured",
+                &[
+                    ("frac", format!("{frac:.1}")),
+                    ("groups", label.into()),
+                    ("acc", format!("{:.4}", ev.accuracy)),
+                ],
+            );
+        }
+    }
+
+    // integer-grid vs Lloyd-refined centroids (the paper's Sec. 3.1 choice)
+    println!();
+    use ecqx::quant::refine::ablate_refinement;
+    use ecqx::quant::assign_ref;
+    {
+        let state = exp::pretrained(&engine, &model, 17)?.state;
+        let w = &state.params["w1"].data;
+        let cb = Codebook::fit(w, 4);
+        let ones = vec![1.0f32; w.len()];
+        let a = assign_ref(w, &ones, &ones, &cb, 1e-4);
+        let ab = ablate_refinement(w, &a, &cb, 2);
+        series_row(
+            "centroid-refine",
+            &[
+                ("integer_grid_mse", format!("{:.3e}", ab.integer_grid_mse)),
+                ("lloyd_refined_mse", format!("{:.3e}", ab.refined_mse)),
+                ("integer_cost", format!("{:.3}x", ab.integer_cost)),
+            ],
+        );
+    }
+
+    // STE gradient-scaling ablation (Fig. 5 step 3)
+    println!();
+    for gs in [true, false] {
+        let cfg = QatConfig {
+            assign: AssignConfig {
+                method: Method::Ecq,
+                bits: 4,
+                lambda: 10.0,
+                p: 0.15,
+                ..Default::default()
+            },
+            epochs: 1,
+            lr: model.qat_lr * 4.0,
+            grad_scale: gs,
+            verbose: false,
+            ..Default::default()
+        };
+        let mut state = exp::pretrained(&engine, &model, 17)?.state;
+        let out = QatTrainer::new(cfg).run(&engine, &mut state, &train_dl, &val_dl)?;
+        series_row(
+            "grad-scale",
+            &[
+                ("enabled", gs.to_string()),
+                ("val_acc", format!("{:.4}", out.epochs.last().unwrap().val_acc)),
+                ("sparsity", format!("{:.4}", out.final_sparsity)),
+            ],
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Fig. 1 — sensitivity of weight vs activation quantization.
+//!
+//! Uniform post-training quantization (no re-training) of the pre-trained
+//! MLP_GSC: sweep 2..8 bit separately over weights and activations and
+//! report top-1 accuracy. Expected shape (the paper's claim): activations
+//! degrade faster; < 8 bit needs QAT.
+
+use ecqx::bench::{figure_header, series_row};
+use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
+use ecqx::coordinator::trainer::evaluate;
+use ecqx::data::DataLoader;
+use ecqx::exp;
+use ecqx::metrics::Meter;
+use ecqx::quant::uniform_quantize;
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Fig.1", "uniform PTQ sensitivity: weights vs activations (MLP_GSC)");
+    let engine = exp::engine()?;
+    let model = exp::MLP_GSC;
+    let pre = exp::pretrained(&engine, &model, 17)?;
+    let spec = engine.manifest.model(model.name)?.clone();
+    let (_, val) = exp::datasets(&model, 17);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 17);
+    let base = evaluate(&engine, &pre.state, &val_dl, ParamSource::Fp)?;
+    series_row("baseline", &[("bits", "32".into()), ("acc", format!("{:.4}", base.accuracy))]);
+
+    // weights: uniform symmetric PTQ per layer
+    for bits in (2..=8).rev() {
+        let mut state = exp::pretrained(&engine, &model, 17)?.state;
+        for name in state.qnames() {
+            let q = uniform_quantize(&state.params[&name], bits);
+            state.params.insert(name, q);
+        }
+        let ev = evaluate(&engine, &state, &val_dl, ParamSource::Fp)?;
+        series_row(
+            "weights",
+            &[("bits", bits.to_string()), ("acc", format!("{:.4}", ev.accuracy))],
+        );
+    }
+
+    // activations: fake-quant eval artifact with dynamic per-tensor scale
+    let art = engine.manifest.artifact("mlp_gsc_eval_actq")?.clone();
+    for bits in (2..=8).rev() {
+        let mut meter = Meter::new();
+        for batch in val_dl.epoch(0) {
+            let sc = Scalars { abits: bits as f32, ..Default::default() };
+            let inputs = bind_inputs(&art, &pre.state, ParamSource::Fp, Some(&batch), &sc)?;
+            let outs = engine.call_named(&art.name, &inputs)?;
+            meter.update(
+                outs["loss"].as_f32().as_scalar(),
+                outs["correct"].as_f32().as_scalar(),
+                batch.batch,
+            );
+        }
+        series_row(
+            "activations",
+            &[("bits", bits.to_string()), ("acc", format!("{:.4}", meter.accuracy()))],
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Fig. 2 — non-uniform (k-means) quantization of one layer's weights:
+//! the binned weight distribution with the 7 k-means centroids and their
+//! assignment counts, vs the uniform grid for comparison.
+
+use ecqx::bench::{bench, figure_header, series_row};
+use ecqx::exp;
+use ecqx::quant::kmeans::kmeans_1d;
+use ecqx::quant::Codebook;
+use ecqx::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Fig.2", "k-means clustering of MLP_GSC layer-0 weights (K=7)");
+    let engine = exp::engine()?;
+    let pre = exp::pretrained(&engine, &exp::MLP_GSC, 17)?;
+    let w = &pre.state.params["w0"].data;
+    let wmax = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+
+    // the green bars: binned weight distribution
+    let hist = stats::histogram(w, -wmax, wmax, 31);
+    series_row(
+        "weight-hist",
+        &[("bins", format!("{hist:?}")), ("wmax", format!("{wmax:.4}"))],
+    );
+
+    // the black bars: k-means centroids + their populations
+    let km = kmeans_1d(w, 7, 60, 1);
+    let mut pairs: Vec<(f32, usize)> =
+        km.centroids.iter().cloned().zip(km.counts.iter().cloned()).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (c, n) in &pairs {
+        series_row("kmeans", &[("centroid", format!("{c:.4}")), ("count", n.to_string())]);
+    }
+    series_row(
+        "kmeans-fit",
+        &[
+            ("inertia", format!("{:.4}", km.inertia)),
+            ("iterations", km.iterations.to_string()),
+        ],
+    );
+
+    // uniform grid comparison: non-uniform must fit the distribution better
+    let cb = Codebook::fit(w, 3); // 7 centroids
+    let uniform_inertia: f64 = w
+        .iter()
+        .map(|&x| {
+            cb.values
+                .iter()
+                .zip(cb.valid.iter())
+                .filter(|(_, &v)| v > 0.5)
+                .map(|(&c, _)| ((x - c) as f64).powi(2))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .sum();
+    series_row(
+        "uniform",
+        &[
+            ("inertia", format!("{uniform_inertia:.4}")),
+            ("ratio", format!("{:.3}", uniform_inertia / km.inertia.max(1e-12))),
+        ],
+    );
+    assert!(km.inertia <= uniform_inertia, "k-means must dominate uniform");
+
+    bench("kmeans_1d K=7 on 184k weights", 1, 3, || kmeans_1d(w, 7, 60, 1));
+    Ok(())
+}

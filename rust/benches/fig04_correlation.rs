@@ -1,0 +1,72 @@
+//! Fig. 4 — weight relevance vs weight value correlation analysis.
+//!
+//! Collects LRP relevances over the validation set (equally-weighted
+//! samples, R_n = 1 — the paper's Fig. 4 setting) through the
+//! `mlp_gsc_lrp` artifact and reports, per layer, the Pearson correlation
+//! `c` plus the marginal histograms of the paper's panels. The paper's
+//! claim to verify: relevance and magnitude decorrelate, especially near
+//! the input.
+
+use ecqx::bench::{figure_header, series_row};
+use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
+use ecqx::data::DataLoader;
+use ecqx::exp;
+use ecqx::lrp::analysis::{correlation_panel, small_weight_relevance_share};
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Fig.4", "relevance vs weight correlation (MLP_GSC, R_n = 1)");
+    let engine = exp::engine()?;
+    let model = exp::MLP_GSC;
+    let pre = exp::pretrained(&engine, &model, 17)?;
+    let spec = engine.manifest.model(model.name)?.clone();
+    let (_, val) = exp::datasets(&model, 17);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 17);
+
+    // aggregate |relevance| over the validation set
+    let art = engine.manifest.artifact("mlp_gsc_lrp")?.clone();
+    let mut acc: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    let mut batches = 0;
+    for batch in val_dl.epoch(0) {
+        let sc = Scalars { eqw: 1.0, ..Default::default() };
+        let inputs = bind_inputs(&art, &pre.state, ParamSource::Fp, Some(&batch), &sc)?;
+        for (k, v) in engine.call_named(&art.name, &inputs)? {
+            if let Some(n) = k.strip_prefix("r_") {
+                let t = v.into_f32();
+                let e = acc.entry(n.to_string()).or_insert_with(|| vec![0.0; t.numel()]);
+                for (a, b) in e.iter_mut().zip(&t.data) {
+                    *a += b.abs();
+                }
+            }
+        }
+        batches += 1;
+    }
+    println!("relevances aggregated over {batches} validation batches");
+
+    // the paper shows the input layer (left) and output layer (right);
+    // we print every layer for completeness
+    for name in pre.state.qnames() {
+        let w = &pre.state.params[&name].data;
+        let r = &acc[&name];
+        let panel = correlation_panel(&name, w, r, 24);
+        let share = small_weight_relevance_share(w, r);
+        series_row(
+            "panel",
+            &[
+                ("layer", name.clone()),
+                ("c_value", format!("{:.4}", panel.c_value)),
+                ("c_magnitude", format!("{:.4}", panel.c_magnitude)),
+                ("small_w_rel_share", format!("{share:.4}")),
+            ],
+        );
+    }
+    println!("\ninput-layer histograms (Fig. 4 left panel):");
+    let w0 = &pre.state.params["w0"].data;
+    let panel = correlation_panel("w0", w0, &acc["w0"], 24);
+    series_row("w0-weight-hist", &[("bins", format!("{:?}", panel.weight_hist))]);
+    series_row("w0-relevance-hist", &[("bins", format!("{:?}", panel.relevance_hist))]);
+    let rel_bins: Vec<String> =
+        panel.relevance_by_weight_bin.iter().map(|v| format!("{v:.2}")).collect();
+    series_row("w0-relevance-by-weight-bin", &[("bins", format!("{rel_bins:?}"))]);
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Fig. 6 — target-sparsity hyperparameter p controls the LRP-introduced
+//! sparsity: accuracy-vs-sparsity working points for several p at fixed
+//! bit width 4 on MLP_GSC. Expected shape: small p wins at low sparsity,
+//! larger p trades accuracy for extra LRP sparsity.
+
+#[path = "sweep_common.rs"]
+mod sweep_common;
+
+use ecqx::bench::figure_header;
+use ecqx::coordinator::Method;
+use ecqx::exp;
+use sweep_common::{run_trials, Trial};
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Fig.6", "hyperparameter p controls LRP-introduced sparsity (MLP_GSC, 4 bit)");
+    let engine = exp::engine()?;
+    let mut trials = Vec::new();
+    for &lambda in &[10.0f32] {
+        for &p in &[0.05f64, 0.2, 0.4] {
+            trials.push(Trial { method: Method::Ecqx, bits: 4, lambda, p });
+        }
+    }
+    run_trials(&engine, &exp::MLP_GSC, "fig6", &trials, 1)?;
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Fig. 7 — ECQ vs ECQ^x, 4-bit quantization of MLP_GSC (left panel) and
+//! VGG (right panel): accuracy-vs-sparsity working points over a lambda
+//! grid. Expected shape: both methods hold accuracy at moderate sparsity;
+//! in the high-sparsity regime ECQ degrades faster.
+
+#[path = "sweep_common.rs"]
+mod sweep_common;
+
+use ecqx::bench::figure_header;
+use ecqx::coordinator::Method;
+use ecqx::exp;
+use sweep_common::{run_trials, Trial};
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Fig.7", "ECQ vs ECQx, 4 bit: accuracy vs sparsity");
+    let engine = exp::engine()?;
+    let lambdas = [4.0f32, 10.0, 16.0];
+    for method in [Method::Ecq, Method::Ecqx] {
+        let trials: Vec<Trial> = lambdas
+            .iter()
+            .map(|&lambda| Trial { method, bits: 4, lambda, p: 0.15 })
+            .collect();
+        run_trials(&engine, &exp::MLP_GSC, "fig7-mlp_gsc", &trials, 1)?;
+    }
+    // right panel: VGG (one lambda per method at bench scale)
+    for method in [Method::Ecq, Method::Ecqx] {
+        let trials = vec![Trial { method, bits: 4, lambda: 8.0, p: 0.15 }];
+        run_trials(&engine, &exp::VGG_CIFAR, "fig7-vgg", &trials, 1)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Fig. 8 — ECQ vs ECQ^x on the BatchNorm architectures: VGG with BN
+//! modules (left) and ResNet (right), 4 bit. LRP keeps BN layers separate
+//! (alpha-beta rule with beta = 1, no canonization merge).
+
+#[path = "sweep_common.rs"]
+mod sweep_common;
+
+use ecqx::bench::figure_header;
+use ecqx::coordinator::Method;
+use ecqx::exp;
+use sweep_common::{run_trials, Trial};
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Fig.8", "ECQ vs ECQx on BatchNorm architectures, 4 bit");
+    let engine = exp::engine()?;
+    for method in [Method::Ecq, Method::Ecqx] {
+        let trials = vec![Trial { method, bits: 4, lambda: 8.0, p: 0.15 }];
+        run_trials(&engine, &exp::VGG_CIFAR_BN, "fig8-vgg_bn", &trials, 1)?;
+    }
+    for method in [Method::Ecq, Method::Ecqx] {
+        let trials = vec![Trial { method, bits: 4, lambda: 8.0, p: 0.15 }];
+        run_trials(&engine, &exp::RESNET_VOC, "fig8-resnet", &trials, 1)?;
+    }
+    Ok(())
+}

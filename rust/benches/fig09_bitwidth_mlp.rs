@@ -1,0 +1,25 @@
+//! Fig. 9 — bit-width variation on MLP_GSC: accuracy vs compressed memory
+//! footprint for 2-5 bit ECQ^x. Expected shape: 2 bit minimizes the
+//! bitstream; within 3-5 bit the size differences shrink (or invert) once
+//! sparsity dominates the rate.
+
+#[path = "sweep_common.rs"]
+mod sweep_common;
+
+use ecqx::bench::figure_header;
+use ecqx::coordinator::Method;
+use ecqx::exp;
+use sweep_common::{run_trials, Trial};
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Fig.9", "MLP_GSC: accuracy vs memory footprint, 2-5 bit ECQx");
+    let engine = exp::engine()?;
+    for bits in 2..=5u32 {
+        let trials: Vec<Trial> = [10.0f32]
+            .iter()
+            .map(|&lambda| Trial { method: Method::Ecqx, bits, lambda, p: 0.15 })
+            .collect();
+        run_trials(&engine, &exp::MLP_GSC, &format!("fig9-bw{bits}"), &trials, 1)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Sec. 5.2.2 — LRP training-time overhead: wall-clock per QAT epoch for
+//! ECQ^x vs ECQ across the model architectures. The paper reports
+//! 1.2x / 2.4x / 3.2x for MLP_GSC / VGG16 / ResNet18 (dense layers need
+//! one extra backward, conv/BN alpha-beta layers two).
+
+use ecqx::bench::{figure_header, series_row};
+use ecqx::coordinator::{AssignConfig, Method, QatConfig, QatTrainer};
+use ecqx::data::DataLoader;
+use ecqx::exp;
+use ecqx::util::Timer;
+
+fn epoch_seconds(
+    engine: &ecqx::runtime::Engine,
+    model: &exp::ModelExp,
+    method: Method,
+) -> anyhow::Result<(f64, f64, f64)> {
+    let pre = exp::pretrained(engine, model, 17)?;
+    let spec = engine.manifest.model(model.name)?.clone();
+    let (train, val) = exp::datasets(model, 17);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 17);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 17);
+    let cfg = QatConfig {
+        assign: AssignConfig { method, bits: 4, lambda: 8.0, p: 0.15, ..Default::default() },
+        epochs: 1,
+        lr: model.qat_lr,
+        lrp_warmup: 4,
+        verbose: false,
+        ..Default::default()
+    };
+    let mut state = pre.state;
+    let t = Timer::start();
+    let out = QatTrainer::new(cfg).run(engine, &mut state, &train_dl, &val_dl)?;
+    let total = t.elapsed_s();
+    Ok((total, out.profile.total("lrp") + out.profile.total("lrp_warmup"),
+        out.profile.total("ste_step")))
+}
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Sec.5.2.2", "LRP training-time overhead: ECQx vs ECQ epoch wall-clock");
+    let engine = exp::engine()?;
+    for model in [&exp::MLP_GSC, &exp::VGG_CIFAR, &exp::RESNET_VOC] {
+        let (ecq_s, _, ecq_ste) = epoch_seconds(&engine, model, Method::Ecq)?;
+        let (ecqx_s, lrp_s, _) = epoch_seconds(&engine, model, Method::Ecqx)?;
+        series_row(
+            "overhead",
+            &[
+                ("model", model.name.into()),
+                ("ecq_epoch_s", format!("{ecq_s:.1}")),
+                ("ecqx_epoch_s", format!("{ecqx_s:.1}")),
+                ("ratio", format!("{:.2}x", ecqx_s / ecq_s.max(1e-9))),
+                ("lrp_share_s", format!("{lrp_s:.1}")),
+                ("ste_share_s", format!("{ecq_ste:.1}")),
+            ],
+        );
+    }
+    println!("paper reference ratios: MLP 1.2x, VGG 2.4x, ResNet 3.2x");
+    Ok(())
+}

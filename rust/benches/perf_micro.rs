@@ -1,0 +1,116 @@
+//! §Perf — micro-benchmarks of every hot path: the assign kernel
+//! (artifact vs pure-rust), the CABAC codec, the PJRT call overhead, and
+//! the full STE/LRP steps. These numbers back EXPERIMENTS.md §Perf.
+
+use ecqx::bench::{bench, figure_header, throughput};
+use ecqx::codec::{deepcabac, huffman};
+use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
+use ecqx::data::DataLoader;
+use ecqx::exp;
+use ecqx::quant::{assign_ref, Codebook};
+use ecqx::tensor::{Tensor, Value};
+use ecqx::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Perf", "hot-path micro-benchmarks");
+    let engine = exp::engine()?;
+    let mut rng = Rng::new(7);
+
+    // ---- L1: assignment kernel, 64k-element bucket ----
+    let n = 65536;
+    let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let cb = Codebook::fit(&w, 4);
+    let r = vec![1.0f32; n];
+    let mask = vec![1.0f32; n];
+    let inputs = [
+        Value::F32(Tensor::new(vec![n], w.clone())),
+        Value::F32(Tensor::new(vec![n], r.clone())),
+        Value::F32(Tensor::new(vec![n], mask.clone())),
+        Value::F32(Tensor::new(vec![32], cb.values.clone())),
+        Value::F32(Tensor::new(vec![32], cb.valid.clone())),
+        Value::F32(Tensor::scalar(3e-4)),
+    ];
+    engine.call("assign_65536", &inputs)?; // compile outside the timing
+    let res = bench("assign artifact (Pallas, 64k x 32)", 2, 10, || {
+        engine.call("assign_65536", &inputs).unwrap()
+    });
+    println!("    -> {}", throughput(&res, n));
+    let res = bench("assign_ref (pure rust, 64k x 32)", 2, 10, || {
+        assign_ref(&w, &r, &mask, &cb, 3e-4)
+    });
+    println!("    -> {}", throughput(&res, n));
+
+    // ---- codec throughput ----
+    let levels: Vec<i32> = (0..262144)
+        .map(|_| {
+            if rng.chance(0.8) {
+                0
+            } else {
+                let m = 1 + rng.below(7) as i32;
+                if rng.chance(0.5) { m } else { -m }
+            }
+        })
+        .collect();
+    let enc = deepcabac::encode_levels(&levels);
+    println!(
+        "  cabac rate: {:.3} bits/weight ({} bytes for 256k weights)",
+        enc.len() as f64 * 8.0 / levels.len() as f64,
+        enc.len()
+    );
+    let res = bench("cabac encode 256k levels", 1, 10, || deepcabac::encode_levels(&levels));
+    println!("    -> {}", throughput(&res, levels.len()));
+    let res = bench("cabac decode 256k levels", 1, 10, || {
+        deepcabac::decode_levels(&enc, levels.len())
+    });
+    println!("    -> {}", throughput(&res, levels.len()));
+    let res = bench("huffman encode 256k levels", 1, 10, || huffman::encode(&levels));
+    println!("    -> {}", throughput(&res, levels.len()));
+
+    // ---- L3 <-> PJRT boundary: eval + ste step ----
+    let model = exp::MLP_GSC;
+    let pre = exp::pretrained(&engine, &model, 17)?;
+    let spec = engine.manifest.model(model.name)?.clone();
+    let (train, _) = exp::datasets(&model, 17);
+    let dl = DataLoader::new(&train, spec.batch, true, 1);
+    let batch = dl.epoch(0).next().unwrap();
+    let mut state = pre.state;
+    // quantize once so q_ slots exist
+    use ecqx::coordinator::{AssignConfig, Assigner, Method};
+    let asg = Assigner::new(
+        AssignConfig { method: Method::Ecq, bits: 4, lambda: 4.0, ..Default::default() },
+        &state,
+    );
+    asg.assign_all(&engine, &mut state)?;
+
+    let eval_art = engine.manifest.artifact("mlp_gsc_eval")?.clone();
+    let ev_inputs =
+        bind_inputs(&eval_art, &state, ParamSource::Quantized, Some(&batch), &Scalars::default())?;
+    engine.call(&eval_art.name, &ev_inputs)?;
+    bench("eval step (batch 128, 695k params)", 2, 10, || {
+        engine.call(&eval_art.name, &ev_inputs).unwrap()
+    });
+
+    let ste_art = engine.manifest.artifact("mlp_gsc_ste_train")?.clone();
+    let sc = Scalars { t: 1.0, lr: 1e-4, gs: 1.0, ..Default::default() };
+    let ste_inputs = bind_inputs(&ste_art, &state, ParamSource::Fp, Some(&batch), &sc)?;
+    engine.call(&ste_art.name, &ste_inputs)?;
+    bench("ste_train step (fwd+bwd+Adam)", 2, 10, || {
+        engine.call(&ste_art.name, &ste_inputs).unwrap()
+    });
+
+    let lrp_art = engine.manifest.artifact("mlp_gsc_lrp")?.clone();
+    let lrp_inputs =
+        bind_inputs(&lrp_art, &state, ParamSource::Quantized, Some(&batch), &Scalars::default())?;
+    engine.call(&lrp_art.name, &lrp_inputs)?;
+    bench("lrp step (per-weight relevances)", 2, 10, || {
+        engine.call(&lrp_art.name, &lrp_inputs).unwrap()
+    });
+
+    // binder overhead in isolation (the host-side copy cost)
+    bench("bind ste inputs (host copies)", 2, 20, || {
+        bind_inputs(&ste_art, &state, ParamSource::Fp, Some(&batch), &sc).unwrap()
+    });
+
+    println!("\ncompile time total: {:.1}s", engine.compile_seconds());
+    Ok(())
+}

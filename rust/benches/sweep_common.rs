@@ -1,0 +1,79 @@
+//! Shared driver for the figure-regeneration benches: runs (method, bits,
+//! lambda, p) QAT trials from the cached pre-trained snapshot and prints
+//! working-point rows in the paper's format.
+//!
+//! Bench trials run at CPU scale (1 QAT epoch, bench lambda grids);
+//! paper-scale grids are available via the `ecqx sweep --paper-scale` CLI.
+
+use ecqx::bench::series_row;
+use ecqx::coordinator::sweep::{SweepConfig, SweepRunner};
+use ecqx::coordinator::{AssignConfig, Method, QatConfig};
+use ecqx::data::DataLoader;
+use ecqx::exp;
+use ecqx::metrics::WorkingPoint;
+use ecqx::runtime::Engine;
+
+pub struct Trial {
+    pub method: Method,
+    pub bits: u32,
+    pub lambda: f32,
+    pub p: f64,
+}
+
+/// Run a set of trials on one model, printing a row per working point.
+pub fn run_trials(
+    engine: &Engine,
+    model: &exp::ModelExp,
+    series: &str,
+    trials: &[Trial],
+    epochs: usize,
+) -> anyhow::Result<Vec<WorkingPoint>> {
+    let pre = exp::pretrained(engine, model, 17)?;
+    let spec = engine.manifest.model(model.name)?.clone();
+    let (train, val) = exp::datasets(model, 17);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 17);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 17);
+    let baseline = pre.baseline_acc;
+    let runner = SweepRunner::new(engine, pre.state);
+    let mut points = Vec::new();
+    for t in trials {
+        let cfg = SweepConfig {
+            model: model.name.to_string(),
+            method: t.method,
+            bits: t.bits,
+            lambdas: vec![t.lambda],
+            p: t.p,
+            qat: QatConfig {
+                assign: AssignConfig {
+                    method: t.method,
+                    bits: t.bits,
+                    lambda: t.lambda,
+                    p: t.p,
+                    ..Default::default()
+                },
+                epochs,
+                lr: model.qat_lr * 4.0,
+                verbose: false,
+                ..Default::default()
+            },
+            baseline_acc: baseline,
+        };
+        let (wp, _) = runner.run_trial(&cfg, t.lambda, &train_dl, &val_dl)?;
+        series_row(
+            series,
+            &[
+                ("method", t.method.as_str().into()),
+                ("bw", t.bits.to_string()),
+                ("lambda", format!("{:.2}", t.lambda)),
+                ("p", format!("{:.2}", t.p)),
+                ("acc", format!("{:.4}", wp.accuracy)),
+                ("drop", format!("{:+.4}", wp.acc_drop)),
+                ("sparsity", format!("{:.4}", wp.sparsity)),
+                ("size_kB", format!("{:.1}", wp.size_bytes as f64 / 1000.0)),
+                ("CR", format!("{:.1}", wp.compression_ratio)),
+            ],
+        );
+        points.push(wp);
+    }
+    Ok(points)
+}

@@ -1,0 +1,64 @@
+//! Table 1 — quantization results overview: accuracy, accuracy drop,
+//! sparsity, compressed size (kB) and compression ratio for ECQ vs ECQ^x
+//! at 2 and 4 bit, with the paper's three candidate criteria (highest
+//! accuracy / highest CR without degradation / highest CR with negligible
+//! degradation) selected from a small lambda grid.
+
+#[path = "sweep_common.rs"]
+mod sweep_common;
+
+use ecqx::bench::figure_header;
+use ecqx::coordinator::sweep::select;
+use ecqx::coordinator::Method;
+use ecqx::exp;
+use ecqx::metrics::{Table, WorkingPoint};
+use sweep_common::{run_trials, Trial};
+
+fn push_row(t: &mut Table, model: &str, kind: &str, wp: &WorkingPoint) {
+    t.row(&[
+        model.to_string(),
+        format!("W{}A16", wp.bits),
+        wp.method.clone(),
+        kind.to_string(),
+        format!("{:.2}", wp.accuracy * 100.0),
+        format!("{:+.2}", wp.acc_drop * 100.0),
+        format!("{:.2}", wp.sparsity * 100.0),
+        format!("{:.2}", wp.size_bytes as f64 / 1000.0),
+        format!("{:.2}", wp.compression_ratio),
+    ]);
+}
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Table 1", "quantization results overview (2 + 4 bit, ECQ vs ECQx)");
+    let engine = exp::engine()?;
+    let mut table = Table::new(&[
+        "Model", "Prec.", "Method", "criterion", "Acc(%)", "drop", "|W=0|/|W|(%)",
+        "Size(kB)", "CR",
+    ]);
+    for (model, lambdas) in [
+        (&exp::MLP_GSC, vec![6.0f32, 12.0]),
+        (&exp::VGG_CIFAR, vec![8.0f32]),
+    ] {
+        for bits in [4u32, 2] {
+            for method in [Method::Ecqx, Method::Ecq] {
+                let trials: Vec<Trial> = lambdas
+                    .iter()
+                    .map(|&lambda| Trial { method, bits, lambda, p: 0.15 })
+                    .collect();
+                let series = format!("table1-{}-bw{bits}-{}", model.name, method.as_str());
+                let pts = run_trials(&engine, model, &series, &trials, 1)?;
+                if let Some(wp) = select::best_accuracy(&pts) {
+                    push_row(&mut table, model.name, "best-acc", wp);
+                }
+                if let Some(wp) = select::best_cr_no_degradation(&pts) {
+                    push_row(&mut table, model.name, "best-CR(no drop)", wp);
+                }
+                if let Some(wp) = select::best_cr_negligible(&pts, 0.02) {
+                    push_row(&mut table, model.name, "best-CR(negl.)", wp);
+                }
+            }
+        }
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! Mini-criterion: the bench harness used by `cargo bench` targets
+//! (criterion is unavailable offline; every `[[bench]]` sets
+//! `harness = false` and drives this module).
+//!
+//! Provides warmup + N timed iterations with mean/median/σ reporting, and
+//! a `Series` helper for the figure-regeneration benches that print the
+//! paper's accuracy/sparsity/size rows.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Timing result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s >= 1.0 {
+                format!("{s:.3} s")
+            } else if s >= 1e-3 {
+                format!("{:.3} ms", s * 1e3)
+            } else {
+                format!("{:.1} µs", s * 1e6)
+            }
+        }
+        format!(
+            "{:<40} {:>12}/iter (median {}, σ {}, n={})",
+            self.name,
+            fmt(self.mean_s),
+            fmt(self.median_s),
+            fmt(self.std_s),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` with `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let times_f32: Vec<f32> = times.iter().map(|&t| t as f32).collect();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&times_f32),
+        median_s: stats::median(&times),
+        std_s: stats::std_dev(&times_f32),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Print a figure header in a stable, grep-able format.
+pub fn figure_header(id: &str, title: &str) {
+    println!("\n=== {id}: {title} ===");
+}
+
+/// Print one series row (a data point of a paper figure).
+pub fn series_row(series: &str, xs: &[(&str, String)]) {
+    let cells: Vec<String> = xs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    println!("[{series}] {}", cells.join(" "));
+}
+
+/// Throughput helper: elements per second.
+pub fn throughput(result: &BenchResult, elems: usize) -> String {
+    let eps = elems as f64 / result.mean_s;
+    if eps > 1e9 {
+        format!("{:.2} Gelem/s", eps / 1e9)
+    } else if eps > 1e6 {
+        format!("{:.2} Melem/s", eps / 1e6)
+    } else {
+        format!("{:.2} Kelem/s", eps / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let r = bench("noop-spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s * 1.5 + 1e-9);
+        assert_eq!(r.iters, 5);
+        assert!(r.report().contains("noop-spin"));
+    }
+
+    #[test]
+    fn throughput_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 1.0,
+            median_s: 1.0,
+            std_s: 0.0,
+            min_s: 1.0,
+        };
+        assert!(throughput(&r, 2_000_000_000).contains("Gelem"));
+        assert!(throughput(&r, 2_000_000).contains("Melem"));
+        assert!(throughput(&r, 2_000).contains("Kelem"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Bit-level I/O for the entropy coders.
+
+/// MSB-first bit writer.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_bit(&mut self, bit: bool) {
+        self.cur = (self.cur << 1) | bit as u8;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.buf.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Write the lowest `n` bits of `v`, MSB first.
+    pub fn put_bits(&mut self, v: u64, n: u32) {
+        for i in (0..n).rev() {
+            self.put_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Order-0 Exp-Golomb code of a non-negative integer.
+    pub fn put_exp_golomb(&mut self, v: u64) {
+        let x = v + 1;
+        let nbits = 64 - x.leading_zeros();
+        for _ in 0..nbits - 1 {
+            self.put_bit(false);
+        }
+        self.put_bits(x, nbits);
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.cur <<= 8 - self.nbits;
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    pub fn get_bit(&mut self) -> bool {
+        let byte = self.pos / 8;
+        let off = 7 - (self.pos % 8);
+        self.pos += 1;
+        if byte >= self.buf.len() {
+            return false; // zero-padded tail
+        }
+        (self.buf[byte] >> off) & 1 == 1
+    }
+
+    pub fn get_bits(&mut self, n: u32) -> u64 {
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.get_bit() as u64;
+        }
+        v
+    }
+
+    pub fn get_exp_golomb(&mut self) -> u64 {
+        let mut zeros = 0u32;
+        while !self.get_bit() {
+            zeros += 1;
+            if zeros > 63 {
+                return 0;
+            }
+        }
+        let rest = self.get_bits(zeros);
+        ((1u64 << zeros) | rest) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_roundtrip() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b1011, 4);
+        w.put_bits(0xDEAD, 16);
+        w.put_bit(true);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(4), 0b1011);
+        assert_eq!(r.get_bits(16), 0xDEAD);
+        assert!(r.get_bit());
+    }
+
+    #[test]
+    fn exp_golomb_roundtrip() {
+        let vals = [0u64, 1, 2, 3, 7, 14, 100, 1_000_000];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.put_exp_golomb(v);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.get_exp_golomb(), v);
+        }
+    }
+
+    #[test]
+    fn bit_len_counts() {
+        let mut w = BitWriter::new();
+        w.put_bits(0, 13);
+        assert_eq!(w.bit_len(), 13);
+        assert_eq!(w.finish().len(), 2);
+    }
+}

@@ -1,0 +1,265 @@
+//! Context-adaptive binary arithmetic coder (LZMA-style range coder with
+//! 11-bit adaptive probabilities) — the engine of the DeepCABAC-style
+//! weight codec.
+
+const PROB_BITS: u32 = 11;
+const PROB_INIT: u16 = 1 << (PROB_BITS - 1); // 1024 == p(0) = 0.5
+const ADAPT_SHIFT: u32 = 5;
+const TOP: u32 = 1 << 24;
+
+/// Adaptive probability state of one context (probability of bit == 0).
+#[derive(Clone, Copy, Debug)]
+pub struct BinProb(pub u16);
+
+impl Default for BinProb {
+    fn default() -> Self {
+        BinProb(PROB_INIT)
+    }
+}
+
+impl BinProb {
+    fn update(&mut self, bit: bool) {
+        if bit {
+            self.0 -= self.0 >> ADAPT_SHIFT;
+        } else {
+            self.0 += ((1 << PROB_BITS) - self.0) >> ADAPT_SHIFT;
+        }
+    }
+}
+
+/// Binary range encoder.
+pub struct BinEncoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl Default for BinEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BinEncoder {
+    pub fn new() -> Self {
+        BinEncoder { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: Vec::new() }
+    }
+
+    fn shift_low(&mut self) {
+        if (self.low as u32) < 0xFF00_0000 || (self.low >> 32) != 0 {
+            let carry = (self.low >> 32) as u8;
+            let mut temp = self.cache;
+            loop {
+                self.out.push(temp.wrapping_add(carry));
+                temp = 0xFF;
+                self.cache_size -= 1;
+                if self.cache_size == 0 {
+                    break;
+                }
+            }
+            self.cache = (self.low >> 24) as u8;
+        }
+        self.cache_size += 1;
+        // NB: the 32-bit truncation must happen BEFORE the shift (the
+        // dropped top byte is tracked as pending 0xFFs via cache_size).
+        self.low = ((self.low as u32) << 8) as u64;
+    }
+
+    /// Encode one bit with an adaptive context.
+    pub fn encode(&mut self, ctx: &mut BinProb, bit: bool) {
+        let bound = (self.range >> PROB_BITS) * ctx.0 as u32;
+        if !bit {
+            self.range = bound;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+        }
+        ctx.update(bit);
+        while self.range < TOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
+    /// Encode one equiprobable (bypass) bit.
+    pub fn encode_bypass(&mut self, bit: bool) {
+        let bound = self.range >> 1;
+        if !bit {
+            self.range = bound;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+        }
+        while self.range < TOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
+    /// Bypass-encode the low `n` bits of `v`, MSB first.
+    pub fn encode_bypass_bits(&mut self, v: u64, n: u32) {
+        for i in (0..n).rev() {
+            self.encode_bypass((v >> i) & 1 == 1);
+        }
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+}
+
+/// Binary range decoder.
+pub struct BinDecoder<'a> {
+    code: u32,
+    range: u32,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinDecoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        let mut d = BinDecoder { code: 0, range: u32::MAX, buf, pos: 1 };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte() as u32;
+        }
+        d
+    }
+
+    fn next_byte(&mut self) -> u8 {
+        let b = if self.pos < self.buf.len() { self.buf[self.pos] } else { 0 };
+        self.pos += 1;
+        b
+    }
+
+    pub fn decode(&mut self, ctx: &mut BinProb) -> bool {
+        let bound = (self.range >> PROB_BITS) * ctx.0 as u32;
+        let bit = if self.code < bound {
+            self.range = bound;
+            false
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            true
+        };
+        ctx.update(bit);
+        while self.range < TOP {
+            self.range <<= 8;
+            self.code = (self.code << 8) | self.next_byte() as u32;
+        }
+        bit
+    }
+
+    pub fn decode_bypass(&mut self) -> bool {
+        let bound = self.range >> 1;
+        let bit = if self.code < bound {
+            self.range = bound;
+            false
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            true
+        };
+        while self.range < TOP {
+            self.range <<= 8;
+            self.code = (self.code << 8) | self.next_byte() as u32;
+        }
+        bit
+    }
+
+    pub fn decode_bypass_bits(&mut self, n: u32) -> u64 {
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.decode_bypass() as u64;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_random_bits() {
+        let mut rng = Rng::new(1);
+        let bits: Vec<bool> = (0..5000).map(|_| rng.chance(0.5)).collect();
+        let mut enc = BinEncoder::new();
+        let mut ctx = BinProb::default();
+        for &b in &bits {
+            enc.encode(&mut ctx, b);
+        }
+        let bytes = enc.finish();
+        let mut dec = BinDecoder::new(&bytes);
+        let mut ctx = BinProb::default();
+        for &b in &bits {
+            assert_eq!(dec.decode(&mut ctx), b);
+        }
+    }
+
+    #[test]
+    fn skewed_source_compresses() {
+        // 95% zeros should code well below 1 bit/symbol
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let bits: Vec<bool> = (0..n).map(|_| rng.chance(0.05)).collect();
+        let mut enc = BinEncoder::new();
+        let mut ctx = BinProb::default();
+        for &b in &bits {
+            enc.encode(&mut ctx, b);
+        }
+        let bytes = enc.finish();
+        let bits_per_symbol = bytes.len() as f64 * 8.0 / n as f64;
+        // H(0.05) ~ 0.286; adaptive coder should get close
+        assert!(bits_per_symbol < 0.4, "bits/symbol = {bits_per_symbol}");
+        // and round-trip
+        let mut dec = BinDecoder::new(&bytes);
+        let mut ctx = BinProb::default();
+        for &b in &bits {
+            assert_eq!(dec.decode(&mut ctx), b);
+        }
+    }
+
+    #[test]
+    fn bypass_roundtrip() {
+        let mut rng = Rng::new(3);
+        let vals: Vec<u64> = (0..1000).map(|_| rng.next_u64() & 0xFFFF).collect();
+        let mut enc = BinEncoder::new();
+        for &v in &vals {
+            enc.encode_bypass_bits(v, 16);
+        }
+        let bytes = enc.finish();
+        // bypass is incompressible: ~16 bits/value
+        assert!(bytes.len() >= 1000 * 2 - 8);
+        let mut dec = BinDecoder::new(&bytes);
+        for &v in &vals {
+            assert_eq!(dec.decode_bypass_bits(16), v);
+        }
+    }
+
+    #[test]
+    fn mixed_ctx_and_bypass() {
+        let mut enc = BinEncoder::new();
+        let mut c1 = BinProb::default();
+        let mut c2 = BinProb::default();
+        for i in 0..1000u32 {
+            enc.encode(&mut c1, i % 3 == 0);
+            enc.encode_bypass(i % 2 == 0);
+            enc.encode(&mut c2, i % 7 == 0);
+        }
+        let bytes = enc.finish();
+        let mut dec = BinDecoder::new(&bytes);
+        let mut c1 = BinProb::default();
+        let mut c2 = BinProb::default();
+        for i in 0..1000u32 {
+            assert_eq!(dec.decode(&mut c1), i % 3 == 0);
+            assert_eq!(dec.decode_bypass(), i % 2 == 0);
+            assert_eq!(dec.decode(&mut c2), i % 7 == 0);
+        }
+    }
+}

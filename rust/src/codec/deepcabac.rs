@@ -1,0 +1,190 @@
+//! DeepCABAC-style codec for quantized weight tensors (integer levels).
+//!
+//! Binarization per weight level (following the NNR / DeepCABAC scheme,
+//! [47] in the paper):
+//!   * sigflag  — level != 0, context conditioned on the previous
+//!     element's significance (captures zero-run structure),
+//!   * sign     — one adaptive context,
+//!   * abs > 1, abs > 2, abs > 3 — per-position adaptive contexts,
+//!   * remainder (abs - 4)       — order-0 Exp-Golomb in bypass mode.
+//!
+//! Fully lossless: `decode_levels(encode_levels(x)).unwrap() == x`.
+
+use super::cabac::{BinDecoder, BinEncoder, BinProb};
+
+/// Context bank for one tensor.
+#[derive(Default)]
+struct Contexts {
+    sig: [BinProb; 2],
+    sign: BinProb,
+    gt: [BinProb; 3],
+}
+
+/// Encode integer weight levels into a CABAC bitstream.
+pub fn encode_levels(levels: &[i32]) -> Vec<u8> {
+    let mut enc = BinEncoder::new();
+    let mut ctx = Contexts::default();
+    let mut prev_sig = 0usize;
+    for &lv in levels {
+        let sig = lv != 0;
+        enc.encode(&mut ctx.sig[prev_sig], sig);
+        prev_sig = sig as usize;
+        if !sig {
+            continue;
+        }
+        enc.encode(&mut ctx.sign, lv < 0);
+        let abs = lv.unsigned_abs();
+        let mut coded = 1u32;
+        for (i, c) in ctx.gt.iter_mut().enumerate() {
+            let gt = abs > (i as u32 + 1);
+            enc.encode(c, gt);
+            if !gt {
+                break;
+            }
+            coded = i as u32 + 2;
+        }
+        if coded == 4 && abs >= 4 {
+            // Exp-Golomb order-0 remainder in bypass mode.
+            let v = (abs - 4) as u64;
+            let x = v + 1;
+            let nbits = 64 - x.leading_zeros();
+            for _ in 0..nbits - 1 {
+                enc.encode_bypass(false);
+            }
+            enc.encode_bypass_bits(x, nbits);
+        }
+    }
+    enc.finish()
+}
+
+/// Decode `n` integer weight levels from a CABAC bitstream.
+pub fn decode_levels(buf: &[u8], n: usize) -> Vec<i32> {
+    let mut dec = BinDecoder::new(buf);
+    let mut ctx = Contexts::default();
+    let mut prev_sig = 0usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let sig = dec.decode(&mut ctx.sig[prev_sig]);
+        prev_sig = sig as usize;
+        if !sig {
+            out.push(0);
+            continue;
+        }
+        let neg = dec.decode(&mut ctx.sign);
+        let mut abs = 1u32;
+        for (i, c) in ctx.gt.iter_mut().enumerate() {
+            if dec.decode(c) {
+                abs = i as u32 + 2;
+            } else {
+                break;
+            }
+        }
+        if abs == 4 {
+            // matches the encoder: abs >= 4 carries a remainder
+            let mut zeros = 0u32;
+            while !dec.decode_bypass() {
+                zeros += 1;
+                debug_assert!(zeros < 64);
+            }
+            let rest = dec.decode_bypass_bits(zeros);
+            let v = ((1u64 << zeros) | rest) - 1;
+            abs = 4 + v as u32;
+        }
+        out.push(if neg { -(abs as i32) } else { abs as i32 });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn roundtrip(levels: &[i32]) -> usize {
+        let bytes = encode_levels(levels);
+        let dec = decode_levels(&bytes, levels.len());
+        assert_eq!(dec, levels);
+        bytes.len()
+    }
+
+    #[test]
+    fn roundtrip_all_zero() {
+        let n = 10_000;
+        let sz = roundtrip(&vec![0i32; n]);
+        // all-zero tensor must code to almost nothing
+        assert!(sz < 100, "size {sz} for all-zero");
+    }
+
+    #[test]
+    fn roundtrip_sparse_quantized() {
+        let mut rng = Rng::new(4);
+        let levels: Vec<i32> = (0..50_000)
+            .map(|_| {
+                if rng.chance(0.85) {
+                    0
+                } else {
+                    let mag = 1 + rng.below(7) as i32;
+                    if rng.chance(0.5) { mag } else { -mag }
+                }
+            })
+            .collect();
+        let sz = roundtrip(&levels);
+        // 85% sparse 4-bit-ish source: far below 4 bits/weight
+        let bits_per_w = sz as f64 * 8.0 / levels.len() as f64;
+        assert!(bits_per_w < 1.4, "bits/weight {bits_per_w}");
+    }
+
+    #[test]
+    fn roundtrip_extreme_magnitudes() {
+        let levels = vec![0, 1, -1, 4, -4, 15, -15, 100, -100, 1000, -1000, 0, 3];
+        roundtrip(&levels);
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        assert_eq!(decode_levels(&encode_levels(&[]), 0), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn denser_source_costs_more() {
+        let mut rng = Rng::new(6);
+        let mk = |p_zero: f64, rng: &mut Rng| -> Vec<i32> {
+            (0..20_000)
+                .map(|_| {
+                    if rng.chance(p_zero) {
+                        0
+                    } else if rng.chance(0.5) {
+                        1
+                    } else {
+                        -1
+                    }
+                })
+                .collect()
+        };
+        let sparse = encode_levels(&mk(0.95, &mut rng)).len();
+        let dense = encode_levels(&mk(0.30, &mut rng)).len();
+        assert!(sparse < dense, "sparse={sparse} dense={dense}");
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        crate::util::prop::check("deepcabac roundtrip", 25, |rng| {
+            let n = rng.below(5000);
+            let levels: Vec<i32> = (0..n)
+                .map(|_| {
+                    if rng.chance(0.6) {
+                        0
+                    } else {
+                        let m = 1 + rng.below(15) as i32;
+                        if rng.chance(0.5) { m } else { -m }
+                    }
+                })
+                .collect();
+            let bytes = encode_levels(&levels);
+            if decode_levels(&bytes, n) != levels {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

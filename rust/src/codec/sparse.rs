@@ -1,0 +1,119 @@
+//! Sparse-format baselines: zero-run-length coding and the Compressed
+//! Sparse Row (CSR) size model the paper cites ([49]): formats that allow
+//! inference directly in the compressed representation.
+
+use super::bitstream::{BitReader, BitWriter};
+
+/// RLE + fixed-width packing: zero runs as Exp-Golomb, non-zero levels as
+/// sign + (bits-1)-bit magnitude.
+pub fn rle_encode(levels: &[i32], bits: u32) -> Vec<u8> {
+    let mag_bits = bits - 1;
+    let mut w = BitWriter::new();
+    w.put_exp_golomb(levels.len() as u64);
+    let mut run = 0u64;
+    for &lv in levels {
+        if lv == 0 {
+            run += 1;
+            continue;
+        }
+        w.put_exp_golomb(run);
+        run = 0;
+        w.put_bit(lv < 0);
+        let mag = lv.unsigned_abs() as u64;
+        debug_assert!(mag < (1 << mag_bits), "level {lv} exceeds {bits}-bit grid");
+        w.put_bits(mag, mag_bits);
+    }
+    // trailing zero run marker: run covering the tail
+    w.put_exp_golomb(run);
+    w.finish()
+}
+
+/// Decode an RLE stream (inverse of [`rle_encode`]).
+pub fn rle_decode(buf: &[u8], bits: u32) -> Vec<i32> {
+    let mag_bits = bits - 1;
+    let mut r = BitReader::new(buf);
+    let n = r.get_exp_golomb() as usize;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let run = r.get_exp_golomb() as usize;
+        for _ in 0..run.min(n - out.len()) {
+            out.push(0);
+        }
+        if out.len() < n {
+            let neg = r.get_bit();
+            let mag = r.get_bits(mag_bits) as i32;
+            out.push(if neg { -mag } else { mag });
+        }
+    }
+    out
+}
+
+/// CSR size model (bytes) for a sparse matrix of `rows x cols` with `nnz`
+/// non-zeros and `bits`-bit values: value array (bits each) + column
+/// indices (ceil(log2 cols) each) + row pointers (32 bit each).
+pub fn csr_size_bytes(rows: usize, cols: usize, nnz: usize, bits: u32) -> usize {
+    let col_bits = (usize::BITS - (cols.max(2) - 1).leading_zeros()) as usize;
+    let val_bits = bits as usize;
+    let total_bits = nnz * (val_bits + col_bits) + (rows + 1) * 32;
+    total_bits.div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rle_roundtrip() {
+        let levels = vec![0, 0, 0, 5, -3, 0, 0, 1, 0, 0, 0, 0, -7, 0];
+        let b = rle_encode(&levels, 4);
+        assert_eq!(rle_decode(&b, 4), levels);
+    }
+
+    #[test]
+    fn rle_all_zero_tiny() {
+        let levels = vec![0i32; 100_000];
+        let b = rle_encode(&levels, 4);
+        assert!(b.len() < 16, "all-zero RLE should be tiny, got {}", b.len());
+        assert_eq!(rle_decode(&b, 4), levels);
+    }
+
+    #[test]
+    fn rle_no_zeros() {
+        let levels = vec![1, -1, 2, -2, 3, -3];
+        let b = rle_encode(&levels, 3);
+        assert_eq!(rle_decode(&b, 3), levels);
+    }
+
+    #[test]
+    fn rle_property() {
+        crate::util::prop::check("rle roundtrip", 20, |rng| {
+            let n = rng.below(2000);
+            let bits = 2 + rng.below(4) as u32;
+            let top = (1i32 << (bits - 1)) - 1;
+            let levels: Vec<i32> = (0..n)
+                .map(|_| {
+                    if rng.chance(0.7) || top == 0 {
+                        0
+                    } else {
+                        let m = 1 + rng.below(top as usize) as i32;
+                        if rng.chance(0.5) { m } else { -m }
+                    }
+                })
+                .collect();
+            if rle_decode(&rle_encode(&levels, bits), bits) != levels {
+                return Err("mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn csr_scales_with_nnz() {
+        let dense = csr_size_bytes(512, 512, 512 * 512, 4);
+        let sparse = csr_size_bytes(512, 512, 512 * 51, 4);
+        assert!(sparse < dense / 5);
+        // sanity: 10% nnz of a 512x512 4-bit matrix ~ (4+9)*26214 bits
+        let expect = (512 * 51 * (4 + 9) + 513 * 32) / 8;
+        assert!((sparse as i64 - expect as i64).abs() <= 1);
+    }
+}

@@ -1,0 +1,241 @@
+//! Per-layer cluster (re-)assignment through the `assign_<bucket>` HLO
+//! artifact (the L1 Pallas kernel), including the ECQ^x relevance factors
+//! and the target-sparsity-p beta controller (Sec. 4.2).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::nn::{ModelState, QLayer};
+use crate::quant::relevance::{control_beta, cost_factors, RelevanceState};
+use crate::quant::{lambda_scale, Codebook};
+use crate::runtime::Engine;
+use crate::tensor::{Tensor, TensorI32, Value};
+
+/// ECQ (entropy only) vs ECQ^x (entropy + LRP relevances).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Ecq,
+    Ecqx,
+}
+
+impl Method {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::Ecq => "ECQ",
+            Method::Ecqx => "ECQx",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AssignConfig {
+    pub method: Method,
+    pub bits: u32,
+    /// global entropy-constraint intensity (per-layer scaled)
+    pub lambda: f32,
+    /// target sparsity p: upper bound on LRP-induced extra sparsity
+    pub p: f64,
+    /// initial gamma exponent for the relevance transform
+    pub beta0: f32,
+    /// relevance EMA momentum
+    pub momentum: f32,
+    pub max_beta_halvings: u32,
+}
+
+impl Default for AssignConfig {
+    fn default() -> Self {
+        AssignConfig {
+            method: Method::Ecqx,
+            bits: 4,
+            lambda: 0.02,
+            p: 0.3,
+            beta0: 1.0,
+            momentum: 0.9,
+            max_beta_halvings: 6,
+        }
+    }
+}
+
+/// Stateful assigner: holds relevance EMAs + tuned betas per layer.
+pub struct Assigner {
+    pub cfg: AssignConfig,
+    pub rel: BTreeMap<String, RelevanceState>,
+    /// per-layer tuned beta (refreshed when relevances refresh)
+    pub beta: BTreeMap<String, f32>,
+    /// per-layer cached cost factors
+    factors: BTreeMap<String, Vec<f32>>,
+    /// largest quantized layer numel (for lambda scaling)
+    max_numel: usize,
+}
+
+impl Assigner {
+    pub fn new(cfg: AssignConfig, state: &ModelState) -> Self {
+        let mut rel = BTreeMap::new();
+        let mut beta = BTreeMap::new();
+        let mut max_numel = 0;
+        for p in state.spec.quantized_params() {
+            rel.insert(p.name.clone(), RelevanceState::new(p.numel(), cfg.momentum));
+            beta.insert(p.name.clone(), cfg.beta0);
+            max_numel = max_numel.max(p.numel());
+        }
+        Assigner { cfg, rel, beta, factors: BTreeMap::new(), max_numel }
+    }
+
+    /// Fold a new batch of raw LRP relevances (from the `<m>_lrp` artifact)
+    /// into the per-layer EMAs. With `retune == true`, also re-tune beta
+    /// via the target-sparsity-p controller (costs extra assign calls);
+    /// otherwise only the cost factors are refreshed at the cached beta.
+    /// Returns per-layer (beta, extra_sparsity) diagnostics when retuning.
+    pub fn update_relevances(
+        &mut self,
+        engine: &Engine,
+        state: &ModelState,
+        raw: &BTreeMap<String, Tensor>,
+        retune: bool,
+    ) -> Result<BTreeMap<String, (f32, f64)>> {
+        let mut diag = BTreeMap::new();
+        for (name, t) in raw {
+            self.rel.get_mut(name).unwrap().update(&t.data);
+        }
+        if !retune {
+            for name in state.qnames() {
+                let norm = self.rel[&name].normalized();
+                let f = cost_factors(&norm, self.beta[&name]);
+                self.factors.insert(name, f);
+            }
+            return Ok(diag);
+        }
+        // re-tune beta per layer against the current FP weights
+        for name in state.qnames() {
+            let w = &state.params[&name];
+            let cb = Codebook::fit(&w.data, self.cfg.bits);
+            let lam = self.layer_lambda(w.numel(), &cb);
+            let norm = self.rel[&name].normalized();
+            // base (ECQ) sparsity of this layer
+            let ones = vec![1.0f32; w.numel()];
+            let base = self.call_assign(engine, &w.data, &ones, &cb, lam)?;
+            let base_sp = base.sparsity;
+            let p = self.cfg.p;
+            let ctl = control_beta(
+                &norm,
+                self.beta[&name],
+                p,
+                base_sp,
+                |factors| {
+                    self.call_assign(engine, &w.data, factors, &cb, lam)
+                        .map(|a| a.sparsity)
+                        .unwrap_or(1.0)
+                },
+                self.cfg.max_beta_halvings,
+            );
+            diag.insert(name.clone(), (ctl.beta, ctl.extra_sparsity));
+            self.beta.insert(name.clone(), ctl.beta);
+            self.factors.insert(name.clone(), ctl.factors);
+        }
+        Ok(diag)
+    }
+
+    /// Effective per-layer lambda: the user-facing lambda is dimensionless;
+    /// it is scaled by the layer-size factor (Sec. 3.1) and by step^2 so the
+    /// entropy term is commensurate with the squared-distance term
+    /// regardless of the layer's weight scale.
+    fn layer_lambda(&self, numel: usize, cb: &Codebook) -> f32 {
+        self.cfg.lambda * lambda_scale(numel, self.max_numel) * cb.step * cb.step
+    }
+
+    /// Relevance factors for one layer under the current method/state.
+    fn layer_factors(&self, name: &str, numel: usize) -> Vec<f32> {
+        match self.cfg.method {
+            Method::Ecq => vec![1.0; numel],
+            Method::Ecqx => self
+                .factors
+                .get(name)
+                .cloned()
+                .unwrap_or_else(|| {
+                    // no relevances observed yet: neutral factors
+                    cost_factors(&vec![1.0; numel], 0.0)
+                }),
+        }
+    }
+
+    /// Re-assign every quantized layer from the current FP background
+    /// weights (Fig. 5 step 6); updates `state.qlayers`.
+    pub fn assign_all(&self, engine: &Engine, state: &mut ModelState) -> Result<()> {
+        let qnames = state.qnames();
+        for name in qnames {
+            let w = state.params[&name].clone();
+            let cb = Codebook::fit(&w.data, self.cfg.bits);
+            let lam = self.layer_lambda(w.numel(), &cb);
+            let factors = self.layer_factors(&name, w.numel());
+            let out = self.call_assign(engine, &w.data, &factors, &cb, lam)?;
+            let shape = w.shape.clone();
+            state.qlayers.insert(
+                name,
+                QLayer {
+                    qw: Tensor::new(shape.clone(), out.qw),
+                    idx: TensorI32::new(shape, out.idx),
+                    codebook: cb,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// One assign-artifact call: pad to the bucket, execute, strip padding.
+    fn call_assign(
+        &self,
+        engine: &Engine,
+        w: &[f32],
+        factors: &[f32],
+        cb: &Codebook,
+        lam: f32,
+    ) -> Result<AssignOut> {
+        let n = w.len();
+        let bucket = engine.manifest.bucket_for(n)?;
+        let mut wp = w.to_vec();
+        wp.resize(bucket, 0.0);
+        let mut rp = factors.to_vec();
+        rp.resize(bucket, 1.0);
+        let mut mask = vec![1.0f32; n];
+        mask.resize(bucket, 0.0);
+        let inputs = [
+            Value::F32(Tensor::new(vec![bucket], wp)),
+            Value::F32(Tensor::new(vec![bucket], rp)),
+            Value::F32(Tensor::new(vec![bucket], mask)),
+            Value::F32(Tensor::new(vec![cb.values.len()], cb.values.clone())),
+            Value::F32(Tensor::new(vec![cb.valid.len()], cb.valid.clone())),
+            Value::F32(Tensor::scalar(lam)),
+        ];
+        let outs = engine.call(&format!("assign_{bucket}"), &inputs)?;
+        let idx = outs[0].as_i32().data[..n].to_vec();
+        let qw = outs[1].as_f32().data[..n].to_vec();
+        let zeros = idx.iter().filter(|&&i| i == 0).count();
+        Ok(AssignOut { sparsity: zeros as f64 / n as f64, idx, qw })
+    }
+}
+
+struct AssignOut {
+    idx: Vec<i32>,
+    qw: Vec<f32>,
+    sparsity: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names() {
+        assert_eq!(Method::Ecq.as_str(), "ECQ");
+        assert_eq!(Method::Ecqx.as_str(), "ECQx");
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = AssignConfig::default();
+        assert_eq!(c.bits, 4);
+        assert!(c.p > 0.0 && c.p < 1.0);
+        assert!(c.beta0 <= 1.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Binds model state + batches to artifact signatures by name convention.
+//!
+//! Input-name conventions (set by python/compile/aot.py):
+//!   p_<param>   — parameter tensor (FP or quantized, caller's choice)
+//!   q_<param>   — quantized copy of a quantize=1 parameter
+//!   m_/v_<p>    — Adam moments
+//!   idx_/cb_<p> — centroid indices / codebook (gather-eval)
+//!   x, y        — batch features / labels
+//!   t, lr, gs, eqw, abits, lam — scalars
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::data::Batch;
+use crate::nn::ModelState;
+use crate::runtime::{ArtifactSpec, DType};
+use crate::tensor::{Tensor, TensorI32, Value};
+
+/// Where `p_<name>` slots read from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamSource {
+    /// full-precision background model (fp_train, baseline eval)
+    Fp,
+    /// quantized copies for quantize=1 params, FP for the rest
+    /// (ste_train forward, lrp, quantized eval)
+    Quantized,
+}
+
+/// Scalar inputs a call may need.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Scalars {
+    pub t: f32,
+    pub lr: f32,
+    pub gs: f32,
+    pub eqw: f32,
+    pub abits: f32,
+    pub lam: f32,
+}
+
+/// Build the input value list for `spec` from the model state + batch.
+pub fn bind_inputs(
+    spec: &ArtifactSpec,
+    state: &ModelState,
+    source: ParamSource,
+    batch: Option<&Batch>,
+    scalars: &Scalars,
+) -> Result<Vec<Value>> {
+    let mut vals = Vec::with_capacity(spec.inputs.len());
+    for inp in &spec.inputs {
+        let name = inp.name.as_str();
+        let v: Value = if let Some(p) = name.strip_prefix("p_") {
+            let t = match source {
+                ParamSource::Fp => &state.params[p],
+                ParamSource::Quantized => state.quantized_param(p),
+            };
+            Value::F32(t.clone())
+        } else if let Some(p) = name.strip_prefix("q_") {
+            let ql = state
+                .qlayers
+                .get(p)
+                .ok_or_else(|| anyhow::anyhow!("layer {p} not quantized yet"))?;
+            Value::F32(ql.qw.clone())
+        } else if let Some(p) = name.strip_prefix("m_") {
+            Value::F32(state.m[p].clone())
+        } else if let Some(p) = name.strip_prefix("v_") {
+            Value::F32(state.v[p].clone())
+        } else if let Some(p) = name.strip_prefix("idx_") {
+            let ql = &state.qlayers[p];
+            Value::I32(ql.idx.clone())
+        } else if let Some(p) = name.strip_prefix("cb_") {
+            let ql = &state.qlayers[p];
+            Value::F32(Tensor::new(vec![ql.codebook.values.len()], ql.codebook.values.clone()))
+        } else {
+            match name {
+                "x" => {
+                    let b = batch.ok_or_else(|| anyhow::anyhow!("artifact needs a batch"))?;
+                    Value::F32(Tensor::new(inp.shape.clone(), b.x.clone()))
+                }
+                "y" => {
+                    let b = batch.ok_or_else(|| anyhow::anyhow!("artifact needs a batch"))?;
+                    Value::I32(TensorI32::new(inp.shape.clone(), b.y.clone()))
+                }
+                "t" => Value::F32(Tensor::scalar(scalars.t)),
+                "lr" => Value::F32(Tensor::scalar(scalars.lr)),
+                "gs" => Value::F32(Tensor::scalar(scalars.gs)),
+                "eqw" => Value::F32(Tensor::scalar(scalars.eqw)),
+                "abits" => Value::F32(Tensor::scalar(scalars.abits)),
+                "lam" => Value::F32(Tensor::scalar(scalars.lam)),
+                other => bail!("unknown artifact input name: {other}"),
+            }
+        };
+        // dtype sanity (shapes are checked by the engine)
+        let ok = matches!(
+            (&v, inp.dtype),
+            (Value::F32(_), DType::F32) | (Value::I32(_), DType::I32)
+        );
+        if !ok {
+            bail!("input {name}: bound wrong dtype");
+        }
+        vals.push(v);
+    }
+    Ok(vals)
+}
+
+/// Write train-step outputs (p_*/m_*/v_*) back into the state.
+pub fn apply_train_outputs(
+    state: &mut ModelState,
+    outputs: HashMap<String, Value>,
+) -> Result<(f32, f32)> {
+    let mut loss = 0.0;
+    let mut correct = 0.0;
+    for (name, v) in outputs {
+        if let Some(p) = name.strip_prefix("p_") {
+            state.params.insert(p.to_string(), v.into_f32());
+        } else if let Some(p) = name.strip_prefix("m_") {
+            state.m.insert(p.to_string(), v.into_f32());
+        } else if let Some(p) = name.strip_prefix("v_") {
+            state.v.insert(p.to_string(), v.into_f32());
+        } else if name == "loss" {
+            loss = v.as_f32().as_scalar();
+        } else if name == "correct" {
+            correct = v.as_f32().as_scalar();
+        } else {
+            bail!("unexpected train output {name}");
+        }
+    }
+    Ok((loss, correct))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Init, ModelSpec, ParamSpec, TensorSpec};
+
+    fn toy() -> (ArtifactSpec, ModelState) {
+        let spec = ModelSpec {
+            name: "toy".into(),
+            batch: 2,
+            classes: 2,
+            input_dim: 3,
+            params: vec![
+                ParamSpec { name: "w0".into(), shape: vec![3, 2], init: Init::HeIn, quantize: true },
+                ParamSpec { name: "b0".into(), shape: vec![2], init: Init::Zeros, quantize: false },
+            ],
+        };
+        let art = ArtifactSpec {
+            name: "toy_eval".into(),
+            file: "/dev/null".into(),
+            inputs: vec![
+                TensorSpec { name: "p_w0".into(), dtype: DType::F32, shape: vec![3, 2] },
+                TensorSpec { name: "p_b0".into(), dtype: DType::F32, shape: vec![2] },
+                TensorSpec { name: "x".into(), dtype: DType::F32, shape: vec![2, 3] },
+                TensorSpec { name: "y".into(), dtype: DType::I32, shape: vec![2] },
+                TensorSpec { name: "lr".into(), dtype: DType::F32, shape: vec![] },
+            ],
+            outputs: vec![],
+        };
+        (art, ModelState::init(&spec, 1))
+    }
+
+    #[test]
+    fn binds_in_order() {
+        let (art, state) = toy();
+        let batch = Batch { x: vec![0.0; 6], y: vec![0, 1], batch: 2 };
+        let scalars = Scalars { lr: 0.1, ..Default::default() };
+        let vals =
+            bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &scalars).unwrap();
+        assert_eq!(vals.len(), 5);
+        assert_eq!(vals[0].shape(), &[3, 2]);
+        assert_eq!(vals[3].as_i32().data, vec![0, 1]);
+        assert_eq!(vals[4].as_f32().as_scalar(), 0.1);
+    }
+
+    #[test]
+    fn missing_batch_errors() {
+        let (art, state) = toy();
+        let r = bind_inputs(&art, &state, ParamSource::Fp, None, &Scalars::default());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn apply_outputs_updates_state() {
+        let (_, mut state) = toy();
+        let mut outs = HashMap::new();
+        outs.insert("p_w0".to_string(), Value::F32(Tensor::ones(&[3, 2])));
+        outs.insert("m_w0".to_string(), Value::F32(Tensor::full(&[3, 2], 0.5)));
+        outs.insert("loss".to_string(), Value::F32(Tensor::scalar(1.25)));
+        outs.insert("correct".to_string(), Value::F32(Tensor::scalar(2.0)));
+        let (loss, corr) = apply_train_outputs(&mut state, outs).unwrap();
+        assert_eq!(loss, 1.25);
+        assert_eq!(corr, 2.0);
+        assert!(state.params["w0"].data.iter().all(|&x| x == 1.0));
+        assert!(state.m["w0"].data.iter().all(|&x| x == 0.5));
+    }
+}

@@ -1,0 +1,39 @@
+//! The L3 coordinator: quantization-aware training (the ECQ^x loop of
+//! Fig. 5), hyperparameter sweep campaigns, candidate selection and
+//! reporting — the system that actually runs the paper's experiments.
+
+pub mod assign;
+pub mod binder;
+pub mod sweep;
+pub mod trainer;
+
+pub use assign::{AssignConfig, Assigner, Method};
+pub use sweep::{SweepConfig, SweepRunner};
+pub use trainer::{EvalResult, Pretrainer, QatConfig, QatTrainer};
+
+use crate::codec;
+use crate::nn::ModelState;
+
+/// In-memory compressed size (bytes) of a quantized model: CABAC payloads
+/// for quantized layers + raw fp32 for the rest + per-layer header,
+/// matching the `.ecqx` container layout.
+pub fn compressed_size(state: &ModelState) -> usize {
+    let mut total = 8; // magic
+    for name in state.qnames() {
+        let ql = &state.qlayers[&name];
+        let enc = codec::encode_tensor(&ql.idx, &ql.codebook);
+        total += enc.payload.len() + 16 + name.len();
+    }
+    for (name, t) in &state.params {
+        if state.qlayers.contains_key(name) {
+            continue;
+        }
+        total += t.numel() * 4 + 8 + name.len();
+    }
+    total
+}
+
+/// Compression ratio vs the FP32 model (the paper's CR column).
+pub fn compression_ratio(state: &ModelState) -> f64 {
+    state.fp32_bytes() as f64 / compressed_size(state).max(1) as f64
+}

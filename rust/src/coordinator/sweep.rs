@@ -1,0 +1,185 @@
+//! Sweep campaigns: lambda x p x bit-width grids producing the working
+//! points of Figs. 6-10 and Table 1, plus candidate selection (Fig. 5
+//! step 7).
+
+use anyhow::Result;
+
+use super::assign::{AssignConfig, Method};
+use super::binder::ParamSource;
+use super::trainer::{evaluate, QatConfig, QatTrainer};
+use super::{compressed_size, compression_ratio};
+use crate::data::{DataLoader, Dataset};
+use crate::metrics::WorkingPoint;
+use crate::nn::ModelState;
+use crate::runtime::Engine;
+
+/// One sweep configuration.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub model: String,
+    pub method: Method,
+    pub bits: u32,
+    pub lambdas: Vec<f32>,
+    pub p: f64,
+    pub qat: QatConfig,
+    /// accuracy of the unquantized baseline (for the drop column)
+    pub baseline_acc: f64,
+}
+
+/// Runs sweeps from a shared pre-trained snapshot.
+pub struct SweepRunner<'e> {
+    pub engine: &'e Engine,
+    /// pre-trained FP parameter snapshot (cloned into every trial)
+    pub pretrained: ModelState,
+}
+
+impl<'e> SweepRunner<'e> {
+    pub fn new(engine: &'e Engine, pretrained: ModelState) -> Self {
+        SweepRunner { engine, pretrained }
+    }
+
+    fn fresh_state(&self) -> ModelState {
+        ModelState {
+            spec: self.pretrained.spec.clone(),
+            params: self.pretrained.params.clone(),
+            m: self.pretrained.m.clone(),
+            v: self.pretrained.v.clone(),
+            t: 0,
+            qlayers: Default::default(),
+        }
+    }
+
+    /// Run one (method, bits, lambda, p) trial; returns its working point.
+    pub fn run_trial<D: Dataset>(
+        &self,
+        cfg: &SweepConfig,
+        lambda: f32,
+        train: &DataLoader<D>,
+        val: &DataLoader<D>,
+    ) -> Result<(WorkingPoint, ModelState)> {
+        let mut state = self.fresh_state();
+        let mut qat = cfg.qat.clone();
+        qat.assign = AssignConfig {
+            method: cfg.method,
+            bits: cfg.bits,
+            lambda,
+            p: cfg.p,
+            ..qat.assign
+        };
+        let trainer = QatTrainer::new(qat);
+        let outcome = trainer.run(self.engine, &mut state, train, val)?;
+        let ev = evaluate(self.engine, &state, val, ParamSource::Quantized)?;
+        let wp = WorkingPoint {
+            method: cfg.method.as_str().to_string(),
+            bits: cfg.bits,
+            lambda,
+            p: cfg.p,
+            accuracy: ev.accuracy,
+            acc_drop: ev.accuracy - cfg.baseline_acc,
+            sparsity: outcome.final_sparsity,
+            size_bytes: compressed_size(&state),
+            compression_ratio: compression_ratio(&state),
+        };
+        Ok((wp, state))
+    }
+
+    /// Sweep the whole lambda grid; returns one working point per lambda.
+    pub fn run<D: Dataset>(
+        &self,
+        cfg: &SweepConfig,
+        train: &DataLoader<D>,
+        val: &DataLoader<D>,
+    ) -> Result<Vec<WorkingPoint>> {
+        let mut points = Vec::with_capacity(cfg.lambdas.len());
+        for &lam in &cfg.lambdas {
+            let (wp, _) = self.run_trial(cfg, lam, train, val)?;
+            if cfg.qat.verbose {
+                println!(
+                    "  [sweep {} bw={} λ={:.4} p={:.2}] acc={:.4} (drop {:+.4}) \
+                     sparsity={:.4} size={:.1}kB CR={:.1}x",
+                    cfg.method.as_str(),
+                    cfg.bits,
+                    lam,
+                    cfg.p,
+                    wp.accuracy,
+                    wp.acc_drop,
+                    wp.sparsity,
+                    wp.size_bytes as f64 / 1000.0,
+                    wp.compression_ratio
+                );
+            }
+            points.push(wp);
+        }
+        Ok(points)
+    }
+}
+
+/// Candidate selection (Fig. 5 step 7 / Table 1 row kinds).
+pub mod select {
+    use crate::metrics::WorkingPoint;
+
+    /// Highest-accuracy candidate.
+    pub fn best_accuracy(points: &[WorkingPoint]) -> Option<&WorkingPoint> {
+        points
+            .iter()
+            .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+    }
+
+    /// Highest compression without model degradation (drop >= 0).
+    pub fn best_cr_no_degradation(points: &[WorkingPoint]) -> Option<&WorkingPoint> {
+        points
+            .iter()
+            .filter(|p| p.acc_drop >= 0.0)
+            .max_by(|a, b| a.compression_ratio.partial_cmp(&b.compression_ratio).unwrap())
+    }
+
+    /// Highest compression with negligible degradation (drop >= -tol).
+    pub fn best_cr_negligible(points: &[WorkingPoint], tol: f64) -> Option<&WorkingPoint> {
+        points
+            .iter()
+            .filter(|p| p.acc_drop >= -tol)
+            .max_by(|a, b| a.compression_ratio.partial_cmp(&b.compression_ratio).unwrap())
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn wp(acc: f64, drop: f64, cr: f64) -> WorkingPoint {
+            WorkingPoint {
+                method: "ECQx".into(),
+                bits: 4,
+                lambda: 0.0,
+                p: 0.3,
+                accuracy: acc,
+                acc_drop: drop,
+                sparsity: 0.5,
+                size_bytes: 1000,
+                compression_ratio: cr,
+            }
+        }
+
+        #[test]
+        fn selection_criteria() {
+            let pts = vec![
+                wp(0.92, 0.02, 10.0),
+                wp(0.91, 0.01, 30.0),
+                wp(0.89, -0.01, 60.0),
+                wp(0.80, -0.10, 100.0),
+            ];
+            assert_eq!(best_accuracy(&pts).unwrap().accuracy, 0.92);
+            assert_eq!(best_cr_no_degradation(&pts).unwrap().compression_ratio, 30.0);
+            assert_eq!(
+                best_cr_negligible(&pts, 0.02).unwrap().compression_ratio,
+                60.0
+            );
+            assert!(best_cr_negligible(&pts[3..], 0.02).is_none());
+        }
+
+        #[test]
+        fn empty_points() {
+            assert!(best_accuracy(&[]).is_none());
+            assert!(best_cr_no_degradation(&[]).is_none());
+        }
+    }
+}

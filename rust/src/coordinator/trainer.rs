@@ -1,0 +1,326 @@
+//! Pre-training (FP32 baseline) and the ECQ^x quantization-aware training
+//! loop (Fig. 5): STE step -> periodic LRP -> relevance pipeline ->
+//! per-layer re-assignment -> eval.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::assign::{AssignConfig, Assigner, Method};
+use super::binder::{apply_train_outputs, bind_inputs, ParamSource, Scalars};
+use crate::data::{DataLoader, Dataset};
+use crate::metrics::Meter;
+use crate::nn::ModelState;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::util::timer::PhaseProfile;
+use crate::util::Timer;
+
+/// Evaluation outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// Pull the `r_<layer>` outputs of the LRP artifact into a map.
+fn collect_relevances(
+    outs: std::collections::HashMap<String, crate::tensor::Value>,
+) -> BTreeMap<String, Tensor> {
+    outs.into_iter()
+        .filter_map(|(k, v)| k.strip_prefix("r_").map(|n| (n.to_string(), v.into_f32())))
+        .collect()
+}
+
+/// Run the `<model>_eval` artifact over a validation loader.
+pub fn evaluate<D: Dataset>(
+    engine: &Engine,
+    state: &ModelState,
+    loader: &DataLoader<D>,
+    source: ParamSource,
+) -> Result<EvalResult> {
+    let art = engine.manifest.artifact(&format!("{}_eval", state.spec.name))?.clone();
+    let mut meter = Meter::new();
+    for batch in loader.epoch(0) {
+        let inputs = bind_inputs(&art, state, source, Some(&batch), &Scalars::default())?;
+        let outs = engine.call_named(&art.name, &inputs)?;
+        meter.update(
+            outs["loss"].as_f32().as_scalar(),
+            outs["correct"].as_f32().as_scalar(),
+            batch.batch,
+        );
+    }
+    Ok(EvalResult { loss: meter.loss(), accuracy: meter.accuracy() })
+}
+
+/// FP32 pre-trainer (the unquantized baseline of every table).
+pub struct Pretrainer {
+    pub lr: f32,
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for Pretrainer {
+    fn default() -> Self {
+        Pretrainer { lr: 1e-3, log_every: 50, verbose: true }
+    }
+}
+
+impl Pretrainer {
+    /// Train for `epochs`; returns per-epoch (train_loss, train_acc).
+    pub fn run<D: Dataset>(
+        &self,
+        engine: &Engine,
+        state: &mut ModelState,
+        train: &DataLoader<D>,
+        epochs: usize,
+    ) -> Result<Vec<(f64, f64)>> {
+        let art = engine
+            .manifest
+            .artifact(&format!("{}_fp_train", state.spec.name))?
+            .clone();
+        let mut curve = Vec::with_capacity(epochs);
+        for epoch in 0..epochs {
+            let mut meter = Meter::new();
+            for batch in train.epoch(epoch as u64) {
+                state.t += 1;
+                let scalars = Scalars { t: state.t as f32, lr: self.lr, ..Default::default() };
+                let inputs =
+                    bind_inputs(&art, state, ParamSource::Fp, Some(&batch), &scalars)?;
+                let outs = engine.call_named(&art.name, &inputs)?;
+                let (loss, correct) = apply_train_outputs(state, outs)?;
+                meter.update(loss, correct, batch.batch);
+            }
+            if self.verbose {
+                println!(
+                    "[pretrain {}] epoch {epoch}: loss={:.4} acc={:.4}",
+                    state.spec.name,
+                    meter.loss(),
+                    meter.accuracy()
+                );
+            }
+            curve.push((meter.loss(), meter.accuracy()));
+        }
+        Ok(curve)
+    }
+}
+
+/// Configuration of one QAT run.
+#[derive(Clone, Debug)]
+pub struct QatConfig {
+    pub assign: AssignConfig,
+    pub epochs: usize,
+    pub lr: f32,
+    /// recompute LRP relevances every N train steps (ECQx only)
+    pub lrp_every: usize,
+    /// re-tune beta (target-sparsity controller) every N relevance
+    /// refreshes (the controller needs extra assign calls, so it runs at a
+    /// coarser cadence than the EMA updates)
+    pub retune_every: usize,
+    /// batches of LRP on the pre-trained model before the initial
+    /// assignment, so ECQx starts from well-averaged relevances
+    pub lrp_warmup: usize,
+    /// re-assign clusters every N train steps
+    pub assign_every: usize,
+    /// STE gradient scaling by |centroid| (Fig. 5 step 3)
+    pub grad_scale: bool,
+    /// sample weighting mode for LRP (0 = score-weighted, 1 = equal)
+    pub lrp_equal_weight: bool,
+    pub verbose: bool,
+}
+
+impl Default for QatConfig {
+    fn default() -> Self {
+        QatConfig {
+            assign: AssignConfig::default(),
+            epochs: 4,
+            lr: 1e-4,
+            lrp_every: 2,
+            retune_every: 8,
+            lrp_warmup: 12,
+            assign_every: 2,
+            grad_scale: true,
+            lrp_equal_weight: false,
+            verbose: true,
+        }
+    }
+}
+
+/// Per-epoch QAT record.
+#[derive(Clone, Debug)]
+pub struct QatEpoch {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub val_loss: f64,
+    pub val_acc: f64,
+    pub sparsity: f64,
+}
+
+/// Outcome of a full QAT run.
+pub struct QatOutcome {
+    pub epochs: Vec<QatEpoch>,
+    pub profile: PhaseProfile,
+    /// best validation accuracy over epochs
+    pub best_val_acc: f64,
+    /// final sparsity over quantized layers
+    pub final_sparsity: f64,
+}
+
+/// The ECQ^x quantization-aware trainer.
+pub struct QatTrainer {
+    pub cfg: QatConfig,
+}
+
+impl QatTrainer {
+    pub fn new(cfg: QatConfig) -> Self {
+        QatTrainer { cfg }
+    }
+
+    /// Run QAT on a pre-trained `state`.
+    pub fn run<D: Dataset>(
+        &self,
+        engine: &Engine,
+        state: &mut ModelState,
+        train: &DataLoader<D>,
+        val: &DataLoader<D>,
+    ) -> Result<QatOutcome> {
+        let cfg = &self.cfg;
+        let model = state.spec.name.clone();
+        let ste_art = engine.manifest.artifact(&format!("{model}_ste_train"))?.clone();
+        let lrp_art = engine.manifest.artifact(&format!("{model}_lrp"))?.clone();
+
+        let mut assigner = Assigner::new(cfg.assign.clone(), state);
+        let mut profile = PhaseProfile::new();
+
+        // ECQx: warm the relevance EMAs on the *pre-trained* model over
+        // several batches before anything is quantized, so the initial
+        // assignment already sees a well-averaged relevance map.
+        if cfg.assign.method == Method::Ecqx && cfg.lrp_warmup > 0 {
+            let t0 = Timer::start();
+            for (i, batch) in train.epoch(u64::MAX).enumerate() {
+                if i >= cfg.lrp_warmup {
+                    break;
+                }
+                let scal = Scalars {
+                    eqw: if cfg.lrp_equal_weight { 1.0 } else { 0.0 },
+                    ..Default::default()
+                };
+                let inputs =
+                    bind_inputs(&lrp_art, state, ParamSource::Fp, Some(&batch), &scal)?;
+                let outs = engine.call_named(&lrp_art.name, &inputs)?;
+                let raw = collect_relevances(outs);
+                let retune = i + 1 == cfg.lrp_warmup;
+                assigner.update_relevances(engine, state, &raw, retune)?;
+            }
+            profile.record("lrp_warmup", t0.elapsed_s());
+        }
+
+        // Fig. 5 step 5-6: initial assignment from the pre-trained FP
+        // weights (with warmed relevance factors for ECQx).
+        profile.time("assign", || assigner.assign_all(engine, state))?;
+
+        // reset Adam state for the QAT phase
+        for (_, t) in state.m.iter_mut() {
+            t.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for (_, t) in state.v.iter_mut() {
+            t.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+        state.t = 0;
+
+        let mut epochs = Vec::new();
+        let mut best_val = 0.0f64;
+        let mut step = 0usize;
+        for epoch in 0..cfg.epochs {
+            let mut meter = Meter::new();
+            for batch in train.epoch(epoch as u64) {
+                // 1) STE forward/backward through the quantized model,
+                //    Adam-update of the FP background model.
+                state.t += 1;
+                let scalars = Scalars {
+                    t: state.t as f32,
+                    lr: cfg.lr,
+                    gs: if cfg.grad_scale { 1.0 } else { 0.0 },
+                    ..Default::default()
+                };
+                let t0 = Timer::start();
+                // p_ slots carry the FP background model; the quantized
+                // copies travel separately in the q_ slots.
+                let inputs =
+                    bind_inputs(&ste_art, state, ParamSource::Fp, Some(&batch), &scalars)?;
+                let outs = engine.call_named(&ste_art.name, &inputs)?;
+                let (loss, correct) = apply_train_outputs(state, outs)?;
+                profile.record("ste_step", t0.elapsed_s());
+                meter.update(loss, correct, batch.batch);
+
+                // 2) periodic LRP relevance refresh (ECQx only).
+                if cfg.assign.method == Method::Ecqx && step % cfg.lrp_every == 0 {
+                    let t1 = Timer::start();
+                    let scal = Scalars {
+                        eqw: if cfg.lrp_equal_weight { 1.0 } else { 0.0 },
+                        ..Default::default()
+                    };
+                    let inputs = bind_inputs(
+                        &lrp_art,
+                        state,
+                        ParamSource::Quantized,
+                        Some(&batch),
+                        &scal,
+                    )?;
+                    let outs = engine.call_named(&lrp_art.name, &inputs)?;
+                    let raw = collect_relevances(outs);
+                    profile.record("lrp", t1.elapsed_s());
+                    let t2 = Timer::start();
+                    let refresh_idx = step / cfg.lrp_every;
+                    let retune = refresh_idx % cfg.retune_every.max(1) == 0;
+                    assigner.update_relevances(engine, state, &raw, retune)?;
+                    profile.record("beta_control", t2.elapsed_s());
+                }
+
+                // 3) cluster re-assignment from the updated background model.
+                if step % cfg.assign_every == 0 {
+                    let t3 = Timer::start();
+                    assigner.assign_all(engine, state)?;
+                    profile.record("assign", t3.elapsed_s());
+                }
+                step += 1;
+            }
+            // final assignment of the epoch so eval sees fresh clusters
+            profile.time("assign", || assigner.assign_all(engine, state))?;
+            let t4 = Timer::start();
+            let ev = evaluate(engine, state, val, ParamSource::Quantized)?;
+            profile.record("eval", t4.elapsed_s());
+            best_val = best_val.max(ev.accuracy);
+            let sp = state.quantized_sparsity();
+            if cfg.verbose {
+                println!(
+                    "[{} {model}] epoch {epoch}: train_acc={:.4} val_acc={:.4} sparsity={:.4}",
+                    cfg.assign.method.as_str(),
+                    meter.accuracy(),
+                    ev.accuracy,
+                    sp
+                );
+                for name in state.qnames() {
+                    let ql = &state.qlayers[&name];
+                    println!(
+                        "    {name:<10} sparsity={:.3} step={:.4} max|w|={:.3}",
+                        ql.qw.sparsity(),
+                        ql.codebook.step,
+                        state.params[&name].abs_max()
+                    );
+                }
+            }
+            epochs.push(QatEpoch {
+                epoch,
+                train_loss: meter.loss(),
+                train_acc: meter.accuracy(),
+                val_loss: ev.loss,
+                val_acc: ev.accuracy,
+                sparsity: sp,
+            });
+        }
+        let final_sparsity = state.quantized_sparsity();
+        Ok(QatOutcome { epochs, profile, best_val_acc: best_val, final_sparsity })
+    }
+}

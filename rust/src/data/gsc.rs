@@ -1,0 +1,215 @@
+//! Synthetic Google Speech Commands: MFCC-like keyword fingerprints.
+//!
+//! Mirrors the structure of the real task (Sec. 5.1.1): 12 classes = 10
+//! "keywords" + "unknown" (a mixture of off-vocabulary prototypes) +
+//! "silence" (pure noise). Features are 24 frames x 15 MFCC bins = 360
+//! dims. Augmentation mirrors the paper's pipeline: background noise with
+//! p = 0.8 and a time shift with p = 0.5.
+
+use super::Dataset;
+use crate::util::Rng;
+
+pub const FRAMES: usize = 24;
+pub const BINS: usize = 15;
+pub const DIM: usize = FRAMES * BINS;
+pub const CLASSES: usize = 12;
+const UNKNOWN: usize = 10;
+const SILENCE: usize = 11;
+/// number of hidden off-vocabulary prototypes feeding "unknown"
+const OFF_VOCAB: usize = 6;
+
+/// Deterministic per-class spectral prototype: a sum of smooth
+/// time-frequency components whose frequencies/phases derive from the
+/// class id. Neighbouring classes share one component, which induces the
+/// class overlap that makes magnitude and relevance decorrelate (Fig. 4).
+fn prototype(class: usize, seed: u64, out: &mut [f32]) {
+    let mut rng = Rng::new(seed ^ (0xC1A5_5000 + class as u64));
+    let ncomp = 3;
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for comp in 0..ncomp {
+        // shared component between class c and c+1: derive from min id
+        let share = if comp == 0 { class.min(class + 1) } else { class };
+        let mut crng = Rng::new(seed ^ (share as u64 * 7919 + comp as u64 * 104729));
+        let ft = 0.5 + 2.5 * crng.f32(); // temporal frequency
+        let fb = 0.5 + 3.0 * crng.f32(); // spectral frequency
+        let pt = crng.range(0.0, std::f32::consts::TAU);
+        let pb = crng.range(0.0, std::f32::consts::TAU);
+        let amp = 0.5 + 0.8 * crng.f32();
+        // spectral localization: each formant-like component lives in a
+        // narrow band (real keywords occupy localized time-frequency
+        // regions, leaving many MFCC bins uninformative — the structure
+        // the LRP relevances exploit)
+        let bc = crng.range(1.0, BINS as f32 - 1.0); // band centre
+        let bw = 1.2 + 2.3 * crng.f32(); // band width
+        let _ = rng.f32();
+        for t in 0..FRAMES {
+            for b in 0..BINS {
+                let vt = (ft * t as f32 / FRAMES as f32 * std::f32::consts::TAU + pt).sin();
+                let vb = (fb * b as f32 / BINS as f32 * std::f32::consts::TAU + pb).cos();
+                let band = (-((b as f32 - bc) / bw).powi(2)).exp();
+                out[t * BINS + b] += amp * vt * vb * band;
+            }
+        }
+    }
+    // temporal envelope: keywords are short events centred in the window
+    for t in 0..FRAMES {
+        let x = (t as f32 - FRAMES as f32 / 2.0) / (FRAMES as f32 / 3.0);
+        let env = (-x * x).exp();
+        for b in 0..BINS {
+            out[t * BINS + b] *= env;
+        }
+    }
+}
+
+pub struct GscDataset {
+    n: usize,
+    seed: u64,
+    /// training split applies augmentation; validation is clean
+    augment: bool,
+}
+
+impl GscDataset {
+    pub fn new(n: usize, seed: u64, train: bool) -> Self {
+        // train/val draw from disjoint seed spaces
+        let seed = seed.wrapping_mul(2) + if train { 0 } else { 1 };
+        GscDataset { n, seed, augment: train }
+    }
+}
+
+impl Dataset for GscDataset {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        DIM
+    }
+
+    fn classes(&self) -> usize {
+        CLASSES
+    }
+
+    fn sample_into(&self, i: usize, out: &mut [f32]) -> i32 {
+        assert_eq!(out.len(), DIM);
+        let mut rng = Rng::new(self.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let class = rng.below(CLASSES);
+        match class {
+            SILENCE => out.iter_mut().for_each(|v| *v = 0.0),
+            UNKNOWN => {
+                // an off-vocabulary word: one of the hidden prototypes
+                let hidden = CLASSES + rng.below(OFF_VOCAB);
+                prototype(hidden, self.seed & !1, out);
+            }
+            c => prototype(c, self.seed & !1, out),
+        }
+        // pronunciation variability: blend in a confusable word's
+        // prototype with a per-sample coefficient (samples near m = 0.5
+        // are intrinsically ambiguous, bounding achievable accuracy like
+        // real speaker variation does)
+        if class != SILENCE {
+            let other = (class + 1 + rng.below(CLASSES + OFF_VOCAB - 1))
+                % (CLASSES + OFF_VOCAB);
+            let m = 0.5 * rng.f32();
+            let mut mix = vec![0.0f32; DIM];
+            prototype(other, self.seed & !1, &mut mix);
+            for (o, x) in out.iter_mut().zip(mix.iter()) {
+                *o = (1.0 - m) * *o + m * x;
+            }
+        }
+        // speaker gain variation (wide: quiet speakers are hard)
+        let gain = 0.35 + 0.9 * rng.f32();
+        out.iter_mut().for_each(|v| *v *= gain);
+        if self.augment {
+            // time shift +-3 frames with p = 0.5 (paper: +-100 ms, p = 0.5)
+            if rng.chance(0.5) {
+                let shift = rng.below(7) as isize - 3;
+                time_shift(out, shift);
+            }
+            // background noise with p = 0.8
+            if rng.chance(0.8) {
+                let snr = 0.25 + 0.45 * rng.f32();
+                for v in out.iter_mut() {
+                    *v += rng.normal_f32(0.0, snr);
+                }
+            }
+        } else {
+            // validation: moderate noise + occasional time shift, so the
+            // split is not easier than deployment conditions
+            if rng.chance(0.5) {
+                let shift = rng.below(7) as isize - 3;
+                time_shift(out, shift);
+            }
+            for v in out.iter_mut() {
+                *v += rng.normal_f32(0.0, 0.35);
+            }
+        }
+        class as i32
+    }
+}
+
+fn time_shift(x: &mut [f32], shift: isize) {
+    if shift == 0 {
+        return;
+    }
+    let mut tmp = vec![0.0f32; DIM];
+    for t in 0..FRAMES {
+        let src = t as isize - shift;
+        if src >= 0 && (src as usize) < FRAMES {
+            let s = src as usize;
+            tmp[t * BINS..(t + 1) * BINS].copy_from_slice(&x[s * BINS..(s + 1) * BINS]);
+        }
+    }
+    x.copy_from_slice(&tmp);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silence_has_less_energy_than_speech() {
+        let ds = GscDataset::new(2000, 9, false);
+        let mut buf = vec![0.0; DIM];
+        let mut sil = (0.0f64, 0u32);
+        let mut spk = (0.0f64, 0u32);
+        for i in 0..300 {
+            let y = ds.sample_into(i, &mut buf);
+            let energy: f64 =
+                buf.iter().map(|v| (v * v) as f64).sum::<f64>() / DIM as f64;
+            if y as usize == SILENCE {
+                sil = (sil.0 + energy, sil.1 + 1);
+            } else {
+                spk = (spk.0 + energy, spk.1 + 1);
+            }
+        }
+        assert!(sil.1 > 0, "no silence sample in 300 draws");
+        let sil_e = sil.0 / sil.1 as f64;
+        let spk_e = spk.0 / spk.1 as f64;
+        // silence = noise only; speech = (band-localized) prototype + noise,
+        // so speech carries measurably more energy on average
+        assert!(
+            sil_e < spk_e * 0.95,
+            "silence energy {sil_e} not below speech energy {spk_e}"
+        );
+    }
+
+    #[test]
+    fn classes_distinguishable() {
+        // prototypes of different classes must differ substantially
+        let mut a = vec![0.0; DIM];
+        let mut b = vec![0.0; DIM];
+        prototype(0, 42, &mut a);
+        prototype(5, 42, &mut b);
+        let d: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).powi(2)).sum();
+        assert!(d > 1.0, "prototypes too similar: {d}");
+    }
+
+    #[test]
+    fn time_shift_moves_frames() {
+        let mut x = vec![0.0f32; DIM];
+        x[0] = 1.0; // frame 0, bin 0
+        time_shift(&mut x, 2);
+        assert_eq!(x[2 * BINS], 1.0);
+        assert_eq!(x[0], 0.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Synthetic image datasets: CIFAR-10-like (10 classes) and Pascal-VOC-like
+//! (20 classes), 32x32x3 NHWC, class-conditional textures with the paper's
+//! augmentation structure (normalization, random horizontal flip, jitter).
+
+use super::Dataset;
+use crate::util::Rng;
+
+pub const H: usize = 32;
+pub const W: usize = 32;
+pub const C: usize = 3;
+pub const DIM: usize = H * W * C;
+
+/// Class texture: oriented sinusoidal gratings + a colour bias + a
+/// class-dependent blob position. Distinct enough to be learnable,
+/// overlapping enough (shared orientations) to be non-trivial.
+fn texture(class: usize, tag: u64, px: &mut [f32]) {
+    let mut crng = Rng::new(tag ^ (class as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+    let ncomp = 3;
+    let mut comps = Vec::with_capacity(ncomp);
+    for k in 0..ncomp {
+        // orientation shared between neighbouring classes for overlap
+        let share = if k == 0 { class / 2 } else { class };
+        let mut srng = Rng::new(tag ^ (share as u64 * 31337 + k as u64 * 271));
+        let th = srng.range(0.0, std::f32::consts::PI);
+        let freq = 1.0 + 4.0 * srng.f32();
+        let phase = srng.range(0.0, std::f32::consts::TAU);
+        comps.push((th.cos() * freq, th.sin() * freq, phase, 0.4 + 0.5 * srng.f32()));
+    }
+    let cb = [crng.f32(), crng.f32(), crng.f32()];
+    let (bx, by) = (crng.range(8.0, 24.0), crng.range(8.0, 24.0));
+    for y in 0..H {
+        for x in 0..W {
+            let mut v = 0.0f32;
+            for &(fx, fy, ph, amp) in &comps {
+                v += amp
+                    * ((fx * x as f32 / W as f32 + fy * y as f32 / H as f32)
+                        * std::f32::consts::TAU
+                        + ph)
+                        .sin();
+            }
+            let d2 = ((x as f32 - bx).powi(2) + (y as f32 - by).powi(2)) / 40.0;
+            let blob = (-d2).exp();
+            for ch in 0..C {
+                px[(y * W + x) * C + ch] = v * (0.5 + cb[ch]) + blob * (cb[ch] - 0.5) * 2.0;
+            }
+        }
+    }
+}
+
+fn hflip(px: &mut [f32]) {
+    for y in 0..H {
+        for x in 0..W / 2 {
+            for ch in 0..C {
+                px.swap((y * W + x) * C + ch, (y * W + (W - 1 - x)) * C + ch);
+            }
+        }
+    }
+}
+
+/// Translate by (dx, dy) with zero fill (the random-crop stand-in).
+fn jitter(px: &mut [f32], dx: isize, dy: isize) {
+    if dx == 0 && dy == 0 {
+        return;
+    }
+    let mut tmp = vec![0.0f32; DIM];
+    for y in 0..H as isize {
+        for x in 0..W as isize {
+            let (sx, sy) = (x - dx, y - dy);
+            if sx >= 0 && sx < W as isize && sy >= 0 && sy < H as isize {
+                for ch in 0..C {
+                    tmp[(y as usize * W + x as usize) * C + ch] =
+                        px[(sy as usize * W + sx as usize) * C + ch];
+                }
+            }
+        }
+    }
+    px.copy_from_slice(&tmp);
+}
+
+/// Shared generator for both image datasets.
+struct ImageGen {
+    n: usize,
+    seed: u64,
+    classes: usize,
+    augment: bool,
+}
+
+impl ImageGen {
+    fn sample_into(&self, i: usize, out: &mut [f32]) -> i32 {
+        assert_eq!(out.len(), DIM);
+        let mut rng =
+            Rng::new(self.seed ^ (i as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        let class = rng.below(self.classes);
+        texture(class, self.seed & !1, out);
+        // intra-class variability: blend in another class's texture with a
+        // per-sample coefficient — samples near m = 0.5 are intrinsically
+        // ambiguous, bounding achievable accuracy like real image clutter
+        {
+            let other = (class + 1 + rng.below(self.classes - 1)) % self.classes;
+            let m = 0.5 * rng.f32();
+            let mut mix = vec![0.0f32; DIM];
+            texture(other, self.seed & !1, &mut mix);
+            for (o, x) in out.iter_mut().zip(mix.iter()) {
+                *o = (1.0 - m) * *o + m * x;
+            }
+        }
+        if self.augment {
+            if rng.chance(0.5) {
+                hflip(out);
+            }
+            let dx = rng.below(9) as isize - 4;
+            let dy = rng.below(9) as isize - 4;
+            jitter(out, dx, dy);
+            let noise = 0.05 + 0.15 * rng.f32();
+            for v in out.iter_mut() {
+                *v += rng.normal_f32(0.0, noise);
+            }
+        } else {
+            for v in out.iter_mut() {
+                *v += rng.normal_f32(0.0, 0.05);
+            }
+        }
+        // per-sample normalization (the paper normalizes inputs)
+        let mean: f32 = out.iter().sum::<f32>() / DIM as f32;
+        let var: f32 =
+            out.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / DIM as f32;
+        let std = var.sqrt().max(1e-4);
+        out.iter_mut().for_each(|v| *v = (*v - mean) / std);
+        class as i32
+    }
+}
+
+/// CIFAR-10-like: 10 classes, 32x32x3.
+pub struct CifarDataset(ImageGen);
+
+impl CifarDataset {
+    pub fn new(n: usize, seed: u64, train: bool) -> Self {
+        let seed = seed.wrapping_mul(2) + if train { 0 } else { 1 };
+        CifarDataset(ImageGen { n, seed, classes: 10, augment: train })
+    }
+}
+
+impl Dataset for CifarDataset {
+    fn len(&self) -> usize {
+        self.0.n
+    }
+    fn dim(&self) -> usize {
+        DIM
+    }
+    fn classes(&self) -> usize {
+        10
+    }
+    fn sample_into(&self, i: usize, out: &mut [f32]) -> i32 {
+        self.0.sample_into(i, out)
+    }
+}
+
+/// Pascal-VOC-like: 20 classes, 32x32x3 (scaled substitution; see DESIGN.md).
+pub struct VocDataset(ImageGen);
+
+impl VocDataset {
+    pub fn new(n: usize, seed: u64, train: bool) -> Self {
+        let seed = seed.wrapping_mul(2) + if train { 0 } else { 1 };
+        // distinct texture space from CIFAR via the high seed bit
+        VocDataset(ImageGen {
+            n,
+            seed: seed ^ 0x8000_0000_0000_0000,
+            classes: 20,
+            augment: train,
+        })
+    }
+}
+
+impl Dataset for VocDataset {
+    fn len(&self) -> usize {
+        self.0.n
+    }
+    fn dim(&self) -> usize {
+        DIM
+    }
+    fn classes(&self) -> usize {
+        20
+    }
+    fn sample_into(&self, i: usize, out: &mut [f32]) -> i32 {
+        self.0.sample_into(i, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalized_output() {
+        let ds = CifarDataset::new(16, 5, true);
+        let mut buf = vec![0.0; DIM];
+        ds.sample_into(3, &mut buf);
+        let mean: f32 = buf.iter().sum::<f32>() / DIM as f32;
+        assert!(mean.abs() < 1e-3, "mean {mean}");
+    }
+
+    #[test]
+    fn hflip_involution() {
+        let ds = VocDataset::new(4, 1, false);
+        let mut a = vec![0.0; DIM];
+        ds.sample_into(0, &mut a);
+        let mut b = a.clone();
+        hflip(&mut b);
+        assert_ne!(a, b);
+        hflip(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn jitter_translates() {
+        let mut px = vec![0.0f32; DIM];
+        px[(5 * W + 5) * C] = 1.0;
+        jitter(&mut px, 2, 3);
+        assert_eq!(px[(8 * W + 7) * C], 1.0);
+    }
+
+    #[test]
+    fn textures_differ_between_classes() {
+        let mut a = vec![0.0; DIM];
+        let mut b = vec![0.0; DIM];
+        texture(1, 7, &mut a);
+        texture(8, 7, &mut b);
+        let d: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).powi(2)).sum();
+        assert!(d > 1.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Synthetic datasets standing in for Google Speech Commands, CIFAR-10 and
+//! Pascal VOC (repro substitution — see DESIGN.md §3).
+//!
+//! Each dataset is a deterministic, lazily-generated class-conditional
+//! generator: sample `i` is fully determined by `(dataset seed, i)`, so
+//! train/val splits are reproducible across processes and experiments.
+
+pub mod gsc;
+pub mod images;
+pub mod loader;
+
+pub use loader::{Batch, DataLoader};
+
+/// A labelled classification dataset producing flat f32 feature vectors.
+pub trait Dataset: Sync {
+    /// Number of samples.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Feature dimensionality (flattened).
+    fn dim(&self) -> usize;
+    /// Number of classes.
+    fn classes(&self) -> usize;
+    /// Write sample `i`'s features into `out` (len == dim()); return label.
+    fn sample_into(&self, i: usize, out: &mut [f32]) -> i32;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::gsc::GscDataset;
+    use super::images::{CifarDataset, VocDataset};
+    use super::*;
+
+    fn class_balance<D: Dataset>(ds: &D) -> Vec<usize> {
+        let mut counts = vec![0usize; ds.classes()];
+        let mut buf = vec![0.0; ds.dim()];
+        for i in 0..ds.len() {
+            let y = ds.sample_into(i, &mut buf);
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn datasets_deterministic() {
+        let a = GscDataset::new(64, 7, true);
+        let b = GscDataset::new(64, 7, true);
+        let mut xa = vec![0.0; a.dim()];
+        let mut xb = vec![0.0; b.dim()];
+        for i in 0..8 {
+            let ya = a.sample_into(i, &mut xa);
+            let yb = b.sample_into(i, &mut xb);
+            assert_eq!(ya, yb);
+            assert_eq!(xa, xb);
+        }
+    }
+
+    #[test]
+    fn gsc_roughly_balanced() {
+        let ds = GscDataset::new(600, 1, true);
+        let counts = class_balance(&ds);
+        for (c, &n) in counts.iter().enumerate() {
+            assert!(n > 20, "class {c} has only {n} samples");
+        }
+    }
+
+    #[test]
+    fn cifar_and_voc_shapes() {
+        let c = CifarDataset::new(128, 2, true);
+        assert_eq!(c.dim(), 32 * 32 * 3);
+        assert_eq!(c.classes(), 10);
+        let v = VocDataset::new(128, 3, true);
+        assert_eq!(v.dim(), 32 * 32 * 3);
+        assert_eq!(v.classes(), 20);
+        let counts = class_balance(&v);
+        assert!(counts.iter().all(|&n| n > 0));
+    }
+
+    #[test]
+    fn train_val_differ() {
+        let tr = GscDataset::new(32, 1, true);
+        let va = GscDataset::new(32, 1, false);
+        let mut xt = vec![0.0; tr.dim()];
+        let mut xv = vec![0.0; va.dim()];
+        tr.sample_into(0, &mut xt);
+        va.sample_into(0, &mut xv);
+        assert_ne!(xt, xv);
+    }
+}

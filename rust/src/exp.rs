@@ -1,0 +1,197 @@
+//! Shared experiment setup used by the CLI, examples and benches:
+//! engine construction, per-model datasets, and cached pre-trained
+//! baselines (so every figure bench starts from the same snapshot).
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::binder::ParamSource;
+use crate::coordinator::trainer::{evaluate, Pretrainer};
+use crate::data::gsc::GscDataset;
+use crate::data::images::{CifarDataset, VocDataset};
+use crate::data::{DataLoader, Dataset};
+use crate::nn::checkpoint;
+use crate::nn::ModelState;
+use crate::runtime::Engine;
+
+/// Artifact directory: $ECQX_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("ECQX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Construct the PJRT engine over the artifact directory.
+pub fn engine() -> Result<Engine> {
+    let dir = artifacts_dir();
+    Engine::new(&dir).with_context(|| {
+        format!(
+            "loading artifacts from {} (run `make artifacts` first)",
+            dir.display()
+        )
+    })
+}
+
+/// Experiment scale: paper-like vs CPU-budget (bench default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// small grids/epochs for CPU wall-clock (default for benches)
+    Bench,
+    /// closer to the paper's 20-epoch runs (CLI --paper-scale)
+    Paper,
+}
+
+/// Per-model experiment descriptor.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelExp {
+    pub name: &'static str,
+    pub train_n: usize,
+    pub val_n: usize,
+    pub pretrain_epochs: usize,
+    pub pretrain_lr: f32,
+    pub qat_epochs: usize,
+    pub qat_lr: f32,
+}
+
+pub const MLP_GSC: ModelExp = ModelExp {
+    name: "mlp_gsc",
+    train_n: 8192,
+    val_n: 2048,
+    pretrain_epochs: 12,
+    pretrain_lr: 1e-3,
+    qat_epochs: 3,
+    qat_lr: 2e-4,
+};
+
+pub const VGG_CIFAR: ModelExp = ModelExp {
+    name: "vgg_cifar",
+    train_n: 2048,
+    val_n: 512,
+    pretrain_epochs: 10,
+    pretrain_lr: 5e-4,
+    qat_epochs: 2,
+    qat_lr: 1e-4,
+};
+
+pub const VGG_CIFAR_BN: ModelExp = ModelExp {
+    name: "vgg_cifar_bn",
+    train_n: 2048,
+    val_n: 512,
+    pretrain_epochs: 10,
+    pretrain_lr: 5e-4,
+    qat_epochs: 2,
+    qat_lr: 1e-4,
+};
+
+pub const RESNET_VOC: ModelExp = ModelExp {
+    name: "resnet_voc",
+    train_n: 2048,
+    val_n: 512,
+    pretrain_epochs: 10,
+    pretrain_lr: 1e-3,
+    qat_epochs: 2,
+    qat_lr: 1e-4,
+};
+
+pub fn model_exp(name: &str) -> Result<ModelExp> {
+    Ok(match name {
+        "mlp_gsc" => MLP_GSC,
+        "vgg_cifar" => VGG_CIFAR,
+        "vgg_cifar_bn" => VGG_CIFAR_BN,
+        "resnet_voc" => RESNET_VOC,
+        other => anyhow::bail!("unknown model {other}"),
+    })
+}
+
+/// Boxed dataset pair (train, val) for a model.
+pub fn datasets(exp: &ModelExp, seed: u64) -> (Box<dyn Dataset>, Box<dyn Dataset>) {
+    match exp.name {
+        "mlp_gsc" => (
+            Box::new(GscDataset::new(exp.train_n, seed, true)),
+            Box::new(GscDataset::new(exp.val_n, seed, false)),
+        ),
+        "vgg_cifar" | "vgg_cifar_bn" => (
+            Box::new(CifarDataset::new(exp.train_n, seed, true)),
+            Box::new(CifarDataset::new(exp.val_n, seed, false)),
+        ),
+        "resnet_voc" => (
+            Box::new(VocDataset::new(exp.train_n, seed, true)),
+            Box::new(VocDataset::new(exp.val_n, seed, false)),
+        ),
+        other => panic!("unknown model {other}"),
+    }
+}
+
+impl Dataset for Box<dyn Dataset> {
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+    fn classes(&self) -> usize {
+        (**self).classes()
+    }
+    fn sample_into(&self, i: usize, out: &mut [f32]) -> i32 {
+        (**self).sample_into(i, out)
+    }
+}
+
+/// Pre-trained FP snapshot + its baseline validation accuracy.
+pub struct Pretrained {
+    pub state: ModelState,
+    pub baseline_acc: f64,
+}
+
+/// Get (or train + cache) the pre-trained FP baseline of a model.
+///
+/// Cached under `artifacts/pretrained_<model>.bin` (+ `.meta` with the
+/// baseline accuracy), keyed on the pretraining configuration.
+pub fn pretrained(engine: &Engine, exp: &ModelExp, seed: u64) -> Result<Pretrained> {
+    let spec = engine.manifest.model(exp.name)?.clone();
+    let ckpt = artifacts_dir().join(format!("pretrained_{}.bin", exp.name));
+    let meta = artifacts_dir().join(format!("pretrained_{}.meta", exp.name));
+    // NB: keyed on the pretraining config, not the artifact hash — kernel
+    // perf changes must not invalidate baselines (semantics are covered by
+    // the artifact-vs-reference integration tests).
+    let tag = format!(
+        "seed={seed} epochs={} lr={} train_n={}",
+        exp.pretrain_epochs, exp.pretrain_lr, exp.train_n
+    );
+    if ckpt.exists() && meta.exists() {
+        let m = std::fs::read_to_string(&meta)?;
+        let mut lines = m.lines();
+        if lines.next() == Some(tag.as_str()) {
+            if let Some(acc) = lines.next().and_then(|l| l.parse::<f64>().ok()) {
+                let params = checkpoint::load_fp(&ckpt)?;
+                let mut state = ModelState::init(&spec, seed);
+                state.params = params;
+                return Ok(Pretrained { state, baseline_acc: acc });
+            }
+        }
+    }
+    println!(
+        "[pretrain] no cached baseline for {} — training {} epochs ...",
+        exp.name, exp.pretrain_epochs
+    );
+    let (train, val) = datasets(exp, seed);
+    let train_dl = DataLoader::new(&train, spec.batch, true, seed);
+    let val_dl = DataLoader::new(&val, spec.batch, false, seed);
+    let mut state = ModelState::init(&spec, seed);
+    let pre = Pretrainer { lr: exp.pretrain_lr, ..Default::default() };
+    pre.run(engine, &mut state, &train_dl, exp.pretrain_epochs)?;
+    let ev = evaluate(engine, &state, &val_dl, ParamSource::Fp)?;
+    println!("[pretrain] {} baseline val acc = {:.4}", exp.name, ev.accuracy);
+    checkpoint::save_fp(&ckpt, &state.params)?;
+    std::fs::write(&meta, format!("{tag}\n{}\n", ev.accuracy))?;
+    Ok(Pretrained { state, baseline_acc: ev.accuracy })
+}
+
+/// Default lambda grids per model/bits (bench scale).
+pub fn lambda_grid(scale: Scale) -> Vec<f32> {
+    match scale {
+        Scale::Bench => vec![0.0, 0.02, 0.08, 0.25],
+        Scale::Paper => vec![0.0, 0.005, 0.01, 0.02, 0.04, 0.08, 0.15, 0.25, 0.5],
+    }
+}

@@ -1,0 +1,30 @@
+//! ECQ^x: Explainability-Driven Quantization for Low-Bit and Sparse DNNs.
+//!
+//! Rust coordinator (L3) of the three-layer rust + JAX + Pallas stack:
+//! the JAX/Pallas side (`python/compile/`) is AOT-lowered once to HLO-text
+//! artifacts; this crate owns everything that runs at experiment time —
+//! synthetic datasets, the quantization-aware training loop, the ECQ/ECQx
+//! assignment logic, LRP relevance post-processing, the DeepCABAC-style
+//! entropy codec, the sweep campaigns reproducing every figure/table of
+//! the paper, and the CLI.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`
+//! * [`coordinator`] — QAT loop, sweeps, candidate selection, reports
+//! * [`quant`] — centroids, entropy, pure-rust assignment reference
+//! * [`lrp`] — relevance pipeline + rust LRP reference implementation
+//! * [`codec`] — CABAC-style coder + baselines (compression ratios)
+//! * [`data`] / [`nn`] / [`tensor`] / [`util`] / [`metrics`] — substrates
+
+pub mod bench;
+pub mod codec;
+pub mod exp;
+pub mod coordinator;
+pub mod data;
+pub mod lrp;
+pub mod metrics;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,109 @@
+//! Relevance-vs-magnitude analysis (Fig. 4): Pearson correlation between
+//! |weight| and |relevance| per layer, plus the marginal histograms shown
+//! in the paper's panels.
+
+use crate::util::stats;
+
+/// One layer's Fig. 4 panel data.
+#[derive(Clone, Debug)]
+pub struct CorrelationPanel {
+    pub layer: String,
+    /// Pearson c between weight value and relevance (the paper's `c`)
+    pub c_value: f64,
+    /// Pearson between |weight| and relevance (saliency assumption probe)
+    pub c_magnitude: f64,
+    /// weight histogram (bins over [-wmax, wmax])
+    pub weight_hist: Vec<usize>,
+    /// relevance histogram (bins over [0, rmax])
+    pub relevance_hist: Vec<usize>,
+    /// summed relevance per weight-histogram bin (the blue overlay)
+    pub relevance_by_weight_bin: Vec<f64>,
+    pub wmax: f32,
+    pub rmax: f32,
+}
+
+/// Build the Fig. 4 panel for one layer.
+pub fn correlation_panel(
+    layer: &str,
+    weights: &[f32],
+    relevances: &[f32],
+    bins: usize,
+) -> CorrelationPanel {
+    assert_eq!(weights.len(), relevances.len());
+    let rel_abs: Vec<f32> = relevances.iter().map(|r| r.abs()).collect();
+    let w_abs: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    let wmax = weights.iter().fold(0.0f32, |m, &w| m.max(w.abs())).max(1e-12);
+    let rmax = rel_abs.iter().fold(0.0f32, |m, &r| m.max(r)).max(1e-12);
+    let mut rel_by_bin = vec![0.0f64; bins];
+    let binw = 2.0 * wmax / bins as f32;
+    for (&w, &r) in weights.iter().zip(rel_abs.iter()) {
+        let b = (((w + wmax) / binw) as usize).min(bins - 1);
+        rel_by_bin[b] += r as f64;
+    }
+    CorrelationPanel {
+        layer: layer.to_string(),
+        c_value: stats::pearson(weights, &rel_abs),
+        c_magnitude: stats::pearson(&w_abs, &rel_abs),
+        weight_hist: stats::histogram(weights, -wmax, wmax, bins),
+        relevance_hist: stats::histogram(&rel_abs, 0.0, rmax, bins),
+        relevance_by_weight_bin: rel_by_bin,
+        wmax,
+        rmax,
+    }
+}
+
+/// Fraction of the top-q relevance mass carried by weights *below* the
+/// median magnitude — the paper's qualitative claim that "a weight of high
+/// magnitude is not necessarily also a relevant weight".
+pub fn small_weight_relevance_share(weights: &[f32], relevances: &[f32]) -> f64 {
+    assert_eq!(weights.len(), relevances.len());
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = mags[mags.len() / 2];
+    let total: f64 = relevances.iter().map(|r| r.abs() as f64).sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let small: f64 = weights
+        .iter()
+        .zip(relevances.iter())
+        .filter(|(w, _)| w.abs() < median)
+        .map(|(_, r)| r.abs() as f64)
+        .sum();
+    small / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn panel_shapes() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..1000).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let r: Vec<f32> = w.iter().map(|&x| x.abs() + rng.normal_f32(0.0, 0.01)).collect();
+        let p = correlation_panel("l0", &w, &r, 32);
+        assert_eq!(p.weight_hist.len(), 32);
+        assert_eq!(p.relevance_hist.len(), 32);
+        // relevance built from |w| -> strong magnitude correlation
+        assert!(p.c_magnitude > 0.8, "c_mag={}", p.c_magnitude);
+        // but value correlation near zero by symmetry
+        assert!(p.c_value.abs() < 0.2, "c_val={}", p.c_value);
+    }
+
+    #[test]
+    fn share_detects_decorrelation() {
+        let mut rng = Rng::new(2);
+        let n = 2000;
+        let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        // relevance independent of magnitude -> small weights carry ~half
+        let r: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let share = small_weight_relevance_share(&w, &r);
+        assert!((share - 0.5).abs() < 0.1, "share={share}");
+        // relevance == magnitude -> small weights carry much less
+        let r2: Vec<f32> = w.iter().map(|x| x.abs()).collect();
+        let share2 = small_weight_relevance_share(&w, &r2);
+        assert!(share2 < 0.35, "share2={share2}");
+    }
+}

@@ -1,0 +1,219 @@
+//! Pure-rust LRP reference for dense networks + the Fig. 4 analysis.
+//!
+//! This is the *third* implementation of epsilon-rule LRP in the stack
+//! (after the Pallas kernel and the jnp oracle); integration tests use it
+//! to cross-check the `<model>_lrp` HLO artifact end-to-end on MLP_GSC.
+//! It also powers host-side analyses (relevance-vs-magnitude correlation).
+
+pub mod analysis;
+
+pub const EPS: f32 = 1e-6;
+
+/// A dense layer's weights in row-major [in, out] plus bias.
+#[derive(Clone, Debug)]
+pub struct DenseLayer {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub din: usize,
+    pub dout: usize,
+}
+
+impl DenseLayer {
+    pub fn new(din: usize, dout: usize, w: Vec<f32>, b: Vec<f32>) -> Self {
+        assert_eq!(w.len(), din * dout);
+        assert_eq!(b.len(), dout);
+        DenseLayer { w, b, din, dout }
+    }
+
+    /// z = a @ w + b for a batch of activations [n, din].
+    pub fn forward(&self, a: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(a.len(), n * self.din);
+        let mut z = vec![0.0f32; n * self.dout];
+        for s in 0..n {
+            let ar = &a[s * self.din..(s + 1) * self.din];
+            let zr = &mut z[s * self.dout..(s + 1) * self.dout];
+            zr.copy_from_slice(&self.b);
+            for (i, &ai) in ar.iter().enumerate() {
+                if ai == 0.0 {
+                    continue;
+                }
+                let wrow = &self.w[i * self.dout..(i + 1) * self.dout];
+                for (j, &wij) in wrow.iter().enumerate() {
+                    zr[j] += ai * wij;
+                }
+            }
+        }
+        z
+    }
+}
+
+pub fn relu(z: &mut [f32]) {
+    for v in z.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+fn stabilize(z: f32, eps: f32) -> f32 {
+    if z >= 0.0 {
+        z + eps
+    } else {
+        z - eps
+    }
+}
+
+/// An MLP as a stack of dense layers with ReLU between (none after last).
+pub struct Mlp {
+    pub layers: Vec<DenseLayer>,
+}
+
+impl Mlp {
+    /// Forward pass keeping every layer input (for LRP).
+    pub fn forward_collect(&self, x: &[f32], n: usize) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut acts = vec![x.to_vec()];
+        let mut a = x.to_vec();
+        for (li, l) in self.layers.iter().enumerate() {
+            let mut z = l.forward(&a, n);
+            if li + 1 < self.layers.len() {
+                relu(&mut z);
+                acts.push(z.clone());
+            }
+            a = z;
+        }
+        (acts, a)
+    }
+
+    /// Epsilon-rule LRP -> per-weight relevances, batch-aggregated, signed.
+    ///
+    /// `eqw` selects equally-weighted samples (R_n = 1, the Fig. 4 mode)
+    /// vs target-score weighting.
+    pub fn lrp(&self, x: &[f32], y: &[i32], n: usize, eqw: bool) -> Vec<Vec<f32>> {
+        let (acts, logits) = self.forward_collect(x, n);
+        let classes = self.layers.last().unwrap().dout;
+        // initial relevance at the output
+        let mut r: Vec<f32> = vec![0.0; n * classes];
+        for s in 0..n {
+            let yc = y[s] as usize;
+            let score = logits[s * classes + yc];
+            r[s * classes + yc] = if eqw { 1.0 } else { score };
+        }
+        let mut rws: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len());
+        for (li, l) in self.layers.iter().enumerate().rev() {
+            let a = &acts[li];
+            let z = l.forward(a, n);
+            // s = R / stabilize(z)
+            let mut sv = vec![0.0f32; n * l.dout];
+            for i in 0..sv.len() {
+                sv[i] = r[i] / stabilize(z[i], EPS);
+            }
+            // R_w = w * (a^T s); R_in = a * (s w^T)
+            let mut rw = vec![0.0f32; l.din * l.dout];
+            let mut rin = vec![0.0f32; n * l.din];
+            for smp in 0..n {
+                let ar = &a[smp * l.din..(smp + 1) * l.din];
+                let sr = &sv[smp * l.dout..(smp + 1) * l.dout];
+                for (i, &ai) in ar.iter().enumerate() {
+                    if ai == 0.0 {
+                        continue;
+                    }
+                    let wrow = &l.w[i * l.dout..(i + 1) * l.dout];
+                    let mut acc = 0.0f32;
+                    for (j, &wij) in wrow.iter().enumerate() {
+                        rw[i * l.dout + j] += ai * wij * sr[j];
+                        acc += sr[j] * wij;
+                    }
+                    rin[smp * l.din + i] = ai * acc;
+                }
+            }
+            rws.push(rw);
+            r = rin;
+        }
+        rws.reverse();
+        rws
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_mlp(dims: &[usize], seed: u64) -> Mlp {
+        let mut rng = Rng::new(seed);
+        let layers = dims
+            .windows(2)
+            .map(|w| {
+                let (din, dout) = (w[0], w[1]);
+                let std = (2.0 / din as f32).sqrt();
+                DenseLayer::new(
+                    din,
+                    dout,
+                    (0..din * dout).map(|_| rng.normal_f32(0.0, std)).collect(),
+                    vec![0.0; dout],
+                )
+            })
+            .collect();
+        Mlp { layers }
+    }
+
+    #[test]
+    fn forward_matches_manual() {
+        let l = DenseLayer::new(2, 2, vec![1.0, 2.0, 3.0, 4.0], vec![0.5, -0.5]);
+        // a = [1, 1]: z = [1+3+0.5, 2+4-0.5] = [4.5, 5.5]
+        let z = l.forward(&[1.0, 1.0], 1);
+        assert_eq!(z, vec![4.5, 5.5]);
+    }
+
+    #[test]
+    fn lrp_conservation_per_sample() {
+        // With zero biases and small eps, sum of weight relevances over a
+        // single linear layer equals the initial relevance.
+        let mlp = toy_mlp(&[6, 4], 3);
+        let mut rng = Rng::new(4);
+        let n = 5;
+        let x: Vec<f32> = (0..n * 6).map(|_| rng.normal_f32(0.5, 1.0)).collect();
+        let y: Vec<i32> = (0..n).map(|i| (i % 4) as i32).collect();
+        let rws = mlp.lrp(&x, &y, n, true);
+        let total: f32 = rws[0].iter().sum();
+        // initial relevance = 1 per sample
+        assert!(
+            (total - n as f32).abs() / (n as f32) < 1e-3,
+            "conservation violated: {total} vs {n}"
+        );
+    }
+
+    #[test]
+    fn lrp_deep_conservation_approx() {
+        let mlp = toy_mlp(&[8, 16, 8, 4], 7);
+        let mut rng = Rng::new(8);
+        let n = 4;
+        let x: Vec<f32> = (0..n * 8).map(|_| rng.normal_f32(0.2, 1.0)).collect();
+        let y: Vec<i32> = vec![0, 1, 2, 3];
+        let rws = mlp.lrp(&x, &y, n, true);
+        // relevance entering each layer should be (approximately, biases
+        // are zero) conserved into its weight relevances
+        for rw in &rws {
+            let total: f32 = rw.iter().sum();
+            assert!(
+                (total - n as f32).abs() / (n as f32) < 0.05,
+                "layer total {total}"
+            );
+        }
+    }
+
+    #[test]
+    fn score_weighting_scales_relevance() {
+        let mlp = toy_mlp(&[6, 4], 11);
+        let mut rng = Rng::new(12);
+        let x: Vec<f32> = (0..6).map(|_| rng.normal_f32(0.5, 1.0)).collect();
+        let y = vec![1i32];
+        let r_eq = mlp.lrp(&x, &y, 1, true);
+        let r_sc = mlp.lrp(&x, &y, 1, false);
+        let (_, logits) = mlp.forward_collect(&x, 1);
+        let score = logits[1];
+        let se: f32 = r_eq[0].iter().sum();
+        let ss: f32 = r_sc[0].iter().sum();
+        assert!((ss - se * score).abs() < 1e-3 * score.abs().max(1.0));
+    }
+}

@@ -1,0 +1,291 @@
+//! `ecqx` — CLI of the ECQ^x reproduction.
+//!
+//! Subcommands:
+//!   smoke                      PJRT + artifact sanity check
+//!   pretrain <model>           train + cache the FP32 baseline
+//!   quantize <model> [opts]    one QAT run (ECQ or ECQx)
+//!   sweep <model> [opts]       lambda sweep -> working points CSV
+//!   compress <model>           quantize + write/reload a .ecqx container
+//!   eval <model> <file.ecqx>   evaluate a compressed container
+//!
+//! Options: --method ecq|ecqx --bits N --lambda F --p F --epochs N
+//!          --lr F --seed N --paper-scale --out PATH
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use ecqx::coordinator::binder::ParamSource;
+use ecqx::coordinator::sweep::{select, SweepConfig, SweepRunner};
+use ecqx::coordinator::trainer::{evaluate, QatConfig, QatTrainer};
+use ecqx::coordinator::{compressed_size, compression_ratio, AssignConfig, Method};
+use ecqx::data::DataLoader;
+use ecqx::exp;
+use ecqx::metrics::WorkingPoint;
+use ecqx::nn::checkpoint;
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn method_of(args: &Args) -> Result<Method> {
+    match args.get::<String>("method", "ecqx".into()).as_str() {
+        "ecq" => Ok(Method::Ecq),
+        "ecqx" => Ok(Method::Ecqx),
+        other => bail!("unknown method {other} (use ecq|ecqx)"),
+    }
+}
+
+fn qat_config(args: &Args, exp_: &exp::ModelExp, method: Method) -> QatConfig {
+    QatConfig {
+        assign: AssignConfig {
+            method,
+            bits: args.get("bits", 4u32),
+            lambda: args.get("lambda", 0.02f32),
+            p: args.get("p", 0.3f64),
+            momentum: args.get("momentum", 0.95f32),
+            beta0: args.get("beta0", 1.0f32),
+            ..Default::default()
+        },
+        epochs: args.get("epochs", exp_.qat_epochs),
+        lr: args.get("lr", exp_.qat_lr),
+        lrp_every: args.get("lrp-every", 2),
+        retune_every: args.get("retune-every", 8),
+        lrp_warmup: args.get("lrp-warmup", 12),
+        assign_every: args.get("assign-every", 2),
+        grad_scale: !args.has("no-grad-scale"),
+        lrp_equal_weight: args.has("lrp-equal-weight"),
+        verbose: true,
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "smoke" => cmd_smoke(),
+        "pretrain" => cmd_pretrain(&args),
+        "quantize" => cmd_quantize(&args),
+        "sweep" => cmd_sweep(&args),
+        "compress" => cmd_compress(&args),
+        "eval" => cmd_eval(&args),
+        _ => {
+            println!(
+                "ecqx — Explainability-Driven Quantization (paper reproduction)\n\n\
+                 usage: ecqx <smoke|pretrain|quantize|sweep|compress|eval> [args]\n\
+                 see `ecqx <cmd> --help` comments in rust/src/main.rs and README.md"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_smoke() -> Result<()> {
+    println!("{}", ecqx::runtime::smoke()?);
+    let eng = exp::engine()?;
+    println!(
+        "manifest hash {} — {} models, {} artifacts",
+        eng.manifest.hash,
+        eng.manifest.models.len(),
+        eng.manifest.artifacts.len()
+    );
+    Ok(())
+}
+
+fn model_arg(args: &Args) -> Result<exp::ModelExp> {
+    let name = args
+        .positional
+        .get(1)
+        .context("missing <model> argument (mlp_gsc|vgg_cifar|vgg_cifar_bn|resnet_voc)")?;
+    exp::model_exp(name)
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let exp_ = model_arg(args)?;
+    let eng = exp::engine()?;
+    let seed = args.get("seed", 17u64);
+    let pre = exp::pretrained(&eng, &exp_, seed)?;
+    println!(
+        "pretrained {}: baseline val acc {:.4} ({} params, {:.1} kB fp32)",
+        exp_.name,
+        pre.baseline_acc,
+        pre.state.spec.total_params(),
+        pre.state.fp32_bytes() as f64 / 1000.0
+    );
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let exp_ = model_arg(args)?;
+    let eng = exp::engine()?;
+    let seed = args.get("seed", 17u64);
+    let method = method_of(args)?;
+    let pre = exp::pretrained(&eng, &exp_, seed)?;
+    let (train, val) = exp::datasets(&exp_, seed);
+    let spec = eng.manifest.model(exp_.name)?;
+    let train_dl = DataLoader::new(&train, spec.batch, true, seed);
+    let val_dl = DataLoader::new(&val, spec.batch, false, seed);
+    let mut state = pre.state;
+    let cfg = qat_config(args, &exp_, method);
+    let trainer = QatTrainer::new(cfg);
+    let out = trainer.run(&eng, &mut state, &train_dl, &val_dl)?;
+    let ev = evaluate(&eng, &state, &val_dl, ParamSource::Quantized)?;
+    println!("\nphase profile:\n{}", out.profile.report());
+    println!(
+        "final: acc={:.4} (baseline {:.4}, drop {:+.4}) sparsity={:.4} \
+         size={:.1}kB CR={:.1}x",
+        ev.accuracy,
+        pre.baseline_acc,
+        ev.accuracy - pre.baseline_acc,
+        state.quantized_sparsity(),
+        compressed_size(&state) as f64 / 1000.0,
+        compression_ratio(&state)
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let exp_ = model_arg(args)?;
+    let eng = exp::engine()?;
+    let seed = args.get("seed", 17u64);
+    let method = method_of(args)?;
+    let scale = if args.has("paper-scale") { exp::Scale::Paper } else { exp::Scale::Bench };
+    let pre = exp::pretrained(&eng, &exp_, seed)?;
+    let (train, val) = exp::datasets(&exp_, seed);
+    let spec = eng.manifest.model(exp_.name)?;
+    let train_dl = DataLoader::new(&train, spec.batch, true, seed);
+    let val_dl = DataLoader::new(&val, spec.batch, false, seed);
+    let baseline = pre.baseline_acc;
+    let runner = SweepRunner::new(&eng, pre.state);
+    let cfg = SweepConfig {
+        model: exp_.name.to_string(),
+        method,
+        bits: args.get("bits", 4u32),
+        lambdas: exp::lambda_grid(scale),
+        p: args.get("p", 0.3f64),
+        qat: qat_config(args, &exp_, method),
+        baseline_acc: baseline,
+    };
+    let points = runner.run(&cfg, &train_dl, &val_dl)?;
+    println!("\n{}", WorkingPoint::csv_header());
+    for p in &points {
+        println!("{}", p.to_csv());
+    }
+    if let Some(best) = select::best_accuracy(&points) {
+        println!("\nbest accuracy:        {}", best.to_csv());
+    }
+    if let Some(best) = select::best_cr_no_degradation(&points) {
+        println!("best CR (no drop):    {}", best.to_csv());
+    }
+    if let Some(best) = select::best_cr_negligible(&points, 0.01) {
+        println!("best CR (negligible): {}", best.to_csv());
+    }
+    if let Some(out) = args.flags.get("out") {
+        let mut csv = WorkingPoint::csv_header().to_string() + "\n";
+        for p in &points {
+            csv += &(p.to_csv() + "\n");
+        }
+        std::fs::write(out, csv)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let exp_ = model_arg(args)?;
+    let eng = exp::engine()?;
+    let seed = args.get("seed", 17u64);
+    let method = method_of(args)?;
+    let pre = exp::pretrained(&eng, &exp_, seed)?;
+    let (train, val) = exp::datasets(&exp_, seed);
+    let spec = eng.manifest.model(exp_.name)?;
+    let train_dl = DataLoader::new(&train, spec.batch, true, seed);
+    let val_dl = DataLoader::new(&val, spec.batch, false, seed);
+    let mut state = pre.state;
+    let trainer = QatTrainer::new(qat_config(args, &exp_, method));
+    trainer.run(&eng, &mut state, &train_dl, &val_dl)?;
+    let out = args
+        .flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("{}.ecqx", exp_.name));
+    let size = checkpoint::save_quantized(std::path::Path::new(&out), &state)?;
+    println!(
+        "wrote {out}: {:.1} kB on disk (CR {:.1}x vs {:.1} kB fp32)",
+        size as f64 / 1000.0,
+        state.fp32_bytes() as f64 / size as f64,
+        state.fp32_bytes() as f64 / 1000.0
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let exp_ = model_arg(args)?;
+    let path = args.positional.get(2).context("missing <file.ecqx>")?;
+    let eng = exp::engine()?;
+    let seed = args.get("seed", 17u64);
+    let qm = checkpoint::load_quantized(std::path::Path::new(path))?;
+    if qm.model != exp_.name {
+        bail!("container is for model {} not {}", qm.model, exp_.name);
+    }
+    let spec = eng.manifest.model(exp_.name)?.clone();
+    let mut state = ecqx::nn::ModelState::init(&spec, seed);
+    for (name, t) in qm.other {
+        state.params.insert(name, t);
+    }
+    for (name, (idx, cb)) in qm.layers {
+        let qw: Vec<f32> = idx.data.iter().map(|&s| cb.values[s as usize]).collect();
+        let shape = idx.shape.clone();
+        state.qlayers.insert(
+            name,
+            ecqx::nn::QLayer {
+                qw: ecqx::tensor::Tensor::new(shape, qw),
+                idx,
+                codebook: cb,
+            },
+        );
+    }
+    let (_, val) = exp::datasets(&exp_, seed);
+    let val_dl = DataLoader::new(&val, spec.batch, false, seed);
+    let ev = evaluate(&eng, &state, &val_dl, ParamSource::Quantized)?;
+    println!(
+        "{path}: val acc {:.4}, loss {:.4}, sparsity {:.4}",
+        ev.accuracy,
+        ev.loss,
+        state.quantized_sparsity()
+    );
+    Ok(())
+}

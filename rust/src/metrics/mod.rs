@@ -1,0 +1,171 @@
+//! Metrics + report formatting: accuracy meters, run records, and the
+//! markdown/CSV tables that regenerate the paper's figures.
+
+/// Streaming accuracy/loss meter over batches.
+#[derive(Default, Clone, Debug)]
+pub struct Meter {
+    pub loss_sum: f64,
+    pub correct: f64,
+    pub samples: u64,
+    pub batches: u64,
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn update(&mut self, loss: f32, correct: f32, batch: usize) {
+        self.loss_sum += loss as f64 * batch as f64;
+        self.correct += correct as f64;
+        self.samples += batch as u64;
+        self.batches += 1;
+    }
+
+    pub fn loss(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.loss_sum / self.samples as f64
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.correct / self.samples as f64
+        }
+    }
+}
+
+/// One working point of a quantization trial (a dot in Figs. 6-10).
+#[derive(Clone, Debug)]
+pub struct WorkingPoint {
+    pub method: String,
+    pub bits: u32,
+    pub lambda: f32,
+    pub p: f64,
+    pub accuracy: f64,
+    pub acc_drop: f64,
+    pub sparsity: f64,
+    pub size_bytes: usize,
+    pub compression_ratio: f64,
+}
+
+impl WorkingPoint {
+    pub fn csv_header() -> &'static str {
+        "method,bits,lambda,p,accuracy,acc_drop,sparsity,size_kb,cr"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{:.5},{:.3},{:.4},{:+.4},{:.4},{:.2},{:.2}",
+            self.method,
+            self.bits,
+            self.lambda,
+            self.p,
+            self.accuracy,
+            self.acc_drop,
+            self.sparsity,
+            self.size_bytes as f64 / 1000.0,
+            self.compression_ratio
+        )
+    }
+}
+
+/// Fixed-width table writer for terminal reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$} | ", cell, w = widths[c]));
+            }
+            line.trim_end().to_string() + "\n"
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_averages() {
+        let mut m = Meter::new();
+        m.update(2.0, 10.0, 32);
+        m.update(1.0, 20.0, 32);
+        assert!((m.loss() - 1.5).abs() < 1e-9);
+        assert!((m.accuracy() - 30.0 / 64.0).abs() < 1e-9);
+        assert_eq!(m.batches, 2);
+        assert_eq!(Meter::new().accuracy(), 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "val"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| name"));
+        assert!(s.contains("| longer | 2.5"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn working_point_csv() {
+        let wp = WorkingPoint {
+            method: "ecqx".into(),
+            bits: 4,
+            lambda: 0.02,
+            p: 0.3,
+            accuracy: 0.9,
+            acc_drop: -0.01,
+            sparsity: 0.8,
+            size_bytes: 100_000,
+            compression_ratio: 25.0,
+        };
+        let csv = wp.to_csv();
+        assert!(csv.starts_with("ecqx,4,"));
+        assert!(csv.contains("100.00"));
+        assert_eq!(
+            WorkingPoint::csv_header().split(',').count(),
+            csv.split(',').count()
+        );
+    }
+}

@@ -1,0 +1,288 @@
+//! Binary checkpoints: FP32 snapshots (pre-trained baselines) and the
+//! `.ecqx` compressed-model container (centroid metadata + CABAC streams),
+//! the deployable artifact whose on-disk size backs Table 1 / Figs. 9-10.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::ModelState;
+use crate::codec;
+use crate::quant::Codebook;
+use crate::tensor::{Tensor, TensorI32};
+
+const FP_MAGIC: &[u8; 8] = b"ECQXFP32";
+const Q_MAGIC: &[u8; 8] = b"ECQXQNT1";
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_f32(w: &mut impl Write, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 20 {
+        bail!("string too long");
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+/// Save the FP parameter store (pre-trained baseline snapshot).
+pub fn save_fp(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(FP_MAGIC)?;
+    write_u32(&mut w, params.len() as u32)?;
+    for (name, t) in params {
+        write_str(&mut w, name)?;
+        write_u32(&mut w, t.shape.len() as u32)?;
+        for &d in &t.shape {
+            write_u32(&mut w, d as u32)?;
+        }
+        for &v in &t.data {
+            write_f32(&mut w, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Load an FP snapshot.
+pub fn load_fp(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != FP_MAGIC {
+        bail!("not an ECQX FP checkpoint");
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name = read_str(&mut r)?;
+        let rank = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            data.push(read_f32(&mut r)?);
+        }
+        out.insert(name, Tensor::new(shape, data));
+    }
+    Ok(out)
+}
+
+/// One quantized layer in the `.ecqx` container.
+pub struct QuantizedLayer {
+    pub name: String,
+    pub enc: codec::EncodedTensor,
+}
+
+/// Serialize a quantized model: CABAC-coded integer levels per quantized
+/// layer + FP32 payload for the unquantized parameters (biases, BN).
+/// Returns the container size in bytes.
+pub fn save_quantized(path: &Path, state: &ModelState) -> Result<usize> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(Q_MAGIC)?;
+    write_str(&mut w, &state.spec.name)?;
+    let qnames = state.qnames();
+    write_u32(&mut w, qnames.len() as u32)?;
+    for name in &qnames {
+        let ql = state
+            .qlayers
+            .get(name)
+            .with_context(|| format!("layer {name} not quantized"))?;
+        let enc = codec::encode_tensor(&ql.idx, &ql.codebook);
+        write_str(&mut w, name)?;
+        write_u32(&mut w, enc.bits)?;
+        write_f32(&mut w, enc.step)?;
+        write_u32(&mut w, enc.shape.len() as u32)?;
+        for &d in &enc.shape {
+            write_u32(&mut w, d as u32)?;
+        }
+        write_u32(&mut w, enc.payload.len() as u32)?;
+        w.write_all(&enc.payload)?;
+    }
+    // unquantized params raw fp32
+    let other: Vec<&String> = state
+        .params
+        .keys()
+        .filter(|k| !qnames.contains(k))
+        .collect();
+    write_u32(&mut w, other.len() as u32)?;
+    for name in other {
+        let t = &state.params[name];
+        write_str(&mut w, name)?;
+        write_u32(&mut w, t.shape.len() as u32)?;
+        for &d in &t.shape {
+            write_u32(&mut w, d as u32)?;
+        }
+        for &v in &t.data {
+            write_f32(&mut w, v)?;
+        }
+    }
+    w.flush()?;
+    Ok(std::fs::metadata(path)?.len() as usize)
+}
+
+/// A loaded `.ecqx` container.
+pub struct QuantizedModel {
+    pub model: String,
+    /// per-layer (indices, codebook)
+    pub layers: BTreeMap<String, (TensorI32, Codebook)>,
+    pub other: BTreeMap<String, Tensor>,
+}
+
+/// Load + decode a `.ecqx` container (lossless inverse of save).
+pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != Q_MAGIC {
+        bail!("not an ECQX quantized container");
+    }
+    let model = read_str(&mut r)?;
+    let nq = read_u32(&mut r)? as usize;
+    let mut layers = BTreeMap::new();
+    for _ in 0..nq {
+        let name = read_str(&mut r)?;
+        let bits = read_u32(&mut r)?;
+        let step = read_f32(&mut r)?;
+        let rank = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let plen = read_u32(&mut r)? as usize;
+        let mut payload = vec![0u8; plen];
+        r.read_exact(&mut payload)?;
+        let enc = codec::EncodedTensor { shape, step, bits, payload };
+        let idx = codec::decode_tensor(&enc);
+        layers.insert(name, (idx, Codebook::symmetric(bits, step)));
+    }
+    let no = read_u32(&mut r)? as usize;
+    let mut other = BTreeMap::new();
+    for _ in 0..no {
+        let name = read_str(&mut r)?;
+        let rank = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            data.push(read_f32(&mut r)?);
+        }
+        other.insert(name, Tensor::new(shape, data));
+    }
+    Ok(QuantizedModel { model, layers, other })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::QLayer;
+    use crate::runtime::{Init, ModelSpec, ParamSpec};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ecqx-ckpt-{}-{name}", std::process::id()))
+    }
+
+    fn toy_state() -> ModelState {
+        let spec = ModelSpec {
+            name: "toy".into(),
+            batch: 2,
+            classes: 2,
+            input_dim: 4,
+            params: vec![
+                ParamSpec {
+                    name: "w0".into(),
+                    shape: vec![4, 2],
+                    init: Init::HeIn,
+                    quantize: true,
+                },
+                ParamSpec {
+                    name: "b0".into(),
+                    shape: vec![2],
+                    init: Init::Zeros,
+                    quantize: false,
+                },
+            ],
+        };
+        let mut st = ModelState::init(&spec, 3);
+        let cb = Codebook::symmetric(4, 0.1);
+        let idx = TensorI32::new(vec![4, 2], vec![0, 1, 2, 0, 3, 0, 0, 5]);
+        let qw = Tensor::new(
+            vec![4, 2],
+            idx.data.iter().map(|&i| cb.values[i as usize]).collect(),
+        );
+        st.qlayers.insert("w0".into(), QLayer { qw, idx, codebook: cb });
+        st
+    }
+
+    #[test]
+    fn fp_roundtrip() {
+        let st = toy_state();
+        let p = tmp("fp.bin");
+        save_fp(&p, &st.params).unwrap();
+        let loaded = load_fp(&p).unwrap();
+        assert_eq!(loaded["w0"].data, st.params["w0"].data);
+        assert_eq!(loaded["b0"].shape, vec![2]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn quantized_roundtrip() {
+        let st = toy_state();
+        let p = tmp("q.ecqx");
+        let size = save_quantized(&p, &st).unwrap();
+        assert!(size > 0);
+        let qm = load_quantized(&p).unwrap();
+        assert_eq!(qm.model, "toy");
+        let (idx, cb) = &qm.layers["w0"];
+        assert_eq!(idx.data, st.qlayers["w0"].idx.data);
+        assert_eq!(cb.bits, 4);
+        assert!((cb.step - 0.1).abs() < 1e-6);
+        assert_eq!(qm.other["b0"].data, st.params["b0"].data);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"NOTAMAGIC123").unwrap();
+        assert!(load_fp(&p).is_err());
+        assert!(load_quantized(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,189 @@
+//! Model state: full-precision parameters, Adam moments, quantized copy,
+//! codebooks — the "background model" bookkeeping of the ECQ^x loop
+//! (Fig. 5), plus binary checkpointing.
+
+pub mod checkpoint;
+
+use std::collections::BTreeMap;
+
+use crate::quant::Codebook;
+use crate::runtime::{Init, ModelSpec};
+use crate::tensor::{Tensor, TensorI32};
+use crate::util::Rng;
+
+/// Per-quantized-layer quantization state.
+#[derive(Clone, Debug)]
+pub struct QLayer {
+    /// dequantized weights (what the forward pass sees)
+    pub qw: Tensor,
+    /// centroid slot indices
+    pub idx: TensorI32,
+    /// codebook used for the current assignment
+    pub codebook: Codebook,
+}
+
+/// Full state of one model under (pre-)training / QAT.
+pub struct ModelState {
+    pub spec: ModelSpec,
+    /// full-precision background parameters (Fig. 5 step 4-5)
+    pub params: BTreeMap<String, Tensor>,
+    /// Adam first/second moments
+    pub m: BTreeMap<String, Tensor>,
+    pub v: BTreeMap<String, Tensor>,
+    /// Adam step count
+    pub t: u64,
+    /// quantized copies of the quantize=1 parameters
+    pub qlayers: BTreeMap<String, QLayer>,
+}
+
+impl ModelState {
+    /// Initialize from the manifest spec with He/zeros/ones init.
+    pub fn init(spec: &ModelSpec, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut params = BTreeMap::new();
+        let mut m = BTreeMap::new();
+        let mut v = BTreeMap::new();
+        for (li, p) in spec.params.iter().enumerate() {
+            let mut lrng = rng.fork(li as u64);
+            let t = match p.init {
+                Init::Zeros => Tensor::zeros(&p.shape),
+                Init::Ones => Tensor::ones(&p.shape),
+                Init::HeIn => {
+                    let fan_in: usize =
+                        p.shape[..p.shape.len() - 1].iter().product::<usize>().max(1);
+                    let std = (2.0 / fan_in as f32).sqrt();
+                    let data =
+                        (0..p.numel()).map(|_| lrng.normal_f32(0.0, std)).collect();
+                    Tensor::new(p.shape.clone(), data)
+                }
+            };
+            m.insert(p.name.clone(), Tensor::zeros(&p.shape));
+            v.insert(p.name.clone(), Tensor::zeros(&p.shape));
+            params.insert(p.name.clone(), t);
+        }
+        ModelState { spec: spec.clone(), params, m, v, t: 0, qlayers: BTreeMap::new() }
+    }
+
+    /// Names of quantized parameters, in spec order.
+    pub fn qnames(&self) -> Vec<String> {
+        self.spec
+            .params
+            .iter()
+            .filter(|p| p.quantize)
+            .map(|p| p.name.clone())
+            .collect()
+    }
+
+    /// Names of all parameters, in spec order.
+    pub fn pnames(&self) -> Vec<String> {
+        self.spec.params.iter().map(|p| p.name.clone()).collect()
+    }
+
+    /// Overall sparsity across the quantized layers.
+    pub fn quantized_sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for ql in self.qlayers.values() {
+            zeros += ql.idx.data.iter().filter(|&&i| i == 0).count();
+            total += ql.idx.numel();
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zeros as f64 / total as f64
+        }
+    }
+
+    /// Effective parameters used in the quantized forward pass: quantized
+    /// slots read from `qlayers`, the rest from the FP store.
+    pub fn quantized_param(&self, name: &str) -> &Tensor {
+        if let Some(ql) = self.qlayers.get(name) {
+            &ql.qw
+        } else {
+            &self.params[name]
+        }
+    }
+
+    /// Full-precision model size in bytes (the CR denominator).
+    pub fn fp32_bytes(&self) -> usize {
+        self.spec.total_params() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Init, ParamSpec};
+
+    fn toy_spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            batch: 4,
+            classes: 2,
+            input_dim: 8,
+            params: vec![
+                ParamSpec {
+                    name: "w0".into(),
+                    shape: vec![8, 2],
+                    init: Init::HeIn,
+                    quantize: true,
+                },
+                ParamSpec {
+                    name: "b0".into(),
+                    shape: vec![2],
+                    init: Init::Zeros,
+                    quantize: false,
+                },
+                ParamSpec {
+                    name: "g0".into(),
+                    shape: vec![2],
+                    init: Init::Ones,
+                    quantize: false,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_kinds() {
+        let st = ModelState::init(&toy_spec(), 1);
+        assert!(st.params["b0"].data.iter().all(|&x| x == 0.0));
+        assert!(st.params["g0"].data.iter().all(|&x| x == 1.0));
+        let w = &st.params["w0"];
+        assert!(w.data.iter().any(|&x| x != 0.0));
+        // He std ~ sqrt(2/8) = 0.5
+        let std = crate::util::stats::std_dev(&w.data);
+        assert!(std > 0.2 && std < 0.9, "std={std}");
+        assert_eq!(st.qnames(), vec!["w0".to_string()]);
+        assert_eq!(st.fp32_bytes(), (16 + 2 + 2) * 4);
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = ModelState::init(&toy_spec(), 7);
+        let b = ModelState::init(&toy_spec(), 7);
+        assert_eq!(a.params["w0"].data, b.params["w0"].data);
+        let c = ModelState::init(&toy_spec(), 8);
+        assert_ne!(a.params["w0"].data, c.params["w0"].data);
+    }
+
+    #[test]
+    fn quantized_param_prefers_qlayer() {
+        let mut st = ModelState::init(&toy_spec(), 1);
+        assert_eq!(
+            st.quantized_param("w0").data,
+            st.params["w0"].data
+        );
+        let cb = Codebook::symmetric(2, 0.1);
+        st.qlayers.insert(
+            "w0".into(),
+            QLayer {
+                qw: Tensor::zeros(&[8, 2]),
+                idx: TensorI32::zeros(&[8, 2]),
+                codebook: cb,
+            },
+        );
+        assert!(st.quantized_param("w0").data.iter().all(|&x| x == 0.0));
+        assert_eq!(st.quantized_sparsity(), 1.0);
+    }
+}

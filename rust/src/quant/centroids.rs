@@ -1,0 +1,168 @@
+//! Centroid codebooks: symmetric integer grids (hardware-friendly, the
+//! ECQ/ECQ^x default) and per-layer step-size fitting.
+//!
+//! Layout contract shared with the Pallas kernel: fixed capacity
+//! `K_MAX = 32` slots, slot 0 is the zero centroid, slots 1.. alternate
+//! +k*step, -k*step; `valid` masks unused slots (so one HLO artifact
+//! serves every bit width 2-5).
+
+/// Fixed codebook capacity (2^5 - 1 = 31 centroids for 5 bit, padded to 32).
+pub const K_MAX: usize = 32;
+
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    /// centroid values, len K_MAX, slot 0 == 0.0
+    pub values: Vec<f32>,
+    /// 1.0 for valid slots, 0.0 for padding
+    pub valid: Vec<f32>,
+    /// bit width this codebook represents
+    pub bits: u32,
+    /// integer step size (scaling factor)
+    pub step: f32,
+}
+
+impl Codebook {
+    /// Symmetric integer grid: {0, ±step, ±2·step, …, ±(2^(bits-1)-1)·step}.
+    ///
+    /// `2^bits - 1` centroids — the ternary case (bits=2) is {0, ±step},
+    /// matching EC2T; centroids are NOT trained (integer arithmetic on
+    /// general hardware, Sec. 3.1).
+    pub fn symmetric(bits: u32, step: f32) -> Self {
+        assert!((2..=5).contains(&bits), "bit width must be in 2..=5");
+        let kmax_side = (1usize << (bits - 1)) - 1; // e.g. 7 for 4 bit
+        let mut values = vec![0.0f32; K_MAX];
+        let mut valid = vec![0.0f32; K_MAX];
+        valid[0] = 1.0;
+        for k in 1..=kmax_side {
+            values[2 * k - 1] = k as f32 * step;
+            values[2 * k] = -(k as f32) * step;
+            valid[2 * k - 1] = 1.0;
+            valid[2 * k] = 1.0;
+        }
+        Codebook { values, valid, bits, step }
+    }
+
+    /// Fit the step size to the weight distribution.
+    ///
+    /// bits >= 3: step = max|w| / (2^(bits-1) - 1) (grid spans the range).
+    /// bits == 2 (ternary): max-fitting would put the nearest-neighbour
+    /// dead zone at ±max|w|/2 and zero out ~everything; instead use the
+    /// TWN-style threshold delta = 0.7·E|w| (i.e. step = 1.4·E|w|), the
+    /// standard ternary scaling the EC2T lineage builds on.
+    pub fn fit(weights: &[f32], bits: u32) -> Self {
+        let step = if bits == 2 {
+            let mean_abs = if weights.is_empty() {
+                0.0
+            } else {
+                weights.iter().map(|w| w.abs() as f64).sum::<f64>() as f32
+                    / weights.len() as f32
+            };
+            1.4 * mean_abs
+        } else {
+            let mx = weights.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let half = ((1usize << (bits - 1)) - 1) as f32;
+            if half > 0.0 {
+                mx / half
+            } else {
+                0.0
+            }
+        };
+        Self::symmetric(bits, if step > 0.0 { step } else { 1.0 })
+    }
+
+    /// Number of valid centroids.
+    pub fn n_valid(&self) -> usize {
+        self.valid.iter().filter(|&&v| v > 0.5).count()
+    }
+
+    /// The signed integer level of a centroid slot (for entropy coding):
+    /// slot 0 -> 0, slot 2k-1 -> +k, slot 2k -> -k.
+    pub fn slot_to_level(slot: usize) -> i32 {
+        if slot == 0 {
+            0
+        } else if slot % 2 == 1 {
+            ((slot + 1) / 2) as i32
+        } else {
+            -((slot / 2) as i32)
+        }
+    }
+
+    /// Inverse of [`Self::slot_to_level`].
+    pub fn level_to_slot(level: i32) -> usize {
+        if level == 0 {
+            0
+        } else if level > 0 {
+            (2 * level - 1) as usize
+        } else {
+            (-2 * level) as usize
+        }
+    }
+
+    /// Dequantize an integer level.
+    pub fn level_value(&self, level: i32) -> f32 {
+        level as f32 * self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_layout() {
+        let cb = Codebook::symmetric(4, 0.1);
+        assert_eq!(cb.values[0], 0.0);
+        assert_eq!(cb.n_valid(), 15); // 2^4 - 1
+        assert!((cb.values[1] - 0.1).abs() < 1e-7);
+        assert!((cb.values[2] + 0.1).abs() < 1e-7);
+        assert!((cb.values[13] - 0.7).abs() < 1e-6);
+        assert!((cb.values[14] + 0.7).abs() < 1e-6);
+        assert_eq!(cb.valid[15], 0.0);
+    }
+
+    #[test]
+    fn ternary_is_three_centroids() {
+        let cb = Codebook::symmetric(2, 0.5);
+        assert_eq!(cb.n_valid(), 3);
+        assert_eq!(cb.values[1], 0.5);
+        assert_eq!(cb.values[2], -0.5);
+        assert_eq!(cb.valid[3], 0.0);
+    }
+
+    #[test]
+    fn fit_spans_range() {
+        let w = [-0.7f32, 0.2, 0.69];
+        let cb = Codebook::fit(&w, 4);
+        // max|w| = 0.7, half-levels = 7 -> step = 0.1
+        assert!((cb.step - 0.1).abs() < 1e-6);
+        let top = cb.values.iter().cloned().fold(0.0f32, f32::max);
+        assert!((top - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fit_handles_zeros() {
+        let cb = Codebook::fit(&[0.0, 0.0], 3);
+        assert_eq!(cb.step, 1.0);
+    }
+
+    #[test]
+    fn slot_level_roundtrip() {
+        for slot in 0..31 {
+            let lvl = Codebook::slot_to_level(slot);
+            assert_eq!(Codebook::level_to_slot(lvl), slot);
+        }
+        assert_eq!(Codebook::slot_to_level(1), 1);
+        assert_eq!(Codebook::slot_to_level(2), -1);
+        assert_eq!(Codebook::slot_to_level(13), 7);
+        assert_eq!(Codebook::slot_to_level(14), -7);
+    }
+
+    #[test]
+    fn level_values_match_slots() {
+        let cb = Codebook::symmetric(5, 0.2);
+        for slot in 0..cb.n_valid() {
+            let lvl = Codebook::slot_to_level(slot);
+            assert!((cb.level_value(lvl) - cb.values[slot]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! 1-D k-means (Lloyd) over weight values — the non-uniform quantization
+//! scheme of Fig. 2 and an alternative centroid initializer.
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub centroids: Vec<f32>,
+    /// number of weights assigned to each centroid
+    pub counts: Vec<usize>,
+    /// sum of squared distances
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// Lloyd's k-means on scalars with k-means++-style seeding.
+pub fn kmeans_1d(xs: &[f32], k: usize, max_iter: usize, seed: u64) -> KMeansResult {
+    assert!(k >= 1 && !xs.is_empty());
+    let mut rng = Rng::new(seed);
+    // k-means++ seeding
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(xs[rng.below(xs.len())]);
+    while centroids.len() < k {
+        let d2: Vec<f64> = xs
+            .iter()
+            .map(|&x| {
+                centroids
+                    .iter()
+                    .map(|&c| ((x - c) as f64).powi(2))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            centroids.push(xs[rng.below(xs.len())]);
+            continue;
+        }
+        let mut target = rng.f64() * total;
+        let mut pick = 0;
+        for (i, &d) in d2.iter().enumerate() {
+            target -= d;
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centroids.push(xs[pick]);
+    }
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut counts = vec![0usize; k];
+    let mut inertia = 0.0;
+    let mut iters = 0;
+    for it in 0..max_iter {
+        iters = it + 1;
+        let mut sums = vec![0f64; k];
+        counts = vec![0usize; k];
+        inertia = 0.0;
+        for &x in xs {
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for (c, &cen) in centroids.iter().enumerate() {
+                let d = ((x - cen) as f64).powi(2);
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            sums[best] += x as f64;
+            counts[best] += 1;
+            inertia += bd;
+        }
+        let mut moved = 0.0f64;
+        for c in 0..k {
+            if counts[c] > 0 {
+                let nc = (sums[c] / counts[c] as f64) as f32;
+                moved += ((nc - centroids[c]) as f64).abs();
+                centroids[c] = nc;
+            }
+        }
+        if moved < 1e-7 {
+            break;
+        }
+    }
+    KMeansResult { centroids, counts, inertia, iterations: iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn separates_two_clusters() {
+        let mut rng = Rng::new(5);
+        let mut xs = Vec::new();
+        for _ in 0..200 {
+            xs.push(rng.normal_f32(-1.0, 0.05));
+            xs.push(rng.normal_f32(1.0, 0.05));
+        }
+        let r = kmeans_1d(&xs, 2, 50, 1);
+        let mut c = r.centroids.clone();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((c[0] + 1.0).abs() < 0.1, "{c:?}");
+        assert!((c[1] - 1.0).abs() < 0.1, "{c:?}");
+        assert_eq!(r.counts.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn k_equals_n_zero_inertia() {
+        let xs = [1.0f32, 2.0, 3.0];
+        let r = kmeans_1d(&xs, 3, 50, 2);
+        assert!(r.inertia < 1e-9, "inertia={}", r.inertia);
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f32> = (0..500).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let i2 = kmeans_1d(&xs, 2, 50, 3).inertia;
+        let i7 = kmeans_1d(&xs, 7, 50, 3).inertia;
+        assert!(i7 < i2, "i7={i7} i2={i2}");
+    }
+}

@@ -1,0 +1,312 @@
+//! Quantization substrate: centroid grids, k-means, entropy, and a pure
+//! rust reference of the ECQ/ECQ^x assignment function (Eq. 1 / Eq. 11).
+//!
+//! The hot-path assignment runs inside the `assign_<bucket>` HLO artifact
+//! (Pallas kernel, L1); the implementation here is the semantically
+//! identical reference used by tests (three-way cross-check vs the jnp
+//! oracle and the artifact) and by host-side analyses.
+
+pub mod centroids;
+pub mod kmeans;
+pub mod refine;
+pub mod relevance;
+pub mod structured;
+
+pub use centroids::{Codebook, K_MAX};
+
+use crate::tensor::Tensor;
+
+pub const BIG: f32 = 1e30;
+pub const P_EPS: f32 = 1e-9;
+
+/// Result of assigning one layer.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    /// centroid index per weight (0 == zero cluster)
+    pub idx: Vec<i32>,
+    /// dequantized weights
+    pub qw: Vec<f32>,
+    /// per-cluster assignment counts (len K_MAX)
+    pub counts: Vec<f32>,
+}
+
+impl Assignment {
+    pub fn sparsity(&self, n_valid: usize) -> f64 {
+        if n_valid == 0 {
+            return 0.0;
+        }
+        let zeros = self.idx.iter().take(n_valid).filter(|&&i| i == 0).count();
+        zeros as f64 / n_valid as f64
+    }
+}
+
+/// Pure-rust ECQ^x assignment (reference semantics of the Pallas kernel +
+/// its two-phase probability wrapper `assign_full`).
+///
+/// `w`, `r`, `mask` have equal (padded) length; `codebook.values[0]` must
+/// be the zero centroid; `lam` is the layer-scaled Lagrange multiplier.
+/// With `r == 1` everywhere this is exactly ECQ (Eq. 1).
+pub fn assign_ref(
+    w: &[f32],
+    r: &[f32],
+    mask: &[f32],
+    codebook: &Codebook,
+    lam: f32,
+) -> Assignment {
+    let k = codebook.values.len();
+    assert_eq!(w.len(), r.len());
+    assert_eq!(w.len(), mask.len());
+    // Phase 1: nearest-neighbour source distribution P_c.
+    let mut counts = vec![0f64; k];
+    let mut total = 0f64;
+    for i in 0..w.len() {
+        let mut best = 0usize;
+        let mut bd = f32::INFINITY;
+        for c in 0..k {
+            if codebook.valid[c] == 0.0 {
+                continue;
+            }
+            let d = (w[i] - codebook.values[c]).powi(2);
+            if d < bd {
+                bd = d;
+                best = c;
+            }
+        }
+        counts[best] += mask[i] as f64;
+        total += mask[i] as f64;
+    }
+    let total = total.max(1.0);
+    let mut entcost = vec![0f32; k];
+    for c in 0..k {
+        let p = ((counts[c] / total) as f32).max(P_EPS);
+        entcost[c] = -lam * p.log2();
+        if codebook.valid[c] == 0.0 {
+            entcost[c] += BIG;
+        }
+    }
+    // Phase 2: relevance-adjusted cost argmin (Eq. 11).
+    let mut idx = vec![0i32; w.len()];
+    let mut qw = vec![0f32; w.len()];
+    let mut fcounts = vec![0f32; k];
+    for i in 0..w.len() {
+        let mut best = 0usize;
+        let mut bc = f32::INFINITY;
+        for c in 0..k {
+            let d = (w[i] - codebook.values[c]).powi(2);
+            let mut cost = d + entcost[c];
+            if c == 0 {
+                cost *= r[i];
+            }
+            if cost < bc {
+                bc = cost;
+                best = c;
+            }
+        }
+        if mask[i] > 0.5 {
+            idx[i] = best as i32;
+            qw[i] = codebook.values[best];
+            fcounts[best] += 1.0;
+        }
+    }
+    Assignment { idx, qw, counts: fcounts }
+}
+
+/// Per-layer lambda scaling: layers with more parameters get the full
+/// constraint, smaller layers a proportionally weaker one (Sec. 3.1:
+/// "scaled with a factor based on the number of parameters a layer has in
+/// proportion to other layers ... to mitigate the constraint for smaller
+/// layers").
+pub fn lambda_scale(layer_numel: usize, max_numel: usize) -> f32 {
+    if max_numel == 0 {
+        return 1.0;
+    }
+    (layer_numel as f32 / max_numel as f32).sqrt()
+}
+
+/// Uniform symmetric post-training quantization of a tensor to `bits`
+/// (2^bits - 1 levels incl. 0): the Fig. 1 weight-sensitivity probe and
+/// the classic baseline.
+pub fn uniform_quantize(t: &Tensor, bits: u32) -> Tensor {
+    let levels = (1i64 << bits) - 1; // symmetric, includes 0
+    let half = (levels / 2) as f32;
+    let mx = t.abs_max();
+    if mx == 0.0 || half == 0.0 {
+        return t.clone();
+    }
+    let step = mx / half;
+    let data = t
+        .data
+        .iter()
+        .map(|&x| (x / step).round().clamp(-half, half) * step)
+        .collect();
+    Tensor::new(t.shape.clone(), data)
+}
+
+/// First-order entropy (bits/weight) of an assignment — the rate the
+/// entropy constraint optimizes (Sec. 3.1).
+pub fn assignment_entropy(counts: &[f32]) -> f64 {
+    let total: f64 = counts.iter().map(|&c| c as f64).sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &c in counts {
+        if c <= 0.0 {
+            continue;
+        }
+        let p = c as f64 / total;
+        h -= p * p.log2();
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_codebook(bits: u32, step: f32) -> Codebook {
+        Codebook::symmetric(bits, step)
+    }
+
+    #[test]
+    fn ecq_zero_lambda_is_nearest_neighbour() {
+        let cb = toy_codebook(2, 0.5); // centroids 0, +0.5, -0.5
+        let w = [0.1f32, 0.4, -0.4, -0.1, 0.26];
+        let r = [1.0f32; 5];
+        let m = [1.0f32; 5];
+        let a = assign_ref(&w, &r, &m, &cb, 0.0);
+        // nearest neighbour: 0.1->0, 0.4->+0.5, -0.4->-0.5, -0.1->0, 0.26->+0.5
+        assert_eq!(&a.idx[..], &[0, 1, 2, 0, 1]);
+        assert_eq!(a.qw[1], 0.5);
+        assert_eq!(a.qw[2], -0.5);
+    }
+
+    #[test]
+    fn entropy_constraint_pulls_to_popular_cluster() {
+        let cb = toy_codebook(2, 0.5);
+        // Most weights near zero -> zero cluster popular; a borderline
+        // weight flips to zero when lambda is large enough.
+        let mut w = vec![0.01f32; 99];
+        w.push(0.26); // nearest neighbour is +0.5
+        let r = vec![1.0f32; 100];
+        let m = vec![1.0f32; 100];
+        let a0 = assign_ref(&w, &r, &m, &cb, 0.0);
+        assert_eq!(a0.idx[99], 1);
+        let a1 = assign_ref(&w, &r, &m, &cb, 0.05);
+        assert_eq!(a1.idx[99], 0, "large lambda must pull into zero cluster");
+        assert!(a1.sparsity(100) > a0.sparsity(100));
+    }
+
+    #[test]
+    fn relevance_protects_and_prunes() {
+        let cb = toy_codebook(2, 0.5);
+        let mut w = vec![0.01f32; 99];
+        w.push(0.26);
+        let m = vec![1.0f32; 100];
+        let lam = 0.05;
+        // relevant weight (r >> 1): zero cluster becomes expensive -> kept
+        let mut r = vec![1.0f32; 100];
+        r[99] = 50.0;
+        let a = assign_ref(&w, &r, &m, &cb, lam);
+        assert_eq!(a.idx[99], 1, "high relevance must keep the weight");
+        // irrelevant weight (r ~ 0): nearest-neighbour non-zero weight
+        // gets pushed into the zero cluster even with lambda = 0
+        let mut r2 = vec![1.0f32; 100];
+        r2[99] = 0.0;
+        let a2 = assign_ref(&w, &r2, &m, &cb, 0.0);
+        assert_eq!(a2.idx[99], 0, "zero relevance must prune the weight");
+    }
+
+    #[test]
+    fn mask_excludes_padding() {
+        let cb = toy_codebook(2, 0.5);
+        let w = [0.4f32, 0.4, 0.4, 0.4];
+        let r = [1.0f32; 4];
+        let m = [1.0f32, 1.0, 0.0, 0.0];
+        let a = assign_ref(&w, &r, &m, &cb, 0.0);
+        assert_eq!(&a.idx[..], &[1, 1, 0, 0]);
+        assert_eq!(a.qw[2], 0.0);
+        let total: f32 = a.counts.iter().sum();
+        assert_eq!(total, 2.0);
+    }
+
+    #[test]
+    fn uniform_quantize_roundtrip() {
+        let t = Tensor::new(vec![4], vec![-1.0, -0.33, 0.33, 1.0]);
+        let q = uniform_quantize(&t, 2); // levels {-1, 0, 1} * step
+        assert_eq!(q.data[0], -1.0);
+        assert_eq!(q.data[3], 1.0);
+        assert_eq!(q.data[1], 0.0); // -0.33 rounds to 0 at step 1.0
+        let q8 = uniform_quantize(&t, 8);
+        for (a, b) in q8.data.iter().zip(t.data.iter()) {
+            assert!((a - b).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn lambda_scale_monotone() {
+        assert!(lambda_scale(100, 1000) < lambda_scale(1000, 1000));
+        assert_eq!(lambda_scale(1000, 1000), 1.0);
+        assert_eq!(lambda_scale(10, 0), 1.0);
+    }
+
+    #[test]
+    fn assignment_entropy_bounds() {
+        assert_eq!(assignment_entropy(&[10.0, 0.0, 0.0]), 0.0);
+        let h = assignment_entropy(&[5.0, 5.0, 5.0, 5.0]);
+        assert!((h - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_ecqx_reduces_to_ecq_with_unit_relevance() {
+        crate::util::prop::check("ecqx==ecq when r=1", 20, |rng| {
+            let n = 64 + rng.below(200);
+            let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.2)).collect();
+            let r = vec![1.0f32; n];
+            let m = vec![1.0f32; n];
+            let cb = Codebook::symmetric(3, 0.1);
+            let lam = rng.range(0.0, 0.1);
+            let a = assign_ref(&w, &r, &m, &cb, lam);
+            let b = assign_ref(&w, &r, &m, &cb, lam);
+            if a.idx != b.idx {
+                return Err("non-deterministic".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_sparsity_monotone_in_lambda() {
+        crate::util::prop::check("sparsity monotone in lambda", 10, |rng| {
+            let n = 512;
+            let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.2)).collect();
+            let r = vec![1.0f32; n];
+            let m = vec![1.0f32; n];
+            // fitted grid: the zero cluster is the NN mode (weights peak
+            // at 0), which is the regime where monotonicity holds; skip
+            // draws where sampling noise makes another cluster the mode
+            let cb = Codebook::fit(&w, 4);
+            let nn = assign_ref(&w, &r, &m, &cb, 0.0);
+            let argmax = nn
+                .counts
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax != 0 {
+                return Ok(());
+            }
+            let mut last = -1.0f64;
+            for lam in [0.0, 0.01, 0.05, 0.2, 0.5] {
+                let a = assign_ref(&w, &r, &m, &cb, lam);
+                let s = a.sparsity(n);
+                if s + 1e-9 < last {
+                    return Err(format!("sparsity dropped: {s} < {last} at lam={lam}"));
+                }
+                last = s;
+            }
+            Ok(())
+        });
+    }
+}

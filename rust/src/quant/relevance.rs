@@ -1,0 +1,202 @@
+//! LRP relevance post-processing pipeline (Sec. 4.2).
+//!
+//! Raw per-weight relevances arrive (signed, batch-aggregated) from the
+//! `<model>_lrp` artifact. Per layer we
+//!   1. take absolute values ("negative contributions ... might still be
+//!      relevant to the network functionality"),
+//!   2. apply an EMA over data batches (the momentum folded into rho),
+//!   3. normalize to [0, 1],
+//!   4. gamma-transform with exponent beta and convert to the zero-cluster
+//!      cost factor  rho * R^beta  ==  (R / R_mean)^beta, which satisfies
+//!      the paper's neutrality condition rho * (R_mean)^beta = 1 exactly,
+//!   5. auto-tune beta downward whenever the LRP-induced *extra* sparsity
+//!      of a layer exceeds the target-sparsity hyperparameter p.
+
+/// EMA state of one layer's relevances.
+#[derive(Clone, Debug)]
+pub struct RelevanceState {
+    /// smoothed |relevance| per weight
+    pub ema: Vec<f32>,
+    /// momentum coefficient (0 => no history)
+    pub momentum: f32,
+    initialized: bool,
+}
+
+impl RelevanceState {
+    pub fn new(n: usize, momentum: f32) -> Self {
+        RelevanceState { ema: vec![0.0; n], momentum, initialized: false }
+    }
+
+    /// Fold a new batch of signed relevances into the EMA.
+    pub fn update(&mut self, raw: &[f32]) {
+        assert_eq!(raw.len(), self.ema.len());
+        if !self.initialized {
+            for (e, &r) in self.ema.iter_mut().zip(raw.iter()) {
+                *e = r.abs();
+            }
+            self.initialized = true;
+        } else {
+            let m = self.momentum;
+            for (e, &r) in self.ema.iter_mut().zip(raw.iter()) {
+                *e = m * *e + (1.0 - m) * r.abs();
+            }
+        }
+    }
+
+    /// Normalized relevances in [0, 1].
+    pub fn normalized(&self) -> Vec<f32> {
+        let mx = self.ema.iter().fold(0.0f32, |m, &x| m.max(x));
+        if mx <= 0.0 {
+            return vec![0.0; self.ema.len()];
+        }
+        self.ema.iter().map(|&x| x / mx).collect()
+    }
+}
+
+/// Stabilizer added to relevances before the gamma transform so that
+/// beta -> 0 neutralizes the factor even for exactly-zero relevances
+/// (otherwise 0^beta == 0 for every beta > 0 and the target-sparsity
+/// controller could never bound the LRP-induced pruning).
+pub const REL_EPS: f32 = 1e-3;
+
+/// Convert normalized relevances to zero-cluster cost factors
+/// (rho * R^beta with rho = mean^-beta): factor 1 at the mean relevance,
+/// > 1 above (protects relevant weights), < 1 below (prunes irrelevant
+/// ones); beta in [0, 1] controls the intensity.
+pub fn cost_factors(norm_rel: &[f32], beta: f32) -> Vec<f32> {
+    let n = norm_rel.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mean = (norm_rel.iter().map(|&x| x as f64).sum::<f64>() / n as f64)
+        .max(1e-12) as f32;
+    norm_rel
+        .iter()
+        .map(|&r| {
+            if beta == 0.0 {
+                1.0
+            } else {
+                ((r.max(0.0) + REL_EPS) / (mean + REL_EPS))
+                    .powf(beta)
+                    .clamp(FACTOR_LO, FACTOR_HI)
+            }
+        })
+        .collect()
+}
+
+/// Bounds on the relevance cost factor: keeps single-batch relevance noise
+/// from making any weight's zero-cluster cost collapse to ~0 (irreversible
+/// prune) or explode (unbounded protection) within one refresh.
+pub const FACTOR_LO: f32 = 0.2;
+pub const FACTOR_HI: f32 = 5.0;
+
+/// Outcome of the beta controller for one layer.
+#[derive(Clone, Debug)]
+pub struct BetaControl {
+    pub beta: f32,
+    pub factors: Vec<f32>,
+    /// LRP-induced extra sparsity at the chosen beta
+    pub extra_sparsity: f64,
+    pub halvings: u32,
+}
+
+/// Tune beta so the LRP-induced extra sparsity stays below the target `p`.
+///
+/// `sparsity_at` evaluates the layer sparsity for a given factor vector
+/// (by running the assignment); `base_sparsity` is the lambda-only (ECQ)
+/// sparsity of the same layer. beta is halved until the constraint holds
+/// (beta -> 0 recovers plain ECQ, so the loop terminates).
+pub fn control_beta(
+    norm_rel: &[f32],
+    beta0: f32,
+    p: f64,
+    base_sparsity: f64,
+    mut sparsity_at: impl FnMut(&[f32]) -> f64,
+    max_halvings: u32,
+) -> BetaControl {
+    let mut beta = beta0.clamp(0.0, 1.0);
+    let mut halvings = 0;
+    loop {
+        let factors = cost_factors(norm_rel, beta);
+        let s = sparsity_at(&factors);
+        let extra = s - base_sparsity;
+        if extra <= p {
+            return BetaControl { beta, factors, extra_sparsity: extra, halvings };
+        }
+        if beta <= 1e-3 || halvings >= max_halvings {
+            // give up: fall back to beta = 0 (plain ECQ, extra == 0) so the
+            // target-sparsity bound is respected exactly
+            let factors = cost_factors(norm_rel, 0.0);
+            return BetaControl { beta: 0.0, factors, extra_sparsity: 0.0, halvings };
+        }
+        beta *= 0.5;
+        halvings += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_tracks_abs() {
+        let mut st = RelevanceState::new(3, 0.5);
+        st.update(&[-2.0, 0.0, 4.0]);
+        assert_eq!(st.ema, vec![2.0, 0.0, 4.0]);
+        st.update(&[0.0, 0.0, 0.0]);
+        assert_eq!(st.ema, vec![1.0, 0.0, 2.0]);
+        let n = st.normalized();
+        assert_eq!(n, vec![0.5, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn factors_neutral_at_mean() {
+        let rel = vec![0.2f32, 0.4, 0.6, 0.8];
+        let f = cost_factors(&rel, 1.0);
+        // mean = 0.5; factor at 0.5-relevance would be exactly 1
+        assert!(f[0] < 1.0 && f[3] > 1.0);
+        let prod_mean: f32 = 0.5 / 0.5;
+        assert!((prod_mean - 1.0).abs() < 1e-6);
+        // beta=0 -> all neutral
+        let f0 = cost_factors(&rel, 0.0);
+        assert!(f0.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn smaller_beta_compresses_factors() {
+        let rel = vec![0.01f32, 0.5, 1.0];
+        let f1 = cost_factors(&rel, 1.0);
+        let f01 = cost_factors(&rel, 0.1);
+        // low-relevance factor moves toward 1 as beta shrinks
+        assert!(f01[0] > f1[0]);
+        assert!(f01[2] < f1[2]);
+    }
+
+    #[test]
+    fn controller_halves_until_target() {
+        let rel = vec![0.1f32; 100];
+        // fake sparsity model: extra sparsity proportional to beta
+        let ctl = control_beta(&rel, 1.0, 0.1, 0.5, |f| {
+            let intensity = f.iter().map(|&x| (1.0 - x).abs() as f64).sum::<f64>();
+            0.5 + 0.4 * (intensity > 0.0) as u64 as f64 * 0.0 + 0.4 * ctl_beta_proxy(f)
+        }, 10);
+        assert!(ctl.extra_sparsity <= 0.1 + 1e-9 || ctl.beta <= 1e-3);
+    }
+
+    // proxy: mean deviation of factors from 1 stands in for LRP intensity
+    fn ctl_beta_proxy(f: &[f32]) -> f64 {
+        f.iter().map(|&x| (1.0 - x).abs() as f64).sum::<f64>() / f.len() as f64
+    }
+
+    #[test]
+    fn controller_zero_p_drives_beta_down() {
+        let rel: Vec<f32> = (0..50).map(|i| i as f32 / 50.0).collect();
+        let ctl = control_beta(&rel, 1.0, 0.0, 0.3, |f| {
+            // extra sparsity strictly positive unless factors all 1
+            let dev: f64 =
+                f.iter().map(|&x| (1.0 - x).abs() as f64).sum::<f64>() / 50.0;
+            0.3 + dev
+        }, 12);
+        assert!(ctl.beta < 1.0, "beta should have been reduced");
+    }
+}

@@ -1,0 +1,312 @@
+//! Parser for `artifacts/manifest.txt` — the contract between the python
+//! compile path (aot.py) and the rust coordinator. The manifest describes
+//! every model's parameter table and every artifact's input/output
+//! signature; rust binds tensors by name and order from here, so python
+//! remains the single source of truth for shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+/// One tensor slot in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Initialization kind of a parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    HeIn,
+    Zeros,
+    Ones,
+}
+
+/// One model parameter (from `param` lines).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+    pub quantize: bool,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model section.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub batch: usize,
+    pub classes: usize,
+    pub input_dim: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+impl ModelSpec {
+    pub fn quantized_params(&self) -> impl Iterator<Item = &ParamSpec> {
+        self.params.iter().filter(|p| p.quantize)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn quantized_numel(&self) -> usize {
+        self.quantized_params().map(|p| p.numel()).sum()
+    }
+}
+
+/// One HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub hash: String,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub kmax: usize,
+    pub buckets: Vec<usize>,
+    pub dir: PathBuf,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().context("bad shape dim"))
+        .collect()
+}
+
+fn kv<'a>(tok: &'a str, key: &str) -> Option<&'a str> {
+    tok.strip_prefix(key).and_then(|r| r.strip_prefix('='))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut m = Manifest { dir: dir.to_path_buf(), ..Default::default() };
+        let mut cur_model: Option<String> = None;
+        let mut cur_art: Option<String> = None;
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("manifest line {}: {line}", ln + 1);
+            match toks[0] {
+                "hash" => m.hash = toks[1].to_string(),
+                "kmax" => m.kmax = toks[1].parse().with_context(ctx)?,
+                "buckets" => {
+                    m.buckets = toks[1]
+                        .split(',')
+                        .map(|b| b.parse().unwrap())
+                        .collect()
+                }
+                "model" => {
+                    let name = toks[1].to_string();
+                    let mut batch = 0;
+                    let mut classes = 0;
+                    let mut input_dim = 0;
+                    for t in &toks[2..] {
+                        if let Some(v) = kv(t, "batch") {
+                            batch = v.parse().with_context(ctx)?;
+                        } else if let Some(v) = kv(t, "classes") {
+                            classes = v.parse().with_context(ctx)?;
+                        } else if let Some(v) = kv(t, "input") {
+                            input_dim = parse_shape(v)?.iter().product();
+                        }
+                    }
+                    m.models.insert(
+                        name.clone(),
+                        ModelSpec { name: name.clone(), batch, classes, input_dim, params: vec![] },
+                    );
+                    cur_model = Some(name);
+                }
+                "param" => {
+                    let model = cur_model.as_ref().context("param outside model")?;
+                    let mut init = Init::Zeros;
+                    let mut quant = false;
+                    for t in &toks[4..] {
+                        if let Some(v) = kv(t, "init") {
+                            init = match v {
+                                "he_in" => Init::HeIn,
+                                "zeros" => Init::Zeros,
+                                "ones" => Init::Ones,
+                                other => bail!("unknown init {other}"),
+                            };
+                        } else if let Some(v) = kv(t, "quant") {
+                            quant = v == "1";
+                        }
+                    }
+                    m.models.get_mut(model).unwrap().params.push(ParamSpec {
+                        name: toks[1].to_string(),
+                        shape: parse_shape(toks[3])?,
+                        init,
+                        quantize: quant,
+                    });
+                }
+                "artifact" => {
+                    let name = toks[1].to_string();
+                    let file = toks[2]
+                        .strip_prefix("file=")
+                        .context("artifact missing file=")?;
+                    m.artifacts.insert(
+                        name.clone(),
+                        ArtifactSpec {
+                            name: name.clone(),
+                            file: dir.join(file),
+                            inputs: vec![],
+                            outputs: vec![],
+                        },
+                    );
+                    cur_art = Some(name);
+                }
+                "in" | "out" => {
+                    let art = cur_art.as_ref().context("in/out outside artifact")?;
+                    let spec = TensorSpec {
+                        name: toks[1].to_string(),
+                        dtype: DType::parse(toks[2])?,
+                        shape: parse_shape(toks[3])?,
+                    };
+                    let a = m.artifacts.get_mut(art).unwrap();
+                    if toks[0] == "in" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                "end" => cur_art = None,
+                other => bail!("unknown manifest directive {other} at line {}", ln + 1),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).with_context(|| format!("model {name} not in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    /// Smallest assign bucket that fits `numel` elements.
+    pub fn bucket_for(&self, numel: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= numel)
+            .with_context(|| format!("no assign bucket fits {numel} elements"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(text: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ecqx-manifest-test-{}",
+            std::process::id() as u64 + text.len() as u64
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), text).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_minimal() {
+        let dir = write_tmp(
+            "hash abc\n\
+             model m batch=4 classes=2 input=8\n\
+             param w0 f32 8x2 init=he_in quant=1\n\
+             param b0 f32 2 init=zeros quant=0\n\
+             kmax 32\n\
+             buckets 1024,2048\n\
+             artifact m_eval file=m_eval.hlo.txt\n\
+             in p_w0 f32 8x2\n\
+             in x f32 4x8\n\
+             in y i32 4\n\
+             out loss f32 scalar\n\
+             end\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.hash, "abc");
+        let model = m.model("m").unwrap();
+        assert_eq!(model.batch, 4);
+        assert_eq!(model.params.len(), 2);
+        assert!(model.params[0].quantize);
+        assert_eq!(model.params[0].init, Init::HeIn);
+        assert_eq!(model.total_params(), 18);
+        assert_eq!(model.quantized_numel(), 16);
+        let art = m.artifact("m_eval").unwrap();
+        assert_eq!(art.inputs.len(), 3);
+        assert_eq!(art.inputs[2].dtype, DType::I32);
+        assert_eq!(art.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(m.bucket_for(900).unwrap(), 1024);
+        assert_eq!(m.bucket_for(1500).unwrap(), 2048);
+        assert!(m.bucket_for(99999).is_err());
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let dir = write_tmp("hash x\n");
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("mlp_gsc"));
+            assert!(!m.buckets.is_empty());
+            assert_eq!(m.kmax, 32);
+        }
+    }
+}

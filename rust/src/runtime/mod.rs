@@ -1,0 +1,189 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the coordinator's hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Compiled executables are cached per artifact name; the engine checks
+//! every call against the manifest signature (shape + dtype), so binding
+//! bugs fail loudly at the boundary instead of inside XLA.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{Tensor, TensorI32, Value};
+pub use manifest::{ArtifactSpec, DType, Init, Manifest, ModelSpec, ParamSpec, TensorSpec};
+
+/// Smoke check that the PJRT CPU client can be constructed.
+pub fn smoke() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(format!(
+        "platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    ))
+}
+
+fn literal_from_value(v: &Value) -> Result<xla::Literal> {
+    let dims: Vec<i64> = v.shape().iter().map(|&d| d as i64).collect();
+    let lit = match v {
+        Value::F32(t) => xla::Literal::vec1(&t.data).reshape(&dims)?,
+        Value::I32(t) => xla::Literal::vec1(&t.data).reshape(&dims)?,
+    };
+    Ok(lit)
+}
+
+fn value_from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Value> {
+    Ok(match spec.dtype {
+        DType::F32 => {
+            let data = lit.to_vec::<f32>()?;
+            Value::F32(Tensor::new(spec.shape.clone(), data))
+        }
+        DType::I32 => {
+            let data = lit.to_vec::<i32>()?;
+            Value::I32(TensorI32::new(spec.shape.clone(), data))
+        }
+    })
+}
+
+/// The PJRT execution engine: one CPU client + a compiled-executable cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// wall-clock spent compiling (for §Perf accounting)
+    compile_s: Mutex<f64>,
+}
+
+impl Engine {
+    /// Load the manifest from `dir` and construct the CPU client.
+    pub fn new(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            compile_s: Mutex::new(0.0),
+        })
+    }
+
+    pub fn compile_seconds(&self) -> f64 {
+        *self.compile_s.lock().unwrap()
+    }
+
+    /// Get (compile-on-demand) the executable for an artifact.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        *self.compile_s.lock().unwrap() += t0.elapsed().as_secs_f64();
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (amortizes compile time up front).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Validate `vals` against the artifact input signature.
+    fn check_inputs(&self, spec: &ArtifactSpec, vals: &[Value]) -> Result<()> {
+        if vals.len() != spec.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                vals.len()
+            );
+        }
+        for (v, s) in vals.iter().zip(spec.inputs.iter()) {
+            if v.shape() != s.shape.as_slice() {
+                bail!(
+                    "artifact {} input {}: shape {:?} != spec {:?}",
+                    spec.name,
+                    s.name,
+                    v.shape(),
+                    s.shape
+                );
+            }
+            let dt_ok = matches!(
+                (v, s.dtype),
+                (Value::F32(_), DType::F32) | (Value::I32(_), DType::I32)
+            );
+            if !dt_ok {
+                bail!("artifact {} input {}: dtype mismatch", spec.name, s.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one artifact: inputs in manifest order, outputs in manifest
+    /// order. (Artifacts are lowered with return_tuple=True, so the single
+    /// device output is a tuple literal that we decompose.)
+    pub fn call(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        self.check_inputs(&spec, inputs)?;
+        let exe = self.executable(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(literal_from_value)
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        let out_lit = result[0][0].to_literal_sync()?;
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {}: expected {} outputs, got {}",
+                name,
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(spec.outputs.iter())
+            .map(|(l, s)| value_from_literal(l, s))
+            .collect()
+    }
+
+    /// Map outputs by name for convenient lookup.
+    pub fn call_named(&self, name: &str, inputs: &[Value]) -> Result<HashMap<String, Value>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        let outs = self.call(name, inputs)?;
+        Ok(spec
+            .outputs
+            .iter()
+            .map(|s| s.name.clone())
+            .zip(outs)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_client() {
+        let s = smoke().unwrap();
+        assert!(s.contains("cpu"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Minimal row-major tensor types used by the coordinator.
+//!
+//! These are host-side containers for weights, batches and relevances; all
+//! heavy math runs inside the PJRT artifacts. Conversions to/from
+//! `xla::Literal` live in [`crate::runtime`].
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_scalar(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "not a scalar: {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Fraction of exactly-zero elements (the paper's sparsity measure).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let z = self.data.iter().filter(|&&x| x == 0.0).count();
+        z as f64 / self.data.len() as f64
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+}
+
+/// Row-major i32 tensor (centroid assignment indices, labels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI32 { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        TensorI32 { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// A value passing through the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(TensorI32),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> &Tensor {
+        match self {
+            Value::F32(t) => t,
+            Value::I32(_) => panic!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &TensorI32 {
+        match self {
+            Value::I32(t) => t,
+            Value::F32(_) => panic!("expected i32 tensor, got f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Tensor {
+        match self {
+            Value::F32(t) => t,
+            Value::I32(_) => panic!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn into_i32(self) -> TensorI32 {
+        match self {
+            Value::I32(t) => t,
+            Value::F32(_) => panic!("expected i32 tensor, got f32"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_sparsity() {
+        let t = Tensor::new(vec![2, 3], vec![0.0, 1.0, 0.0, 2.0, 0.0, 3.0]);
+        assert_eq!(t.numel(), 6);
+        assert!((t.sparsity() - 0.5).abs() < 1e-12);
+        assert_eq!(t.abs_max(), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let s = Tensor::scalar(3.5);
+        assert_eq!(s.as_scalar(), 3.5);
+        assert_eq!(s.numel(), 1);
+    }
+
+    #[test]
+    fn value_accessors() {
+        let v = Value::F32(Tensor::zeros(&[2]));
+        assert_eq!(v.shape(), &[2]);
+        assert_eq!(v.as_f32().numel(), 2);
+        let vi = Value::I32(TensorI32::zeros(&[3]));
+        assert_eq!(vi.as_i32().numel(), 3);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).reshape(vec![2, 2]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.data[3], 4.0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Small shared utilities: PRNG, statistics, property testing, timing.
+//!
+//! The offline build has no `rand`/`proptest`/`criterion`, so this module
+//! provides behaviour-equivalent replacements (see DESIGN.md
+//! substitution table).
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;
+
+/// Parallel map over a slice using scoped threads (no external deps).
+///
+/// Used by the sweep runner to fan independent trials across cores.
+pub fn par_map<T: Sync, R: Send, F: Fn(&T) -> R + Sync>(
+    items: &[T],
+    threads: usize,
+    f: F,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let items: Vec<u64> = (0..100).collect();
+        let par = par_map(&items, 8, |x| x * x);
+        let ser: Vec<u64> = items.iter().map(|x| x * x).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let items: Vec<u64> = vec![];
+        assert!(par_map(&items, 4, |x| *x).is_empty());
+    }
+}

@@ -1,0 +1,84 @@
+//! Minimal property-testing driver (offline replacement for proptest).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure against `cases` seeded
+//! random inputs; on failure it reports the failing seed so the case can
+//! be replayed deterministically with `replay(seed, ...)`.
+
+use super::rng::Rng;
+
+/// Run `f` against `cases` independent seeded RNGs; panic with the failing
+/// seed on the first reported failure (f returns Err(msg) to fail).
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    cases: u64,
+    mut f: F,
+) {
+    for case in 0..cases {
+        let seed = 0xECC5_0000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single failing seed.
+pub fn replay<F: FnMut(&mut Rng) -> Result<(), String>>(seed: u64, mut f: F) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replay of seed {seed} failed: {msg}");
+    }
+}
+
+/// Random vector of standard-normal f32 scaled by `std`.
+pub fn normal_vec(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, std)).collect()
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("len mismatch {} vs {}", a.len(), b.len()));
+    }
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]).abs();
+        let scale = 1.0f32.max(a[i].abs()).max(b[i].abs());
+        if d > tol * scale {
+            return Err(format!(
+                "elem {i}: {} vs {} (|d|={d}, tol={tol})",
+                a[i], b[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes() {
+        check("trivial", 10, |rng| {
+            let x = rng.f32();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_seed() {
+        check("fails", 5, |_| Err("always".into()));
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Basic statistics used by analyses and benches.
+
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Pearson correlation coefficient (the `c` of Fig. 4).
+pub fn pearson(xs: &[f32], ys: &[f32]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] as f64 - mx;
+        let dy = ys[i] as f64 - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+/// Histogram of `xs` into `bins` equal-width bins over [lo, hi].
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    if w <= 0.0 {
+        return h;
+    }
+    for &x in xs {
+        if x < lo || x > hi {
+            continue;
+        }
+        let b = (((x - lo) / w) as usize).min(bins - 1);
+        h[b] += 1;
+    }
+    h
+}
+
+/// First-order entropy (bits/symbol) of a discrete distribution given by
+/// counts — Shannon's H, the theoretical coding limit (Sec. 3.1).
+pub fn entropy_bits(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &c in counts {
+        if c == 0 {
+            continue;
+        }
+        let p = c as f64 / total as f64;
+        h -= p * p.log2();
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect() {
+        let xs: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let ys: Vec<f32> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-9);
+        let yn: Vec<f32> = xs.iter().map(|x| -x).collect();
+        assert!((pearson(&xs, &yn) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        let xs = [1.0f32; 5];
+        let ys = [0.0f32, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(pearson(&xs, &ys), 0.0);
+    }
+
+    #[test]
+    fn entropy_uniform() {
+        // 4 equally likely symbols -> 2 bits
+        assert!((entropy_bits(&[5, 5, 5, 5]) - 2.0).abs() < 1e-12);
+        // single symbol -> 0 bits
+        assert_eq!(entropy_bits(&[7]), 0.0);
+        assert_eq!(entropy_bits(&[]), 0.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.0f32, 0.49, 0.5, 0.99, 1.0];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        // [0, 0.5) -> bin 0; [0.5, 1.0] -> bin 1 (hi lands in the last bin)
+        assert_eq!(h, vec![2, 3]);
+    }
+}

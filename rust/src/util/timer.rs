@@ -1,0 +1,118 @@
+//! Wall-clock timing + per-phase accumulation (profiling the QAT loop).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Accumulates wall-clock per named phase (step / lrp / assign / eval ...),
+/// the profile that backs the §5.2.2 overhead experiment and §Perf.
+#[derive(Default, Clone)]
+pub struct PhaseProfile {
+    totals: BTreeMap<String, (f64, u64)>,
+}
+
+impl PhaseProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, phase: &str, seconds: f64) {
+        let e = self.totals.entry(phase.to_string()).or_insert((0.0, 0));
+        e.0 += seconds;
+        e.1 += 1;
+    }
+
+    pub fn time<R>(&mut self, phase: &str, f: impl FnOnce() -> R) -> R {
+        let t = Timer::start();
+        let r = f();
+        self.record(phase, t.elapsed_s());
+        r
+    }
+
+    pub fn total(&self, phase: &str) -> f64 {
+        self.totals.get(phase).map(|e| e.0).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.totals.get(phase).map(|e| e.1).unwrap_or(0)
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64, u64)> {
+        self.totals.iter().map(|(k, (s, c))| (k.as_str(), *s, *c))
+    }
+
+    pub fn merge(&mut self, other: &PhaseProfile) {
+        for (k, (s, c)) in &other.totals {
+            let e = self.totals.entry(k.clone()).or_insert((0.0, 0));
+            e.0 += s;
+            e.1 += c;
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let grand: f64 = self.totals.values().map(|e| e.0).sum();
+        for (k, (s, c)) in &self.totals {
+            out.push_str(&format!(
+                "  {k:<12} {s:>9.3}s  n={c:<6} avg={:>8.3}ms  {:>5.1}%\n",
+                s / (*c).max(1) as f64 * 1e3,
+                if grand > 0.0 { s / grand * 100.0 } else { 0.0 }
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_accumulates() {
+        let mut p = PhaseProfile::new();
+        p.record("a", 1.0);
+        p.record("a", 2.0);
+        p.record("b", 0.5);
+        assert_eq!(p.total("a"), 3.0);
+        assert_eq!(p.count("a"), 2);
+        assert_eq!(p.total("b"), 0.5);
+        assert_eq!(p.total("missing"), 0.0);
+        let mut q = PhaseProfile::new();
+        q.record("a", 1.0);
+        q.merge(&p);
+        assert_eq!(q.total("a"), 4.0);
+        assert!(q.report().contains('a'));
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let mut p = PhaseProfile::new();
+        let v = p.time("x", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(p.count("x"), 1);
+    }
+}

@@ -1,0 +1,92 @@
+//! Figure 5 walkthrough: one ECQ^x iteration on the paper's toy example —
+//! a 4x4 weight grid, 3 centroids (symmetric 2 bit), entropy costs and
+//! rho-scaled relevances determining the assignment.
+//!
+//! This test replays the *mechanics* of the figure: a weight is sent to
+//! the zero cluster because it is irrelevant (grid cell D2 in the paper),
+//! another because of the entropy constraint (C3), while a small but
+//! relevant weight is re-added (regrowth).
+
+use ecqx::quant::{assign_ref, assignment_entropy, Codebook};
+
+#[test]
+fn fig5_toy_iteration() {
+    // 16 weights roughly matching the figure's magnitudes; centroid step
+    // ~1.36 like the figure's w+ = 1.36.
+    let step = 1.36f32;
+    let cb = Codebook::symmetric(2, step); // centroids {0, +1.36, -1.36}
+    #[rustfmt::skip]
+    let w = [
+        1.30f32, -0.12,  0.05,  1.10,
+       -1.28,    0.70, -0.68,  0.02,
+        0.64,   -1.50,  0.08, -0.60,
+        0.55,    0.01, -1.45,  0.66,
+    ];
+    let ones = [1.0f32; 16];
+    let mask = [1.0f32; 16];
+
+    // (a) Plain nearest neighbour (lambda = 0): |w| < 0.68 goes to zero.
+    let nn = assign_ref(&w, &ones, &mask, &cb, 0.0);
+    assert_eq!(nn.idx[0], 1); // 1.30 -> +
+    assert_eq!(nn.idx[4], 2); // -1.28 -> -
+    assert_eq!(nn.idx[2], 0); // 0.05 -> 0
+    let nn_sparsity = nn.sparsity(16);
+
+    // (b) Entropy constraint pulls borderline weights (|w| ~ 0.7) into the
+    // popular zero cluster — the C3 mechanism.
+    let lam = 0.8;
+    let ecq = assign_ref(&w, &ones, &mask, &cb, lam);
+    assert!(ecq.sparsity(16) > nn_sparsity, "entropy must add sparsity");
+    // 0.70 was nearest to + but flips to zero under the constraint
+    let i070 = 5;
+    assert_eq!(nn.idx[i070], 1);
+    assert_eq!(ecq.idx[i070], 0);
+
+    // (c) Relevances: protect the relevant 0.70 (factor >> 1), prune an
+    // irrelevant 1.10 (factor ~ 0) — the D2 mechanism.
+    let mut rel = [1.0f32; 16];
+    rel[i070] = 8.0; // highly relevant -> regrowth
+    rel[3] = 0.02; // irrelevant despite |w| = 1.10
+    let ecqx = assign_ref(&w, &rel, &mask, &cb, lam);
+    assert_eq!(ecqx.idx[i070], 1, "relevant weight must be re-added");
+    assert_eq!(ecqx.idx[3], 0, "irrelevant weight must be pruned");
+
+    // (d) Entropy of the rendered assignment stays below log2(3): the
+    // low-rate representation the Lagrange term optimizes for.
+    let h = assignment_entropy(&ecqx.counts);
+    assert!(h < 1.585, "entropy {h} must be below log2(3)");
+    assert!(h > 0.0);
+
+    // (e) The assignment is exactly reproducible (Fig. 5 is deterministic).
+    let again = assign_ref(&w, &rel, &mask, &cb, lam);
+    assert_eq!(again.idx, ecqx.idx);
+}
+
+#[test]
+fn fig5_candidate_grid() {
+    // Step 7: different (lambda, rho-intensity) settings render different
+    // assignment candidates — the candidate grid at the top left of Fig. 5.
+    let mut rng = ecqx::util::Rng::new(55);
+    let w: Vec<f32> = (0..256).map(|_| rng.normal_f32(0.0, 0.6)).collect();
+    let cb = Codebook::fit(&w, 2);
+    let mask = vec![1.0f32; 256];
+    let mut candidates = std::collections::BTreeSet::new();
+    for lam in [0.0f32, 0.2, 0.8] {
+        for rel_strength in [0.5f32, 1.0, 2.0] {
+            let r: Vec<f32> = w
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i % 3 == 0 { rel_strength } else { 1.0 })
+                .collect();
+            let a = assign_ref(&w, &r, &mask, &cb, lam);
+            candidates.insert(
+                a.idx.iter().map(|&i| i as u8).collect::<Vec<u8>>(),
+            );
+        }
+    }
+    assert!(
+        candidates.len() >= 4,
+        "expected a diverse candidate grid, got {}",
+        candidates.len()
+    );
+}

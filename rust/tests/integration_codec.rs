@@ -1,0 +1,70 @@
+//! Cross-module integration: quantize -> encode -> container -> decode ->
+//! identical model; codec family ordering on realistic weight tensors.
+
+use ecqx::codec;
+use ecqx::quant::{assign_ref, Codebook};
+use ecqx::tensor::TensorI32;
+use ecqx::util::Rng;
+
+fn realistic_assignment(n: usize, bits: u32, lam: f32, seed: u64) -> (TensorI32, Codebook) {
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.08)).collect();
+    let cb = Codebook::fit(&w, bits);
+    let r = vec![1.0f32; n];
+    let m = vec![1.0f32; n];
+    let a = assign_ref(&w, &r, &m, &cb, lam);
+    (TensorI32::new(vec![n / 64, 64], a.idx), cb)
+}
+
+#[test]
+fn encode_decode_identity_across_bitwidths() {
+    for bits in 2..=5u32 {
+        let (idx, cb) = realistic_assignment(4096, bits, 2e-4, bits as u64);
+        let enc = codec::encode_tensor(&idx, &cb);
+        let dec = codec::decode_tensor(&enc);
+        assert_eq!(dec.data, idx.data, "bits={bits}");
+        assert_eq!(dec.shape, idx.shape);
+    }
+}
+
+#[test]
+fn cabac_wins_on_entropy_constrained_tensors() {
+    // An entropy-constrained assignment is exactly the source CABAC is
+    // built for: it must beat bit-packing and stay within the codec family
+    // ordering the paper's compressibility claims rely on.
+    let (idx, _cb) = realistic_assignment(65536, 4, 1e-3, 9);
+    let cmp = codec::compare_codecs(&idx, 4);
+    assert!(cmp.cabac < cmp.packed, "{cmp:?}");
+    assert!(cmp.cabac < cmp.fp32 / 10, "{cmp:?}");
+    assert!(cmp.cabac <= cmp.huffman, "{cmp:?}");
+    assert!(cmp.cabac <= cmp.deflate, "{cmp:?}");
+}
+
+#[test]
+fn compression_ratio_tracks_lambda() {
+    // Higher lambda -> sparser assignment -> smaller bitstream (Fig. 9/10
+    // mechanism). Verify the monotone chain end to end on one tensor.
+    let mut last = usize::MAX;
+    for &lam in &[0.0f32, 2e-4, 1e-3, 4e-3] {
+        let (idx, cb) = realistic_assignment(32768, 4, lam, 4);
+        let enc = codec::encode_tensor(&idx, &cb);
+        assert!(
+            enc.payload.len() <= last,
+            "payload grew at lam={lam}: {} > {last}",
+            enc.payload.len()
+        );
+        last = enc.payload.len();
+    }
+    assert!(last < 32768 * 4 / 10, "4-bit sparse should be <10% of fp32");
+}
+
+#[test]
+fn rle_and_csr_agree_on_nnz_scaling() {
+    let (idx_lo, _) = realistic_assignment(16384, 4, 0.0, 5);
+    let (idx_hi, _) = realistic_assignment(16384, 4, 4e-3, 5);
+    let lo = codec::compare_codecs(&idx_lo, 4);
+    let hi = codec::compare_codecs(&idx_hi, 4);
+    assert!(hi.rle < lo.rle);
+    assert!(hi.csr < lo.csr);
+    assert!(hi.cabac < lo.cabac);
+}

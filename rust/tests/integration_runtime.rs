@@ -1,0 +1,254 @@
+//! Integration tests over the PJRT runtime + HLO artifacts.
+//!
+//! These tests need `artifacts/` (run `make artifacts` first); they verify
+//! that the lowered L1/L2 computations agree with the independent pure-rust
+//! reference implementations — the three-way cross-check of DESIGN.md.
+
+use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
+use ecqx::data::{Batch, DataLoader};
+use ecqx::lrp::{DenseLayer, Mlp};
+use ecqx::nn::ModelState;
+use ecqx::quant::{assign_ref, Codebook};
+use ecqx::runtime::Engine;
+use ecqx::tensor::{Tensor, Value};
+use ecqx::util::Rng;
+
+fn engine() -> Engine {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts`"
+    );
+    Engine::new(&dir).unwrap()
+}
+
+/// assign_<bucket> artifact (Pallas kernel) vs the pure-rust reference.
+#[test]
+fn assign_artifact_matches_rust_reference() {
+    let eng = engine();
+    let mut rng = Rng::new(101);
+    for &(n, bits, lam) in
+        &[(700usize, 2u32, 0.0f32), (1024, 4, 1e-4), (5000, 4, 5e-4), (9000, 5, 1e-3)]
+    {
+        let bucket = eng.manifest.bucket_for(n).unwrap();
+        let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let r: Vec<f32> = (0..n).map(|_| rng.range(0.1, 3.0)).collect();
+        let cb = Codebook::fit(&w, bits);
+        // padded inputs exactly as the coordinator builds them
+        let mut wp = w.clone();
+        wp.resize(bucket, 0.0);
+        let mut rp = r.clone();
+        rp.resize(bucket, 1.0);
+        let mut mask = vec![1.0f32; n];
+        mask.resize(bucket, 0.0);
+        let outs = eng
+            .call(
+                &format!("assign_{bucket}"),
+                &[
+                    Value::F32(Tensor::new(vec![bucket], wp.clone())),
+                    Value::F32(Tensor::new(vec![bucket], rp.clone())),
+                    Value::F32(Tensor::new(vec![bucket], mask.clone())),
+                    Value::F32(Tensor::new(vec![32], cb.values.clone())),
+                    Value::F32(Tensor::new(vec![32], cb.valid.clone())),
+                    Value::F32(Tensor::scalar(lam)),
+                ],
+            )
+            .unwrap();
+        let reference = assign_ref(&wp, &rp, &mask, &cb, lam);
+        let idx_art = &outs[0].as_i32().data;
+        let mismatches = idx_art
+            .iter()
+            .zip(reference.idx.iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        // ties at cost boundaries may break differently in f32; allow a
+        // vanishing fraction
+        assert!(
+            mismatches <= n / 1000 + 1,
+            "n={n} bits={bits} lam={lam}: {mismatches} mismatches"
+        );
+        let qw_art = &outs[1].as_f32().data;
+        for i in 0..n {
+            if idx_art[i] == reference.idx[i] {
+                assert!((qw_art[i] - reference.qw[i]).abs() < 1e-6);
+            }
+        }
+    }
+}
+
+/// <mlp_gsc>_lrp artifact vs the independent pure-rust epsilon-LRP.
+#[test]
+fn lrp_artifact_matches_rust_reference() {
+    let eng = engine();
+    let spec = eng.manifest.model("mlp_gsc").unwrap().clone();
+    let state = ModelState::init(&spec, 7);
+    // build the rust reference MLP from the same weights
+    let dims = [360usize, 512, 512, 256, 256, 128, 128, 12];
+    let layers: Vec<DenseLayer> = (0..7)
+        .map(|i| {
+            DenseLayer::new(
+                dims[i],
+                dims[i + 1],
+                state.params[&format!("w{i}")].data.clone(),
+                state.params[&format!("b{i}")].data.clone(),
+            )
+        })
+        .collect();
+    let mlp = Mlp { layers };
+
+    let ds = ecqx::data::gsc::GscDataset::new(spec.batch, 3, false);
+    let dl = DataLoader::new(&ds, spec.batch, false, 0);
+    let batch = dl.epoch(0).next().unwrap();
+
+    let art = eng.manifest.artifact("mlp_gsc_lrp").unwrap().clone();
+    let scalars = Scalars { eqw: 1.0, ..Default::default() };
+    let inputs = bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &scalars).unwrap();
+    let outs = eng.call_named(&art.name, &inputs).unwrap();
+
+    let rw_ref = mlp.lrp(&batch.x, &batch.y, spec.batch, true);
+    for (i, rw) in rw_ref.iter().enumerate() {
+        let art_rw = outs[&format!("r_w{i}")].as_f32();
+        assert_eq!(art_rw.numel(), rw.len());
+        // compare relative to the layer's relevance scale
+        let scale = rw.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-6);
+        let mut max_rel = 0.0f32;
+        for (a, b) in art_rw.data.iter().zip(rw.iter()) {
+            max_rel = max_rel.max((a - b).abs() / scale);
+        }
+        assert!(max_rel < 2e-2, "layer w{i}: max relative diff {max_rel}");
+    }
+}
+
+/// fp_train artifact at lr=0 must return parameters unchanged;
+/// ste_train must return the FP background unchanged at lr=0.
+#[test]
+fn train_steps_are_identity_at_zero_lr() {
+    let eng = engine();
+    let spec = eng.manifest.model("mlp_gsc").unwrap().clone();
+    let mut state = ModelState::init(&spec, 11);
+    // quantize so the q_ slots exist
+    for name in state.qnames() {
+        let w = state.params[&name].clone();
+        let cb = Codebook::fit(&w.data, 4);
+        let r = vec![1.0; w.numel()];
+        let m = vec![1.0; w.numel()];
+        let a = assign_ref(&w.data, &r, &m, &cb, 0.0);
+        state.qlayers.insert(
+            name,
+            ecqx::nn::QLayer {
+                qw: Tensor::new(w.shape.clone(), a.qw),
+                idx: ecqx::tensor::TensorI32::new(w.shape.clone(), a.idx),
+                codebook: cb,
+            },
+        );
+    }
+    let ds = ecqx::data::gsc::GscDataset::new(spec.batch, 5, true);
+    let dl = DataLoader::new(&ds, spec.batch, false, 0);
+    let batch: Batch = dl.epoch(0).next().unwrap();
+    let scalars = Scalars { t: 1.0, lr: 0.0, gs: 1.0, ..Default::default() };
+    for art_name in ["mlp_gsc_fp_train", "mlp_gsc_ste_train"] {
+        let art = eng.manifest.artifact(art_name).unwrap().clone();
+        let inputs =
+            bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &scalars).unwrap();
+        let outs = eng.call_named(&art.name, &inputs).unwrap();
+        for name in state.pnames() {
+            let before = &state.params[&name];
+            let after = outs[&format!("p_{name}")].as_f32();
+            for (a, b) in before.data.iter().zip(after.data.iter()) {
+                assert_eq!(a, b, "{art_name} changed {name} at lr=0");
+            }
+        }
+        assert!(outs["loss"].as_f32().as_scalar() > 0.0);
+    }
+}
+
+/// Quantized gather-eval (integer indices + codebook through the Pallas
+/// gather kernel) must agree with the dequantized f32 eval.
+#[test]
+fn gather_eval_matches_dense_eval() {
+    let eng = engine();
+    let spec = eng.manifest.model("mlp_gsc").unwrap().clone();
+    let mut state = ModelState::init(&spec, 13);
+    for name in state.qnames() {
+        let w = state.params[&name].clone();
+        let cb = Codebook::fit(&w.data, 4);
+        let r = vec![1.0; w.numel()];
+        let m = vec![1.0; w.numel()];
+        let a = assign_ref(&w.data, &r, &m, &cb, 1e-4);
+        state.qlayers.insert(
+            name,
+            ecqx::nn::QLayer {
+                qw: Tensor::new(w.shape.clone(), a.qw),
+                idx: ecqx::tensor::TensorI32::new(w.shape.clone(), a.idx),
+                codebook: cb,
+            },
+        );
+    }
+    let ds = ecqx::data::gsc::GscDataset::new(spec.batch, 5, false);
+    let dl = DataLoader::new(&ds, spec.batch, false, 0);
+    let batch = dl.epoch(0).next().unwrap();
+    let scalars = Scalars::default();
+
+    let art_f = eng.manifest.artifact("mlp_gsc_eval").unwrap().clone();
+    let inp_f =
+        bind_inputs(&art_f, &state, ParamSource::Quantized, Some(&batch), &scalars).unwrap();
+    let out_f = eng.call_named(&art_f.name, &inp_f).unwrap();
+
+    let art_q = eng.manifest.artifact("mlp_gsc_eval_q").unwrap().clone();
+    let inp_q =
+        bind_inputs(&art_q, &state, ParamSource::Quantized, Some(&batch), &scalars).unwrap();
+    let out_q = eng.call_named(&art_q.name, &inp_q).unwrap();
+
+    let lf = out_f["loss"].as_f32().as_scalar();
+    let lq = out_q["loss"].as_f32().as_scalar();
+    assert!((lf - lq).abs() < 1e-4, "loss {lf} vs {lq}");
+    assert_eq!(
+        out_f["correct"].as_f32().as_scalar(),
+        out_q["correct"].as_f32().as_scalar()
+    );
+}
+
+/// End-to-end mini QAT run: accuracy must stay well above chance and
+/// sparsity must be non-trivial (the smoke version of the e2e example).
+#[test]
+fn mini_qat_run_recovers() {
+    let eng = engine();
+    let spec = eng.manifest.model("mlp_gsc").unwrap().clone();
+    use ecqx::coordinator::{AssignConfig, Method, QatConfig, QatTrainer};
+    use ecqx::data::gsc::GscDataset;
+
+    // tiny dataset + brief pretrain so the test runs in seconds
+    let train = GscDataset::new(1024, 21, true);
+    let val = GscDataset::new(512, 21, false);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 1);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 1);
+    let mut state = ModelState::init(&spec, 21);
+    let pre = ecqx::coordinator::trainer::Pretrainer {
+        lr: 1e-3,
+        verbose: false,
+        ..Default::default()
+    };
+    pre.run(&eng, &mut state, &train_dl, 4).unwrap();
+
+    let cfg = QatConfig {
+        assign: AssignConfig {
+            method: Method::Ecqx,
+            bits: 4,
+            lambda: 4.0,
+            p: 0.2,
+            ..Default::default()
+        },
+        epochs: 1,
+        lr: 4e-4,
+        verbose: false,
+        ..Default::default()
+    };
+    let mut qstate = state;
+    let out = QatTrainer::new(cfg).run(&eng, &mut qstate, &train_dl, &val_dl).unwrap();
+    assert!(out.final_sparsity > 0.15, "sparsity {}", out.final_sparsity);
+    assert!(
+        out.epochs.last().unwrap().val_acc > 0.4,
+        "val acc {}",
+        out.epochs.last().unwrap().val_acc
+    );
+}
