@@ -1,0 +1,62 @@
+//! Batched evaluation: quantize one pre-trained model with ECQ and ECQ^x,
+//! then score both states in a single pass over the validation loader via
+//! `trainer::evaluate_many` — each batch is materialized once and fanned
+//! across the states through `Engine::call_batch`.
+//!
+//! Run: `cargo run --release --example batched_eval` (after `make artifacts`)
+
+use ecqx::coordinator::binder::ParamSource;
+use ecqx::coordinator::trainer::{evaluate_many, QatTrainer};
+use ecqx::coordinator::{AssignConfig, Method, QatConfig};
+use ecqx::data::DataLoader;
+use ecqx::exp;
+use ecqx::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let engine = exp::engine()?;
+    let model = exp::MLP_GSC;
+    let pre = exp::pretrained(&engine, &model, 17)?;
+    let spec = engine.manifest.model(model.name)?.clone();
+    let (train, val) = exp::datasets(&model, 17);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 17);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 17);
+
+    // one QAT run per method from the same snapshot
+    let mut states = Vec::new();
+    for method in [Method::Ecq, Method::Ecqx] {
+        let mut state = ecqx::nn::ModelState {
+            spec: pre.state.spec.clone(),
+            params: pre.state.params.clone(),
+            m: pre.state.m.clone(),
+            v: pre.state.v.clone(),
+            t: 0,
+            qlayers: Default::default(),
+        };
+        let cfg = QatConfig {
+            assign: AssignConfig { method, bits: 4, lambda: 8.0, p: 0.2, ..Default::default() },
+            epochs: 1,
+            lr: model.qat_lr * 4.0,
+            verbose: false,
+            ..Default::default()
+        };
+        QatTrainer::new(cfg).run(&engine, &mut state, &train_dl, &val_dl)?;
+        states.push(state);
+    }
+
+    // one validation pass scoring every state (vs one pass per state)
+    let t = Timer::start();
+    let refs: Vec<&ecqx::nn::ModelState> = states.iter().collect();
+    let results = evaluate_many(&engine, &refs, &val_dl, ParamSource::Quantized, 2)?;
+    println!("batched eval of {} states in {:.2}s:", refs.len(), t.elapsed_s());
+    for (method, ev) in [Method::Ecq, Method::Ecqx].iter().zip(&results) {
+        println!(
+            "  {:<5} acc={:.4} (baseline {:.4}, drop {:+.4}) loss={:.4}",
+            method.as_str(),
+            ev.accuracy,
+            pre.baseline_acc,
+            ev.accuracy - pre.baseline_acc,
+            ev.loss
+        );
+    }
+    Ok(())
+}

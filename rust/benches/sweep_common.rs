@@ -2,10 +2,14 @@
 //! lambda, p) QAT trials from the cached pre-trained snapshot and prints
 //! working-point rows in the paper's format.
 //!
-//! Bench trials run at CPU scale (1 QAT epoch, bench lambda grids);
-//! paper-scale grids are available via the `ecqx sweep --paper-scale` CLI.
+//! Trials go through the `coordinator::campaign` worker pool; rows are
+//! printed in grid order after completion, so the output is identical for
+//! any job count. Bench trials run at CPU scale (1 QAT epoch, bench
+//! lambda grids); paper-scale grids are available via the CLI
+//! (`ecqx sweep --paper-scale [--jobs N]`).
 
 use ecqx::bench::series_row;
+use ecqx::coordinator::campaign::{self, CampaignOptions, TrialSpec};
 use ecqx::coordinator::sweep::{SweepConfig, SweepRunner};
 use ecqx::coordinator::{AssignConfig, Method, QatConfig};
 use ecqx::data::DataLoader;
@@ -20,7 +24,9 @@ pub struct Trial {
     pub p: f64,
 }
 
-/// Run a set of trials on one model, printing a row per working point.
+/// Run a set of trials on one model serially, printing a row per working
+/// point (the classic figure-bench driver).
+#[allow(dead_code)]
 pub fn run_trials(
     engine: &Engine,
     model: &exp::ModelExp,
@@ -28,44 +34,75 @@ pub fn run_trials(
     trials: &[Trial],
     epochs: usize,
 ) -> anyhow::Result<Vec<WorkingPoint>> {
+    run_trials_jobs(engine, model, series, trials, epochs, 1)
+}
+
+/// Parallel variant: fan the same trials over `jobs` campaign workers
+/// sharing one engine. Rows print in grid order after the campaign
+/// drains, so stdout (and the returned points) are identical to the
+/// serial driver for any `jobs`.
+#[allow(dead_code)]
+pub fn run_trials_jobs(
+    engine: &Engine,
+    model: &exp::ModelExp,
+    series: &str,
+    trials: &[Trial],
+    epochs: usize,
+    jobs: usize,
+) -> anyhow::Result<Vec<WorkingPoint>> {
     let pre = exp::pretrained(engine, model, 17)?;
     let spec = engine.manifest.model(model.name)?.clone();
     let (train, val) = exp::datasets(model, 17);
     let train_dl = DataLoader::new(&train, spec.batch, true, 17);
     let val_dl = DataLoader::new(&val, spec.batch, false, 17);
-    let baseline = pre.baseline_acc;
     let runner = SweepRunner::new(engine, pre.state);
-    let mut points = Vec::new();
-    for t in trials {
-        let cfg = SweepConfig {
-            model: model.name.to_string(),
+    // config template: per-trial method/bits/lambda/p come from the specs
+    let cfg = SweepConfig {
+        model: model.name.to_string(),
+        method: Method::Ecqx,
+        bits: 4,
+        lambdas: vec![],
+        p: 0.3,
+        qat: QatConfig {
+            assign: AssignConfig::default(),
+            epochs,
+            lr: model.qat_lr * 4.0,
+            verbose: false,
+            ..Default::default()
+        },
+        baseline_acc: pre.baseline_acc,
+        seed: 17,
+    };
+    let specs: Vec<TrialSpec> = trials
+        .iter()
+        .enumerate()
+        .map(|(id, t)| TrialSpec {
+            id,
             method: t.method,
             bits: t.bits,
-            lambdas: vec![t.lambda],
+            lambda: t.lambda,
             p: t.p,
-            qat: QatConfig {
-                assign: AssignConfig {
-                    method: t.method,
-                    bits: t.bits,
-                    lambda: t.lambda,
-                    p: t.p,
-                    ..Default::default()
-                },
-                epochs,
-                lr: model.qat_lr * 4.0,
-                verbose: false,
-                ..Default::default()
-            },
-            baseline_acc: baseline,
-        };
-        let (wp, _) = runner.run_trial(&cfg, t.lambda, &train_dl, &val_dl)?;
+        })
+        .collect();
+    let opts = CampaignOptions { jobs, seed: cfg.seed, ..Default::default() };
+    let points = campaign::run(
+        &specs,
+        &opts,
+        |t, _seed| {
+            runner
+                .run_trial_spec(&cfg, t, &train_dl, &val_dl)
+                .map(|(wp, _)| wp)
+        },
+        |_| {},
+    )?;
+    for wp in &points {
         series_row(
             series,
             &[
-                ("method", t.method.as_str().into()),
-                ("bw", t.bits.to_string()),
-                ("lambda", format!("{:.2}", t.lambda)),
-                ("p", format!("{:.2}", t.p)),
+                ("method", wp.method.clone()),
+                ("bw", wp.bits.to_string()),
+                ("lambda", format!("{:.2}", wp.lambda)),
+                ("p", format!("{:.2}", wp.p)),
                 ("acc", format!("{:.4}", wp.accuracy)),
                 ("drop", format!("{:+.4}", wp.acc_drop)),
                 ("sparsity", format!("{:.4}", wp.sparsity)),
@@ -73,7 +110,6 @@ pub fn run_trials(
                 ("CR", format!("{:.1}", wp.compression_ratio)),
             ],
         );
-        points.push(wp);
     }
     Ok(points)
 }

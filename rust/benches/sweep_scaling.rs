@@ -1,0 +1,50 @@
+//! §Perf — parallel sweep orchestrator scaling: the same 4-trial lambda
+//! grid run at 1 job and at 4 jobs must produce bitwise-identical rows,
+//! with the 4-job campaign ≥ 2x faster on a 4-core host (trials are
+//! independent; the engine's sharded executable cache keeps the workers
+//! on uncontended read locks).
+
+#[path = "sweep_common.rs"]
+mod sweep_common;
+
+use ecqx::bench::{figure_header, series_row};
+use ecqx::coordinator::Method;
+use ecqx::exp;
+use ecqx::util::Timer;
+use sweep_common::{run_trials_jobs, Trial};
+
+fn main() -> anyhow::Result<()> {
+    figure_header("Perf.sweep", "parallel campaign: 4-trial grid, 1 vs 4 jobs");
+    let engine = exp::engine()?;
+    let trials: Vec<Trial> = [0.0f32, 0.02, 0.08, 0.25]
+        .iter()
+        .map(|&lambda| Trial { method: Method::Ecqx, bits: 4, lambda, p: 0.3 })
+        .collect();
+
+    // warmup: pretrained-baseline cache + artifact compiles land outside
+    // the timed sections
+    run_trials_jobs(&engine, &exp::MLP_GSC, "warmup", &trials[..1], 1, 1)?;
+
+    let t = Timer::start();
+    let serial = run_trials_jobs(&engine, &exp::MLP_GSC, "sweep-1job", &trials, 1, 1)?;
+    let serial_s = t.elapsed_s();
+
+    let t = Timer::start();
+    let par = run_trials_jobs(&engine, &exp::MLP_GSC, "sweep-4job", &trials, 1, 4)?;
+    let par_s = t.elapsed_s();
+
+    let identical = serial.len() == par.len()
+        && serial.iter().zip(&par).all(|(a, b)| a.to_csv() == b.to_csv());
+    series_row(
+        "par-scaling",
+        &[
+            ("trials", trials.len().to_string()),
+            ("serial_s", format!("{serial_s:.2}")),
+            ("par4_s", format!("{par_s:.2}")),
+            ("speedup", format!("{:.2}", serial_s / par_s.max(1e-9))),
+            ("identical_rows", identical.to_string()),
+        ],
+    );
+    assert!(identical, "parallel rows must be bitwise identical to serial");
+    Ok(())
+}

@@ -20,6 +20,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Paper-style display name ("ECQ" / "ECQx").
     pub fn as_str(&self) -> &'static str {
         match self {
             Method::Ecq => "ECQ",
@@ -28,8 +29,10 @@ impl Method {
     }
 }
 
+/// Configuration of the (re-)assignment step.
 #[derive(Clone, Debug)]
 pub struct AssignConfig {
+    /// ECQ vs ECQx
     pub method: Method,
     pub bits: u32,
     /// global entropy-constraint intensity (per-layer scaled)
@@ -70,6 +73,7 @@ pub struct Assigner {
 }
 
 impl Assigner {
+    /// Fresh assigner over the quantized layers of `state`.
     pub fn new(cfg: AssignConfig, state: &ModelState) -> Self {
         let mut rel = BTreeMap::new();
         let mut beta = BTreeMap::new();

@@ -1,12 +1,12 @@
 //! Binds model state + batches to artifact signatures by name convention.
 //!
 //! Input-name conventions (set by python/compile/aot.py):
-//!   p_<param>   — parameter tensor (FP or quantized, caller's choice)
-//!   q_<param>   — quantized copy of a quantize=1 parameter
-//!   m_/v_<p>    — Adam moments
-//!   idx_/cb_<p> — centroid indices / codebook (gather-eval)
-//!   x, y        — batch features / labels
-//!   t, lr, gs, eqw, abits, lam — scalars
+//! * `p_<param>` — parameter tensor (FP or quantized, caller's choice)
+//! * `q_<param>` — quantized copy of a quantize=1 parameter
+//! * `m_/v_<p>` — Adam moments
+//! * `idx_/cb_<p>` — centroid indices / codebook (gather-eval)
+//! * `x`, `y` — batch features / labels
+//! * `t`, `lr`, `gs`, `eqw`, `abits`, `lam` — scalars
 
 use std::collections::HashMap;
 

@@ -1,0 +1,368 @@
+//! Parallel sweep campaigns: fan a lambda × p × bit-width (× method) grid
+//! over a scoped-thread worker pool with deterministic per-trial seeding,
+//! bounded in-flight trials, and a progress channel that streams
+//! [`WorkingPoint`]s as they finish.
+//!
+//! The runner is generic over the trial function, so the same machinery
+//! drives both the engine-backed QAT trials of [`super::sweep`] and the
+//! synthetic trials of the determinism tests. Two invariants make results
+//! independent of the job count:
+//!
+//! 1. every trial's inputs are a pure function of `(campaign seed,
+//!    trial id)` — see [`trial_seed`] — never of execution order, and
+//! 2. results are collected into grid order (by trial position), so the
+//!    returned rows are bitwise identical for any `jobs`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Context as _, Result};
+
+use super::assign::Method;
+use crate::metrics::WorkingPoint;
+use crate::util::Rng;
+
+/// One trial of a campaign grid: a full QAT run at one
+/// (method, bits, lambda, p) working point.
+#[derive(Clone, Debug)]
+pub struct TrialSpec {
+    /// position in the grid; must be unique within one campaign
+    pub id: usize,
+    /// ECQ vs ECQx
+    pub method: Method,
+    /// quantization bit width
+    pub bits: u32,
+    /// entropy-constraint intensity
+    pub lambda: f32,
+    /// target-sparsity hyperparameter
+    pub p: f64,
+}
+
+/// The lambda × p × bit-width (× method) grid of a campaign.
+#[derive(Clone, Debug)]
+pub struct Grid {
+    /// methods to sweep (outermost loop)
+    pub methods: Vec<Method>,
+    /// bit widths to sweep
+    pub bits: Vec<u32>,
+    /// target sparsities to sweep
+    pub ps: Vec<f64>,
+    /// lambda grid (innermost loop, matching the classic lambda sweep)
+    pub lambdas: Vec<f32>,
+}
+
+impl Grid {
+    /// Single-method lambda sweep (the classic Figs. 6–10 campaign shape).
+    pub fn lambda_sweep(method: Method, bits: u32, lambdas: &[f32], p: f64) -> Grid {
+        Grid {
+            methods: vec![method],
+            bits: vec![bits],
+            ps: vec![p],
+            lambdas: lambdas.to_vec(),
+        }
+    }
+
+    /// Materialize the trials in deterministic (method, bits, p, lambda)
+    /// order; ids are grid positions.
+    pub fn trials(&self) -> Vec<TrialSpec> {
+        let mut out = Vec::with_capacity(self.len());
+        for &method in &self.methods {
+            for &bits in &self.bits {
+                for &p in &self.ps {
+                    for &lambda in &self.lambdas {
+                        out.push(TrialSpec { id: out.len(), method, bits, lambda, p });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of trials in the grid.
+    pub fn len(&self) -> usize {
+        self.methods.len() * self.bits.len() * self.ps.len() * self.lambdas.len()
+    }
+
+    /// True when any axis is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Options controlling the campaign worker pool.
+#[derive(Clone, Copy, Debug)]
+pub struct CampaignOptions {
+    /// worker threads; 1 = serial. Results are identical regardless.
+    pub jobs: usize,
+    /// cap on concurrently running trials (bounds peak memory — every
+    /// trial holds a model-state clone). Each worker runs one trial at a
+    /// time, so this simply clamps the effective worker count; 0 = no
+    /// extra bound beyond `jobs`
+    pub max_in_flight: usize,
+    /// campaign-level seed; per-trial seeds derive from it and the trial id
+    pub seed: u64,
+}
+
+impl Default for CampaignOptions {
+    fn default() -> Self {
+        CampaignOptions { jobs: 1, max_in_flight: 0, seed: 17 }
+    }
+}
+
+/// Progress events streamed (on the caller's thread) while a campaign runs.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// a worker picked up a trial
+    Started {
+        /// trial id
+        id: usize,
+    },
+    /// a trial finished; its row is available immediately
+    Finished {
+        /// trial id
+        id: usize,
+        /// the finished working point
+        point: WorkingPoint,
+        /// trial wall-clock seconds
+        wall_s: f64,
+    },
+    /// a trial failed (the campaign still drains, then errors)
+    Failed {
+        /// trial id
+        id: usize,
+        /// rendered error chain
+        error: String,
+    },
+}
+
+fn trial_context(t: &TrialSpec) -> String {
+    format!(
+        "campaign trial {} ({} {}bit λ={} p={})",
+        t.id,
+        t.method.as_str(),
+        t.bits,
+        t.lambda,
+        t.p
+    )
+}
+
+/// Deterministic per-trial RNG seed: a stateless SplitMix-style mix of the
+/// campaign seed and the trial id, so trial `k` sees the same stream no
+/// matter which worker runs it or in what order.
+pub fn trial_seed(campaign_seed: u64, trial_id: u64) -> u64 {
+    let mut r = Rng::new(campaign_seed ^ trial_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    r.next_u64()
+}
+
+/// Run every trial through `run_trial`, fanning out over `opts.jobs`
+/// scoped worker threads.
+///
+/// `run_trial` receives the trial spec and its [`trial_seed`]-derived seed;
+/// it must be a pure function of those (plus shared immutable state such as
+/// the engine and pre-trained snapshot) for the determinism guarantee to
+/// hold. `on_event` is invoked on the calling thread, in completion order,
+/// as trials start and finish — use it to stream progress. The returned
+/// rows are in grid order (trial position), identical for any job count.
+///
+/// On trial failure the campaign fails fast: workers stop claiming new
+/// trials, already-running trials drain, and the failed trial's error is
+/// returned (lowest grid position first — claims are handed out in grid
+/// order, so every position before a failure has a result and the error
+/// choice is deterministic).
+pub fn run<F>(
+    trials: &[TrialSpec],
+    opts: &CampaignOptions,
+    run_trial: F,
+    mut on_event: impl FnMut(&Event),
+) -> Result<Vec<WorkingPoint>>
+where
+    F: Fn(&TrialSpec, u64) -> Result<WorkingPoint> + Sync,
+{
+    let n = trials.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let pos_of: HashMap<usize, usize> =
+        trials.iter().enumerate().map(|(pos, t)| (t.id, pos)).collect();
+    if pos_of.len() != n {
+        anyhow::bail!("campaign trial ids must be unique");
+    }
+    let mut jobs = opts.jobs.max(1).min(n);
+    if opts.max_in_flight != 0 {
+        jobs = jobs.min(opts.max_in_flight.max(1));
+    }
+    let seed = opts.seed;
+    if jobs == 1 {
+        // strictly serial: run on the caller's thread (no worker, so
+        // trial output and streamed events stay in order) and fail fast
+        let mut points = Vec::with_capacity(n);
+        for t in trials {
+            on_event(&Event::Started { id: t.id });
+            let t0 = std::time::Instant::now();
+            match run_trial(t, trial_seed(seed, t.id as u64)) {
+                Ok(point) => {
+                    on_event(&Event::Finished {
+                        id: t.id,
+                        point: point.clone(),
+                        wall_s: t0.elapsed().as_secs_f64(),
+                    });
+                    points.push(point);
+                }
+                Err(e) => {
+                    on_event(&Event::Failed { id: t.id, error: format!("{e:?}") });
+                    return Err(e).with_context(|| trial_context(t));
+                }
+            }
+        }
+        return Ok(points);
+    }
+    let next = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<Event>();
+    let mut slots: Vec<Option<Result<WorkingPoint>>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let next = &next;
+            let stop = &stop;
+            let run_trial = &run_trial;
+            s.spawn(move || loop {
+                // check stop BEFORE claiming: a claimed index must always
+                // run to an event, or the result prefix would have holes
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let t = &trials[i];
+                if tx.send(Event::Started { id: t.id }).is_err() {
+                    break;
+                }
+                let t0 = std::time::Instant::now();
+                let ev = match run_trial(t, trial_seed(seed, t.id as u64)) {
+                    Ok(point) => Event::Finished {
+                        id: t.id,
+                        point,
+                        wall_s: t0.elapsed().as_secs_f64(),
+                    },
+                    Err(e) => {
+                        // fail fast: no new claims; running trials drain
+                        stop.store(true, Ordering::Relaxed);
+                        Event::Failed { id: t.id, error: format!("{e:?}") }
+                    }
+                };
+                if tx.send(ev).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        // collector: stream events to the caller, file results by position
+        for ev in rx {
+            match &ev {
+                Event::Finished { id, point, .. } => {
+                    slots[pos_of[id]] = Some(Ok(point.clone()));
+                }
+                Event::Failed { id, error } => {
+                    slots[pos_of[id]] = Some(Err(anyhow!("{error}")));
+                }
+                Event::Started { .. } => {}
+            }
+            on_event(&ev);
+        }
+    });
+    // lowest-position error wins; a None slot is only legitimate when the
+    // campaign stopped early after a failure elsewhere, so errors are
+    // preferred over missing-result complaints
+    let mut points = Vec::with_capacity(n);
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    let mut first_missing: Option<usize> = None;
+    for (pos, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(Ok(p)) => points.push(p),
+            Some(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some((pos, e));
+                }
+            }
+            None => {
+                if first_missing.is_none() {
+                    first_missing = Some(pos);
+                }
+            }
+        }
+    }
+    if let Some((pos, e)) = first_err {
+        return Err(e).with_context(|| trial_context(&trials[pos]));
+    }
+    if let Some(pos) = first_missing {
+        anyhow::bail!("campaign trial {} never produced a result", trials[pos].id);
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_order_is_deterministic() {
+        let g = Grid {
+            methods: vec![Method::Ecq, Method::Ecqx],
+            bits: vec![2, 4],
+            ps: vec![0.15],
+            lambdas: vec![0.0, 0.1],
+        };
+        let trials = g.trials();
+        assert_eq!(trials.len(), g.len());
+        assert_eq!(trials.len(), 8);
+        assert!(!g.is_empty());
+        // ids are positions; lambda is the innermost axis
+        for (i, t) in trials.iter().enumerate() {
+            assert_eq!(t.id, i);
+        }
+        assert_eq!(trials[0].method, Method::Ecq);
+        assert_eq!((trials[0].lambda, trials[1].lambda), (0.0, 0.1));
+        assert_eq!((trials[0].bits, trials[2].bits), (2, 4));
+        assert_eq!(trials[4].method, Method::Ecqx);
+    }
+
+    #[test]
+    fn trial_seeds_are_stable_and_distinct() {
+        let seeds: Vec<u64> = (0..64).map(|i| trial_seed(17, i)).collect();
+        let again: Vec<u64> = (0..64).map(|i| trial_seed(17, i)).collect();
+        assert_eq!(seeds, again);
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "per-trial seeds must differ");
+        assert_ne!(trial_seed(17, 0), trial_seed(18, 0), "campaign seed matters");
+    }
+
+    #[test]
+    fn empty_grid_runs_to_empty() {
+        let points = run(
+            &[],
+            &CampaignOptions::default(),
+            |_, _| unreachable!(),
+            |_| {},
+        )
+        .unwrap();
+        assert!(points.is_empty());
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let t = TrialSpec { id: 0, method: Method::Ecq, bits: 4, lambda: 0.0, p: 0.3 };
+        let r = run(
+            &[t.clone(), t],
+            &CampaignOptions::default(),
+            |_, _| unreachable!(),
+            |_| {},
+        );
+        assert!(format!("{:?}", r.unwrap_err()).contains("unique"));
+    }
+}

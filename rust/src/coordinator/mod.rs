@@ -1,13 +1,15 @@
 //! The L3 coordinator: quantization-aware training (the ECQ^x loop of
-//! Fig. 5), hyperparameter sweep campaigns, candidate selection and
-//! reporting — the system that actually runs the paper's experiments.
+//! Fig. 5), parallel hyperparameter sweep campaigns, candidate selection
+//! and reporting — the system that actually runs the paper's experiments.
 
 pub mod assign;
 pub mod binder;
+pub mod campaign;
 pub mod sweep;
 pub mod trainer;
 
 pub use assign::{AssignConfig, Assigner, Method};
+pub use campaign::{CampaignOptions, Grid, TrialSpec};
 pub use sweep::{SweepConfig, SweepRunner};
 pub use trainer::{EvalResult, Pretrainer, QatConfig, QatTrainer};
 

@@ -1,13 +1,20 @@
 //! Sweep campaigns: lambda x p x bit-width grids producing the working
 //! points of Figs. 6-10 and Table 1, plus candidate selection (Fig. 5
 //! step 7).
+//!
+//! The grid fan-out itself lives in [`super::campaign`]; this module wires
+//! it to the engine-backed QAT trial: every trial clones the shared
+//! pre-trained snapshot, runs QAT at its grid point, and reports one
+//! [`WorkingPoint`]. Rows are identical for any `jobs` count (see the
+//! campaign module's determinism invariants).
 
 use anyhow::Result;
 
-use super::assign::{AssignConfig, Method};
+use super::assign::AssignConfig;
 use super::binder::ParamSource;
+use super::campaign::{self, CampaignOptions, Event, Grid, TrialSpec};
 use super::trainer::{evaluate, QatConfig, QatTrainer};
-use super::{compressed_size, compression_ratio};
+use super::{compressed_size, compression_ratio, Method};
 use crate::data::{DataLoader, Dataset};
 use crate::metrics::WorkingPoint;
 use crate::nn::ModelState;
@@ -16,24 +23,34 @@ use crate::runtime::Engine;
 /// One sweep configuration.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
+    /// model name (manifest key)
     pub model: String,
+    /// default method for the lambda grid
     pub method: Method,
+    /// default bit width for the lambda grid
     pub bits: u32,
+    /// lambda grid
     pub lambdas: Vec<f32>,
+    /// default target sparsity
     pub p: f64,
+    /// QAT configuration template (per-trial assign fields are overridden)
     pub qat: QatConfig,
     /// accuracy of the unquantized baseline (for the drop column)
     pub baseline_acc: f64,
+    /// campaign seed; per-trial seeds derive from it deterministically
+    pub seed: u64,
 }
 
 /// Runs sweeps from a shared pre-trained snapshot.
 pub struct SweepRunner<'e> {
+    /// shared execution engine (Sync; workers call it concurrently)
     pub engine: &'e Engine,
     /// pre-trained FP parameter snapshot (cloned into every trial)
     pub pretrained: ModelState,
 }
 
 impl<'e> SweepRunner<'e> {
+    /// New runner over `engine` from the `pretrained` snapshot.
     pub fn new(engine: &'e Engine, pretrained: ModelState) -> Self {
         SweepRunner { engine, pretrained }
     }
@@ -49,31 +66,34 @@ impl<'e> SweepRunner<'e> {
         }
     }
 
-    /// Run one (method, bits, lambda, p) trial; returns its working point.
-    pub fn run_trial<D: Dataset>(
+    /// Run one grid trial: QAT at `trial`'s (method, bits, lambda, p),
+    /// then a quantized validation pass; returns its working point and
+    /// final state. Pure in `(cfg, trial)` given the shared snapshot and
+    /// loaders, which is what makes parallel campaigns deterministic.
+    pub fn run_trial_spec<D: Dataset>(
         &self,
         cfg: &SweepConfig,
-        lambda: f32,
+        trial: &TrialSpec,
         train: &DataLoader<D>,
         val: &DataLoader<D>,
     ) -> Result<(WorkingPoint, ModelState)> {
         let mut state = self.fresh_state();
         let mut qat = cfg.qat.clone();
         qat.assign = AssignConfig {
-            method: cfg.method,
-            bits: cfg.bits,
-            lambda,
-            p: cfg.p,
+            method: trial.method,
+            bits: trial.bits,
+            lambda: trial.lambda,
+            p: trial.p,
             ..qat.assign
         };
         let trainer = QatTrainer::new(qat);
         let outcome = trainer.run(self.engine, &mut state, train, val)?;
         let ev = evaluate(self.engine, &state, val, ParamSource::Quantized)?;
         let wp = WorkingPoint {
-            method: cfg.method.as_str().to_string(),
-            bits: cfg.bits,
-            lambda,
-            p: cfg.p,
+            method: trial.method.as_str().to_string(),
+            bits: trial.bits,
+            lambda: trial.lambda,
+            p: trial.p,
             accuracy: ev.accuracy,
             acc_drop: ev.accuracy - cfg.baseline_acc,
             sparsity: outcome.final_sparsity,
@@ -83,34 +103,79 @@ impl<'e> SweepRunner<'e> {
         Ok((wp, state))
     }
 
-    /// Sweep the whole lambda grid; returns one working point per lambda.
+    /// Run one (method, bits, lambda, p) trial with the config's default
+    /// method/bits/p; returns its working point.
+    pub fn run_trial<D: Dataset>(
+        &self,
+        cfg: &SweepConfig,
+        lambda: f32,
+        train: &DataLoader<D>,
+        val: &DataLoader<D>,
+    ) -> Result<(WorkingPoint, ModelState)> {
+        let trial =
+            TrialSpec { id: 0, method: cfg.method, bits: cfg.bits, lambda, p: cfg.p };
+        self.run_trial_spec(cfg, &trial, train, val)
+    }
+
+    /// Sweep the whole lambda grid serially; one working point per lambda.
     pub fn run<D: Dataset>(
         &self,
         cfg: &SweepConfig,
         train: &DataLoader<D>,
         val: &DataLoader<D>,
     ) -> Result<Vec<WorkingPoint>> {
-        let mut points = Vec::with_capacity(cfg.lambdas.len());
-        for &lam in &cfg.lambdas {
-            let (wp, _) = self.run_trial(cfg, lam, train, val)?;
-            if cfg.qat.verbose {
-                println!(
-                    "  [sweep {} bw={} λ={:.4} p={:.2}] acc={:.4} (drop {:+.4}) \
-                     sparsity={:.4} size={:.1}kB CR={:.1}x",
-                    cfg.method.as_str(),
-                    cfg.bits,
-                    lam,
-                    cfg.p,
-                    wp.accuracy,
-                    wp.acc_drop,
-                    wp.sparsity,
-                    wp.size_bytes as f64 / 1000.0,
-                    wp.compression_ratio
-                );
-            }
-            points.push(wp);
-        }
-        Ok(points)
+        self.run_parallel(cfg, train, val, 1)
+    }
+
+    /// Fan the lambda grid over `jobs` campaign workers sharing this
+    /// engine. Rows come back in grid order and are bitwise identical to
+    /// the serial run; per-trial summaries stream as trials finish when
+    /// `cfg.qat.verbose` is set (per-epoch QAT logging is suppressed for
+    /// `jobs > 1` since it would interleave across workers).
+    pub fn run_parallel<D: Dataset>(
+        &self,
+        cfg: &SweepConfig,
+        train: &DataLoader<D>,
+        val: &DataLoader<D>,
+        jobs: usize,
+    ) -> Result<Vec<WorkingPoint>> {
+        let grid = Grid::lambda_sweep(cfg.method, cfg.bits, &cfg.lambdas, cfg.p);
+        let trials = grid.trials();
+        let mut trial_cfg = cfg.clone();
+        trial_cfg.qat.verbose = cfg.qat.verbose && jobs <= 1;
+        let verbose = cfg.qat.verbose;
+        let opts = CampaignOptions { jobs, seed: cfg.seed, ..Default::default() };
+        campaign::run(
+            &trials,
+            &opts,
+            // engine-backed trials are already pure in (snapshot, cfg,
+            // trial): all their randomness derives from the loader seeds,
+            // so the per-trial stream stays unused here — it serves trial
+            // functions that need private randomness
+            |t, _seed| {
+                self.run_trial_spec(&trial_cfg, t, train, val).map(|(wp, _)| wp)
+            },
+            |ev| {
+                if verbose {
+                    if let Event::Finished { point: wp, wall_s, .. } = ev {
+                        println!(
+                            "  [sweep {} bw={} λ={:.4} p={:.2}] acc={:.4} \
+                             (drop {:+.4}) sparsity={:.4} size={:.1}kB CR={:.1}x \
+                             ({wall_s:.1}s)",
+                            wp.method,
+                            wp.bits,
+                            wp.lambda,
+                            wp.p,
+                            wp.accuracy,
+                            wp.acc_drop,
+                            wp.sparsity,
+                            wp.size_bytes as f64 / 1000.0,
+                            wp.compression_ratio
+                        );
+                    }
+                }
+            },
+        )
     }
 }
 

@@ -9,12 +9,15 @@
 //! the paper, and the CLI.
 //!
 //! Layer map (see DESIGN.md):
-//! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`
-//! * [`coordinator`] — QAT loop, sweeps, candidate selection, reports
+//! * [`runtime`] — concurrent PJRT engine (sharded executable cache)
+//!   loading `artifacts/*.hlo.txt`
+//! * [`coordinator`] — QAT loop, parallel sweep campaigns
+//!   ([`coordinator::campaign`]), candidate selection, reports
 //! * [`quant`] — centroids, entropy, pure-rust assignment reference
 //! * [`lrp`] — relevance pipeline + rust LRP reference implementation
 //! * [`codec`] — CABAC-style coder + baselines (compression ratios)
 //! * [`data`] / [`nn`] / [`tensor`] / [`util`] / [`metrics`] — substrates
+//!   (including the scoped-thread worker pool in [`util::pool`])
 
 pub mod bench;
 pub mod codec;

@@ -5,11 +5,15 @@
 //!   pretrain <model>           train + cache the FP32 baseline
 //!   quantize <model> [opts]    one QAT run (ECQ or ECQx)
 //!   sweep <model> [opts]       lambda sweep -> working points CSV
+//!                              (--jobs N fans trials over N workers;
+//!                              rows are identical for any N)
 //!   compress <model>           quantize + write/reload a .ecqx container
 //!   eval <model> <file.ecqx>   evaluate a compressed container
 //!
 //! Options: --method ecq|ecqx --bits N --lambda F --p F --epochs N
-//!          --lr F --seed N --paper-scale --out PATH
+//!          --lr F --seed N --jobs N --paper-scale --out PATH
+//!
+//! Full per-flag documentation lives in README.md.
 
 use std::collections::HashMap;
 
@@ -189,6 +193,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let train_dl = DataLoader::new(&train, spec.batch, true, seed);
     let val_dl = DataLoader::new(&val, spec.batch, false, seed);
     let baseline = pre.baseline_acc;
+    let jobs = args.get("jobs", 1usize).max(1);
     let runner = SweepRunner::new(&eng, pre.state);
     let cfg = SweepConfig {
         model: exp_.name.to_string(),
@@ -198,8 +203,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         p: args.get("p", 0.3f64),
         qat: qat_config(args, &exp_, method),
         baseline_acc: baseline,
+        seed,
     };
-    let points = runner.run(&cfg, &train_dl, &val_dl)?;
+    if jobs > 1 {
+        println!(
+            "[sweep] fanning {} trials over {jobs} workers (rows are \
+             deterministic; identical to --jobs 1)",
+            cfg.lambdas.len()
+        );
+    }
+    let points = runner.run_parallel(&cfg, &train_dl, &val_dl, jobs)?;
     println!("\n{}", WorkingPoint::csv_header());
     for p in &points {
         println!("{}", p.to_csv());

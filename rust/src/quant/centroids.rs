@@ -9,6 +9,7 @@
 /// Fixed codebook capacity (2^5 - 1 = 31 centroids for 5 bit, padded to 32).
 pub const K_MAX: usize = 32;
 
+/// A fixed-capacity centroid codebook (see the module layout contract).
 #[derive(Clone, Debug)]
 pub struct Codebook {
     /// centroid values, len K_MAX, slot 0 == 0.0

@@ -3,13 +3,16 @@
 
 use crate::util::Rng;
 
+/// Outcome of one [`kmeans_1d`] run.
 #[derive(Clone, Debug)]
 pub struct KMeansResult {
+    /// final centroid positions (len k)
     pub centroids: Vec<f32>,
     /// number of weights assigned to each centroid
     pub counts: Vec<usize>,
     /// sum of squared distances
     pub inertia: f64,
+    /// Lloyd iterations until convergence (or the cap)
     pub iterations: usize,
 }
 

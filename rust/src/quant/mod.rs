@@ -6,17 +6,24 @@
 //! identical reference used by tests (three-way cross-check vs the jnp
 //! oracle and the artifact) and by host-side analyses.
 
+/// Centroid codebooks (symmetric integer grids, step fitting).
 pub mod centroids;
+/// 1-D k-means reference (Fig. 2 comparison).
 pub mod kmeans;
+/// Lloyd refinement ablation of the integer grid.
 pub mod refine;
+/// Relevance EMAs, cost factors and the beta controller.
 pub mod relevance;
+/// Structured (group) sparsification variants.
 pub mod structured;
 
 pub use centroids::{Codebook, K_MAX};
 
 use crate::tensor::Tensor;
 
+/// Sentinel cost for invalid codebook slots.
 pub const BIG: f32 = 1e30;
+/// Probability floor inside entropy terms.
 pub const P_EPS: f32 = 1e-9;
 
 /// Result of assigning one layer.
@@ -31,6 +38,7 @@ pub struct Assignment {
 }
 
 impl Assignment {
+    /// Fraction of the first `n_valid` weights sent to the zero cluster.
     pub fn sparsity(&self, n_valid: usize) -> f64 {
         if n_valid == 0 {
             return 0.0;

@@ -56,12 +56,16 @@ pub fn refine_centroids(
 /// after k Lloyd refinements.
 #[derive(Clone, Debug)]
 pub struct RefineAblation {
+    /// MSE of the hardware-friendly integer grid
     pub integer_grid_mse: f64,
+    /// MSE after Lloyd refinement
     pub refined_mse: f64,
     /// relative distortion reduction given up for integer arithmetic
     pub integer_cost: f64,
 }
 
+/// Measure the distortion cost of staying on the integer grid vs
+/// `lloyd_steps` of centroid refinement (Sec. 3.1 ablation).
 pub fn ablate_refinement(
     w: &[f32],
     assignment: &Assignment,

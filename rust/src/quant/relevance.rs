@@ -23,6 +23,7 @@ pub struct RelevanceState {
 }
 
 impl RelevanceState {
+    /// Fresh EMA state for a layer of `n` weights.
     pub fn new(n: usize, momentum: f32) -> Self {
         RelevanceState { ema: vec![0.0; n], momentum, initialized: false }
     }
@@ -88,6 +89,7 @@ pub fn cost_factors(norm_rel: &[f32], beta: f32) -> Vec<f32> {
 /// from making any weight's zero-cluster cost collapse to ~0 (irreversible
 /// prune) or explode (unbounded protection) within one refresh.
 pub const FACTOR_LO: f32 = 0.2;
+/// Upper bound of the relevance cost factor (see [`FACTOR_LO`]).
 pub const FACTOR_HI: f32 = 5.0;
 
 /// Outcome of the beta controller for one layer.

@@ -9,9 +9,12 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+/// Tensor element type crossing the PJRT boundary.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float
     F32,
+    /// 32-bit signed integer
     I32,
 }
 
@@ -34,6 +37,7 @@ pub struct TensorSpec {
 }
 
 impl TensorSpec {
+    /// Element count of the slot.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -57,6 +61,7 @@ pub struct ParamSpec {
 }
 
 impl ParamSpec {
+    /// Element count of the parameter.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -73,14 +78,17 @@ pub struct ModelSpec {
 }
 
 impl ModelSpec {
+    /// Parameters flagged `quant=1`, in spec order.
     pub fn quantized_params(&self) -> impl Iterator<Item = &ParamSpec> {
         self.params.iter().filter(|p| p.quantize)
     }
 
+    /// Total parameter count of the model.
     pub fn total_params(&self) -> usize {
         self.params.iter().map(|p| p.numel()).sum()
     }
 
+    /// Parameter count over the quantized layers only.
     pub fn quantized_numel(&self) -> usize {
         self.quantized_params().map(|p| p.numel()).sum()
     }
@@ -120,6 +128,7 @@ fn kv<'a>(tok: &'a str, key: &str) -> Option<&'a str> {
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&path)
@@ -223,10 +232,12 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Look up a model section by name.
     pub fn model(&self, name: &str) -> Result<&ModelSpec> {
         self.models.get(name).with_context(|| format!("model {name} not in manifest"))
     }
 
+    /// Look up an artifact signature by name.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)

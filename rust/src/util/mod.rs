@@ -1,9 +1,11 @@
-//! Small shared utilities: PRNG, statistics, property testing, timing.
+//! Small shared utilities: PRNG, statistics, property testing, timing,
+//! and the scoped-thread worker-pool substrate ([`pool`]).
 //!
-//! The offline build has no `rand`/`proptest`/`criterion`, so this module
-//! provides behaviour-equivalent replacements (see DESIGN.md
+//! The offline build has no `rand`/`proptest`/`criterion`/`rayon`, so this
+//! module provides behaviour-equivalent replacements (see DESIGN.md
 //! substitution table).
 
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
@@ -14,34 +16,15 @@ pub use timer::Timer;
 
 /// Parallel map over a slice using scoped threads (no external deps).
 ///
-/// Used by the sweep runner to fan independent trials across cores.
+/// Thin wrapper over [`pool::par_map_indexed`]; used by the engine's
+/// batched-call path to fan independent work across cores. Output order
+/// matches input order.
 pub fn par_map<T: Sync, R: Send, F: Fn(&T) -> R + Sync>(
     items: &[T],
     threads: usize,
     f: F,
 ) -> Vec<R> {
-    let n = items.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let threads = threads.max(1).min(n);
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
-        out.iter_mut().map(std::sync::Mutex::new).collect();
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                **slots[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    out.into_iter().map(|o| o.unwrap()).collect()
+    pool::par_map_indexed(items, threads, |_, t| f(t))
 }
 
 /// Number of worker threads to use by default.

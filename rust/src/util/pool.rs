@@ -1,0 +1,94 @@
+//! Scoped-thread worker-pool substrate: an order-preserving indexed
+//! parallel map backing [`crate::util::par_map`] and the engine's batched
+//! call path. ([`crate::coordinator::campaign`] runs its own claim loop —
+//! same atomic-claim + channel shape, plus event streaming and fail-fast —
+//! so a fix here does NOT automatically cover campaigns.)
+//!
+//! No external dependencies (the offline build has no rayon/crossbeam);
+//! everything is built from `std::thread::scope`, atomics and channels.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Parallel map with item indices, preserving input order in the output.
+///
+/// `threads == 1` degrades to a plain serial loop (no thread or channel
+/// overhead), which is also what makes serial-vs-parallel comparisons
+/// exact: the closure sees identical `(index, item)` pairs either way.
+pub fn par_map_indexed<T: Sync, R: Send, F: Fn(usize, &T) -> R + Sync>(
+    items: &[T],
+    threads: usize,
+    f: F,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn indexed_map_preserves_order() {
+        let items: Vec<u64> = (0..200).collect();
+        let par = par_map_indexed(&items, 8, |i, x| (i as u64) * 1000 + x * x);
+        let ser: Vec<u64> =
+            items.iter().enumerate().map(|(i, x)| (i as u64) * 1000 + x * x).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn thread_cap_respected() {
+        let inflight = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..64).collect();
+        par_map_indexed(&items, 3, |_, _| {
+            let now = inflight.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            inflight.fetch_sub(1, Ordering::SeqCst);
+        });
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(peak <= 3, "peak={peak}");
+    }
+
+    #[test]
+    fn single_thread_is_serial() {
+        let order = Mutex::new(Vec::new());
+        let items: Vec<usize> = (0..10).collect();
+        par_map_indexed(&items, 1, |i, _| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+}

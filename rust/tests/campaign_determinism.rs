@@ -1,0 +1,194 @@
+//! Determinism of the parallel campaign runner: the same grid must yield
+//! bitwise-identical `WorkingPoint` rows at any `--jobs` count, with
+//! every trial reported through the event stream and bounded in-flight
+//! concurrency respected. Trials here are synthetic (pure functions of
+//! the per-trial seed), so the suite runs without artifacts or a PJRT
+//! backend — the engine-level concurrency smoke tests live in
+//! `src/runtime/mod.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use ecqx::coordinator::campaign::{self, CampaignOptions, Event, Grid, TrialSpec};
+use ecqx::coordinator::Method;
+use ecqx::metrics::WorkingPoint;
+use ecqx::util::Rng;
+
+/// A synthetic trial: derives every field from the deterministic per-trial
+/// seed, and sleeps a trial-dependent amount so finish order scrambles
+/// under parallelism.
+fn synthetic_trial(t: &TrialSpec, seed: u64) -> anyhow::Result<WorkingPoint> {
+    std::thread::sleep(std::time::Duration::from_millis((t.id as u64 * 7) % 5));
+    let mut rng = Rng::new(seed);
+    Ok(WorkingPoint {
+        method: t.method.as_str().to_string(),
+        bits: t.bits,
+        lambda: t.lambda,
+        p: t.p,
+        accuracy: rng.f64(),
+        acc_drop: rng.f64() - 0.5,
+        sparsity: rng.f64(),
+        size_bytes: (rng.next_u64() % 100_000) as usize,
+        compression_ratio: 1.0 + rng.f64() * 50.0,
+    })
+}
+
+fn test_grid() -> Vec<TrialSpec> {
+    Grid {
+        methods: vec![Method::Ecq, Method::Ecqx],
+        bits: vec![2, 4],
+        ps: vec![0.15, 0.3],
+        lambdas: vec![0.0, 0.02, 0.08],
+    }
+    .trials()
+}
+
+#[test]
+fn parallel_rows_match_serial_bitwise() {
+    let trials = test_grid();
+    assert_eq!(trials.len(), 24);
+    let serial = campaign::run(
+        &trials,
+        &CampaignOptions { jobs: 1, ..Default::default() },
+        synthetic_trial,
+        |_| {},
+    )
+    .unwrap();
+    assert_eq!(serial.len(), trials.len());
+    for jobs in [2, 4, 8] {
+        let par = campaign::run(
+            &trials,
+            &CampaignOptions { jobs, ..Default::default() },
+            synthetic_trial,
+            |_| {},
+        )
+        .unwrap();
+        let a: Vec<String> = serial.iter().map(|p| p.to_csv()).collect();
+        let b: Vec<String> = par.iter().map(|p| p.to_csv()).collect();
+        assert_eq!(a, b, "rows must be bitwise identical at jobs={jobs}");
+    }
+}
+
+#[test]
+fn campaign_seed_changes_rows() {
+    let trials = test_grid();
+    let a = campaign::run(
+        &trials,
+        &CampaignOptions { jobs: 4, seed: 17, ..Default::default() },
+        synthetic_trial,
+        |_| {},
+    )
+    .unwrap();
+    let b = campaign::run(
+        &trials,
+        &CampaignOptions { jobs: 4, seed: 18, ..Default::default() },
+        synthetic_trial,
+        |_| {},
+    )
+    .unwrap();
+    assert_ne!(
+        a.iter().map(|p| p.to_csv()).collect::<Vec<_>>(),
+        b.iter().map(|p| p.to_csv()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn events_stream_every_trial() {
+    let trials = test_grid();
+    let events = Mutex::new(Vec::new());
+    campaign::run(
+        &trials,
+        &CampaignOptions { jobs: 4, ..Default::default() },
+        synthetic_trial,
+        |ev| events.lock().unwrap().push(ev.clone()),
+    )
+    .unwrap();
+    let events = events.into_inner().unwrap();
+    let started: Vec<usize> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Started { id } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    let mut finished: Vec<usize> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Finished { id, wall_s, .. } => {
+                assert!(*wall_s >= 0.0);
+                Some(*id)
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(started.len(), trials.len());
+    finished.sort_unstable();
+    assert_eq!(finished, (0..trials.len()).collect::<Vec<_>>());
+}
+
+#[test]
+fn bounded_in_flight_is_respected() {
+    let trials = test_grid();
+    let inflight = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    campaign::run(
+        &trials,
+        &CampaignOptions { jobs: 8, max_in_flight: 2, ..Default::default() },
+        |t, seed| {
+            let now = inflight.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            let r = synthetic_trial(t, seed);
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            r
+        },
+        |_| {},
+    )
+    .unwrap();
+    let peak = peak.load(Ordering::SeqCst);
+    assert!(peak <= 2, "in-flight bound violated: peak={peak}");
+}
+
+#[test]
+fn failure_stops_new_claims() {
+    let trials = test_grid();
+    let ran = AtomicUsize::new(0);
+    campaign::run(
+        &trials,
+        &CampaignOptions { jobs: 1, ..Default::default() },
+        |t, seed| {
+            ran.fetch_add(1, Ordering::SeqCst);
+            if t.id == 3 {
+                anyhow::bail!("boom");
+            }
+            synthetic_trial(t, seed)
+        },
+        |_| {},
+    )
+    .unwrap_err();
+    // fail-fast: trials 0..=3 ran, the remaining 20 were never claimed
+    assert_eq!(ran.load(Ordering::SeqCst), 4);
+}
+
+#[test]
+fn failures_surface_deterministically() {
+    let trials = test_grid();
+    for jobs in [1, 8] {
+        let err = campaign::run(
+            &trials,
+            &CampaignOptions { jobs, ..Default::default() },
+            |t, seed| {
+                if t.id == 5 || t.id == 11 {
+                    anyhow::bail!("injected failure in trial {}", t.id);
+                }
+                synthetic_trial(t, seed)
+            },
+            |_| {},
+        )
+        .unwrap_err();
+        let msg = format!("{err:?}");
+        // the lowest-position failure wins regardless of completion order
+        assert!(msg.contains("campaign trial 5"), "jobs={jobs}: {msg}");
+        assert!(msg.contains("injected failure in trial 5"), "jobs={jobs}: {msg}");
+    }
+}

@@ -1,0 +1,260 @@
+//! Offline stand-in for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build container has no crates.io access, so this vendored crate
+//! provides the exact API subset `ecqx` uses — [`Error`], [`Result`],
+//! the [`Context`] extension trait, and the [`anyhow!`]/[`bail!`] macros —
+//! with the same semantics (context chains wrap an underlying error;
+//! `Display` shows the outermost message, `Debug` shows the whole chain).
+//! Swapping the real crate back in is a Cargo.toml-only change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamically typed error with a chain of context messages.
+///
+/// Like the real `anyhow::Error`, this intentionally does **not**
+/// implement [`std::error::Error`]: the blanket `From<E: Error>`
+/// conversion (which powers `?`) would otherwise conflict with the
+/// reflexive `From<T> for T` impl.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+    /// context frames, innermost first (push order)
+    context: Vec<String>,
+}
+
+/// Adapter wrapping a plain message as the innermost error.
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.0)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> StdError for MessageError<M> {}
+
+impl Error {
+    /// Create an error from a printable message (what [`anyhow!`] expands to).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(MessageError(message)), context: Vec::new() }
+    }
+
+    /// Wrap an existing error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(error), context: Vec::new() }
+    }
+
+    /// Attach an outer context message (innermost first, like anyhow).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The outermost message (context if any, else the wrapped error).
+    fn outermost(&self) -> String {
+        match self.context.last() {
+            Some(c) => c.clone(),
+            None => self.inner.to_string(),
+        }
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.outermost())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.outermost())?;
+        // remaining frames, outermost-to-innermost, then the source chain
+        let mut causes: Vec<String> =
+            self.context.iter().rev().skip(1).cloned().collect();
+        if !self.context.is_empty() {
+            causes.push(self.inner.to_string());
+        }
+        let mut src = self.inner.source();
+        while let Some(s) = src {
+            causes.push(s.to_string());
+            src = s.source();
+        }
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in causes.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a single printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`anyhow!`]-constructed error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("missing file"));
+    }
+
+    #[test]
+    fn context_chains_display_outermost() {
+        let e: Result<()> = Err(io_err());
+        let e = e.context("reading manifest").unwrap_err();
+        let e = Err::<(), Error>(e).context("loading artifacts").unwrap_err();
+        assert_eq!(e.to_string(), "loading artifacts");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("loading artifacts"));
+        assert!(dbg.contains("reading manifest"));
+        assert!(dbg.contains("missing file"));
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let v: Option<u32> = None;
+        let e = v.context("no value").unwrap_err();
+        assert_eq!(e.to_string(), "no value");
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: usize) -> Result<usize> {
+            if x == 0 {
+                bail!("zero input x={x}");
+            }
+            ensure!(x < 10, "too big: {}", x);
+            Ok(x * 2)
+        }
+        assert_eq!(f(3).unwrap(), 6);
+        assert!(f(0).unwrap_err().to_string().contains("zero input x=0"));
+        assert!(f(11).unwrap_err().to_string().contains("too big: 11"));
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert<T: Send + Sync>() {}
+        assert::<Error>();
+    }
+}

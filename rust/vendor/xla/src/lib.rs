@@ -1,0 +1,337 @@
+//! Offline stand-in for the `xla` crate (PJRT C-API bindings).
+//!
+//! The build container ships neither the XLA C library nor crates.io
+//! access, so this vendored crate mirrors exactly the API surface
+//! `ecqx::runtime` uses: client construction, HLO-text loading,
+//! compilation, literals, and execution. Everything host-side (literal
+//! packing, reshape, manifest-driven shape checks, the engine's
+//! executable cache) works for real; only device *execution* is
+//! unavailable and fails loudly with [`Error::Unavailable`].
+//!
+//! All types here are plain owned data — `Send + Sync` by construction —
+//! which is what lets `ecqx::runtime::Engine` be shared across sweep
+//! workers. [`IS_STUB`] lets tests and CLIs skip execution paths cleanly.
+//! Swapping the real PJRT bindings back in is a Cargo.toml change plus a
+//! one-line `pub const IS_STUB: bool = false;` shim in those bindings
+//! (`ecqx::runtime::backend_is_stub` is the only consumer).
+
+use std::fmt;
+
+/// True for this offline stand-in; the real bindings would execute.
+pub const IS_STUB: bool = true;
+
+/// Errors surfaced by the stub (a subset of the real crate's error kinds).
+#[derive(Clone, Debug)]
+pub enum Error {
+    /// Device execution was requested but this is the offline stub.
+    Unavailable(String),
+    /// Reading an HLO-text artifact failed.
+    Io(String),
+    /// Literal shape/dtype mismatch.
+    Shape(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(m) => write!(f, "xla unavailable: {m}"),
+            Error::Io(m) => write!(f, "xla io error: {m}"),
+            Error::Shape(m) => write!(f, "xla shape error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub-local result type, mirroring `xla::Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A host literal: typed buffer + dimensions (or a tuple of literals).
+#[derive(Clone, Debug)]
+pub enum Literal {
+    /// f32 buffer with dimensions.
+    F32 {
+        /// row-major data
+        data: Vec<f32>,
+        /// dimensions (empty = scalar)
+        dims: Vec<i64>,
+    },
+    /// i32 buffer with dimensions.
+    I32 {
+        /// row-major data
+        data: Vec<i32>,
+        /// dimensions (empty = scalar)
+        dims: Vec<i64>,
+    },
+    /// Tuple of literals (artifacts are lowered with `return_tuple=True`).
+    Tuple(Vec<Literal>),
+}
+
+/// Element types that can move through [`Literal`] buffers.
+pub trait NativeType: Copy {
+    /// Pack a rank-1 literal from a slice.
+    fn vec1_literal(data: &[Self]) -> Literal;
+    /// Extract the buffer, erroring on a dtype mismatch.
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn vec1_literal(data: &[f32]) -> Literal {
+        Literal::F32 { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(Error::Shape(format!("expected f32 literal, got {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn vec1_literal(data: &[i32]) -> Literal {
+        Literal::I32 { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            other => Err(Error::Shape(format!("expected i32 literal, got {other:?}"))),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::vec1_literal(data)
+    }
+
+    /// Reinterpret the buffer under new dimensions (element count must match).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        match self {
+            Literal::F32 { data, .. } => {
+                if data.len() as i64 != numel {
+                    return Err(Error::Shape(format!(
+                        "reshape {:?}: have {} elements",
+                        dims,
+                        data.len()
+                    )));
+                }
+                Ok(Literal::F32 { data, dims: dims.to_vec() })
+            }
+            Literal::I32 { data, .. } => {
+                if data.len() as i64 != numel {
+                    return Err(Error::Shape(format!(
+                        "reshape {:?}: have {} elements",
+                        dims,
+                        data.len()
+                    )));
+                }
+                Ok(Literal::I32 { data, dims: dims.to_vec() })
+            }
+            Literal::Tuple(_) => {
+                Err(Error::Shape("cannot reshape a tuple literal".to_string()))
+            }
+        }
+    }
+
+    /// Copy the buffer out as a `Vec<T>`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            other => Err(Error::Shape(format!("not a tuple literal: {other:?}"))),
+        }
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// An HLO module parsed from its text form (name + size only, in the stub).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    name: String,
+    byte_len: usize,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact; the module name is taken from the
+    /// `HloModule <name>` header when present.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        let name = text
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("HloModule"))
+            .and_then(|rest| {
+                rest.trim()
+                    .split(|c: char| c == ',' || c.is_whitespace())
+                    .next()
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+            })
+            .unwrap_or_else(|| "module".to_string());
+        Ok(HloModuleProto { name, byte_len: text.len() })
+    }
+
+    /// Module name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Size of the text form in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.byte_len
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    name: String,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { name: proto.name.clone() }
+    }
+
+    /// Computation name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// The PJRT client (CPU only in the stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Construct the CPU client; always succeeds in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    /// Platform name (contains "cpu", as the real CPU client's does).
+    pub fn platform_name(&self) -> String {
+        "cpu (offline xla stub)".to_string()
+    }
+
+    /// Number of devices (one host CPU).
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    /// "Compile" a computation: in the stub this only validates that the
+    /// artifact was loadable and produces an executable handle.
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { name: computation.name().to_string() })
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    name: String,
+}
+
+impl PjRtLoadedExecutable {
+    /// Name of the compiled computation.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Device execution — unavailable offline; fails loudly instead of
+    /// returning garbage so callers can degrade or skip.
+    pub fn execute<T: AsRef<Literal>>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable(format!(
+            "offline xla stub: cannot execute '{}' ({} input(s)); build against \
+             the real PJRT bindings to run HLO artifacts",
+            self.name,
+            args.len()
+        )))
+    }
+}
+
+/// A device buffer (never actually produced by the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Device-to-host copy — unreachable in the stub, present for API parity.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("offline xla stub: no device buffers".to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_and_compile() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("cpu"));
+        assert_eq!(c.device_count(), 1);
+    }
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.clone().reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+        let s = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn hlo_text_parses_module_name() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("xla-stub-test-{}.hlo.txt", std::process::id()));
+        std::fs::write(&path, "HloModule my_mod, entry_computation_layout={()->f32[]}\n")
+            .unwrap();
+        let p = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(p.name(), "my_mod");
+        assert!(p.byte_len() > 0);
+        let comp = XlaComputation::from_proto(&p);
+        assert_eq!(comp.name(), "my_mod");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn execute_fails_loudly() {
+        let c = PjRtClient::cpu().unwrap();
+        let exe = c
+            .compile(&XlaComputation::from_proto(&HloModuleProto {
+                name: "m".into(),
+                byte_len: 0,
+            }))
+            .unwrap();
+        let args = [Literal::vec1(&[0.0f32])];
+        match exe.execute::<Literal>(&args) {
+            Err(Error::Unavailable(m)) => assert!(m.contains("'m'")),
+            other => panic!("expected Unavailable, got {:?}", other.is_ok()),
+        }
+    }
+}
