@@ -1,6 +1,9 @@
 //! §Perf — micro-benchmarks of every hot path: the assign kernel
-//! (artifact vs pure-rust), the CABAC codec, the PJRT call overhead, and
-//! the full STE/LRP steps. These numbers back EXPERIMENTS.md §Perf.
+//! (engine-executed vs pure-rust), the CABAC codec, the engine call
+//! overhead, and the full STE/LRP steps. These numbers back
+//! EXPERIMENTS.md §Perf. Runs on whichever backend `exp::engine()`
+//! resolves (PJRT over artifacts/, or the host reference backend when
+//! those are absent — so the bench works fully offline).
 
 use ecqx::bench::{bench, figure_header, throughput};
 use ecqx::codec::{deepcabac, huffman};
@@ -12,8 +15,11 @@ use ecqx::tensor::{Tensor, Value};
 use ecqx::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    figure_header("Perf", "hot-path micro-benchmarks");
     let engine = exp::engine()?;
+    figure_header(
+        "Perf",
+        &format!("hot-path micro-benchmarks ({} backend)", engine.backend_name()),
+    );
     let mut rng = Rng::new(7);
 
     // ---- L1: assignment kernel, 64k-element bucket ----
@@ -31,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         Value::F32(Tensor::scalar(3e-4)),
     ];
     engine.call("assign_65536", &inputs)?; // compile outside the timing
-    let res = bench("assign artifact (Pallas, 64k x 32)", 2, 10, || {
+    let res = bench("assign via engine (64k x 32)", 2, 10, || {
         engine.call("assign_65536", &inputs).unwrap()
     });
     println!("    -> {}", throughput(&res, n));

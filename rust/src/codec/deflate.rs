@@ -1,0 +1,210 @@
+//! Minimal zlib/DEFLATE encoder — the offline stand-in for `flate2`
+//! (general-purpose baseline in the codec comparison; see the DESIGN.md
+//! substitution table).
+//!
+//! Emits RFC 1950/1951-conformant output: a zlib header, one final
+//! fixed-Huffman DEFLATE block, and the Adler-32 trailer. Matching is
+//! deliberately simple — distance-1 run matches only (the dominant
+//! structure of sparse quantized weight tensors is zero runs) — so this
+//! is a *size baseline*, not a competitive compressor; CABAC/Huffman must
+//! beat it on the paper's sources and the comparison stays honest.
+
+/// LSB-first bit writer (DEFLATE bit order: codes MSB-first, everything
+/// else LSB-first, bytes filled from the low bit).
+struct BitWriter {
+    out: Vec<u8>,
+    cur: u32,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        BitWriter { out: Vec::new(), cur: 0, nbits: 0 }
+    }
+
+    /// Push `n` bits of `v`, LSB-first (extra bits, block header).
+    fn put(&mut self, v: u32, n: u32) {
+        self.cur |= v << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.out.push((self.cur & 0xFF) as u8);
+            self.cur >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Push a Huffman code of `n` bits, MSB of the code first.
+    fn put_code(&mut self, code: u32, n: u32) {
+        let mut rev = 0u32;
+        for i in 0..n {
+            rev |= ((code >> i) & 1) << (n - 1 - i);
+        }
+        self.put(rev, n);
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.cur & 0xFF) as u8);
+        }
+        self.out
+    }
+}
+
+/// Fixed-Huffman literal/length code (RFC 1951 §3.2.6).
+fn put_litlen(w: &mut BitWriter, sym: u32) {
+    match sym {
+        0..=143 => w.put_code(0x30 + sym, 8),
+        144..=255 => w.put_code(0x190 + (sym - 144), 9),
+        256..=279 => w.put_code(sym - 256, 7),
+        _ => w.put_code(0xC0 + (sym - 280), 8),
+    }
+}
+
+/// Length code table: (code, extra_bits, base_length) per RFC 1951.
+const LEN_CODES: [(u32, u32, u32); 29] = [
+    (257, 0, 3),
+    (258, 0, 4),
+    (259, 0, 5),
+    (260, 0, 6),
+    (261, 0, 7),
+    (262, 0, 8),
+    (263, 0, 9),
+    (264, 0, 10),
+    (265, 1, 11),
+    (266, 1, 13),
+    (267, 1, 15),
+    (268, 1, 17),
+    (269, 2, 19),
+    (270, 2, 23),
+    (271, 2, 27),
+    (272, 2, 31),
+    (273, 3, 35),
+    (274, 3, 43),
+    (275, 3, 51),
+    (276, 3, 59),
+    (277, 4, 67),
+    (278, 4, 83),
+    (279, 4, 99),
+    (280, 4, 115),
+    (281, 5, 131),
+    (282, 5, 163),
+    (283, 5, 195),
+    (284, 5, 227),
+    (285, 0, 258),
+];
+
+/// Emit a (length, distance=1) match.
+fn put_match(w: &mut BitWriter, len: u32) {
+    debug_assert!((3..=258).contains(&len));
+    let (code, extra, base) = *LEN_CODES
+        .iter()
+        .rev()
+        .find(|&&(_, _, base)| base <= len)
+        .unwrap();
+    put_litlen(w, code);
+    if extra > 0 {
+        w.put(len - base, extra);
+    }
+    // distance code 0 (distance 1): fixed 5-bit code, no extra bits
+    w.put_code(0, 5);
+}
+
+fn adler32(bytes: &[u8]) -> u32 {
+    const MOD: u32 = 65521;
+    let (mut a, mut b) = (1u32, 0u32);
+    for chunk in bytes.chunks(5552) {
+        for &x in chunk {
+            a += x as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+/// Compress `bytes` into a zlib stream (header + one fixed-Huffman block
+/// + Adler-32).
+pub fn compress(bytes: &[u8]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    // zlib header: CM=8/CINFO=7, check bits making the pair ≡ 0 (mod 31)
+    w.out.extend_from_slice(&[0x78, 0x9C]);
+    // BFINAL=1, BTYPE=01 (fixed Huffman)
+    w.put(1, 1);
+    w.put(1, 2);
+    let n = bytes.len();
+    let mut i = 0usize;
+    while i < n {
+        let mut run = 0usize;
+        if i > 0 {
+            let prev = bytes[i - 1];
+            while run < 258 && i + run < n && bytes[i + run] == prev {
+                run += 1;
+            }
+        }
+        if run >= 3 {
+            put_match(&mut w, run as u32);
+            i += run;
+        } else {
+            put_litlen(&mut w, bytes[i] as u32);
+            i += 1;
+        }
+    }
+    put_litlen(&mut w, 256); // end of block
+    let mut out = w.finish();
+    out.extend_from_slice(&adler32(bytes).to_be_bytes());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_runs_collapse() {
+        let sz = compress(&[0u8; 1024]).len();
+        assert!(sz < 64, "1 kB of zeros must code tiny, got {sz}");
+        let sz4 = compress(&[0u8; 4096]).len();
+        assert!(sz4 < 96, "zero-run cost must grow sublinearly, got {sz4}");
+    }
+
+    #[test]
+    fn deterministic_and_nonempty() {
+        assert_eq!(compress(b"hello"), compress(b"hello"));
+        assert!(!compress(b"hello").is_empty());
+        // empty input still carries header + EOB + adler
+        let e = compress(&[]);
+        assert!(e.len() >= 7 && e.len() < 16);
+        assert_eq!(&e[..2], &[0x78, 0x9C]);
+    }
+
+    #[test]
+    fn incompressible_data_costs_about_one_byte_per_byte() {
+        let mut rng = Rng::new(11);
+        let data: Vec<u8> = (0..4096).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let sz = compress(&data).len();
+        // 8/9-bit literals: bounded blow-up, no pathological growth
+        assert!(sz >= 4096 && sz < 4096 * 9 / 8 + 64, "size {sz}");
+    }
+
+    #[test]
+    fn sparser_sources_code_smaller() {
+        let mut rng = Rng::new(5);
+        let mk = |p_zero: f64, rng: &mut Rng| -> Vec<u8> {
+            (0..16384)
+                .map(|_| if rng.chance(p_zero) { 0u8 } else { (1 + rng.below(15)) as u8 })
+                .collect()
+        };
+        let sparse = compress(&mk(0.95, &mut rng)).len();
+        let dense = compress(&mk(0.30, &mut rng)).len();
+        assert!(sparse < dense, "sparse={sparse} dense={dense}");
+    }
+
+    #[test]
+    fn adler_reference_values() {
+        // RFC 1950 example: "Wikipedia" -> 0x11E60398
+        assert_eq!(adler32(b"Wikipedia"), 0x11E6_0398);
+        assert_eq!(adler32(&[]), 1);
+    }
+}

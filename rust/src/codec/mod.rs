@@ -5,6 +5,7 @@
 pub mod bitstream;
 pub mod cabac;
 pub mod deepcabac;
+pub mod deflate;
 pub mod huffman;
 pub mod sparse;
 
@@ -84,13 +85,10 @@ pub fn compare_codecs(idx: &TensorI32, bits: u32) -> CodecComparison {
     }
 }
 
-/// Deflate-compressed size of a byte buffer (general-purpose baseline).
+/// Deflate-compressed size of a byte buffer (general-purpose baseline,
+/// via the offline [`deflate`] stand-in for `flate2`).
 pub fn deflate_size(bytes: &[u8]) -> usize {
-    use std::io::Write;
-    let mut enc =
-        flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::best());
-    enc.write_all(bytes).unwrap();
-    enc.finish().unwrap().len()
+    deflate::compress(bytes).len()
 }
 
 #[cfg(test)]

@@ -22,15 +22,63 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// Construct the PJRT engine over the artifact directory.
-pub fn engine() -> Result<Engine> {
+/// Which execution backend to construct (CLI `--backend`, env
+/// `ECQX_BACKEND`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// PJRT when artifacts + real bindings are available, host otherwise.
+    Auto,
+    /// Pure-rust host reference backend (no artifacts, no PJRT).
+    Host,
+    /// PJRT over `artifacts/` (errors when unavailable).
+    Pjrt,
+}
+
+impl std::str::FromStr for BackendChoice {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(BackendChoice::Auto),
+            "host" => Ok(BackendChoice::Host),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            other => anyhow::bail!("unknown backend {other} (use auto|host|pjrt)"),
+        }
+    }
+}
+
+/// Construct the engine for an explicit backend choice. `Auto` picks PJRT
+/// only when `artifacts/manifest.txt` exists *and* the real bindings are
+/// linked (`backend_is_stub() == false`); otherwise it falls back to the
+/// host reference backend, so every CLI/bench/example path runs offline.
+pub fn engine_with(choice: BackendChoice) -> Result<Engine> {
     let dir = artifacts_dir();
-    Engine::new(&dir).with_context(|| {
-        format!(
-            "loading artifacts from {} (run `make artifacts` first)",
-            dir.display()
-        )
-    })
+    match choice {
+        BackendChoice::Host => Ok(Engine::host()),
+        BackendChoice::Pjrt => Engine::new(&dir).with_context(|| {
+            format!(
+                "loading artifacts from {} (run `make artifacts` first)",
+                dir.display()
+            )
+        }),
+        BackendChoice::Auto => {
+            if dir.join("manifest.txt").exists() && !crate::runtime::backend_is_stub() {
+                engine_with(BackendChoice::Pjrt)
+            } else {
+                Ok(Engine::host())
+            }
+        }
+    }
+}
+
+/// Construct the default engine: `$ECQX_BACKEND` (auto|host|pjrt) or the
+/// auto fallback chain.
+pub fn engine() -> Result<Engine> {
+    let choice = match std::env::var("ECQX_BACKEND") {
+        Ok(v) => v.parse()?,
+        Err(_) => BackendChoice::Auto,
+    };
+    engine_with(choice)
 }
 
 /// Experiment scale: paper-like vs CPU-budget (bench default).
@@ -146,18 +194,27 @@ pub struct Pretrained {
 
 /// Get (or train + cache) the pre-trained FP baseline of a model.
 ///
-/// Cached under `artifacts/pretrained_<model>.bin` (+ `.meta` with the
-/// baseline accuracy), keyed on the pretraining configuration.
+/// Cached under `artifacts/pretrained_<model>_<backend>.bin` (+ `.meta`
+/// with the baseline accuracy), keyed on the pretraining configuration.
+/// The backend is part of the file name — host- and PJRT-trained
+/// baselines differ numerically, and alternating backends must not
+/// clobber each other's cache.
 pub fn pretrained(engine: &Engine, exp: &ModelExp, seed: u64) -> Result<Pretrained> {
     let spec = engine.manifest.model(exp.name)?.clone();
-    let ckpt = artifacts_dir().join(format!("pretrained_{}.bin", exp.name));
-    let meta = artifacts_dir().join(format!("pretrained_{}.meta", exp.name));
-    // NB: keyed on the pretraining config, not the artifact hash — kernel
-    // perf changes must not invalidate baselines (semantics are covered by
-    // the artifact-vs-reference integration tests).
+    let backend = engine.backend_name();
+    let ckpt = artifacts_dir().join(format!("pretrained_{}_{backend}.bin", exp.name));
+    let meta = artifacts_dir().join(format!("pretrained_{}_{backend}.meta", exp.name));
+    // NB: keyed on the pretraining config + backend, not the artifact
+    // hash — kernel perf changes must not invalidate baselines (semantics
+    // are covered by the artifact-vs-reference integration tests), but
+    // host- and PJRT-trained baselines differ numerically and must not
+    // poison each other's cache.
     let tag = format!(
-        "seed={seed} epochs={} lr={} train_n={}",
-        exp.pretrain_epochs, exp.pretrain_lr, exp.train_n
+        "seed={seed} epochs={} lr={} train_n={} backend={}",
+        exp.pretrain_epochs,
+        exp.pretrain_lr,
+        exp.train_n,
+        engine.backend_name()
     );
     if ckpt.exists() && meta.exists() {
         let m = std::fs::read_to_string(&meta)?;
@@ -183,6 +240,9 @@ pub fn pretrained(engine: &Engine, exp: &ModelExp, seed: u64) -> Result<Pretrain
     pre.run(engine, &mut state, &train_dl, exp.pretrain_epochs)?;
     let ev = evaluate(engine, &state, &val_dl, ParamSource::Fp)?;
     println!("[pretrain] {} baseline val acc = {:.4}", exp.name, ev.accuracy);
+    // the host backend runs with no artifacts/ directory present — create
+    // the cache location on demand
+    std::fs::create_dir_all(artifacts_dir()).ok();
     checkpoint::save_fp(&ckpt, &state.params)?;
     std::fs::write(&meta, format!("{tag}\n{}\n", ev.accuracy))?;
     Ok(Pretrained { state, baseline_acc: ev.accuracy })

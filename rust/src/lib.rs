@@ -9,8 +9,10 @@
 //! the paper, and the CLI.
 //!
 //! Layer map (see DESIGN.md):
-//! * [`runtime`] — concurrent PJRT engine (sharded executable cache)
-//!   loading `artifacts/*.hlo.txt`
+//! * [`runtime`] — backend-generic engine: the concurrent PJRT backend
+//!   (sharded executable cache over `artifacts/*.hlo.txt`) and the
+//!   pure-rust host reference backend ([`runtime::host`], no artifacts
+//!   or PJRT needed)
 //! * [`coordinator`] — QAT loop, parallel sweep campaigns
 //!   ([`coordinator::campaign`]), candidate selection, reports
 //! * [`quant`] — centroids, entropy, pure-rust assignment reference

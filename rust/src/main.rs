@@ -10,8 +10,13 @@
 //!   compress <model>           quantize + write/reload a .ecqx container
 //!   eval <model> <file.ecqx>   evaluate a compressed container
 //!
-//! Options: --method ecq|ecqx --bits N --lambda F --p F --epochs N
-//!          --lr F --seed N --jobs N --paper-scale --out PATH
+//! Options: --backend auto|host|pjrt --method ecq|ecqx --bits N
+//!          --lambda F --p F --epochs N --lr F --seed N --jobs N
+//!          --paper-scale --out PATH
+//!
+//! `--backend host` runs the whole pipeline on the pure-rust reference
+//! backend (no artifacts/, no PJRT); `auto` (default) picks PJRT when the
+//! artifacts + real bindings are present and falls back to host.
 //!
 //! Full per-flag documentation lives in README.md.
 
@@ -65,6 +70,14 @@ impl Args {
     }
 }
 
+fn engine_of(args: &Args) -> Result<ecqx::runtime::Engine> {
+    match args.flags.get("backend") {
+        // explicit flag wins over $ECQX_BACKEND
+        Some(v) => exp::engine_with(v.parse()?),
+        None => exp::engine(),
+    }
+}
+
 fn method_of(args: &Args) -> Result<Method> {
     match args.get::<String>("method", "ecqx".into()).as_str() {
         "ecq" => Ok(Method::Ecq),
@@ -100,7 +113,7 @@ fn main() -> Result<()> {
     let args = parse_args();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
-        "smoke" => cmd_smoke(),
+        "smoke" => cmd_smoke(&args),
         "pretrain" => cmd_pretrain(&args),
         "quantize" => cmd_quantize(&args),
         "sweep" => cmd_sweep(&args),
@@ -117,11 +130,16 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_smoke() -> Result<()> {
-    println!("{}", ecqx::runtime::smoke()?);
-    let eng = exp::engine()?;
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let eng = engine_of(args)?;
+    // probe the PJRT client only when it is the backend actually in use —
+    // `--backend host` must work even where PJRT cannot initialize
+    if eng.backend_name() == "pjrt" {
+        println!("{}", ecqx::runtime::smoke()?);
+    }
     println!(
-        "manifest hash {} — {} models, {} artifacts",
+        "backend {} — manifest hash {} — {} models, {} artifacts",
+        eng.backend_name(),
         eng.manifest.hash,
         eng.manifest.models.len(),
         eng.manifest.artifacts.len()
@@ -139,7 +157,7 @@ fn model_arg(args: &Args) -> Result<exp::ModelExp> {
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let exp_ = model_arg(args)?;
-    let eng = exp::engine()?;
+    let eng = engine_of(args)?;
     let seed = args.get("seed", 17u64);
     let pre = exp::pretrained(&eng, &exp_, seed)?;
     println!(
@@ -154,7 +172,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
 
 fn cmd_quantize(args: &Args) -> Result<()> {
     let exp_ = model_arg(args)?;
-    let eng = exp::engine()?;
+    let eng = engine_of(args)?;
     let seed = args.get("seed", 17u64);
     let method = method_of(args)?;
     let pre = exp::pretrained(&eng, &exp_, seed)?;
@@ -183,7 +201,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let exp_ = model_arg(args)?;
-    let eng = exp::engine()?;
+    let eng = engine_of(args)?;
     let seed = args.get("seed", 17u64);
     let method = method_of(args)?;
     let scale = if args.has("paper-scale") { exp::Scale::Paper } else { exp::Scale::Bench };
@@ -239,7 +257,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_compress(args: &Args) -> Result<()> {
     let exp_ = model_arg(args)?;
-    let eng = exp::engine()?;
+    let eng = engine_of(args)?;
     let seed = args.get("seed", 17u64);
     let method = method_of(args)?;
     let pre = exp::pretrained(&eng, &exp_, seed)?;
@@ -268,7 +286,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let exp_ = model_arg(args)?;
     let path = args.positional.get(2).context("missing <file.ecqx>")?;
-    let eng = exp::engine()?;
+    let eng = engine_of(args)?;
     let seed = args.get("seed", 17u64);
     let qm = checkpoint::load_quantized(std::path::Path::new(path))?;
     if qm.model != exp_.name {

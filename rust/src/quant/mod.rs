@@ -61,9 +61,25 @@ pub fn assign_ref(
     codebook: &Codebook,
     lam: f32,
 ) -> Assignment {
-    let k = codebook.values.len();
+    assign_raw(w, r, mask, &codebook.values, &codebook.valid, lam)
+}
+
+/// Slice-level ECQ^x assignment over a raw `(values, valid)` codebook —
+/// the form the `assign_<bucket>` artifact signature carries and the one
+/// `runtime::host` executes directly. [`assign_ref`] is the
+/// [`Codebook`]-typed wrapper.
+pub fn assign_raw(
+    w: &[f32],
+    r: &[f32],
+    mask: &[f32],
+    values: &[f32],
+    valid: &[f32],
+    lam: f32,
+) -> Assignment {
+    let k = values.len();
     assert_eq!(w.len(), r.len());
     assert_eq!(w.len(), mask.len());
+    assert_eq!(values.len(), valid.len());
     // Phase 1: nearest-neighbour source distribution P_c.
     let mut counts = vec![0f64; k];
     let mut total = 0f64;
@@ -71,10 +87,10 @@ pub fn assign_ref(
         let mut best = 0usize;
         let mut bd = f32::INFINITY;
         for c in 0..k {
-            if codebook.valid[c] == 0.0 {
+            if valid[c] == 0.0 {
                 continue;
             }
-            let d = (w[i] - codebook.values[c]).powi(2);
+            let d = (w[i] - values[c]).powi(2);
             if d < bd {
                 bd = d;
                 best = c;
@@ -88,7 +104,7 @@ pub fn assign_ref(
     for c in 0..k {
         let p = ((counts[c] / total) as f32).max(P_EPS);
         entcost[c] = -lam * p.log2();
-        if codebook.valid[c] == 0.0 {
+        if valid[c] == 0.0 {
             entcost[c] += BIG;
         }
     }
@@ -100,7 +116,7 @@ pub fn assign_ref(
         let mut best = 0usize;
         let mut bc = f32::INFINITY;
         for c in 0..k {
-            let d = (w[i] - codebook.values[c]).powi(2);
+            let d = (w[i] - values[c]).powi(2);
             let mut cost = d + entcost[c];
             if c == 0 {
                 cost *= r[i];
@@ -112,7 +128,7 @@ pub fn assign_ref(
         }
         if mask[i] > 0.5 {
             idx[i] = best as i32;
-            qw[i] = codebook.values[best];
+            qw[i] = values[best];
             fcounts[best] += 1.0;
         }
     }

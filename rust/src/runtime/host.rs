@@ -1,0 +1,821 @@
+//! Host reference backend: executes the model's kernel set directly on
+//! [`crate::tensor::Value`]s — no PJRT, no artifacts directory.
+//!
+//! This is the pure-rust sibling of the jnp oracles in
+//! `python/compile/kernels/ref.py`: dense matmul (`qdense`,
+//! `qdense_gather`), the epsilon-rule per-weight relevance aggregation
+//! (`lrp_dense_rw`), and the two-phase ECQ^x assignment (via
+//! [`crate::quant::assign_raw`]), composed into the same artifact surface
+//! the AOT pipeline lowers (`<model>_fp_train`, `<model>_ste_train`,
+//! `<model>_lrp`, `<model>_eval[_q|_actq]`, `assign_<bucket>`).
+//! Execution is driven entirely by the manifest's shape/dtype contract:
+//! the dense-layer ladder is recovered from the `p_w<i>`/`idx_w<i>` input
+//! signatures, so any manifest whose model is a pure MLP runs unchanged.
+//! Conv/BN models (`vgg_*`, `resnet_*`) are *not* host-executable and
+//! fail loudly at [`Backend::prepare`] time.
+//!
+//! The backend is stateless and every kernel is a deterministic pure
+//! function, which is what lets [`crate::runtime::Engine::call_batch`]
+//! fan host calls across [`crate::util::pool`] workers with bitwise-stable
+//! results.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{ArtifactSpec, Backend, Manifest};
+use crate::quant::assign_raw;
+use crate::tensor::{Tensor, TensorI32, Value};
+
+/// Epsilon-rule stabilizer (python/compile/model.py EPS).
+pub const EPS: f32 = 1e-6;
+/// Adam defaults (python/compile/model.py adam_update).
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+// ---------------------------------------------------------------------------
+// kernel set (mirrors python/compile/kernels/ref.py)
+// ---------------------------------------------------------------------------
+
+/// Row-major `a[m,k] @ b[k,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul lhs shape");
+    assert_eq!(b.len(), k * n, "matmul rhs shape");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bkj) in orow.iter_mut().zip(brow) {
+                *o += aik * bkj;
+            }
+        }
+    }
+    out
+}
+
+/// `a[m,k]ᵀ @ b[m,n]` -> `[k,n]` (the batch contraction of LRP / dW).
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let mut out = vec![0.0f32; k * n];
+    for s in 0..m {
+        let arow = &a[s * k..(s + 1) * k];
+        let brow = &b[s * n..(s + 1) * n];
+        for (i, &asi) in arow.iter().enumerate() {
+            if asi == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bsj) in orow.iter_mut().zip(brow) {
+                *o += asi * bsj;
+            }
+        }
+    }
+    out
+}
+
+/// `g[m,n] @ w[k,n]ᵀ` -> `[m,k]` (the input-gradient / R_in contraction).
+pub fn matmul_nt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(g.len(), m * n);
+    assert_eq!(w.len(), k * n);
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        let grow = &g[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (gv, wv) in grow.iter().zip(wrow) {
+                acc += gv * wv;
+            }
+            out[i * k + kk] = acc;
+        }
+    }
+    out
+}
+
+/// Dense layer `y = a @ w + b` (ref.py `qdense_ref`).
+pub fn qdense(a: &[f32], w: &[f32], bias: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(bias.len(), n, "qdense bias shape");
+    let mut z = matmul(a, w, m, k, n);
+    for row in z.chunks_exact_mut(n) {
+        for (zv, &bv) in row.iter_mut().zip(bias) {
+            *zv += bv;
+        }
+    }
+    z
+}
+
+/// Inference-form dense layer: int32 centroid indices dequantized through
+/// a codebook, then `a @ w + b` (ref.py `qdense_gather_ref`).
+pub fn qdense_gather(
+    a: &[f32],
+    idx: &[i32],
+    codebook: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(idx.len(), k * n, "qdense_gather idx shape");
+    // out-of-range indices clamp, matching XLA gather semantics on the
+    // PJRT backend (a corrupt container must not panic the host path)
+    let top = (codebook.len() - 1) as i32;
+    let w: Vec<f32> = idx
+        .iter()
+        .map(|&s| codebook[s.clamp(0, top) as usize])
+        .collect();
+    qdense(a, &w, bias, m, k, n)
+}
+
+/// Per-weight epsilon-rule relevance `R_w = w ⊙ (aᵀ @ s)`
+/// (ref.py `lrp_dense_rw_ref`).
+pub fn lrp_dense_rw(a: &[f32], s: &[f32], w: &[f32], batch: usize, din: usize, dout: usize) -> Vec<f32> {
+    assert_eq!(w.len(), din * dout, "lrp_dense_rw weight shape");
+    let mut rw = matmul_tn(a, s, batch, din, dout);
+    for (r, &wv) in rw.iter_mut().zip(w) {
+        *r *= wv;
+    }
+    rw
+}
+
+fn relu_inplace(z: &mut [f32]) {
+    for v in z.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// `z + eps·sign(z)` with `sign(0) := 1` (paper Sec. 4.1).
+fn stabilize(z: f32) -> f32 {
+    if z >= 0.0 {
+        z + EPS
+    } else {
+        z - EPS
+    }
+}
+
+/// Round half to even, matching `jnp.round` (f32::round rounds half away).
+fn round_ties_even(x: f32) -> f32 {
+    let f = x.floor();
+    let d = x - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Uniform fake-quantization of a non-negative activation tensor to
+/// `levels` levels, per-tensor dynamic scale (model.py `act_fake_quant`).
+fn act_fake_quant(x: &mut [f32], levels: f32) {
+    let mx = x.iter().fold(0.0f32, |m, &v| m.max(v)).max(1e-8);
+    let s = mx / (levels - 1.0);
+    for v in x.iter_mut() {
+        *v = round_ties_even(*v / s) * s;
+    }
+}
+
+/// Per-row log-sum-exp (the stabilized softmax denominator).
+fn row_lse(row: &[f32]) -> f32 {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx
+}
+
+/// Mean softmax cross-entropy (the eval hot path: no gradient tensor).
+fn softmax_xent_loss(logits: &[f32], y: &[i32], batch: usize, classes: usize) -> f32 {
+    let mut loss = 0.0f64;
+    for s in 0..batch {
+        let row = &logits[s * classes..(s + 1) * classes];
+        loss -= (row[y[s] as usize] - row_lse(row)) as f64;
+    }
+    (loss / batch as f64) as f32
+}
+
+/// Mean softmax cross-entropy + its logit gradient `(softmax - onehot)/B`.
+fn softmax_xent_grad(logits: &[f32], y: &[i32], batch: usize, classes: usize) -> (f32, Vec<f32>) {
+    let mut loss = 0.0f64;
+    let mut grad = vec![0.0f32; batch * classes];
+    for s in 0..batch {
+        let row = &logits[s * classes..(s + 1) * classes];
+        let lse = row_lse(row);
+        let yc = y[s] as usize;
+        loss -= (row[yc] - lse) as f64;
+        let grow = &mut grad[s * classes..(s + 1) * classes];
+        for (c, (g, &v)) in grow.iter_mut().zip(row).enumerate() {
+            let p = (v - lse).exp();
+            *g = (p - if c == yc { 1.0 } else { 0.0 }) / batch as f32;
+        }
+    }
+    ((loss / batch as f64) as f32, grad)
+}
+
+/// `Σ_b [argmax(logits_b) == y_b]` with first-max tie-breaking (jnp.argmax).
+fn correct_count(logits: &[f32], y: &[i32], batch: usize, classes: usize) -> f32 {
+    let mut correct = 0.0f32;
+    for s in 0..batch {
+        let row = &logits[s * classes..(s + 1) * classes];
+        let mut best = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = c;
+            }
+        }
+        if best == y[s] as usize {
+            correct += 1.0;
+        }
+    }
+    correct
+}
+
+/// One Adam step (model.py `adam_update`), updating `p`/`m`/`v` in place.
+fn adam_update(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], t: f32, lr: f32) {
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    for i in 0..p.len() {
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+        let mh = m[i] / bc1;
+        let vh = v[i] / bc2;
+        p[i] -= lr * mh / (vh.sqrt() + ADAM_EPS);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// signature-driven MLP view
+// ---------------------------------------------------------------------------
+
+/// Dense-layer ladder recovered from an artifact's input signature.
+struct MlpSig {
+    /// layer widths `[d0, d1, ..., classes]`
+    dims: Vec<usize>,
+    batch: usize,
+}
+
+impl MlpSig {
+    fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    fn classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+}
+
+/// Recover the MLP ladder from `<w_prefix><i>` slots (`p_w` for the train
+/// and eval artifacts, `idx_w` for the gather eval). Fails with a clear
+/// error for non-dense models — conv weights never produce a `w0` chain
+/// whose widths match the flattened input.
+fn mlp_sig(spec: &ArtifactSpec, w_prefix: &str) -> Result<MlpSig> {
+    let shape_of = |name: &str| -> Option<&Vec<usize>> {
+        spec.inputs.iter().find(|s| s.name == name).map(|s| &s.shape)
+    };
+    let x = shape_of("x")
+        .with_context(|| format!("artifact {}: no x input", spec.name))?;
+    if x.len() != 2 {
+        bail!(
+            "artifact {}: host backend needs flat [batch, dim] inputs, got {:?} \
+             (dense MLP models only)",
+            spec.name,
+            x
+        );
+    }
+    let (batch, mut din) = (x[0], x[1]);
+    let mut dims = vec![din];
+    let mut i = 0usize;
+    while let Some(shape) = shape_of(&format!("{w_prefix}{i}")) {
+        if shape.len() != 2 || shape[0] != din {
+            bail!(
+                "artifact {}: {w_prefix}{i} shape {:?} does not chain from width {din} \
+                 (host backend supports dense MLP models only)",
+                spec.name,
+                shape
+            );
+        }
+        din = shape[1];
+        dims.push(din);
+        i += 1;
+    }
+    if i == 0 {
+        bail!(
+            "artifact {}: no {w_prefix}0 slot — not a dense MLP signature",
+            spec.name
+        );
+    }
+    Ok(MlpSig { dims, batch })
+}
+
+/// Name-indexed view over the (already shape-checked) input values.
+struct Slots<'a> {
+    map: HashMap<&'a str, &'a Value>,
+    artifact: &'a str,
+}
+
+impl<'a> Slots<'a> {
+    fn new(spec: &'a ArtifactSpec, inputs: &'a [Value]) -> Slots<'a> {
+        Slots {
+            map: spec
+                .inputs
+                .iter()
+                .map(|s| s.name.as_str())
+                .zip(inputs.iter())
+                .collect(),
+            artifact: &spec.name,
+        }
+    }
+
+    fn get(&self, name: &str) -> Result<&'a Value> {
+        self.map
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("artifact {}: missing input {name}", self.artifact))
+    }
+
+    fn f32(&self, name: &str) -> Result<&'a [f32]> {
+        Ok(&self.get(name)?.as_f32().data)
+    }
+
+    fn i32(&self, name: &str) -> Result<&'a [i32]> {
+        Ok(&self.get(name)?.as_i32().data)
+    }
+
+    fn scalar(&self, name: &str) -> Result<f32> {
+        Ok(self.get(name)?.as_f32().as_scalar())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+}
+
+/// Collect the per-layer `w`/`b` slices from `p_w<i>` / `p_b<i>` slots.
+fn dense_params<'a>(slots: &Slots<'a>, nl: usize) -> Result<(Vec<&'a [f32]>, Vec<&'a [f32]>)> {
+    let mut ws = Vec::with_capacity(nl);
+    let mut bs = Vec::with_capacity(nl);
+    for i in 0..nl {
+        ws.push(slots.f32(&format!("p_w{i}"))?);
+        bs.push(slots.f32(&format!("p_b{i}"))?);
+    }
+    Ok((ws, bs))
+}
+
+/// Forward pass keeping every layer input: `acts[i]` feeds layer `i`
+/// (`acts[0] = x`, `acts[i>0] = relu(z_{i-1})`); returns logits.
+fn forward_collect(
+    sig: &MlpSig,
+    ws: &[&[f32]],
+    bs: &[&[f32]],
+    x: &[f32],
+) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let nl = sig.layers();
+    let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+    let mut a = x.to_vec();
+    for i in 0..nl {
+        let mut z = qdense(&a, ws[i], bs[i], sig.batch, sig.dims[i], sig.dims[i + 1]);
+        if i + 1 < nl {
+            relu_inplace(&mut z);
+            acts.push(z.clone());
+        }
+        a = z;
+    }
+    (acts, a)
+}
+
+/// Backward pass of the mean-softmax-xent loss through the dense ladder:
+/// returns per-layer `(dW, db)` given the logit gradient `g`.
+fn backward(
+    sig: &MlpSig,
+    ws: &[&[f32]],
+    acts: &[Vec<f32>],
+    mut g: Vec<f32>,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let nl = sig.layers();
+    let mut dws: Vec<Vec<f32>> = vec![Vec::new(); nl];
+    let mut dbs: Vec<Vec<f32>> = vec![Vec::new(); nl];
+    for i in (0..nl).rev() {
+        let (din, dout) = (sig.dims[i], sig.dims[i + 1]);
+        dws[i] = matmul_tn(&acts[i], &g, sig.batch, din, dout);
+        let mut db = vec![0.0f32; dout];
+        for row in g.chunks_exact(dout) {
+            for (d, &gv) in db.iter_mut().zip(row) {
+                *d += gv;
+            }
+        }
+        dbs[i] = db;
+        if i > 0 {
+            let mut gin = matmul_nt(&g, ws[i], sig.batch, dout, din);
+            // relu backward: acts[i] = relu(z_{i-1}), so the mask is a > 0
+            for (gv, &av) in gin.iter_mut().zip(acts[i].iter()) {
+                if av <= 0.0 {
+                    *gv = 0.0;
+                }
+            }
+            g = gin;
+        }
+    }
+    (dws, dbs)
+}
+
+/// Emit outputs in manifest order from a name -> value map.
+fn emit(spec: &ArtifactSpec, mut by_name: HashMap<String, Value>) -> Result<Vec<Value>> {
+    spec.outputs
+        .iter()
+        .map(|o| {
+            by_name
+                .remove(&o.name)
+                .ok_or_else(|| anyhow!("artifact {}: host produced no output {}", spec.name, o.name))
+        })
+        .collect()
+}
+
+fn scalar_out(v: f32) -> Value {
+    Value::F32(Tensor::scalar(v))
+}
+
+// ---------------------------------------------------------------------------
+// artifact implementations
+// ---------------------------------------------------------------------------
+
+/// Shared train-step core: forward/backward at `eval_ws`, optional STE
+/// gradient scaling, Adam applied to the `p_` background parameters.
+fn train_step(
+    spec: &ArtifactSpec,
+    inputs: &[Value],
+    ste: bool,
+) -> Result<Vec<Value>> {
+    let sig = mlp_sig(spec, "p_w")?;
+    let nl = sig.layers();
+    let slots = Slots::new(spec, inputs);
+    let (ws, bs) = dense_params(&slots, nl)?;
+    let x = slots.f32("x")?;
+    let y = slots.i32("y")?;
+    let t = slots.scalar("t")?;
+    let lr = slots.scalar("lr")?;
+    let gs = if ste { slots.scalar("gs")? } else { 0.0 };
+
+    // STE: quantized copies occupy the weight slots of the forward pass
+    let mut qws: Vec<Option<&[f32]>> = vec![None; nl];
+    if ste {
+        for (i, q) in qws.iter_mut().enumerate() {
+            let name = format!("q_w{i}");
+            if slots.has(&name) {
+                *q = Some(slots.f32(&name)?);
+            }
+        }
+    }
+    let eval_ws: Vec<&[f32]> = ws
+        .iter()
+        .zip(qws.iter())
+        .map(|(&w, q)| q.unwrap_or(w))
+        .collect();
+
+    let (acts, logits) = forward_collect(&sig, &eval_ws, &bs, x);
+    let (loss, g) = softmax_xent_grad(&logits, y, sig.batch, sig.classes());
+    let correct = correct_count(&logits, y, sig.batch, sig.classes());
+    let (mut dws, dbs) = backward(&sig, &eval_ws, &acts, g);
+
+    // Fig. 5 step 3: scale quantized-weight gradients by |centroid|
+    if ste && gs > 0.5 {
+        for (dw, q) in dws.iter_mut().zip(qws.iter()) {
+            if let Some(qw) = q {
+                for (gv, &qv) in dw.iter_mut().zip(qw.iter()) {
+                    if qv != 0.0 {
+                        *gv *= qv.abs();
+                    }
+                }
+            }
+        }
+    }
+
+    let mut out: HashMap<String, Value> = HashMap::new();
+    for i in 0..nl {
+        for (pname, grad) in [(format!("w{i}"), &dws[i]), (format!("b{i}"), &dbs[i])] {
+            let mut p = slots.f32(&format!("p_{pname}"))?.to_vec();
+            let mut m = slots.f32(&format!("m_{pname}"))?.to_vec();
+            let mut v = slots.f32(&format!("v_{pname}"))?.to_vec();
+            adam_update(&mut p, &mut m, &mut v, grad, t, lr);
+            let shape = spec
+                .inputs
+                .iter()
+                .find(|s| s.name == format!("p_{pname}"))
+                .unwrap()
+                .shape
+                .clone();
+            out.insert(format!("p_{pname}"), Value::F32(Tensor::new(shape.clone(), p)));
+            out.insert(format!("m_{pname}"), Value::F32(Tensor::new(shape.clone(), m)));
+            out.insert(format!("v_{pname}"), Value::F32(Tensor::new(shape, v)));
+        }
+    }
+    out.insert("loss".into(), scalar_out(loss));
+    out.insert("correct".into(), scalar_out(correct));
+    emit(spec, out)
+}
+
+/// Composite epsilon-LRP over the dense ladder (model.py `MlpGsc::lrp`):
+/// per-weight relevances, batch-aggregated, signed.
+fn lrp_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+    let sig = mlp_sig(spec, "p_w")?;
+    let nl = sig.layers();
+    let slots = Slots::new(spec, inputs);
+    let (ws, bs) = dense_params(&slots, nl)?;
+    let x = slots.f32("x")?;
+    let y = slots.i32("y")?;
+    let eqw = slots.scalar("eqw")?;
+
+    // forward keeping every layer input AND pre-activation (the epsilon
+    // rule needs both, and recomputing z would double the forward cost)
+    let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+    let mut zs: Vec<Vec<f32>> = Vec::with_capacity(nl);
+    let mut a = x.to_vec();
+    for i in 0..nl {
+        let z = qdense(&a, ws[i], bs[i], sig.batch, sig.dims[i], sig.dims[i + 1]);
+        zs.push(z.clone());
+        let mut h = z;
+        if i + 1 < nl {
+            relu_inplace(&mut h);
+            acts.push(h.clone());
+        }
+        a = h;
+    }
+    let logits = a;
+    let classes = sig.classes();
+    // initial relevance: onehot · (1 or target-class score)
+    let mut r = vec![0.0f32; sig.batch * classes];
+    for s in 0..sig.batch {
+        let yc = y[s] as usize;
+        let score = logits[s * classes + yc];
+        r[s * classes + yc] = if eqw > 0.5 { 1.0 } else { score };
+    }
+    let mut out: HashMap<String, Value> = HashMap::new();
+    for i in (0..nl).rev() {
+        let (din, dout) = (sig.dims[i], sig.dims[i + 1]);
+        let a = &acts[i];
+        let z = &zs[i];
+        let s: Vec<f32> = r.iter().zip(z.iter()).map(|(&rv, &zv)| rv / stabilize(zv)).collect();
+        let rw = lrp_dense_rw(a, &s, ws[i], sig.batch, din, dout);
+        out.insert(
+            format!("r_w{i}"),
+            Value::F32(Tensor::new(vec![din, dout], rw)),
+        );
+        if i > 0 {
+            let mut rin = matmul_nt(&s, ws[i], sig.batch, dout, din);
+            for (rv, &av) in rin.iter_mut().zip(a.iter()) {
+                *rv *= av;
+            }
+            r = rin;
+        }
+    }
+    emit(spec, out)
+}
+
+/// Plain eval (optionally with fake-quantized activations for the Fig. 1
+/// sensitivity probe when the artifact carries an `abits` slot).
+fn eval_step(spec: &ArtifactSpec, inputs: &[Value], actq: bool) -> Result<Vec<Value>> {
+    let sig = mlp_sig(spec, "p_w")?;
+    let nl = sig.layers();
+    let slots = Slots::new(spec, inputs);
+    let (ws, bs) = dense_params(&slots, nl)?;
+    let x = slots.f32("x")?;
+    let y = slots.i32("y")?;
+    let levels = if actq { 2.0f32.powf(slots.scalar("abits")?) } else { 0.0 };
+
+    let mut a = x.to_vec();
+    for i in 0..nl {
+        let mut z = qdense(&a, ws[i], bs[i], sig.batch, sig.dims[i], sig.dims[i + 1]);
+        if i + 1 < nl {
+            relu_inplace(&mut z);
+            if actq {
+                act_fake_quant(&mut z, levels);
+            }
+        }
+        a = z;
+    }
+    let loss = softmax_xent_loss(&a, y, sig.batch, sig.classes());
+    let correct = correct_count(&a, y, sig.batch, sig.classes());
+    let mut out = HashMap::new();
+    out.insert("loss".to_string(), scalar_out(loss));
+    out.insert("correct".to_string(), scalar_out(correct));
+    emit(spec, out)
+}
+
+/// Deployment-form gather eval: int32 centroid indices + per-layer
+/// codebook through `qdense_gather` (model.py `eval_gather_mlp`).
+fn eval_gather_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+    let sig = mlp_sig(spec, "idx_w")?;
+    let nl = sig.layers();
+    let slots = Slots::new(spec, inputs);
+    let x = slots.f32("x")?;
+    let y = slots.i32("y")?;
+
+    let mut a = x.to_vec();
+    for i in 0..nl {
+        let idx = slots.i32(&format!("idx_w{i}"))?;
+        let cb = slots.f32(&format!("cb_w{i}"))?;
+        let bias = slots.f32(&format!("p_b{i}"))?;
+        let mut z = qdense_gather(&a, idx, cb, bias, sig.batch, sig.dims[i], sig.dims[i + 1]);
+        if i + 1 < nl {
+            relu_inplace(&mut z);
+        }
+        a = z;
+    }
+    let loss = softmax_xent_loss(&a, y, sig.batch, sig.classes());
+    let correct = correct_count(&a, y, sig.batch, sig.classes());
+    let mut out = HashMap::new();
+    out.insert("loss".to_string(), scalar_out(loss));
+    out.insert("correct".to_string(), scalar_out(correct));
+    emit(spec, out)
+}
+
+/// Two-phase ECQ^x assignment over one padded bucket
+/// (`python/compile/kernels/ecqx_assign.py::assign_full` semantics via
+/// [`crate::quant::assign_raw`]).
+fn assign_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+    let slots = Slots::new(spec, inputs);
+    let w = slots.f32("w")?;
+    let r = slots.f32("r")?;
+    let mask = slots.f32("mask")?;
+    let cen = slots.f32("centroids")?;
+    let cv = slots.f32("cvalid")?;
+    let lam = slots.scalar("lam")?;
+    let a = assign_raw(w, r, mask, cen, cv, lam);
+    let n = w.len();
+    let mut out = HashMap::new();
+    out.insert("idx".to_string(), Value::I32(TensorI32::new(vec![n], a.idx)));
+    out.insert("qw".to_string(), Value::F32(Tensor::new(vec![n], a.qw)));
+    out.insert(
+        "counts".to_string(),
+        Value::F32(Tensor::new(vec![cen.len()], a.counts)),
+    );
+    emit(spec, out)
+}
+
+// ---------------------------------------------------------------------------
+// the backend
+// ---------------------------------------------------------------------------
+
+/// Artifact kinds the host backend can execute.
+enum Kind {
+    FpTrain,
+    SteTrain,
+    Lrp,
+    Eval,
+    EvalActq,
+    EvalGather,
+    Assign,
+}
+
+fn classify(name: &str) -> Result<Kind> {
+    if name.starts_with("assign_") {
+        Ok(Kind::Assign)
+    } else if name.ends_with("_fp_train") {
+        Ok(Kind::FpTrain)
+    } else if name.ends_with("_ste_train") {
+        Ok(Kind::SteTrain)
+    } else if name.ends_with("_lrp") {
+        Ok(Kind::Lrp)
+    } else if name.ends_with("_eval_actq") {
+        Ok(Kind::EvalActq)
+    } else if name.ends_with("_eval_q") {
+        Ok(Kind::EvalGather)
+    } else if name.ends_with("_eval") {
+        Ok(Kind::Eval)
+    } else {
+        bail!("host backend: unknown artifact kind {name}")
+    }
+}
+
+/// The pure-rust host backend (stateless; `Send + Sync` trivially).
+#[derive(Default)]
+pub struct HostBackend;
+
+impl HostBackend {
+    /// Construct the host backend.
+    pub fn new() -> HostBackend {
+        HostBackend
+    }
+}
+
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    /// Validate an artifact is host-executable (dense MLP signature or an
+    /// assign bucket) without running it — the host analogue of a compile.
+    fn prepare(&self, spec: &ArtifactSpec) -> Result<()> {
+        match classify(&spec.name)? {
+            Kind::Assign => {
+                for slot in ["w", "r", "mask", "centroids", "cvalid", "lam"] {
+                    if !spec.inputs.iter().any(|s| s.name == slot) {
+                        bail!("artifact {}: missing assign input {slot}", spec.name);
+                    }
+                }
+                Ok(())
+            }
+            Kind::EvalGather => mlp_sig(spec, "idx_w").map(|_| ()),
+            _ => mlp_sig(spec, "p_w").map(|_| ()),
+        }
+    }
+
+    fn execute(&self, spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+        match classify(&spec.name)? {
+            Kind::FpTrain => train_step(spec, inputs, false),
+            Kind::SteTrain => train_step(spec, inputs, true),
+            Kind::Lrp => lrp_step(spec, inputs),
+            Kind::Eval => eval_step(spec, inputs, false),
+            Kind::EvalActq => eval_step(spec, inputs, true),
+            Kind::EvalGather => eval_gather_step(spec, inputs),
+            Kind::Assign => assign_step(spec, inputs),
+        }
+    }
+}
+
+/// Default host manifest: the paper's MLP_GSC ladder + the shared assign
+/// buckets (the host twin of `python -m compile.aot` for dense models).
+pub fn default_manifest() -> Manifest {
+    Manifest::synthetic_mlp("mlp_gsc", &Manifest::MLP_GSC_DIMS, 128)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_manual() {
+        // [2,3] @ [3,2]
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![4.0, 5.0, 10.0, 11.0]);
+        // transpose identities
+        let tn = matmul_tn(&a, &a, 2, 3, 3); // aᵀa [3,3]
+        assert_eq!(tn[0], 1.0 + 16.0);
+        let nt = matmul_nt(&a, &a, 2, 3, 2); // a aᵀ [2,2]
+        assert_eq!(nt[0], 1.0 + 4.0 + 9.0);
+        assert_eq!(nt[1], 4.0 + 10.0 + 18.0);
+    }
+
+    #[test]
+    fn qdense_adds_bias_and_gather_matches_dense() {
+        let a = [1.0, 1.0];
+        let w = [0.5, -0.5, 0.25, 0.25];
+        let bias = [1.0, 2.0];
+        let z = qdense(&a, &w, &bias, 1, 2, 2);
+        assert_eq!(z, vec![1.75, 1.75]);
+        let cb = [0.0, 0.5, -0.5, 0.25];
+        let idx = [1, 2, 3, 3];
+        let zg = qdense_gather(&a, &idx, &cb, &bias, 1, 2, 2);
+        assert_eq!(zg, vec![1.75, 1.75]);
+    }
+
+    #[test]
+    fn softmax_grad_sums_to_zero_and_loss_positive() {
+        let logits = [1.0, -1.0, 0.5, 0.2, 0.2, 0.2];
+        let y = [0, 2];
+        let (loss, g) = softmax_xent_grad(&logits, &y, 2, 3);
+        assert!(loss > 0.0);
+        for row in g.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-6, "grad rows sum to 0, got {s}");
+        }
+        assert_eq!(correct_count(&logits, &y, 2, 3), 1.0);
+    }
+
+    #[test]
+    fn round_ties_even_matches_jnp() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(1.4), 1.0);
+        assert_eq!(round_ties_even(1.6), 2.0);
+    }
+
+    #[test]
+    fn classify_orders_eval_suffixes() {
+        assert!(matches!(classify("m_eval_q").unwrap(), Kind::EvalGather));
+        assert!(matches!(classify("m_eval_actq").unwrap(), Kind::EvalActq));
+        assert!(matches!(classify("m_eval").unwrap(), Kind::Eval));
+        assert!(matches!(classify("assign_1024").unwrap(), Kind::Assign));
+        assert!(classify("m_unknown").is_err());
+    }
+
+    #[test]
+    fn adam_identity_at_zero_lr() {
+        let mut p = vec![1.0f32, -2.0];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        adam_update(&mut p, &mut m, &mut v, &[0.3, -0.7], 1.0, 0.0);
+        assert_eq!(p, vec![1.0, -2.0]);
+        assert!(m[0] != 0.0 && v[0] != 0.0, "moments still accumulate");
+    }
+}

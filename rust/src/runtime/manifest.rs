@@ -128,6 +128,174 @@ fn kv<'a>(tok: &'a str, key: &str) -> Option<&'a str> {
 }
 
 impl Manifest {
+    /// The power-of-two element-count buckets served by the shared assign
+    /// artifact (python/compile/aot.py `ASSIGN_BUCKETS`).
+    pub const ASSIGN_BUCKETS: [usize; 9] =
+        [1024, 2048, 4096, 16384, 32768, 65536, 131072, 262144, 524288];
+    /// Codebook capacity (python/compile/kernels/ecqx_assign.py `K_MAX`;
+    /// single source of truth is [`crate::quant::K_MAX`]).
+    pub const K_MAX: usize = crate::quant::K_MAX;
+    /// The paper's MLP_GSC layer ladder (python/compile/model.py
+    /// `MLP_DIMS`).
+    pub const MLP_GSC_DIMS: [usize; 8] = [360, 512, 512, 256, 256, 128, 128, 12];
+
+    /// Synthesize the manifest of a pure dense-MLP model, mirroring what
+    /// `python -m compile.aot` would write for it: the param table, the
+    /// `fp_train`/`ste_train`/`lrp`/`eval`/`eval_actq`/`eval_q` artifact
+    /// signatures and the shared `assign_<bucket>` artifacts. This is the
+    /// contract the host backend executes, so the full pipeline runs with
+    /// no `artifacts/` directory present.
+    pub fn synthetic_mlp(model: &str, dims: &[usize], batch: usize) -> Manifest {
+        assert!(dims.len() >= 2, "an MLP needs at least one layer");
+        let nl = dims.len() - 1;
+        let classes = dims[nl];
+        let mut params = Vec::with_capacity(2 * nl);
+        for i in 0..nl {
+            params.push(ParamSpec {
+                name: format!("w{i}"),
+                shape: vec![dims[i], dims[i + 1]],
+                init: Init::HeIn,
+                quantize: true,
+            });
+            params.push(ParamSpec {
+                name: format!("b{i}"),
+                shape: vec![dims[i + 1]],
+                init: Init::Zeros,
+                quantize: false,
+            });
+        }
+        let spec = ModelSpec {
+            name: model.to_string(),
+            batch,
+            classes,
+            input_dim: dims[0],
+            params,
+        };
+
+        let f32s = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.to_string(),
+            dtype: DType::F32,
+            shape,
+        };
+        let i32s = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.to_string(),
+            dtype: DType::I32,
+            shape,
+        };
+        let param_ins = |prefix: &str| -> Vec<TensorSpec> {
+            spec.params
+                .iter()
+                .map(|p| f32s(&format!("{prefix}{}", p.name), p.shape.clone()))
+                .collect()
+        };
+        let x_in = f32s("x", vec![batch, dims[0]]);
+        let y_in = i32s("y", vec![batch]);
+        let train_outs = |_: ()| -> Vec<TensorSpec> {
+            let mut outs = Vec::new();
+            for prefix in ["p_", "m_", "v_"] {
+                outs.extend(param_ins(prefix));
+            }
+            outs.push(f32s("loss", vec![]));
+            outs.push(f32s("correct", vec![]));
+            outs
+        };
+        let eval_outs = vec![f32s("loss", vec![]), f32s("correct", vec![])];
+
+        let mut artifacts = BTreeMap::new();
+        let mut add = |name: String, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: PathBuf::from(format!("<host:{name}>")),
+                    name,
+                    inputs,
+                    outputs,
+                },
+            );
+        };
+
+        // fp_train: p_* m_* v_* x y t lr -> p_* m_* v_* loss correct
+        let mut ins = param_ins("p_");
+        ins.extend(param_ins("m_"));
+        ins.extend(param_ins("v_"));
+        ins.extend([x_in.clone(), y_in.clone(), f32s("t", vec![]), f32s("lr", vec![])]);
+        add(format!("{model}_fp_train"), ins, train_outs(()));
+
+        // ste_train: p_* q_w* m_* v_* x y t lr gs -> p_* m_* v_* loss correct
+        let mut ins = param_ins("p_");
+        for i in 0..nl {
+            ins.push(f32s(&format!("q_w{i}"), vec![dims[i], dims[i + 1]]));
+        }
+        ins.extend(param_ins("m_"));
+        ins.extend(param_ins("v_"));
+        ins.extend([
+            x_in.clone(),
+            y_in.clone(),
+            f32s("t", vec![]),
+            f32s("lr", vec![]),
+            f32s("gs", vec![]),
+        ]);
+        add(format!("{model}_ste_train"), ins, train_outs(()));
+
+        // lrp: p_* x y eqw -> r_w*
+        let mut ins = param_ins("p_");
+        ins.extend([x_in.clone(), y_in.clone(), f32s("eqw", vec![])]);
+        let outs = (0..nl)
+            .map(|i| f32s(&format!("r_w{i}"), vec![dims[i], dims[i + 1]]))
+            .collect();
+        add(format!("{model}_lrp"), ins, outs);
+
+        // eval / eval_actq: p_* x y [abits] -> loss correct
+        let mut ins = param_ins("p_");
+        ins.extend([x_in.clone(), y_in.clone()]);
+        add(format!("{model}_eval"), ins.clone(), eval_outs.clone());
+        ins.push(f32s("abits", vec![]));
+        add(format!("{model}_eval_actq"), ins, eval_outs.clone());
+
+        // eval_q: idx_w* cb_w* p_b* x y -> loss correct
+        let mut ins = Vec::new();
+        for i in 0..nl {
+            ins.push(i32s(&format!("idx_w{i}"), vec![dims[i], dims[i + 1]]));
+        }
+        for i in 0..nl {
+            ins.push(f32s(&format!("cb_w{i}"), vec![Self::K_MAX]));
+        }
+        for i in 0..nl {
+            ins.push(f32s(&format!("p_b{i}"), vec![dims[i + 1]]));
+        }
+        ins.extend([x_in, y_in]);
+        add(format!("{model}_eval_q"), ins, eval_outs);
+
+        // assign_<bucket>: w r mask centroids cvalid lam -> idx qw counts
+        for &n in &Self::ASSIGN_BUCKETS {
+            add(
+                format!("assign_{n}"),
+                vec![
+                    f32s("w", vec![n]),
+                    f32s("r", vec![n]),
+                    f32s("mask", vec![n]),
+                    f32s("centroids", vec![Self::K_MAX]),
+                    f32s("cvalid", vec![Self::K_MAX]),
+                    f32s("lam", vec![]),
+                ],
+                vec![
+                    i32s("idx", vec![n]),
+                    f32s("qw", vec![n]),
+                    f32s("counts", vec![Self::K_MAX]),
+                ],
+            );
+        }
+
+        Manifest {
+            hash: format!("host-synthetic-{model}"),
+            models: BTreeMap::from([(model.to_string(), spec)]),
+            artifacts,
+            kmax: Self::K_MAX,
+            buckets: Self::ASSIGN_BUCKETS.to_vec(),
+            dir: PathBuf::from("<host>"),
+        }
+    }
+
     /// Parse `<dir>/manifest.txt`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.txt");
@@ -308,6 +476,40 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert!(m.model("nope").is_err());
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_mlp_mirrors_aot_contract() {
+        let m = Manifest::synthetic_mlp("tiny", &[6, 4, 3], 2);
+        let spec = m.model("tiny").unwrap();
+        assert_eq!(spec.batch, 2);
+        assert_eq!(spec.classes, 3);
+        assert_eq!(spec.input_dim, 6);
+        assert_eq!(spec.params.len(), 4);
+        assert_eq!(spec.quantized_numel(), 6 * 4 + 4 * 3);
+        // every artifact kind + one assign artifact per bucket
+        for art in ["tiny_fp_train", "tiny_ste_train", "tiny_lrp", "tiny_eval", "tiny_eval_actq", "tiny_eval_q"] {
+            assert!(m.artifact(art).is_ok(), "{art} missing");
+        }
+        assert_eq!(
+            m.artifacts.len(),
+            6 + Manifest::ASSIGN_BUCKETS.len(),
+            "artifact count"
+        );
+        // fp_train signature: 3 param groups + x y t lr in, +loss/correct out
+        let fp = m.artifact("tiny_fp_train").unwrap();
+        assert_eq!(fp.inputs.len(), 3 * 4 + 4);
+        assert_eq!(fp.outputs.len(), 3 * 4 + 2);
+        assert_eq!(fp.inputs[0].name, "p_w0");
+        assert_eq!(fp.outputs.last().unwrap().name, "correct");
+        // lrp outputs one relevance tensor per quantized layer
+        let lrp = m.artifact("tiny_lrp").unwrap();
+        assert_eq!(lrp.outputs.len(), 2);
+        assert_eq!(lrp.outputs[0].shape, vec![6, 4]);
+        // gather eval carries idx/cb/bias slots
+        let evq = m.artifact("tiny_eval_q").unwrap();
+        assert_eq!(evq.inputs[0].dtype, DType::I32);
+        assert_eq!(m.bucket_for(6 * 4).unwrap(), 1024);
     }
 
     #[test]

@@ -1,46 +1,43 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them —
-//! concurrently — from the coordinator's hot path.
+//! Execution runtime: one [`Engine`] facade over pluggable backends.
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Compiled executables live in a sharded reader-writer cache keyed by
-//! artifact name, so concurrent `execute` calls from sweep workers take
-//! uncontended read locks while a cold artifact compiles under a single
-//! shard's write lock. The engine checks every call against the manifest
-//! signature (shape + dtype), so binding bugs fail loudly at the boundary
-//! instead of inside XLA. [`Engine`] is `Send + Sync` by construction
-//! (asserted at compile time) — share one engine by reference across the
-//! whole campaign worker pool.
+//! Two [`Backend`] implementations execute the manifest's artifact
+//! surface:
+//!
+//! * [`pjrt::PjrtBackend`] — loads AOT-compiled HLO-text artifacts from
+//!   `artifacts/` and executes them through the `xla` crate (PJRT C API),
+//!   with a sharded reader-writer executable cache so concurrent sweep
+//!   workers take uncontended read locks while cold artifacts compile
+//!   under a single shard's write lock.
+//! * [`host::HostBackend`] — a pure-rust reference backend executing the
+//!   dense-model kernel set (`qdense`, `qdense_gather`, `lrp_dense_rw`,
+//!   the ECQ^x assignment, …) directly on [`Value`]s, mirroring
+//!   `python/compile/kernels/ref.py`; it needs neither an `artifacts/`
+//!   directory nor real PJRT bindings, which is what turns the end-to-end
+//!   suite into an always-on tier-1 gate.
+//!
+//! The engine owns the manifest and checks every call against the
+//! artifact signature (shape + dtype), so binding bugs fail loudly at the
+//! boundary instead of inside a backend. [`Engine`] is `Send + Sync` by
+//! construction (asserted at compile time) — share one engine by
+//! reference across the whole campaign worker pool.
 
+pub mod host;
 pub mod manifest;
+pub mod pjrt;
 
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
 use std::path::Path;
-use std::sync::{Arc, Mutex, RwLock};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::tensor::{Tensor, TensorI32, Value};
+use crate::tensor::Value;
+pub use host::HostBackend;
 pub use manifest::{ArtifactSpec, DType, Init, Manifest, ModelSpec, ParamSpec, TensorSpec};
-
-/// Shard count of the executable cache. Power of two, comfortably above
-/// the artifact count of one model family so name collisions are rare.
-const CACHE_SHARDS: usize = 16;
-
-/// Smoke check that the PJRT CPU client can be constructed.
-pub fn smoke() -> Result<String> {
-    let client = xla::PjRtClient::cpu()?;
-    Ok(format!(
-        "platform={} devices={}",
-        client.platform_name(),
-        client.device_count()
-    ))
-}
+pub use pjrt::{smoke, PjrtBackend};
 
 /// True when the vendored offline `xla` stand-in is active (no PJRT device
-/// execution available). Tests and CLIs use this to skip execution paths
-/// cleanly instead of failing on every artifact call.
+/// execution available). The CLI and `exp::engine` use this to fall back
+/// to the host backend instead of failing on every artifact call.
 ///
 /// NB: this is the one place referencing the stub-only `IS_STUB` const.
 /// When swapping in the real PJRT bindings, add a one-line
@@ -50,65 +47,50 @@ pub fn backend_is_stub() -> bool {
     xla::IS_STUB
 }
 
-fn literal_from_value(v: &Value) -> Result<xla::Literal> {
-    let dims: Vec<i64> = v.shape().iter().map(|&d| d as i64).collect();
-    let lit = match v {
-        Value::F32(t) => xla::Literal::vec1(&t.data).reshape(&dims)?,
-        Value::I32(t) => xla::Literal::vec1(&t.data).reshape(&dims)?,
-    };
-    Ok(lit)
+/// Execution bookkeeping a backend reports (all zero for the host
+/// backend, which has nothing to compile).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BackendStats {
+    /// wall-clock seconds spent compiling artifacts so far
+    pub compile_s: f64,
+    /// number of distinct artifacts compiled into the cache so far
+    pub cached_executables: usize,
 }
 
-fn value_from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Value> {
-    Ok(match spec.dtype {
-        DType::F32 => {
-            let data = lit.to_vec::<f32>()?;
-            Value::F32(Tensor::new(spec.shape.clone(), data))
-        }
-        DType::I32 => {
-            let data = lit.to_vec::<i32>()?;
-            Value::I32(TensorI32::new(spec.shape.clone(), data))
-        }
-    })
-}
+/// An artifact executor. Implementations must be `Send + Sync`: the
+/// campaign worker pool calls [`Backend::execute`] concurrently through a
+/// shared [`Engine`].
+pub trait Backend: Send + Sync {
+    /// Short backend identifier (`"pjrt"` / `"host"`).
+    fn name(&self) -> &'static str;
 
-/// Sharded executable cache: readers (the execute hot path) only contend
-/// within one shard, and only while a cold artifact on that shard compiles.
-struct ShardedCache {
-    shards: Vec<RwLock<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>>,
-}
+    /// Make an artifact ready to execute (compile for PJRT; validate the
+    /// signature is host-executable for the host backend). Amortizes the
+    /// cold-start cost up front; [`Backend::execute`] must also succeed
+    /// without a prior `prepare`.
+    fn prepare(&self, spec: &ArtifactSpec) -> Result<()>;
 
-impl ShardedCache {
-    fn new() -> Self {
-        ShardedCache {
-            shards: (0..CACHE_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
-        }
-    }
+    /// Execute one artifact: inputs in manifest order (already validated
+    /// against the signature by the engine), outputs in manifest order.
+    fn execute(&self, spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>>;
 
-    fn shard(&self, name: &str) -> &RwLock<HashMap<String, Arc<xla::PjRtLoadedExecutable>>> {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        name.hash(&mut h);
-        &self.shards[(h.finish() as usize) % self.shards.len()]
-    }
-
-    fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    /// Compile-time bookkeeping (for §Perf accounting).
+    fn stats(&self) -> BackendStats {
+        BackendStats::default()
     }
 }
 
-/// The PJRT execution engine: one CPU client + a sharded compiled-executable
-/// cache. Safe to share by reference across threads; see the module docs.
+/// The execution engine: manifest signatures + a pluggable [`Backend`].
+/// Safe to share by reference across threads; see the module docs.
 pub struct Engine {
-    /// artifact/model signatures parsed from `manifest.txt`
+    /// artifact/model signatures (parsed from `manifest.txt` or
+    /// synthesized for the host backend)
     pub manifest: Manifest,
-    client: xla::PjRtClient,
-    cache: ShardedCache,
-    /// wall-clock spent compiling (for §Perf accounting)
-    compile_s: Mutex<f64>,
+    backend: Box<dyn Backend>,
 }
 
 // Compile-time proof that the engine can be shared across sweep workers;
-// a non-Sync field added to Engine fails to build right here.
+// a non-Sync backend handed to Engine fails to build right here.
 #[allow(dead_code)]
 fn _assert_engine_send_sync() {
     fn assert<T: Send + Sync>() {}
@@ -116,59 +98,49 @@ fn _assert_engine_send_sync() {
 }
 
 impl Engine {
-    /// Load the manifest from `dir` and construct the CPU client.
+    /// PJRT engine: load the manifest from `dir` and construct the CPU
+    /// client (the artifact-backed production path).
     pub fn new(dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine {
-            manifest,
-            client,
-            cache: ShardedCache::new(),
-            compile_s: Mutex::new(0.0),
-        })
+        Ok(Engine { manifest, backend: Box::new(PjrtBackend::new()?) })
+    }
+
+    /// Host engine over the default synthesized manifest (the paper's
+    /// MLP_GSC ladder + assign buckets) — no `artifacts/`, no PJRT.
+    pub fn host() -> Engine {
+        Engine::host_with(host::default_manifest())
+    }
+
+    /// Host engine over a caller-provided manifest (tests use this with
+    /// small [`Manifest::synthetic_mlp`] ladders).
+    pub fn host_with(manifest: Manifest) -> Engine {
+        Engine { manifest, backend: Box::new(HostBackend::new()) }
+    }
+
+    /// Engine over an explicit backend (escape hatch for new backends).
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Engine {
+        Engine { manifest, backend }
+    }
+
+    /// Short identifier of the active backend (`"pjrt"` / `"host"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Total wall-clock seconds spent compiling artifacts so far.
     pub fn compile_seconds(&self) -> f64 {
-        *self.compile_s.lock().unwrap()
+        self.backend.stats().compile_s
     }
 
     /// Number of distinct artifacts compiled into the cache so far.
     pub fn cached_executables(&self) -> usize {
-        self.cache.len()
+        self.backend.stats().cached_executables
     }
 
-    /// Get (compile-on-demand) the executable for an artifact.
-    ///
-    /// The compile runs under the owning shard's write lock, so a cold
-    /// artifact is compiled exactly once even when many workers race for
-    /// it; cached artifacts on other shards stay readable throughout.
-    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        let shard = self.cache.shard(name);
-        if let Some(exe) = shard.read().unwrap().get(name) {
-            return Ok(exe.clone());
-        }
-        let mut cache = shard.write().unwrap();
-        // a racing worker may have compiled while we waited for the lock
-        if let Some(exe) = cache.get(name) {
-            return Ok(exe.clone());
-        }
-        let spec = self.manifest.artifact(name)?;
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.file.to_str().context("non-utf8 path")?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Arc::new(self.client.compile(&comp)?);
-        *self.compile_s.lock().unwrap() += t0.elapsed().as_secs_f64();
-        cache.insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Pre-compile a set of artifacts (amortizes compile time up front).
+    /// Pre-prepare a set of artifacts (amortizes compile time up front).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
         for n in names {
-            self.executable(n)?;
+            self.backend.prepare(self.manifest.artifact(n)?)?;
         }
         Ok(())
     }
@@ -205,32 +177,20 @@ impl Engine {
     }
 
     /// Execute one artifact: inputs in manifest order, outputs in manifest
-    /// order. (Artifacts are lowered with return_tuple=True, so the single
-    /// device output is a tuple literal that we decompose.)
+    /// order.
     pub fn call(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
-        let spec = self.manifest.artifact(name)?.clone();
-        self.check_inputs(&spec, inputs)?;
-        let exe = self.executable(name)?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(literal_from_value)
-            .collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&lits)?;
-        let out_lit = result[0][0].to_literal_sync()?;
-        let parts = out_lit.to_tuple()?;
-        if parts.len() != spec.outputs.len() {
+        let spec = self.manifest.artifact(name)?;
+        self.check_inputs(spec, inputs)?;
+        let outs = self.backend.execute(spec, inputs)?;
+        if outs.len() != spec.outputs.len() {
             bail!(
                 "artifact {}: expected {} outputs, got {}",
                 name,
                 spec.outputs.len(),
-                parts.len()
+                outs.len()
             );
         }
-        parts
-            .iter()
-            .zip(spec.outputs.iter())
-            .map(|(l, s)| value_from_literal(l, s))
-            .collect()
+        Ok(outs)
     }
 
     /// Map outputs by name for convenient lookup.
@@ -246,16 +206,18 @@ impl Engine {
     }
 
     /// Execute one artifact over many independent input sets, fanning the
-    /// calls across `jobs` worker threads (the batched-evaluation entry
-    /// point). The executable is compiled once up front so workers hit the
-    /// cache's read path only; outputs come back in input order.
+    /// calls across `jobs` [`crate::util::pool`] worker threads (the
+    /// batched-evaluation entry point). The artifact is prepared once up
+    /// front — PJRT workers then hit the cache's read path only, host
+    /// workers run the validated pure kernels — and outputs come back in
+    /// input order on either backend.
     pub fn call_batch(
         &self,
         name: &str,
         inputs: &[Vec<Value>],
         jobs: usize,
     ) -> Result<Vec<Vec<Value>>> {
-        self.executable(name)?;
+        self.backend.prepare(self.manifest.artifact(name)?)?;
         crate::util::par_map(inputs, jobs, |inp| self.call(name, inp))
             .into_iter()
             .collect()
@@ -265,12 +227,7 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn smoke_client() {
-        let s = smoke().unwrap();
-        assert!(s.contains("cpu"));
-    }
+    use crate::tensor::Tensor;
 
     /// Manifest + dummy HLO-text artifact in a unique temp dir.
     fn stub_artifacts(tag: &str) -> std::path::PathBuf {
@@ -304,6 +261,7 @@ mod tests {
         }
         let dir = stub_artifacts("conc");
         let eng = Engine::new(&dir).unwrap();
+        assert_eq!(eng.backend_name(), "pjrt");
         let eng_ref = &eng;
         std::thread::scope(|s| {
             for _ in 0..8 {
@@ -340,5 +298,59 @@ mod tests {
         // correct shape reaches the stub backend, which reports loudly
         let good = eng.call("a", &[Value::F32(Tensor::zeros(&[2, 4]))]);
         assert!(format!("{:?}", good.unwrap_err()).contains("offline xla stub"));
+    }
+
+    #[test]
+    fn host_engine_runs_without_artifacts() {
+        let eng = Engine::host_with(Manifest::synthetic_mlp("t", &[6, 5, 3], 2));
+        assert_eq!(eng.backend_name(), "host");
+        assert_eq!(eng.cached_executables(), 0, "nothing to compile");
+        eng.warmup(&["t_eval", "t_lrp", "assign_1024"]).unwrap();
+        let state = crate::nn::ModelState::init(eng.manifest.model("t").unwrap(), 3);
+        let mut inputs: Vec<Value> = state
+            .spec
+            .params
+            .iter()
+            .map(|p| Value::F32(state.params[&p.name].clone()))
+            .collect();
+        inputs.push(Value::F32(Tensor::ones(&[2, 6])));
+        inputs.push(Value::I32(crate::tensor::TensorI32::new(vec![2], vec![0, 2])));
+        let outs = eng.call_named("t_eval", &inputs).unwrap();
+        assert!(outs["loss"].as_f32().as_scalar() > 0.0);
+        let c = outs["correct"].as_f32().as_scalar();
+        assert!((0.0..=2.0).contains(&c));
+    }
+
+    #[test]
+    fn host_engine_rejects_unknown_and_bad_shapes() {
+        let eng = Engine::host_with(Manifest::synthetic_mlp("t", &[6, 3], 2));
+        assert!(eng.call("nope", &[]).is_err());
+        // wrong input count fails at the signature check
+        let r = eng.call("t_eval", &[]);
+        assert!(format!("{:?}", r.unwrap_err()).contains("expected"));
+    }
+
+    #[test]
+    fn host_call_batch_is_order_preserving() {
+        let eng = Engine::host_with(Manifest::synthetic_mlp("t", &[4, 3], 2));
+        let state = crate::nn::ModelState::init(eng.manifest.model("t").unwrap(), 9);
+        let mk = |scale: f32| -> Vec<Value> {
+            let mut v: Vec<Value> = state
+                .spec
+                .params
+                .iter()
+                .map(|p| Value::F32(state.params[&p.name].clone()))
+                .collect();
+            v.push(Value::F32(Tensor::full(&[2, 4], scale)));
+            v.push(Value::I32(crate::tensor::TensorI32::new(vec![2], vec![0, 1])));
+            v
+        };
+        let sets: Vec<Vec<Value>> = (0..6).map(|i| mk(i as f32 * 0.3)).collect();
+        let serial = eng.call_batch("t_eval", &sets, 1).unwrap();
+        let par = eng.call_batch("t_eval", &sets, 4).unwrap();
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a[0].as_f32().as_scalar(), b[0].as_f32().as_scalar());
+            assert_eq!(a[1].as_f32().as_scalar(), b[1].as_f32().as_scalar());
+        }
     }
 }

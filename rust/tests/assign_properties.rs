@@ -1,0 +1,225 @@
+//! Algorithmic invariants of the ECQ^x assignment, exercised through the
+//! host-backend `assign_<bucket>` artifacts via `coordinator`-style calls
+//! — mirroring `python/tests/test_assign_properties.py` so both stacks
+//! pin the same semantics. Driven by the offline property harness
+//! (`util::prop`), replayable by seed.
+
+use ecqx::coordinator::{AssignConfig, Assigner, Method};
+use ecqx::nn::ModelState;
+use ecqx::quant::{Codebook, K_MAX};
+use ecqx::runtime::{Engine, Manifest};
+use ecqx::tensor::{Tensor, Value};
+use ecqx::util::prop;
+
+fn host_engine() -> Engine {
+    Engine::host_with(Manifest::synthetic_mlp("m", &[16, 8, 4], 4))
+}
+
+/// One assign-artifact call exactly as the coordinator builds it: pad to
+/// the bucket, execute, strip padding.
+fn call_assign(
+    eng: &Engine,
+    w: &[f32],
+    r: &[f32],
+    mask: &[f32],
+    cb: &Codebook,
+    lam: f32,
+) -> (Vec<i32>, Vec<f32>, Vec<f32>) {
+    let n = w.len();
+    let bucket = eng.manifest.bucket_for(n).unwrap();
+    let mut wp = w.to_vec();
+    wp.resize(bucket, 0.0);
+    let mut rp = r.to_vec();
+    rp.resize(bucket, 1.0);
+    let mut mp = mask.to_vec();
+    mp.resize(bucket, 0.0);
+    let outs = eng
+        .call(
+            &format!("assign_{bucket}"),
+            &[
+                Value::F32(Tensor::new(vec![bucket], wp)),
+                Value::F32(Tensor::new(vec![bucket], rp)),
+                Value::F32(Tensor::new(vec![bucket], mp)),
+                Value::F32(Tensor::new(vec![K_MAX], cb.values.clone())),
+                Value::F32(Tensor::new(vec![K_MAX], cb.valid.clone())),
+                Value::F32(Tensor::scalar(lam)),
+            ],
+        )
+        .unwrap();
+    (
+        outs[0].as_i32().data[..n].to_vec(),
+        outs[1].as_f32().data[..n].to_vec(),
+        outs[2].as_f32().data.clone(),
+    )
+}
+
+/// With uniform relevance and lambda = 0, every weight lands on its
+/// nearest *valid* centroid.
+#[test]
+fn property_lambda_zero_is_nearest_neighbour() {
+    let eng = host_engine();
+    prop::check("assign: lam=0 is nearest neighbour", 12, |rng| {
+        let bits = 2 + (rng.below(4) as u32); // 2..=5
+        let n = 256 + rng.below(768);
+        let w = prop::normal_vec(rng, n, 0.1);
+        let cb = Codebook::fit(&w, bits);
+        let ones = vec![1.0f32; n];
+        let (idx, _, _) = call_assign(&eng, &w, &ones, &ones, &cb, 0.0);
+        for (i, (&wi, &slot)) in w.iter().zip(idx.iter()).enumerate() {
+            let mut best = 0usize;
+            let mut bd = f32::INFINITY;
+            for c in 0..K_MAX {
+                if cb.valid[c] == 0.0 {
+                    continue;
+                }
+                let d = (wi - cb.values[c]).powi(2);
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            if slot != best as i32 {
+                return Err(format!(
+                    "weight {i} ({wi}) -> slot {slot}, nearest is {best}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Zero-cluster sparsity is monotone in the lambda knob (in the regime
+/// where the zero cluster is the nearest-neighbour mode).
+#[test]
+fn property_sparsity_monotone_in_lambda() {
+    let eng = host_engine();
+    prop::check("assign: sparsity monotone in lambda", 8, |rng| {
+        let n = 2048;
+        let w = prop::normal_vec(rng, n, 0.1);
+        let cb = Codebook::fit(&w, 4);
+        let ones = vec![1.0f32; n];
+        // skip draws where sampling noise makes another cluster the mode
+        let (_, _, counts) = call_assign(&eng, &w, &ones, &ones, &cb, 0.0);
+        let mode = counts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if mode != 0 {
+            return Ok(());
+        }
+        let mut last = -1.0f64;
+        for lam in [0.0f32, 1e-5, 1e-4, 5e-4, 2e-3] {
+            let (idx, _, _) = call_assign(&eng, &w, &ones, &ones, &cb, lam);
+            let sp = idx.iter().filter(|&&i| i == 0).count() as f64 / n as f64;
+            if sp + 1e-9 < last {
+                return Err(format!("sparsity dropped to {sp} at lam={lam}"));
+            }
+            last = sp;
+        }
+        Ok(())
+    });
+}
+
+/// Raising the uniform relevance factor can only move weights OUT of the
+/// zero cluster, never into it.
+#[test]
+fn property_relevance_monotone() {
+    let eng = host_engine();
+    prop::check("assign: relevance monotone", 10, |rng| {
+        let n = 512;
+        let w = prop::normal_vec(rng, n, 0.1);
+        let cb = Codebook::fit(&w, 4);
+        let ones = vec![1.0f32; n];
+        let lam = 2e-4;
+        let lo_r: Vec<f32> = vec![0.3; n];
+        let hi_r: Vec<f32> = vec![3.0; n];
+        let (lo, _, _) = call_assign(&eng, &w, &lo_r, &ones, &cb, lam);
+        let (hi, _, _) = call_assign(&eng, &w, &hi_r, &ones, &cb, lam);
+        let moved_in = lo
+            .iter()
+            .zip(hi.iter())
+            .filter(|(&l, &h)| l != 0 && h == 0)
+            .count();
+        if moved_in != 0 {
+            return Err(format!("{moved_in} weights moved INTO zero as relevance rose"));
+        }
+        Ok(())
+    });
+}
+
+/// Every weight maps to a valid centroid index; `qw` is exactly the
+/// indexed centroid; counts reflect unmasked elements only.
+#[test]
+fn property_idx_valid_qw_consistent_counts_masked() {
+    let eng = host_engine();
+    prop::check("assign: idx valid / qw consistent / counts masked", 10, |rng| {
+        let n = 1024;
+        let n_valid = 700 + rng.below(300);
+        let w = prop::normal_vec(rng, n, 0.1);
+        let bits = 2 + (rng.below(4) as u32);
+        let cb = Codebook::fit(&w, bits);
+        let r: Vec<f32> = (0..n).map(|_| rng.range(0.2, 3.0)).collect();
+        let mask: Vec<f32> = (0..n).map(|i| (i < n_valid) as u32 as f32).collect();
+        let (idx, qw, counts) = call_assign(&eng, &w, &r, &mask, &cb, 1e-4);
+        for i in 0..n {
+            let slot = idx[i];
+            if !(0..K_MAX as i32).contains(&slot) {
+                return Err(format!("idx[{i}] = {slot} out of range"));
+            }
+            if cb.valid[slot as usize] == 0.0 {
+                return Err(format!("idx[{i}] = {slot} is an invalid codebook slot"));
+            }
+            if i >= n_valid && slot != 0 {
+                return Err(format!("masked element {i} left the zero cluster"));
+            }
+            if (qw[i] - cb.values[slot as usize] * mask[i]).abs() > 1e-7 {
+                return Err(format!("qw[{i}] inconsistent with centroid {slot}"));
+            }
+        }
+        let total: f64 = counts.iter().map(|&c| c as f64).sum();
+        if (total - n_valid as f64).abs() > 1e-6 {
+            return Err(format!("counts total {total} != valid {n_valid}"));
+        }
+        for c in 0..K_MAX {
+            let expect = idx[..n_valid].iter().filter(|&&s| s == c as i32).count();
+            if (counts[c] - expect as f32).abs() > 1e-6 {
+                return Err(format!("counts[{c}] = {} != {expect}", counts[c]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The coordinator's `Assigner::assign_all` over the host engine leaves
+/// every quantized layer with valid centroid indices and consistent
+/// dequantized weights.
+#[test]
+fn assigner_assign_all_yields_valid_indices() {
+    let eng = host_engine();
+    let spec = eng.manifest.model("m").unwrap().clone();
+    for seed in [1u64, 9, 42] {
+        let mut state = ModelState::init(&spec, seed);
+        let asg = Assigner::new(
+            AssignConfig { method: Method::Ecq, bits: 4, lambda: 2.0, ..Default::default() },
+            &state,
+        );
+        asg.assign_all(&eng, &mut state).unwrap();
+        assert_eq!(state.qlayers.len(), state.qnames().len());
+        for (name, ql) in &state.qlayers {
+            for (i, &slot) in ql.idx.data.iter().enumerate() {
+                assert!(
+                    (0..K_MAX as i32).contains(&slot)
+                        && ql.codebook.valid[slot as usize] > 0.5,
+                    "{name}[{i}]: invalid slot {slot}"
+                );
+                assert_eq!(
+                    ql.qw.data[i],
+                    ql.codebook.values[slot as usize],
+                    "{name}[{i}]: qw inconsistent"
+                );
+            }
+        }
+    }
+}

@@ -1,17 +1,27 @@
 //! Determinism of the parallel campaign runner: the same grid must yield
 //! bitwise-identical `WorkingPoint` rows at any `--jobs` count, with
 //! every trial reported through the event stream and bounded in-flight
-//! concurrency respected. Trials here are synthetic (pure functions of
-//! the per-trial seed), so the suite runs without artifacts or a PJRT
-//! backend — the engine-level concurrency smoke tests live in
-//! `src/runtime/mod.rs`.
+//! concurrency respected.
+//!
+//! Two trial flavours run without artifacts or a PJRT backend: synthetic
+//! trials (pure functions of the per-trial seed) pin the orchestrator's
+//! invariants in isolation, and real QAT trials executed on the host
+//! reference backend pin the whole engine-backed path end to end. The
+//! engine-level concurrency smoke tests live in `src/runtime/mod.rs`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use ecqx::coordinator::binder::ParamSource;
 use ecqx::coordinator::campaign::{self, CampaignOptions, Event, Grid, TrialSpec};
-use ecqx::coordinator::Method;
+use ecqx::coordinator::sweep::{SweepConfig, SweepRunner};
+use ecqx::coordinator::trainer::{evaluate, Pretrainer};
+use ecqx::coordinator::{AssignConfig, Method, QatConfig};
+use ecqx::data::gsc::GscDataset;
+use ecqx::data::DataLoader;
 use ecqx::metrics::WorkingPoint;
+use ecqx::nn::ModelState;
+use ecqx::runtime::{Engine, Manifest};
 use ecqx::util::Rng;
 
 /// A synthetic trial: derives every field from the deterministic per-trial
@@ -168,6 +178,59 @@ fn failure_stops_new_claims() {
     .unwrap_err();
     // fail-fast: trials 0..=3 ran, the remaining 20 were never claimed
     assert_eq!(ran.load(Ordering::SeqCst), 4);
+}
+
+/// Serial-vs-parallel determinism with *real* (host-executed) trial
+/// results: a lambda sweep of engine-backed QAT runs on the host
+/// reference backend must produce bitwise-identical rows at any job
+/// count — the ISSUE-3 acceptance gate for real trial payloads.
+#[test]
+fn host_backend_trials_match_serial_bitwise() {
+    let engine = Engine::host_with(Manifest::synthetic_mlp("mlp_tiny", &[360, 32, 12], 32));
+    let spec = engine.manifest.model("mlp_tiny").unwrap().clone();
+    let train = GscDataset::new(256, 5, true);
+    let val = GscDataset::new(128, 5, false);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 5);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 5);
+
+    // brief pre-training so the trials quantize a non-degenerate model
+    let mut state = ModelState::init(&spec, 5);
+    let pre = Pretrainer { lr: 1e-3, verbose: false, ..Default::default() };
+    pre.run(&engine, &mut state, &train_dl, 2).unwrap();
+    let baseline = evaluate(&engine, &state, &val_dl, ParamSource::Fp).unwrap();
+
+    let runner = SweepRunner::new(&engine, state);
+    let cfg = SweepConfig {
+        model: "mlp_tiny".into(),
+        method: Method::Ecqx,
+        bits: 4,
+        lambdas: vec![0.0, 0.5, 4.0],
+        p: 0.3,
+        qat: QatConfig {
+            assign: AssignConfig::default(),
+            epochs: 1,
+            lr: 4e-4,
+            lrp_warmup: 4,
+            verbose: false,
+            ..Default::default()
+        },
+        baseline_acc: baseline.accuracy,
+        seed: 17,
+    };
+    let serial = runner.run_parallel(&cfg, &train_dl, &val_dl, 1).unwrap();
+    assert_eq!(serial.len(), 3);
+    for wp in &serial {
+        // real host-executed results, not placeholders
+        assert!((0.0..=1.0).contains(&wp.accuracy), "{wp:?}");
+        assert!(wp.size_bytes > 0 && wp.compression_ratio > 1.0, "{wp:?}");
+    }
+    assert!(serial.iter().all(|wp| (0.0..1.0).contains(&wp.sparsity)));
+    for jobs in [2, 4] {
+        let par = runner.run_parallel(&cfg, &train_dl, &val_dl, jobs).unwrap();
+        let a: Vec<String> = serial.iter().map(|p| p.to_csv()).collect();
+        let b: Vec<String> = par.iter().map(|p| p.to_csv()).collect();
+        assert_eq!(a, b, "host rows must be bitwise identical at jobs={jobs}");
+    }
 }
 
 #[test]

@@ -1,0 +1,115 @@
+//! Codec roundtrip property tests: encode→decode identity for the
+//! Huffman, raw CABAC, and DeepCABAC coders over seeded random sparse
+//! weight tensors (realistic assignments from the pure-rust ECQ^x
+//! reference), driven by the offline property harness (`util::prop`).
+
+use ecqx::codec::cabac::{BinDecoder, BinEncoder, BinProb};
+use ecqx::codec::{self, deepcabac, huffman};
+use ecqx::quant::{assign_ref, Codebook};
+use ecqx::tensor::TensorI32;
+use ecqx::util::prop;
+use ecqx::util::Rng;
+
+/// Slot indices of a realistic sparse assignment: fitted codebook +
+/// entropy constraint over a seeded gaussian weight tensor.
+fn sparse_assignment(rng: &mut Rng, n: usize, bits: u32, lam: f32) -> (TensorI32, Codebook) {
+    let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.08)).collect();
+    let cb = Codebook::fit(&w, bits);
+    let r = vec![1.0f32; n];
+    let m = vec![1.0f32; n];
+    let a = assign_ref(&w, &r, &m, &cb, lam);
+    (TensorI32::new(vec![n], a.idx), cb)
+}
+
+#[test]
+fn property_huffman_roundtrip_on_assignments() {
+    prop::check("huffman roundtrip on sparse assignments", 12, |rng| {
+        let n = 512 + rng.below(4096);
+        let bits = 2 + (rng.below(4) as u32);
+        let lam = rng.range(0.0, 2e-3);
+        let (idx, _) = sparse_assignment(rng, n, bits, lam);
+        let levels = codec::slots_to_levels(&idx);
+        let decoded = huffman::decode(&huffman::encode(&levels));
+        if decoded != levels {
+            return Err("huffman roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_deepcabac_roundtrip_on_assignments() {
+    prop::check("deepcabac roundtrip on sparse assignments", 12, |rng| {
+        let n = 512 + rng.below(8192);
+        let bits = 2 + (rng.below(4) as u32);
+        let lam = rng.range(0.0, 4e-3);
+        let (idx, _) = sparse_assignment(rng, n, bits, lam);
+        let levels = codec::slots_to_levels(&idx);
+        let bytes = deepcabac::encode_levels(&levels);
+        if deepcabac::decode_levels(&bytes, levels.len()) != levels {
+            return Err("deepcabac roundtrip mismatch".into());
+        }
+        // the paper's compressibility claim: sparse sources stay far
+        // below the packed bit width
+        let sparsity =
+            levels.iter().filter(|&&l| l == 0).count() as f64 / levels.len() as f64;
+        if sparsity > 0.8 {
+            let bpw = bytes.len() as f64 * 8.0 / levels.len() as f64;
+            if bpw >= bits as f64 {
+                return Err(format!("{sparsity:.2}-sparse coded at {bpw:.2} b/w"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_raw_cabac_roundtrip_mixed_contexts() {
+    // the raw range coder under the DeepCABAC binarization patterns:
+    // adaptive contexts interleaved with bypass bits
+    prop::check("raw cabac roundtrip (contexts + bypass)", 15, |rng| {
+        let n = 200 + rng.below(3000);
+        let p_one = rng.range(0.05, 0.95) as f64;
+        let bits: Vec<bool> = (0..n).map(|_| rng.chance(p_one)).collect();
+        let bypass: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0x0F) as u8).collect();
+        let mut enc = BinEncoder::new();
+        let mut ctxs = [BinProb::default(); 3];
+        for (i, &b) in bits.iter().enumerate() {
+            enc.encode(&mut ctxs[i % 3], b);
+            if i % 7 == 0 {
+                enc.encode_bypass_bits(bypass[i] as u64, 4);
+            }
+        }
+        let bytes = enc.finish();
+        let mut dec = BinDecoder::new(&bytes);
+        let mut ctxs = [BinProb::default(); 3];
+        for (i, &b) in bits.iter().enumerate() {
+            if dec.decode(&mut ctxs[i % 3]) != b {
+                return Err(format!("context bit {i} mismatched"));
+            }
+            if i % 7 == 0 && dec.decode_bypass_bits(4) != bypass[i] as u64 {
+                return Err(format!("bypass nibble at {i} mismatched"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_tensor_container_roundtrip() {
+    // encode_tensor/decode_tensor: the exact path the .ecqx container and
+    // compressed_size() use
+    prop::check("encode_tensor roundtrip", 10, |rng| {
+        let rows = 8 + rng.below(64);
+        let cols = 8 + rng.below(64);
+        let bits = 2 + (rng.below(4) as u32);
+        let (mut idx, cb) = sparse_assignment(rng, rows * cols, bits, 1e-4);
+        idx.shape = vec![rows, cols];
+        let enc = codec::encode_tensor(&idx, &cb);
+        let dec = codec::decode_tensor(&enc);
+        if dec.data != idx.data || dec.shape != idx.shape {
+            return Err("tensor container roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,121 @@
+//! Golden-vector conformance tests: fixture tensors generated from the
+//! Python reference kernels (`python/tests/gen_golden.py`, mirroring
+//! `python/compile/kernels/ref.py`) are committed under `tests/golden/`;
+//! the rust host kernels must reproduce them within 1e-5.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use ecqx::quant::assign_raw;
+use ecqx::runtime::host::{lrp_dense_rw, qdense, qdense_gather};
+use ecqx::util::prop::assert_close;
+
+/// One parsed fixture tensor: shape + raw (still textual) values.
+struct Fixture {
+    tensors: HashMap<String, (Vec<usize>, Vec<String>)>,
+    name: String,
+}
+
+impl Fixture {
+    fn load(name: &str) -> Fixture {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/golden")
+            .join(format!("{name}.txt"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+        let mut tensors = HashMap::new();
+        let mut lines = text.lines().filter(|l| !l.trim_start().starts_with('#'));
+        while let Some(header) = lines.next() {
+            let header = header.trim();
+            if header.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = header.split_whitespace().collect();
+            assert_eq!(toks[0], "tensor", "{name}: bad fixture line {header}");
+            let shape: Vec<usize> = if toks[3] == "scalar" {
+                vec![]
+            } else {
+                toks[3].split('x').map(|d| d.parse().unwrap()).collect()
+            };
+            let values: Vec<String> = lines
+                .next()
+                .unwrap_or_else(|| panic!("{name}: {} has no data line", toks[1]))
+                .split_whitespace()
+                .map(str::to_string)
+                .collect();
+            let numel: usize = shape.iter().product();
+            assert_eq!(values.len(), numel.max(1), "{name}: {} wrong numel", toks[1]);
+            tensors.insert(toks[1].to_string(), (shape, values));
+        }
+        Fixture { tensors, name: name.to_string() }
+    }
+
+    fn shape(&self, t: &str) -> &[usize] {
+        &self.tensors.get(t).unwrap_or_else(|| panic!("{}: no tensor {t}", self.name)).0
+    }
+
+    fn f32s(&self, t: &str) -> Vec<f32> {
+        self.tensors[t].1.iter().map(|v| v.parse().unwrap()).collect()
+    }
+
+    fn i32s(&self, t: &str) -> Vec<i32> {
+        self.tensors[t].1.iter().map(|v| v.parse().unwrap()).collect()
+    }
+
+    fn scalar(&self, t: &str) -> f32 {
+        let v = self.f32s(t);
+        assert_eq!(v.len(), 1);
+        v[0]
+    }
+}
+
+#[test]
+fn golden_qdense_matches_python_reference() {
+    let fx = Fixture::load("qdense");
+    let (m, k) = (fx.shape("a")[0], fx.shape("a")[1]);
+    let n = fx.shape("w")[1];
+    let y = qdense(&fx.f32s("a"), &fx.f32s("w"), &fx.f32s("b"), m, k, n);
+    assert_close(&y, &fx.f32s("y"), 1e-5).unwrap();
+}
+
+#[test]
+fn golden_qdense_gather_matches_python_reference() {
+    let fx = Fixture::load("qdense_gather");
+    let (m, k) = (fx.shape("a")[0], fx.shape("a")[1]);
+    let n = fx.shape("idx")[1];
+    let y = qdense_gather(
+        &fx.f32s("a"),
+        &fx.i32s("idx"),
+        &fx.f32s("codebook"),
+        &fx.f32s("b"),
+        m,
+        k,
+        n,
+    );
+    assert_close(&y, &fx.f32s("y"), 1e-5).unwrap();
+}
+
+#[test]
+fn golden_lrp_dense_rw_matches_python_reference() {
+    let fx = Fixture::load("lrp_dense_rw");
+    let (batch, din) = (fx.shape("a")[0], fx.shape("a")[1]);
+    let dout = fx.shape("s")[1];
+    let rw = lrp_dense_rw(&fx.f32s("a"), &fx.f32s("s"), &fx.f32s("w"), batch, din, dout);
+    assert_close(&rw, &fx.f32s("rw"), 1e-5).unwrap();
+}
+
+#[test]
+fn golden_ecqx_assign_matches_python_reference() {
+    let fx = Fixture::load("ecqx_assign");
+    let a = assign_raw(
+        &fx.f32s("w"),
+        &fx.f32s("r"),
+        &fx.f32s("mask"),
+        &fx.f32s("centroids"),
+        &fx.f32s("cvalid"),
+        fx.scalar("lam"),
+    );
+    assert_eq!(a.idx, fx.i32s("idx"), "assignment indices diverge");
+    assert_close(&a.qw, &fx.f32s("qw"), 1e-5).unwrap();
+    assert_close(&a.counts, &fx.f32s("counts"), 1e-5).unwrap();
+}

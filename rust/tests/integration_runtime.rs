@@ -1,39 +1,90 @@
-//! Integration tests over the PJRT runtime + HLO artifacts.
+//! Integration tests over the execution runtime.
 //!
-//! These tests need `artifacts/` (run `make artifacts` first); they verify
-//! that the lowered L1/L2 computations agree with the independent pure-rust
-//! reference implementations — the three-way cross-check of DESIGN.md.
+//! Two tiers (DESIGN.md §5):
+//!
+//! * **Host tier** (always runs, zero skips): the same cross-checks
+//!   executed through `Engine::host_with` on a small synthetic MLP — the
+//!   full train → LRP → assign → quantize → eval pipeline runs end to end
+//!   with no `artifacts/` directory and no PJRT bindings present.
+//! * **PJRT tier** (`#[ignore]`-by-default): the artifact-vs-reference
+//!   cross-checks against real lowered HLO. Run with
+//!   `cargo test -- --ignored` after `make artifacts` on a build linked
+//!   against real PJRT bindings.
 
 use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
+use ecqx::coordinator::trainer::{evaluate, evaluate_many, Pretrainer};
+use ecqx::coordinator::{AssignConfig, Method, QatConfig, QatTrainer};
+use ecqx::data::gsc::GscDataset;
 use ecqx::data::{Batch, DataLoader};
 use ecqx::lrp::{DenseLayer, Mlp};
-use ecqx::nn::ModelState;
+use ecqx::nn::{checkpoint, ModelState, QLayer};
 use ecqx::quant::{assign_ref, Codebook};
-use ecqx::runtime::Engine;
-use ecqx::tensor::{Tensor, Value};
+use ecqx::runtime::{Engine, Manifest, ModelSpec};
+use ecqx::tensor::{Tensor, TensorI32, Value};
 use ecqx::util::Rng;
 
-/// Engine over the real artifacts, or `None` (skip) when `artifacts/` is
-/// absent or the offline `xla` stub is active — these tests exercise real
-/// PJRT execution, which neither case can provide. Run `make artifacts`
-/// and build against the real bindings to enable them.
-fn engine() -> Option<Engine> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("skipping: artifacts/ missing — run `make artifacts`");
-        return None;
-    }
-    if ecqx::runtime::backend_is_stub() {
-        eprintln!("skipping: offline xla stub cannot execute artifacts");
-        return None;
-    }
-    Some(Engine::new(&dir).unwrap())
+/// Small dense ladder over the GSC feature space: big enough to exercise
+/// multi-layer LRP/backprop, small enough for debug-mode test runs.
+const TINY_DIMS: [usize; 4] = [360, 48, 24, 12];
+const TINY_BATCH: usize = 32;
+
+fn host_engine() -> Engine {
+    Engine::host_with(Manifest::synthetic_mlp("mlp_tiny", &TINY_DIMS, TINY_BATCH))
 }
 
-/// assign_<bucket> artifact (Pallas kernel) vs the pure-rust reference.
-#[test]
-fn assign_artifact_matches_rust_reference() {
-    let Some(eng) = engine() else { return };
+/// Engine over the real artifacts, for the `#[ignore]` PJRT tier. Fails
+/// loudly (instead of skipping) when prerequisites are missing, so an
+/// explicit `--ignored` run never silently passes.
+fn pjrt_engine() -> Engine {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.txt").exists(),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    assert!(
+        !ecqx::runtime::backend_is_stub(),
+        "offline xla stub cannot execute artifacts — build against real PJRT bindings"
+    );
+    Engine::new(&dir).unwrap()
+}
+
+/// Recover the dense ladder `[d0, .., classes]` from a model spec.
+fn mlp_dims(spec: &ModelSpec) -> Vec<usize> {
+    let mut dims = vec![spec.input_dim];
+    let mut i = 0usize;
+    while let Some(p) = spec.params.iter().find(|p| p.name == format!("w{i}")) {
+        dims.push(p.shape[1]);
+        i += 1;
+    }
+    dims
+}
+
+/// Quantize every layer of `state` with a plain nearest-neighbour-ish
+/// assignment so the `q_`/`idx_` slots exist.
+fn quantize_state(state: &mut ModelState, bits: u32, lam: f32) {
+    for name in state.qnames() {
+        let w = state.params[&name].clone();
+        let cb = Codebook::fit(&w.data, bits);
+        let r = vec![1.0; w.numel()];
+        let m = vec![1.0; w.numel()];
+        let a = assign_ref(&w.data, &r, &m, &cb, lam);
+        state.qlayers.insert(
+            name,
+            QLayer {
+                qw: Tensor::new(w.shape.clone(), a.qw),
+                idx: TensorI32::new(w.shape.clone(), a.idx),
+                codebook: cb,
+            },
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared cross-check bodies (parameterized by engine — both tiers use them)
+// ---------------------------------------------------------------------------
+
+/// assign_<bucket> execution vs the pure-rust reference.
+fn check_assign_matches_reference(eng: &Engine) {
     let mut rng = Rng::new(101);
     for &(n, bits, lam) in
         &[(700usize, 2u32, 0.0f32), (1024, 4, 1e-4), (5000, 4, 5e-4), (9000, 5, 1e-3)]
@@ -81,18 +132,18 @@ fn assign_artifact_matches_rust_reference() {
                 assert!((qw_art[i] - reference.qw[i]).abs() < 1e-6);
             }
         }
+        // counts cover exactly the unmasked elements
+        let total: f32 = outs[2].as_f32().data.iter().sum();
+        assert_eq!(total, n as f32);
     }
 }
 
-/// <mlp_gsc>_lrp artifact vs the independent pure-rust epsilon-LRP.
-#[test]
-fn lrp_artifact_matches_rust_reference() {
-    let Some(eng) = engine() else { return };
-    let spec = eng.manifest.model("mlp_gsc").unwrap().clone();
+/// <model>_lrp execution vs the independent pure-rust epsilon-LRP.
+fn check_lrp_matches_reference(eng: &Engine, model: &str) {
+    let spec = eng.manifest.model(model).unwrap().clone();
     let state = ModelState::init(&spec, 7);
-    // build the rust reference MLP from the same weights
-    let dims = [360usize, 512, 512, 256, 256, 128, 128, 12];
-    let layers: Vec<DenseLayer> = (0..7)
+    let dims = mlp_dims(&spec);
+    let layers: Vec<DenseLayer> = (0..dims.len() - 1)
         .map(|i| {
             DenseLayer::new(
                 dims[i],
@@ -104,11 +155,11 @@ fn lrp_artifact_matches_rust_reference() {
         .collect();
     let mlp = Mlp { layers };
 
-    let ds = ecqx::data::gsc::GscDataset::new(spec.batch, 3, false);
+    let ds = GscDataset::new(spec.batch, 3, false);
     let dl = DataLoader::new(&ds, spec.batch, false, 0);
     let batch = dl.epoch(0).next().unwrap();
 
-    let art = eng.manifest.artifact("mlp_gsc_lrp").unwrap().clone();
+    let art = eng.manifest.artifact(&format!("{model}_lrp")).unwrap().clone();
     let scalars = Scalars { eqw: 1.0, ..Default::default() };
     let inputs = bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &scalars).unwrap();
     let outs = eng.call_named(&art.name, &inputs).unwrap();
@@ -127,35 +178,17 @@ fn lrp_artifact_matches_rust_reference() {
     }
 }
 
-/// fp_train artifact at lr=0 must return parameters unchanged;
-/// ste_train must return the FP background unchanged at lr=0.
-#[test]
-fn train_steps_are_identity_at_zero_lr() {
-    let Some(eng) = engine() else { return };
-    let spec = eng.manifest.model("mlp_gsc").unwrap().clone();
+/// fp_train / ste_train at lr=0 must return the FP background unchanged.
+fn check_train_steps_identity_at_zero_lr(eng: &Engine, model: &str) {
+    let spec = eng.manifest.model(model).unwrap().clone();
     let mut state = ModelState::init(&spec, 11);
-    // quantize so the q_ slots exist
-    for name in state.qnames() {
-        let w = state.params[&name].clone();
-        let cb = Codebook::fit(&w.data, 4);
-        let r = vec![1.0; w.numel()];
-        let m = vec![1.0; w.numel()];
-        let a = assign_ref(&w.data, &r, &m, &cb, 0.0);
-        state.qlayers.insert(
-            name,
-            ecqx::nn::QLayer {
-                qw: Tensor::new(w.shape.clone(), a.qw),
-                idx: ecqx::tensor::TensorI32::new(w.shape.clone(), a.idx),
-                codebook: cb,
-            },
-        );
-    }
-    let ds = ecqx::data::gsc::GscDataset::new(spec.batch, 5, true);
+    quantize_state(&mut state, 4, 0.0);
+    let ds = GscDataset::new(spec.batch, 5, true);
     let dl = DataLoader::new(&ds, spec.batch, false, 0);
     let batch: Batch = dl.epoch(0).next().unwrap();
     let scalars = Scalars { t: 1.0, lr: 0.0, gs: 1.0, ..Default::default() };
-    for art_name in ["mlp_gsc_fp_train", "mlp_gsc_ste_train"] {
-        let art = eng.manifest.artifact(art_name).unwrap().clone();
+    for art_name in [format!("{model}_fp_train"), format!("{model}_ste_train")] {
+        let art = eng.manifest.artifact(&art_name).unwrap().clone();
         let inputs =
             bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &scalars).unwrap();
         let outs = eng.call_named(&art.name, &inputs).unwrap();
@@ -170,39 +203,23 @@ fn train_steps_are_identity_at_zero_lr() {
     }
 }
 
-/// Quantized gather-eval (integer indices + codebook through the Pallas
-/// gather kernel) must agree with the dequantized f32 eval.
-#[test]
-fn gather_eval_matches_dense_eval() {
-    let Some(eng) = engine() else { return };
-    let spec = eng.manifest.model("mlp_gsc").unwrap().clone();
+/// Quantized gather-eval (integer indices + codebook) must agree with the
+/// dequantized f32 eval.
+fn check_gather_eval_matches_dense_eval(eng: &Engine, model: &str) {
+    let spec = eng.manifest.model(model).unwrap().clone();
     let mut state = ModelState::init(&spec, 13);
-    for name in state.qnames() {
-        let w = state.params[&name].clone();
-        let cb = Codebook::fit(&w.data, 4);
-        let r = vec![1.0; w.numel()];
-        let m = vec![1.0; w.numel()];
-        let a = assign_ref(&w.data, &r, &m, &cb, 1e-4);
-        state.qlayers.insert(
-            name,
-            ecqx::nn::QLayer {
-                qw: Tensor::new(w.shape.clone(), a.qw),
-                idx: ecqx::tensor::TensorI32::new(w.shape.clone(), a.idx),
-                codebook: cb,
-            },
-        );
-    }
-    let ds = ecqx::data::gsc::GscDataset::new(spec.batch, 5, false);
+    quantize_state(&mut state, 4, 1e-4);
+    let ds = GscDataset::new(spec.batch, 5, false);
     let dl = DataLoader::new(&ds, spec.batch, false, 0);
     let batch = dl.epoch(0).next().unwrap();
     let scalars = Scalars::default();
 
-    let art_f = eng.manifest.artifact("mlp_gsc_eval").unwrap().clone();
+    let art_f = eng.manifest.artifact(&format!("{model}_eval")).unwrap().clone();
     let inp_f =
         bind_inputs(&art_f, &state, ParamSource::Quantized, Some(&batch), &scalars).unwrap();
     let out_f = eng.call_named(&art_f.name, &inp_f).unwrap();
 
-    let art_q = eng.manifest.artifact("mlp_gsc_eval_q").unwrap().clone();
+    let art_q = eng.manifest.artifact(&format!("{model}_eval_q")).unwrap().clone();
     let inp_q =
         bind_inputs(&art_q, &state, ParamSource::Quantized, Some(&batch), &scalars).unwrap();
     let out_q = eng.call_named(&art_q.name, &inp_q).unwrap();
@@ -216,26 +233,209 @@ fn gather_eval_matches_dense_eval() {
     );
 }
 
-/// End-to-end mini QAT run: accuracy must stay well above chance and
-/// sparsity must be non-trivial (the smoke version of the e2e example).
-#[test]
-fn mini_qat_run_recovers() {
-    let Some(eng) = engine() else { return };
-    let spec = eng.manifest.model("mlp_gsc").unwrap().clone();
-    use ecqx::coordinator::{AssignConfig, Method, QatConfig, QatTrainer};
-    use ecqx::data::gsc::GscDataset;
+// ---------------------------------------------------------------------------
+// host tier — always runs, no artifacts, no PJRT, zero skips
+// ---------------------------------------------------------------------------
 
+#[test]
+fn host_assign_matches_rust_reference() {
+    check_assign_matches_reference(&host_engine());
+}
+
+#[test]
+fn host_lrp_matches_rust_reference() {
+    check_lrp_matches_reference(&host_engine(), "mlp_tiny");
+}
+
+#[test]
+fn host_train_steps_are_identity_at_zero_lr() {
+    check_train_steps_identity_at_zero_lr(&host_engine(), "mlp_tiny");
+}
+
+#[test]
+fn host_gather_eval_matches_dense_eval() {
+    check_gather_eval_matches_dense_eval(&host_engine(), "mlp_tiny");
+}
+
+#[test]
+fn host_eval_actq_degrades_gracefully() {
+    // the Fig. 1 probe: generous activation bit widths track the clean
+    // eval, 1-bit activations do not beat it
+    let eng = host_engine();
+    let spec = eng.manifest.model("mlp_tiny").unwrap().clone();
+    let state = ModelState::init(&spec, 3);
+    let ds = GscDataset::new(spec.batch, 9, false);
+    let dl = DataLoader::new(&ds, spec.batch, false, 0);
+    let batch = dl.epoch(0).next().unwrap();
+    let art = eng.manifest.artifact("mlp_tiny_eval_actq").unwrap().clone();
+    let loss_at = |abits: f32| -> f32 {
+        let scalars = Scalars { abits, ..Default::default() };
+        let inputs =
+            bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &scalars).unwrap();
+        eng.call_named(&art.name, &inputs).unwrap()["loss"].as_f32().as_scalar()
+    };
+    let clean = {
+        let art_f = eng.manifest.artifact("mlp_tiny_eval").unwrap().clone();
+        let inputs = bind_inputs(&art_f, &state, ParamSource::Fp, Some(&batch), &Scalars::default())
+            .unwrap();
+        eng.call_named(&art_f.name, &inputs).unwrap()["loss"].as_f32().as_scalar()
+    };
+    assert!((loss_at(16.0) - clean).abs() < 1e-3, "16-bit acts ≈ clean");
+    let l1 = loss_at(1.0);
+    assert!(l1.is_finite() && l1 > 0.0, "1-bit probe must stay well-formed");
+    assert!(
+        (l1 - clean).abs() > (loss_at(16.0) - clean).abs(),
+        "the 1-bit probe must perturb the loss more than the 16-bit probe"
+    );
+}
+
+/// The acceptance path: full train → LRP → assign → quantize → eval
+/// pipeline end-to-end on the host backend, plus compress/reload parity —
+/// with no `artifacts/` directory and no PJRT bindings present.
+#[test]
+fn host_full_pipeline_end_to_end() {
+    let eng = host_engine();
+    assert_eq!(eng.backend_name(), "host");
+    let spec = eng.manifest.model("mlp_tiny").unwrap().clone();
+
+    let train = GscDataset::new(768, 21, true);
+    let val = GscDataset::new(256, 21, false);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 1);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 1);
+
+    // phase 1: FP32 pre-training from scratch
+    let mut state = ModelState::init(&spec, 21);
+    let pre = Pretrainer { lr: 1e-3, verbose: false, ..Default::default() };
+    let curve = pre.run(&eng, &mut state, &train_dl, 8).unwrap();
+    assert!(
+        curve.last().unwrap().0 < curve.first().unwrap().0,
+        "pre-training must reduce the loss: {curve:?}"
+    );
+    let baseline = evaluate(&eng, &state, &val_dl, ParamSource::Fp).unwrap();
+    assert!(
+        baseline.accuracy > 2.0 / 12.0,
+        "baseline acc {} not above 2x chance",
+        baseline.accuracy
+    );
+
+    // phase 2: ECQ^x QAT (STE steps + periodic LRP + re-assignment)
+    let cfg = QatConfig {
+        assign: AssignConfig {
+            method: Method::Ecqx,
+            bits: 4,
+            lambda: 4.0,
+            p: 0.2,
+            ..Default::default()
+        },
+        epochs: 1,
+        lr: 4e-4,
+        verbose: false,
+        ..Default::default()
+    };
+    let out = QatTrainer::new(cfg).run(&eng, &mut state, &train_dl, &val_dl).unwrap();
+    assert!(out.final_sparsity > 0.1, "sparsity {}", out.final_sparsity);
+    assert!(out.final_sparsity < 1.0, "model must not be fully pruned");
+    let quantized = evaluate(&eng, &state, &val_dl, ParamSource::Quantized).unwrap();
+    assert!(
+        quantized.accuracy > 1.5 / 12.0,
+        "quantized acc {} collapsed",
+        quantized.accuracy
+    );
+
+    // phase 3: compress → reload → verify (the deployable container)
+    let path = std::env::temp_dir().join(format!(
+        "ecqx-host-e2e-{}.ecqx",
+        std::process::id()
+    ));
+    let bytes = checkpoint::save_quantized(&path, &state).unwrap();
+    assert!(
+        bytes < state.fp32_bytes(),
+        "container {bytes} B must undercut fp32 {} B",
+        state.fp32_bytes()
+    );
+    let qm = checkpoint::load_quantized(&path).unwrap();
+    let mut reloaded = ModelState::init(&spec, 21);
+    for (name, t) in qm.other {
+        reloaded.params.insert(name, t);
+    }
+    for (name, (idx, cb)) in qm.layers {
+        let qw: Vec<f32> = idx.data.iter().map(|&s| cb.values[s as usize]).collect();
+        let shape = idx.shape.clone();
+        reloaded.qlayers.insert(
+            name,
+            QLayer { qw: Tensor::new(shape, qw), idx, codebook: cb },
+        );
+    }
+    let re = evaluate(&eng, &reloaded, &val_dl, ParamSource::Quantized).unwrap();
+    assert!(
+        (re.accuracy - quantized.accuracy).abs() < 1e-9,
+        "reload changed accuracy: {} vs {}",
+        re.accuracy,
+        quantized.accuracy
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn host_evaluate_many_fans_out_and_matches_serial() {
+    let eng = host_engine();
+    let spec = eng.manifest.model("mlp_tiny").unwrap().clone();
+    let mut a = ModelState::init(&spec, 1);
+    let mut b = ModelState::init(&spec, 2);
+    quantize_state(&mut a, 4, 1e-4);
+    quantize_state(&mut b, 2, 1e-4);
+    let ds = GscDataset::new(128, 7, false);
+    let dl = DataLoader::new(&ds, spec.batch, false, 0);
+    let serial =
+        evaluate_many(&eng, &[&a, &b], &dl, ParamSource::Quantized, 1).unwrap();
+    let par = evaluate_many(&eng, &[&a, &b], &dl, ParamSource::Quantized, 4).unwrap();
+    assert_eq!(serial.len(), 2);
+    for (s, p) in serial.iter().zip(&par) {
+        assert_eq!(s.loss, p.loss, "host call_batch must be order-stable");
+        assert_eq!(s.accuracy, p.accuracy);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT tier — artifact-bound, #[ignore]-by-default (tier 2)
+// ---------------------------------------------------------------------------
+
+#[test]
+#[ignore = "tier 2: needs artifacts/ and real PJRT bindings (cargo test -- --ignored)"]
+fn pjrt_assign_artifact_matches_rust_reference() {
+    check_assign_matches_reference(&pjrt_engine());
+}
+
+#[test]
+#[ignore = "tier 2: needs artifacts/ and real PJRT bindings (cargo test -- --ignored)"]
+fn pjrt_lrp_artifact_matches_rust_reference() {
+    check_lrp_matches_reference(&pjrt_engine(), "mlp_gsc");
+}
+
+#[test]
+#[ignore = "tier 2: needs artifacts/ and real PJRT bindings (cargo test -- --ignored)"]
+fn pjrt_train_steps_are_identity_at_zero_lr() {
+    check_train_steps_identity_at_zero_lr(&pjrt_engine(), "mlp_gsc");
+}
+
+#[test]
+#[ignore = "tier 2: needs artifacts/ and real PJRT bindings (cargo test -- --ignored)"]
+fn pjrt_gather_eval_matches_dense_eval() {
+    check_gather_eval_matches_dense_eval(&pjrt_engine(), "mlp_gsc");
+}
+
+#[test]
+#[ignore = "tier 2: needs artifacts/ and real PJRT bindings (cargo test -- --ignored)"]
+fn pjrt_mini_qat_run_recovers() {
+    let eng = pjrt_engine();
+    let spec = eng.manifest.model("mlp_gsc").unwrap().clone();
     // tiny dataset + brief pretrain so the test runs in seconds
     let train = GscDataset::new(1024, 21, true);
     let val = GscDataset::new(512, 21, false);
     let train_dl = DataLoader::new(&train, spec.batch, true, 1);
     let val_dl = DataLoader::new(&val, spec.batch, false, 1);
     let mut state = ModelState::init(&spec, 21);
-    let pre = ecqx::coordinator::trainer::Pretrainer {
-        lr: 1e-3,
-        verbose: false,
-        ..Default::default()
-    };
+    let pre = Pretrainer { lr: 1e-3, verbose: false, ..Default::default() };
     pre.run(&eng, &mut state, &train_dl, 4).unwrap();
 
     let cfg = QatConfig {
