@@ -1,29 +1,133 @@
-//! §Perf — micro-benchmarks of every hot path: the assign kernel
+//! §Perf — micro-benchmarks of every hot path: the blocked GEMM core vs
+//! the retained naive kernels (`gemm_kernels` section), the assign kernel
 //! (engine-executed vs pure-rust), the CABAC codec, the engine call
 //! overhead, and the full STE/LRP steps. These numbers back
 //! EXPERIMENTS.md §Perf. Runs on whichever backend `exp::engine()`
 //! resolves (PJRT over artifacts/, or the host reference backend when
 //! those are absent — so the bench works fully offline).
+//!
+//! Besides the human-readable output, every row lands in a
+//! machine-readable `BENCH_host.json` (op, shape, ns/iter, GFLOP/s) —
+//! `$ECQX_BENCH_JSON` overrides the path — so the repo's perf trajectory
+//! is recorded run-over-run. `$ECQX_BENCH_SMOKE=1` shrinks iteration
+//! counts and problem sizes and skips the model-level end-to-end section
+//! (CI uses it to validate that the JSON contract holds without paying
+//! for a pretrain).
 
-use ecqx::bench::{bench, figure_header, throughput};
+use ecqx::bench::{bench, figure_header, throughput, PerfLog};
 use ecqx::codec::{deepcabac, huffman};
 use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
 use ecqx::data::DataLoader;
 use ecqx::exp;
+use ecqx::linalg::{self, gemm_flops, reference, Epilogue, Workspace};
 use ecqx::quant::{assign_ref, Codebook};
 use ecqx::tensor::{Tensor, Value};
 use ecqx::util::Rng;
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("ECQX_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    // iteration scaler: smoke mode runs every benchmark once, just enough
+    // to prove the harness and the JSON contract
+    let it = |n: usize| if smoke { 1 } else { n };
     let engine = exp::engine()?;
+    let mut log = PerfLog::new(engine.backend_name());
     figure_header(
         "Perf",
-        &format!("hot-path micro-benchmarks ({} backend)", engine.backend_name()),
+        &format!(
+            "hot-path micro-benchmarks ({} backend{})",
+            engine.backend_name(),
+            if smoke { ", smoke mode" } else { "" }
+        ),
     );
     let mut rng = Rng::new(7);
 
-    // ---- L1: assignment kernel, 64k-element bucket ----
-    let n = 65536;
+    // ---- L0: the blocked GEMM core vs the retained naive kernels ----
+    // 256^3 is the headline shape; the ragged shape guards the edge-tile
+    // path from regressing unnoticed.
+    let gemm_shapes: &[(usize, usize, usize)] =
+        if smoke { &[(64, 64, 64)] } else { &[(256, 256, 256), (128, 512, 300)] };
+    let mut ws = Workspace::new();
+    for &(m, k, n) in gemm_shapes {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let g: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let flops = Some(gemm_flops(m, k, n));
+        let mut out_nn = vec![0.0f32; m * n];
+        let mut out_tn = vec![0.0f32; k * n];
+        let mut out_nt = vec![0.0f32; m * k];
+
+        let r = bench(&format!("gemm_nn naive {m}x{k}x{n}"), it(1), it(10), || {
+            reference::matmul(&a, &b, m, k, n)
+        });
+        log.push("gemm_nn_naive", &[m, k, n], &r, flops);
+        let r = bench(&format!("gemm_nn blocked {m}x{k}x{n}"), it(1), it(10), || {
+            linalg::gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::None, &mut out_nn)
+        });
+        log.push("gemm_nn_blocked", &[m, k, n], &r, flops);
+
+        // TN/NT contract over a different axis; flops identical
+        let r = bench(&format!("gemm_tn naive {m}x{k}x{n}"), it(1), it(10), || {
+            reference::matmul_tn(&a, &g, m, k, n)
+        });
+        log.push("gemm_tn_naive", &[m, k, n], &r, flops);
+        let r = bench(&format!("gemm_tn blocked {m}x{k}x{n}"), it(1), it(10), || {
+            linalg::gemm_tn(&mut ws, &a, &g, m, k, n, Epilogue::None, &mut out_tn)
+        });
+        log.push("gemm_tn_blocked", &[m, k, n], &r, flops);
+
+        let r = bench(&format!("gemm_nt naive {m}x{k}x{n}"), it(1), it(10), || {
+            reference::matmul_nt(&g, &b, m, n, k)
+        });
+        log.push("gemm_nt_naive", &[m, k, n], &r, flops);
+        let r = bench(&format!("gemm_nt blocked {m}x{k}x{n}"), it(1), it(10), || {
+            linalg::gemm_nt(&mut ws, &g, &b, m, n, k, Epilogue::None, &mut out_nt)
+        });
+        log.push("gemm_nt_blocked", &[m, k, n], &r, flops);
+
+        // fused bias+relu epilogue vs the old separate full-tensor passes
+        let r = bench(&format!("qdense fused bias+relu {m}x{k}x{n}"), it(1), it(10), || {
+            linalg::gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::BiasRelu(&bias), &mut out_nn)
+        });
+        log.push("qdense_fused_bias_relu", &[m, k, n], &r, flops);
+        let r = bench(&format!("qdense unfused (naive+2 passes) {m}x{k}x{n}"), it(1), it(10), || {
+            let mut z = reference::matmul(&a, &b, m, k, n);
+            for row in z.chunks_exact_mut(n) {
+                for (zv, &bv) in row.iter_mut().zip(&bias) {
+                    *zv = (*zv + bv).max(0.0);
+                }
+            }
+            z
+        });
+        log.push("qdense_unfused", &[m, k, n], &r, flops);
+
+        // codebook-gather weights at the paper's sparsity (~80% zero
+        // centroid): pack-time dequantization vs materializing [k,n]
+        let cbv = [0.0f32, 0.5, -0.5, 0.25, -0.25, 0.75, -0.75, 1.0];
+        let idx: Vec<i32> = (0..k * n)
+            .map(|_| if rng.chance(0.8) { 0 } else { 1 + rng.below(7) as i32 })
+            .collect();
+        let r = bench(&format!("qdense_gather pack-fused {m}x{k}x{n}"), it(1), it(10), || {
+            let epi = Epilogue::Bias(&bias);
+            linalg::gemm_gather_nn(&mut ws, &a, &idx, &cbv, m, k, n, epi, &mut out_nn)
+        });
+        log.push("qdense_gather_packed", &[m, k, n], &r, flops);
+        let r = bench(&format!("qdense_gather materialized {m}x{k}x{n}"), it(1), it(10), || {
+            let w: Vec<f32> = idx.iter().map(|&s| cbv[s.clamp(0, 7) as usize]).collect();
+            let mut z = reference::matmul(&a, &w, m, k, n);
+            for row in z.chunks_exact_mut(n) {
+                for (zv, &bv) in row.iter_mut().zip(&bias) {
+                    *zv += bv;
+                }
+            }
+            z
+        });
+        log.push("qdense_gather_materialized", &[m, k, n], &r, flops);
+    }
+    println!("  (gemm workspace high-water mark: {} KiB)", ws.reserved_bytes() / 1024);
+
+    // ---- L1: assignment kernel ----
+    let n = if smoke { 4096 } else { 65536 };
     let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
     let cb = Codebook::fit(&w, 4);
     let r = vec![1.0f32; n];
@@ -36,18 +140,22 @@ fn main() -> anyhow::Result<()> {
         Value::F32(Tensor::new(vec![32], cb.valid.clone())),
         Value::F32(Tensor::scalar(3e-4)),
     ];
-    engine.call("assign_65536", &inputs)?; // compile outside the timing
-    let res = bench("assign via engine (64k x 32)", 2, 10, || {
-        engine.call("assign_65536", &inputs).unwrap()
+    let assign_art = format!("assign_{n}");
+    engine.call(&assign_art, &inputs)?; // compile outside the timing
+    let res = bench(&format!("assign via engine ({n} x 32)"), it(2), it(10), || {
+        engine.call(&assign_art, &inputs).unwrap()
     });
-    println!("    -> {}", throughput(&res, n));
-    let res = bench("assign_ref (pure rust, 64k x 32)", 2, 10, || {
+    println!("    -> {}", throughput(&res, inputs[0].numel()));
+    log.push("assign_engine", &[n, 32], &res, None);
+    let res = bench(&format!("assign_ref (pure rust, {n} x 32)"), it(2), it(10), || {
         assign_ref(&w, &r, &mask, &cb, 3e-4)
     });
     println!("    -> {}", throughput(&res, n));
+    log.push("assign_ref", &[n, 32], &res, None);
 
     // ---- codec throughput ----
-    let levels: Vec<i32> = (0..262144)
+    let nlev = if smoke { 16384 } else { 262144 };
+    let levels: Vec<i32> = (0..nlev)
         .map(|_| {
             if rng.chance(0.8) {
                 0
@@ -59,64 +167,88 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let enc = deepcabac::encode_levels(&levels);
     println!(
-        "  cabac rate: {:.3} bits/weight ({} bytes for 256k weights)",
+        "  cabac rate: {:.3} bits/weight ({} bytes for {}k weights)",
         enc.len() as f64 * 8.0 / levels.len() as f64,
-        enc.len()
+        enc.len(),
+        nlev / 1024
     );
-    let res = bench("cabac encode 256k levels", 1, 10, || deepcabac::encode_levels(&levels));
+    let res = bench("cabac encode levels", it(1), it(10), || deepcabac::encode_levels(&levels));
     println!("    -> {}", throughput(&res, levels.len()));
-    let res = bench("cabac decode 256k levels", 1, 10, || {
+    log.push("cabac_encode", &[nlev], &res, None);
+    let res = bench("cabac decode levels", it(1), it(10), || {
         deepcabac::decode_levels(&enc, levels.len())
     });
     println!("    -> {}", throughput(&res, levels.len()));
-    let res = bench("huffman encode 256k levels", 1, 10, || huffman::encode(&levels));
+    log.push("cabac_decode", &[nlev], &res, None);
+    let res = bench("huffman encode levels", it(1), it(10), || huffman::encode(&levels));
     println!("    -> {}", throughput(&res, levels.len()));
+    log.push("huffman_encode", &[nlev], &res, None);
 
-    // ---- L3 <-> PJRT boundary: eval + ste step ----
-    let model = exp::MLP_GSC;
-    let pre = exp::pretrained(&engine, &model, 17)?;
-    let spec = engine.manifest.model(model.name)?.clone();
-    let (train, _) = exp::datasets(&model, 17);
-    let dl = DataLoader::new(&train, spec.batch, true, 1);
-    let batch = dl.epoch(0).next().unwrap();
-    let mut state = pre.state;
-    // quantize once so q_ slots exist
-    use ecqx::coordinator::{AssignConfig, Assigner, Method};
-    let asg = Assigner::new(
-        AssignConfig { method: Method::Ecq, bits: 4, lambda: 4.0, ..Default::default() },
-        &state,
-    );
-    asg.assign_all(&engine, &mut state)?;
+    // ---- L3 <-> engine boundary: eval + ste + lrp steps ----
+    // Skipped in smoke mode: the section needs a pre-trained model, and
+    // CI's contract check only needs the sections above.
+    if !smoke {
+        let model = exp::MLP_GSC;
+        let pre = exp::pretrained(&engine, &model, 17)?;
+        let spec = engine.manifest.model(model.name)?.clone();
+        let (train, _) = exp::datasets(&model, 17);
+        let dl = DataLoader::new(&train, spec.batch, true, 1);
+        let batch = dl.epoch(0).next().unwrap();
+        let mut state = pre.state;
+        // quantize once so q_ slots exist
+        use ecqx::coordinator::{AssignConfig, Assigner, Method};
+        let asg = Assigner::new(
+            AssignConfig { method: Method::Ecq, bits: 4, lambda: 4.0, ..Default::default() },
+            &state,
+        );
+        asg.assign_all(&engine, &mut state)?;
 
-    let eval_art = engine.manifest.artifact("mlp_gsc_eval")?.clone();
-    let ev_inputs =
-        bind_inputs(&eval_art, &state, ParamSource::Quantized, Some(&batch), &Scalars::default())?;
-    engine.call(&eval_art.name, &ev_inputs)?;
-    bench("eval step (batch 128, 695k params)", 2, 10, || {
-        engine.call(&eval_art.name, &ev_inputs).unwrap()
-    });
+        let eval_art = engine.manifest.artifact("mlp_gsc_eval")?.clone();
+        let ev_inputs = bind_inputs(
+            &eval_art,
+            &state,
+            ParamSource::Quantized,
+            Some(&batch),
+            &Scalars::default(),
+        )?;
+        engine.call(&eval_art.name, &ev_inputs)?;
+        let res = bench("eval step (batch 128, 695k params)", 2, 10, || {
+            engine.call(&eval_art.name, &ev_inputs).unwrap()
+        });
+        log.push("e2e_eval_step", &[spec.batch], &res, None);
 
-    let ste_art = engine.manifest.artifact("mlp_gsc_ste_train")?.clone();
-    let sc = Scalars { t: 1.0, lr: 1e-4, gs: 1.0, ..Default::default() };
-    let ste_inputs = bind_inputs(&ste_art, &state, ParamSource::Fp, Some(&batch), &sc)?;
-    engine.call(&ste_art.name, &ste_inputs)?;
-    bench("ste_train step (fwd+bwd+Adam)", 2, 10, || {
-        engine.call(&ste_art.name, &ste_inputs).unwrap()
-    });
+        let ste_art = engine.manifest.artifact("mlp_gsc_ste_train")?.clone();
+        let sc = Scalars { t: 1.0, lr: 1e-4, gs: 1.0, ..Default::default() };
+        let ste_inputs = bind_inputs(&ste_art, &state, ParamSource::Fp, Some(&batch), &sc)?;
+        engine.call(&ste_art.name, &ste_inputs)?;
+        let res = bench("ste_train step (fwd+bwd+Adam)", 2, 10, || {
+            engine.call(&ste_art.name, &ste_inputs).unwrap()
+        });
+        log.push("e2e_ste_step", &[spec.batch], &res, None);
 
-    let lrp_art = engine.manifest.artifact("mlp_gsc_lrp")?.clone();
-    let lrp_inputs =
-        bind_inputs(&lrp_art, &state, ParamSource::Quantized, Some(&batch), &Scalars::default())?;
-    engine.call(&lrp_art.name, &lrp_inputs)?;
-    bench("lrp step (per-weight relevances)", 2, 10, || {
-        engine.call(&lrp_art.name, &lrp_inputs).unwrap()
-    });
+        let lrp_art = engine.manifest.artifact("mlp_gsc_lrp")?.clone();
+        let lrp_inputs = bind_inputs(
+            &lrp_art,
+            &state,
+            ParamSource::Quantized,
+            Some(&batch),
+            &Scalars::default(),
+        )?;
+        engine.call(&lrp_art.name, &lrp_inputs)?;
+        let res = bench("lrp step (per-weight relevances)", 2, 10, || {
+            engine.call(&lrp_art.name, &lrp_inputs).unwrap()
+        });
+        log.push("e2e_lrp_step", &[spec.batch], &res, None);
 
-    // binder overhead in isolation (the host-side copy cost)
-    bench("bind ste inputs (host copies)", 2, 20, || {
-        bind_inputs(&ste_art, &state, ParamSource::Fp, Some(&batch), &sc).unwrap()
-    });
+        // binder overhead in isolation (the host-side copy cost)
+        let res = bench("bind ste inputs (host copies)", 2, 20, || {
+            bind_inputs(&ste_art, &state, ParamSource::Fp, Some(&batch), &sc).unwrap()
+        });
+        log.push("bind_ste_inputs", &[spec.batch], &res, None);
+    }
 
     println!("\ncompile time total: {:.1}s", engine.compile_seconds());
+    let path = log.write_default()?;
+    println!("perf rows written to {} ({} rows)", path.display(), log.len());
     Ok(())
 }

@@ -2,10 +2,14 @@
 //! (criterion is unavailable offline; every `[[bench]]` sets
 //! `harness = false` and drives this module).
 //!
-//! Provides warmup + N timed iterations with mean/median/σ reporting, and
-//! a `Series` helper for the figure-regeneration benches that print the
-//! paper's accuracy/sparsity/size rows.
+//! Provides warmup + N timed iterations with mean/median/σ reporting, a
+//! `Series` helper for the figure-regeneration benches that print the
+//! paper's accuracy/sparsity/size rows, and [`PerfLog`] — the
+//! machine-readable `BENCH_host.json` writer that records the repo's perf
+//! trajectory (op, shape, ns/iter, GFLOP/s) next to the human output.
 
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::util::stats;
@@ -78,6 +82,87 @@ pub fn series_row(series: &str, xs: &[(&str, String)]) {
     println!("[{series}] {}", cells.join(" "));
 }
 
+/// Machine-readable perf rows, serialized as `BENCH_host.json` so the
+/// repo's perf trajectory is recorded run-over-run instead of living only
+/// in scrollback. Serialization is hand-rolled (the offline build has no
+/// serde); the schema is flat on purpose:
+///
+/// ```json
+/// {"schema": 1, "backend": "host",
+///  "rows": [{"op": "gemm_nn_blocked", "shape": "256x256x256",
+///            "ns_per_iter": 81234.5, "gflops": 413.1}, ...]}
+/// ```
+///
+/// `gflops` is present only for rows with a known FLOP count and is
+/// `null` otherwise. CI's bench-smoke step fails if the file is missing
+/// or malformed (see `.github/workflows/ci.yml`).
+#[derive(Debug)]
+pub struct PerfLog {
+    backend: String,
+    rows: Vec<String>,
+}
+
+impl PerfLog {
+    /// Empty log for one backend's run.
+    pub fn new(backend: &str) -> PerfLog {
+        PerfLog { backend: backend.to_string(), rows: Vec::new() }
+    }
+
+    /// Record one benchmark result. `shape` is the op's dimension tuple
+    /// (e.g. `[m, k, n]` for a GEMM, `[n]` for a 1-D kernel); `flops`
+    /// (per iteration) enables the GFLOP/s column.
+    pub fn push(&mut self, op: &str, shape: &[usize], r: &BenchResult, flops: Option<f64>) {
+        let shape_s = shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        let gflops = match flops {
+            Some(f) if r.mean_s > 0.0 => format!("{:.3}", f / r.mean_s / 1e9),
+            _ => "null".to_string(),
+        };
+        self.rows.push(format!(
+            "{{\"op\": \"{op}\", \"shape\": \"{shape_s}\", \"ns_per_iter\": {:.1}, \"gflops\": {gflops}}}",
+            r.mean_s * 1e9
+        ));
+    }
+
+    /// Number of recorded rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render the full JSON document.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"schema\": 1,\n  \"backend\": \"{}\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+            self.backend,
+            self.rows.join(",\n    ")
+        )
+    }
+
+    /// Write the log to `path`.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+
+    /// Write to `$ECQX_BENCH_JSON` if set, else `BENCH_host.json` in the
+    /// working directory; returns the path written.
+    pub fn write_default(&self) -> std::io::Result<PathBuf> {
+        let path = std::env::var_os("ECQX_BENCH_JSON")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("BENCH_host.json"));
+        self.write(&path)?;
+        Ok(path)
+    }
+}
+
 /// Throughput helper: elements per second.
 pub fn throughput(result: &BenchResult, elems: usize) -> String {
     let eps = elems as f64 / result.mean_s;
@@ -107,6 +192,31 @@ mod tests {
         assert!(r.min_s <= r.mean_s * 1.5 + 1e-9);
         assert_eq!(r.iters, 5);
         assert!(r.report().contains("noop-spin"));
+    }
+
+    #[test]
+    fn perflog_renders_valid_flat_json() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            mean_s: 1e-3,
+            median_s: 1e-3,
+            std_s: 0.0,
+            min_s: 1e-3,
+        };
+        let mut log = PerfLog::new("host");
+        assert!(log.is_empty());
+        log.push("gemm_nn_blocked", &[256, 256, 256], &r, Some(2.0 * 256.0f64.powi(3)));
+        log.push("cabac_encode", &[65536], &r, None);
+        assert_eq!(log.len(), 2);
+        let js = log.to_json();
+        // structural sanity a JSON parser would enforce
+        assert_eq!(js.matches('{').count(), js.matches('}').count());
+        assert!(js.contains("\"backend\": \"host\""));
+        assert!(js.contains("\"shape\": \"256x256x256\""));
+        assert!(js.contains("\"gflops\": null"), "no-flop rows serialize null");
+        // 2*256^3 flops in 1ms -> ~33.6 GFLOP/s
+        assert!(js.contains("\"gflops\": 33.554"));
     }
 
     #[test]

@@ -11,7 +11,7 @@ use super::binder::{apply_train_outputs, bind_inputs, ParamSource, Scalars};
 use crate::data::{DataLoader, Dataset};
 use crate::metrics::Meter;
 use crate::nn::ModelState;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, Workspace};
 use crate::tensor::{Tensor, Value};
 use crate::util::timer::PhaseProfile;
 use crate::util::Timer;
@@ -41,9 +41,12 @@ pub fn evaluate<D: Dataset>(
 ) -> Result<EvalResult> {
     let art = engine.manifest.artifact(&format!("{}_eval", state.spec.name))?.clone();
     let mut meter = Meter::new();
+    // one packing workspace for the whole validation pass: after the
+    // first batch the GEMM hot loop allocates nothing
+    let mut scratch = Workspace::new();
     for batch in loader.epoch(0) {
         let inputs = bind_inputs(&art, state, source, Some(&batch), &Scalars::default())?;
-        let outs = engine.call_named(&art.name, &inputs)?;
+        let outs = engine.call_named_with(&art.name, &inputs, &mut scratch)?;
         meter.update(
             outs["loss"].as_f32().as_scalar(),
             outs["correct"].as_f32().as_scalar(),
@@ -134,6 +137,8 @@ impl Pretrainer {
             .artifact(&format!("{}_fp_train", state.spec.name))?
             .clone();
         let mut curve = Vec::with_capacity(epochs);
+        // per-run packing workspace: steady-state train steps reuse it
+        let mut scratch = Workspace::new();
         for epoch in 0..epochs {
             let mut meter = Meter::new();
             for batch in train.epoch(epoch as u64) {
@@ -141,7 +146,7 @@ impl Pretrainer {
                 let scalars = Scalars { t: state.t as f32, lr: self.lr, ..Default::default() };
                 let inputs =
                     bind_inputs(&art, state, ParamSource::Fp, Some(&batch), &scalars)?;
-                let outs = engine.call_named(&art.name, &inputs)?;
+                let outs = engine.call_named_with(&art.name, &inputs, &mut scratch)?;
                 let (loss, correct) = apply_train_outputs(state, outs)?;
                 meter.update(loss, correct, batch.batch);
             }
@@ -247,6 +252,10 @@ impl QatTrainer {
 
         let mut assigner = Assigner::new(cfg.assign.clone(), state);
         let mut profile = PhaseProfile::new();
+        // one packing workspace for the whole QAT run: every STE/LRP step
+        // reuses the same GEMM panels (zero steady-state allocation in
+        // the blocked core)
+        let mut scratch = Workspace::new();
 
         // ECQx: warm the relevance EMAs on the *pre-trained* model over
         // several batches before anything is quantized, so the initial
@@ -263,7 +272,7 @@ impl QatTrainer {
                 };
                 let inputs =
                     bind_inputs(&lrp_art, state, ParamSource::Fp, Some(&batch), &scal)?;
-                let outs = engine.call_named(&lrp_art.name, &inputs)?;
+                let outs = engine.call_named_with(&lrp_art.name, &inputs, &mut scratch)?;
                 let raw = collect_relevances(outs);
                 let retune = i + 1 == cfg.lrp_warmup;
                 assigner.update_relevances(engine, state, &raw, retune)?;
@@ -304,7 +313,7 @@ impl QatTrainer {
                 // copies travel separately in the q_ slots.
                 let inputs =
                     bind_inputs(&ste_art, state, ParamSource::Fp, Some(&batch), &scalars)?;
-                let outs = engine.call_named(&ste_art.name, &inputs)?;
+                let outs = engine.call_named_with(&ste_art.name, &inputs, &mut scratch)?;
                 let (loss, correct) = apply_train_outputs(state, outs)?;
                 profile.record("ste_step", t0.elapsed_s());
                 meter.update(loss, correct, batch.batch);
@@ -323,7 +332,7 @@ impl QatTrainer {
                         Some(&batch),
                         &scal,
                     )?;
-                    let outs = engine.call_named(&lrp_art.name, &inputs)?;
+                    let outs = engine.call_named_with(&lrp_art.name, &inputs, &mut scratch)?;
                     let raw = collect_relevances(outs);
                     profile.record("lrp", t1.elapsed_s());
                     let t2 = Timer::start();

@@ -15,6 +15,8 @@
 //!   or PJRT needed)
 //! * [`coordinator`] — QAT loop, parallel sweep campaigns
 //!   ([`coordinator::campaign`]), candidate selection, reports
+//! * [`linalg`] — blocked SIMD-friendly GEMM core with fused epilogues
+//!   and per-worker workspaces (the host backend's hot path)
 //! * [`quant`] — centroids, entropy, pure-rust assignment reference
 //! * [`lrp`] — relevance pipeline + rust LRP reference implementation
 //! * [`codec`] — CABAC-style coder + baselines (compression ratios)
@@ -26,6 +28,7 @@ pub mod codec;
 pub mod exp;
 pub mod coordinator;
 pub mod data;
+pub mod linalg;
 pub mod lrp;
 pub mod metrics;
 pub mod nn;

@@ -1,0 +1,414 @@
+//! Cache-blocked, SIMD-friendly GEMM with fused epilogues.
+//!
+//! One core loop nest serves all three contraction forms of the host
+//! backend (NN for the forward pass, TN for dW and LRP weight relevance,
+//! NT for input gradients / R_in) by viewing transposed operands through
+//! strided [`View`]s. Blocking is fixed at compile time:
+//!
+//! ```text
+//! for jc in steps of NC over n:        pack B[:, jc..jc+nc]   (NR strips)
+//!   for ic in steps of MC over m:      pack A[ic..ic+mc, :]   (MR strips)
+//!     for each NR-column strip jr:
+//!       for each MR-row strip ir:
+//!         acc[MR][NR] = 0
+//!         for p in 0..k: acc[r][c] += apanel[p*MR+r] * bpanel[p*NR+c]
+//!         out tile = epilogue(acc)     (bias / bias+relu / scale / mask)
+//! ```
+//!
+//! The micro-kernel keeps an `MR×NR` accumulator tile in registers and
+//! vectorizes over the `NR` (column) axis — a broadcast-multiply-add per
+//! `k` step with **no reduction reassociation**, so no `unsafe` and no
+//! `-ffast-math` analogue is needed for the compiler to emit SIMD.
+//!
+//! Determinism: each output element accumulates its `k` products in
+//! ascending-`k` order — the same order as the retained naive kernels
+//! ([`crate::linalg::reference`]) — and the blocking constants are
+//! compile-time fixed, so results are a pure function of the operand
+//! values and shapes: identical run-to-run, identical for any `--jobs`
+//! count, and (on finite inputs) bitwise-equal to the naive loops. The
+//! fused epilogues apply exactly the arithmetic the previously separate
+//! full-tensor passes applied, in the same per-element order.
+
+use super::pack::{pack_a, pack_b, pack_b_gather, View};
+use super::workspace::Workspace;
+
+/// Micro-kernel rows (broadcast axis).
+pub const MR: usize = 4;
+/// Micro-kernel columns (vector axis; two 8-lane f32 vectors on AVX2).
+pub const NR: usize = 16;
+/// Rows of A packed per block (A panel = MC·k floats, L2-resident for the
+/// layer sizes of the paper's models).
+pub const MC: usize = 64;
+/// Columns of B packed per block.
+pub const NC: usize = 256;
+
+// The block loops step by MC/NC and index panels by MR/NR strips, so the
+// cache blocks must be whole numbers of register strips.
+const _: () = assert!(MC % MR == 0 && NC % NR == 0, "blocks must align to strips");
+
+/// Epilogue fused into the output-tile store: what the host backend used
+/// to do as separate full-tensor passes after each contraction.
+#[derive(Clone, Copy, Debug)]
+pub enum Epilogue<'a> {
+    /// plain store
+    None,
+    /// `out[i,j] = acc + bias[j]` (dense layer bias add)
+    Bias(&'a [f32]),
+    /// `out[i,j] = max(acc + bias[j], 0)` (hidden dense layer)
+    BiasRelu(&'a [f32]),
+    /// `out[i,j] = acc * scale[i*n + j]` — `scale` is row-major `[m, n]`
+    /// like the output (the LRP `w ⊙ (aᵀ@s)` weight-relevance scaling,
+    /// and `a ⊙ (s@wᵀ)` for R_in)
+    Scale(&'a [f32]),
+    /// `out[i,j] = if mask[i*n + j] > 0 { acc } else { 0 }` (ReLU
+    /// backward masking by the forward activation)
+    ReluMask(&'a [f32]),
+}
+
+/// Right-hand operand: a strided dense view, or centroid indices
+/// dequantized through a codebook at pack time (`qdense_gather`).
+#[derive(Clone, Copy, Debug)]
+pub enum BOperand<'a> {
+    Dense(View<'a>),
+    /// row-major `[k, n]` int32 centroid indices + codebook; out-of-range
+    /// indices clamp. Must be non-empty (callers pre-validate).
+    Gather { idx: &'a [i32], codebook: &'a [f32] },
+}
+
+#[inline(always)]
+fn finish(acc: f32, i: usize, j: usize, n: usize, epi: &Epilogue) -> f32 {
+    match *epi {
+        Epilogue::None => acc,
+        Epilogue::Bias(b) => acc + b[j],
+        Epilogue::BiasRelu(b) => {
+            let z = acc + b[j];
+            if z < 0.0 {
+                0.0
+            } else {
+                z
+            }
+        }
+        Epilogue::Scale(s) => acc * s[i * n + j],
+        Epilogue::ReluMask(m) => {
+            if m[i * n + j] > 0.0 {
+                acc
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// The register-tile inner loop: `acc[r][c] += A[r,p] · B[p,c]` for
+/// `p = 0..k` ascending. `apanel`/`bpanel` are packed strips of exactly
+/// `k*MR` / `k*NR` floats; the `NR`-wide inner loop has constant bounds
+/// and no reductions, which is what lets the autovectorizer emit fused
+/// broadcast-FMA tiles without reassociating any sum.
+#[inline(always)]
+fn microkernel(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert_eq!(apanel.len(), k * MR);
+    debug_assert_eq!(bpanel.len(), k * NR);
+    for (arow, brow) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for (r, &av) in arow.iter().enumerate() {
+            let accr = &mut acc[r];
+            for (a, &bv) in accr.iter_mut().zip(brow.iter()) {
+                *a += av * bv;
+            }
+        }
+    }
+}
+
+/// `out = epilogue(0)` — shared early-out for an empty contraction
+/// (`k == 0`) and an empty gather codebook (all-zero weights).
+fn epilogue_of_zero(out: &mut [f32], m: usize, n: usize, epi: &Epilogue) {
+    assert_eq!(out.len(), m * n, "gemm: output buffer shape");
+    for i in 0..m {
+        for j in 0..n {
+            out[i * n + j] = finish(0.0, i, j, n, epi);
+        }
+    }
+}
+
+#[inline(always)]
+fn store_tile(
+    acc: &[[f32; NR]; MR],
+    out: &mut [f32],
+    n: usize,
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+    epi: &Epilogue,
+) {
+    for r in 0..mr {
+        let i = i0 + r;
+        let orow = &mut out[i * n + j0..i * n + j0 + nr];
+        for (c, o) in orow.iter_mut().enumerate() {
+            *o = finish(acc[r][c], i, j0 + c, n, epi);
+        }
+    }
+}
+
+/// Blocked GEMM core: `out[m,n] = epilogue(A[m,k] · B[k,n])`, where A and
+/// B are arbitrary strided views (so TN/NT are the same code path) and
+/// `out` is fully overwritten. Single-threaded and deterministic; callers
+/// parallelize across independent GEMMs, never inside one.
+pub fn gemm(
+    ws: &mut Workspace,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: View,
+    b: BOperand,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), m * n, "gemm: output buffer shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // empty contraction: the accumulator is zero everywhere, but the
+        // epilogue still applies (a k=0 dense layer is bias-only)
+        epilogue_of_zero(out, m, n, &epi);
+        return;
+    }
+    let (apack, bpack) = ws.panels(MC * k, NC * k);
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        match b {
+            BOperand::Dense(bv) => pack_b(bv.at(0, jc), k, nc, bpack),
+            BOperand::Gather { idx, codebook } => {
+                pack_b_gather(idx, codebook, n, jc, k, nc, bpack)
+            }
+        }
+        let mut ic = 0;
+        while ic < m {
+            let mc = MC.min(m - ic);
+            pack_a(a.at(ic, 0), mc, k, apack);
+            let mut jr = 0;
+            while jr < nc {
+                let nr = NR.min(nc - jr);
+                let bpanel = &bpack[(jr / NR) * NR * k..(jr / NR) * NR * k + NR * k];
+                let mut ir = 0;
+                while ir < mc {
+                    let mr = MR.min(mc - ir);
+                    let apanel = &apack[(ir / MR) * MR * k..(ir / MR) * MR * k + MR * k];
+                    let mut acc = [[0.0f32; NR]; MR];
+                    microkernel(k, apanel, bpanel, &mut acc);
+                    store_tile(&acc, out, n, ic + ir, jc + jr, mr, nr, &epi);
+                    ir += MR;
+                }
+                jr += NR;
+            }
+            ic += MC;
+        }
+        jc += NC;
+    }
+}
+
+/// `out[m,n] = epilogue(a[m,k] @ b[k,n])` (row-major operands).
+pub fn gemm_nn(
+    ws: &mut Workspace,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "gemm_nn lhs shape");
+    assert_eq!(b.len(), k * n, "gemm_nn rhs shape");
+    gemm(ws, m, n, k, View::nn(a, k), BOperand::Dense(View::nn(b, n)), epi, out);
+}
+
+/// `out[k,n] = epilogue(a[m,k]ᵀ @ b[m,n])` — the dW / LRP contraction.
+pub fn gemm_tn(
+    ws: &mut Workspace,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "gemm_tn lhs shape");
+    assert_eq!(b.len(), m * n, "gemm_tn rhs shape");
+    gemm(ws, k, n, m, View::t(a, k), BOperand::Dense(View::nn(b, n)), epi, out);
+}
+
+/// `out[m,k] = epilogue(g[m,n] @ w[k,n]ᵀ)` — the input-gradient / R_in
+/// contraction.
+pub fn gemm_nt(
+    ws: &mut Workspace,
+    g: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(g.len(), m * n, "gemm_nt lhs shape");
+    assert_eq!(w.len(), k * n, "gemm_nt rhs shape");
+    gemm(ws, m, k, n, View::nn(g, n), BOperand::Dense(View::t(w, n)), epi, out);
+}
+
+/// `out[m,n] = epilogue(a[m,k] @ dequant(idx)[k,n])` — the deployment-form
+/// dense layer. Centroid indices are dequantized panel-by-panel at pack
+/// time (never materializing the dense weight matrix) with the zero
+/// centroid skipped. An empty codebook yields an all-zero weight matrix
+/// (`out = epilogue(0)`); the host backend rejects that case with an
+/// error before calling in (see `runtime::host::qdense_gather`).
+pub fn gemm_gather_nn(
+    ws: &mut Workspace,
+    a: &[f32],
+    idx: &[i32],
+    codebook: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "gemm_gather_nn lhs shape");
+    assert_eq!(idx.len(), k * n, "gemm_gather_nn idx shape");
+    if codebook.is_empty() {
+        epilogue_of_zero(out, m, n, &epi);
+        return;
+    }
+    gemm(ws, m, n, k, View::nn(a, k), BOperand::Gather { idx, codebook }, epi, out);
+}
+
+/// FLOP count of one `m×k×n` GEMM (multiply + add), for GFLOP/s rows in
+/// `BENCH_host.json`.
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+
+    fn seq(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i % 13) as f32 - 6.0) * scale).collect()
+    }
+
+    #[test]
+    fn nn_matches_reference_on_ragged_shape() {
+        let (m, k, n) = (5, 7, 19); // none a multiple of any block size
+        let a = seq(m * k, 0.25);
+        let b = seq(k * n, 0.5);
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0; m * n];
+        gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
+        assert_eq!(out, reference::matmul(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn tn_and_nt_match_reference() {
+        let (m, k, n) = (9, 4, 21);
+        let a = seq(m * k, 0.1);
+        let b = seq(m * n, 0.3);
+        let w = seq(k * n, 0.2);
+        let g = seq(m * n, 0.7);
+        let mut ws = Workspace::new();
+        let mut tn = vec![0.0; k * n];
+        gemm_tn(&mut ws, &a, &b, m, k, n, Epilogue::None, &mut tn);
+        assert_eq!(tn, reference::matmul_tn(&a, &b, m, k, n));
+        let mut nt = vec![0.0; m * k];
+        gemm_nt(&mut ws, &g, &w, m, n, k, Epilogue::None, &mut nt);
+        assert_eq!(nt, reference::matmul_nt(&g, &w, m, n, k));
+    }
+
+    #[test]
+    fn block_boundary_shapes_match_reference() {
+        // exactly MC/NC, one past, one short
+        for &(m, n) in &[(MC, NC), (MC + 1, NC + 1), (MC - 1, NR), (MR, NC - 1), (1, 1)] {
+            let k = 33;
+            let a = seq(m * k, 0.05);
+            let b = seq(k * n, 0.02);
+            let mut ws = Workspace::new();
+            let mut out = vec![0.0; m * n];
+            gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
+            assert_eq!(out, reference::matmul(&a, &b, m, k, n), "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn k_zero_is_epilogue_of_zero() {
+        let bias = [1.0, -2.0, 3.0];
+        let mut ws = Workspace::new();
+        let mut out = vec![f32::NAN; 2 * 3];
+        gemm_nn(&mut ws, &[], &[], 2, 0, 3, Epilogue::BiasRelu(&bias), &mut out);
+        assert_eq!(out, vec![1.0, 0.0, 3.0, 1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn fused_bias_relu_matches_unfused() {
+        let (m, k, n) = (6, 11, 10);
+        let a = seq(m * k, 0.2);
+        let b = seq(k * n, 0.15);
+        let bias = seq(n, 0.9);
+        let mut ws = Workspace::new();
+        let mut fused = vec![0.0; m * n];
+        gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::BiasRelu(&bias), &mut fused);
+        let mut unfused = reference::matmul(&a, &b, m, k, n);
+        for row in unfused.chunks_exact_mut(n) {
+            for (z, &bv) in row.iter_mut().zip(&bias) {
+                *z = (*z + bv).max(0.0);
+            }
+        }
+        assert_eq!(fused, unfused);
+    }
+
+    #[test]
+    fn gather_skips_zero_centroid_but_matches_dense() {
+        let (m, k, n) = (3, 4, 5);
+        let a = seq(m * k, 0.3);
+        let cb = [0.0, 0.75, -0.75];
+        let idx: Vec<i32> = (0..k * n).map(|i| (i % 3) as i32).collect();
+        let dense: Vec<f32> = idx.iter().map(|&i| cb[i as usize]).collect();
+        let bias = seq(n, 0.4);
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0; m * n];
+        gemm_gather_nn(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::Bias(&bias), &mut out);
+        let mut want = vec![0.0; m * n];
+        gemm_nn(&mut ws, &a, &dense, m, k, n, Epilogue::Bias(&bias), &mut want);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn empty_codebook_is_bias_only_zero_output() {
+        let (m, k, n) = (2, 3, 2);
+        let a = seq(m * k, 1.0);
+        let idx = vec![0i32; k * n];
+        let bias = [0.5, -0.5];
+        let mut ws = Workspace::new();
+        let mut out = vec![f32::NAN; m * n];
+        gemm_gather_nn(&mut ws, &a, &idx, &[], m, k, n, Epilogue::Bias(&bias), &mut out);
+        assert_eq!(out, vec![0.5, -0.5, 0.5, -0.5]);
+    }
+
+    #[test]
+    fn dirty_workspace_does_not_change_results() {
+        let (m, k, n) = (17, 23, 9);
+        let a = seq(m * k, 0.11);
+        let b = seq(k * n, 0.07);
+        let mut fresh = Workspace::new();
+        let mut clean = vec![0.0; m * n];
+        gemm_nn(&mut fresh, &a, &b, m, k, n, Epilogue::None, &mut clean);
+        // pollute a workspace with a larger, unrelated GEMM first
+        let mut dirty = Workspace::new();
+        let big = seq(64 * 64, 3.3);
+        let mut sink = vec![0.0; 64 * 64];
+        gemm_nn(&mut dirty, &big, &big, 64, 64, 64, Epilogue::None, &mut sink);
+        let mut out = vec![0.0; m * n];
+        gemm_nn(&mut dirty, &a, &b, m, k, n, Epilogue::None, &mut out);
+        assert_eq!(out, clean);
+    }
+}

@@ -1,0 +1,45 @@
+//! Dense linear-algebra core of the host backend: a cache-blocked,
+//! SIMD-friendly GEMM with fused epilogues and reusable per-worker
+//! workspaces.
+//!
+//! Every sweep trial on the host backend is dominated by three dense
+//! contraction forms — NN (forward `a@w`), TN (`aᵀ@g` for dW and the LRP
+//! weight relevance) and NT (`g@wᵀ` for input gradients / R_in) — plus
+//! the elementwise passes that used to follow them (bias add, ReLU, the
+//! `w ⊙ (aᵀ@s)` scaling, ReLU-backward masking). This module replaces
+//! the scalar triple loops with one blocked core ([`gemm()`]) that packs
+//! operand panels into a micro-kernel-friendly layout, fuses those
+//! elementwise passes into the output store ([`Epilogue`]), dequantizes
+//! codebook-indexed weights panel-by-panel ([`gemm_gather_nn`], never
+//! materializing the dense matrix, skipping the zero centroid), and
+//! reuses all packing scratch through a per-worker [`Workspace`].
+//!
+//! Module map:
+//! * [`mod@gemm`] (+ the `gemm_nn`/`gemm_tn`/`gemm_nt`/`gemm_gather_nn`
+//!   wrappers) — the blocked core and its fixed blocking constants
+//! * [`pack`] — strided [`pack::View`]s and panel packing (incl. the
+//!   codebook gather)
+//! * [`workspace`] — [`Workspace`] buffers + the thread-local instance
+//!   behind `Engine::call`
+//! * [`reference`] — the retained naive kernels, kept as the oracle for
+//!   `tests/linalg_gemm_props.rs` and the baseline rows of
+//!   `BENCH_host.json`
+//!
+//! Determinism contract (relied on by the campaign serial-vs-parallel
+//! tests): a GEMM result is a pure function of operand values and shapes.
+//! Blocking is compile-time fixed, each call is single-threaded, each
+//! output element accumulates in ascending-`k` order, and workspace
+//! contents cannot leak into results — so outputs are identical for any
+//! `--jobs` count and any workspace reuse pattern. See `DESIGN.md` §2.2.
+
+pub mod gemm;
+pub mod pack;
+pub mod reference;
+pub mod workspace;
+
+pub use gemm::{
+    gemm, gemm_flops, gemm_gather_nn, gemm_nn, gemm_nt, gemm_tn, BOperand, Epilogue, MC, MR, NC,
+    NR,
+};
+pub use pack::View;
+pub use workspace::{with_thread_workspace, Workspace};

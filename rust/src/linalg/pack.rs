@@ -1,0 +1,199 @@
+//! Panel packing: reorder operand blocks into the contiguous, zero-padded
+//! strip layout the micro-kernel consumes.
+//!
+//! * A panels are `MR`-row strips: strip `s` holds rows
+//!   `[s·MR, s·MR+MR)`, stored `p`-major (`panel[s·MR·k + p·MR + r]` =
+//!   `A[s·MR + r, p]`), so the micro-kernel reads `MR` broadcast values
+//!   per `k` step from one cache line.
+//! * B panels are `NR`-column strips stored the same way
+//!   (`panel[s·NR·k + p·NR + c]` = `B[p, s·NR + c]`), giving the
+//!   micro-kernel a contiguous `NR`-wide vector load per `k` step.
+//!
+//! Rows/columns past the matrix edge are packed as `0.0`, which
+//! contributes exactly nothing to valid output elements — the edge tiles
+//! need no special-case kernel. Every slot of the panel region in use is
+//! overwritten on every pack (padding included), so reusing a dirty
+//! [`crate::linalg::Workspace`] buffer cannot change results.
+//!
+//! A strided [`View`] abstracts the source layout, so the same two pack
+//! routines serve all three contraction forms (NN / TN / NT) — a
+//! transposed operand is just a view with swapped strides, never a
+//! materialized transpose. `pack_b_gather` additionally serves the
+//! codebook-gather form of `qdense_gather`: it dequantizes int32 centroid
+//! indices directly into the packed panel (no `[k,n]` dense weight copy)
+//! and skips stores for the zero centroid, which the paper's sparse
+//! networks make the dominant one.
+
+use super::gemm::{MR, NR};
+
+/// Borrowed strided matrix view: element `(i, j)` lives at
+/// `data[i*rs + j*cs]`. `View::nn` wraps a row-major matrix;
+/// `View::t` wraps its transpose without moving data.
+#[derive(Clone, Copy, Debug)]
+pub struct View<'a> {
+    pub data: &'a [f32],
+    /// stride between consecutive rows (first index)
+    pub rs: usize,
+    /// stride between consecutive columns (second index)
+    pub cs: usize,
+}
+
+impl<'a> View<'a> {
+    /// Row-major `[rows, cols]` view: element `(i, j)` = `data[i*cols + j]`.
+    pub fn nn(data: &'a [f32], cols: usize) -> View<'a> {
+        View { data, rs: cols, cs: 1 }
+    }
+
+    /// Transposed view of a row-major `[rows, cols]` matrix: element
+    /// `(i, j)` of the view is `data[j*cols + i]`.
+    pub fn t(data: &'a [f32], cols: usize) -> View<'a> {
+        View { data, rs: 1, cs: cols }
+    }
+
+    /// Sub-view starting at element `(i, j)`.
+    pub(crate) fn at(self, i: usize, j: usize) -> View<'a> {
+        View { data: &self.data[i * self.rs + j * self.cs..], rs: self.rs, cs: self.cs }
+    }
+
+    #[inline(always)]
+    fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.rs + j * self.cs]
+    }
+}
+
+/// Pack `rows × k` of the A operand into `MR`-strip layout, zero-padding
+/// the last strip. Writes exactly `ceil(rows/MR)·MR·k` slots of `out`.
+pub(crate) fn pack_a(a: View, rows: usize, k: usize, out: &mut [f32]) {
+    let strips = (rows + MR - 1) / MR;
+    for s in 0..strips {
+        let strip = &mut out[s * MR * k..(s + 1) * MR * k];
+        let r0 = s * MR;
+        let full = MR.min(rows - r0);
+        for p in 0..k {
+            let dst = &mut strip[p * MR..p * MR + MR];
+            for (r, d) in dst.iter_mut().enumerate() {
+                *d = if r < full { a.get(r0 + r, p) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack `k × cols` of the B operand into `NR`-strip layout, zero-padding
+/// the last strip. Writes exactly `ceil(cols/NR)·NR·k` slots of `out`.
+pub(crate) fn pack_b(b: View, k: usize, cols: usize, out: &mut [f32]) {
+    let strips = (cols + NR - 1) / NR;
+    for s in 0..strips {
+        let strip = &mut out[s * NR * k..(s + 1) * NR * k];
+        let j0 = s * NR;
+        let full = NR.min(cols - j0);
+        for p in 0..k {
+            let dst = &mut strip[p * NR..p * NR + NR];
+            for (c, d) in dst.iter_mut().enumerate() {
+                *d = if c < full { b.get(p, j0 + c) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack columns `[j0, j0+cols)` of the codebook-gather B operand — a
+/// row-major `[k, n]` int32 index matrix dequantized through `codebook` —
+/// into `NR`-strip layout.
+///
+/// Out-of-range indices clamp into the codebook (XLA gather semantics on
+/// the PJRT backend; a corrupt container must not panic the host path).
+/// The strip is zero-filled first and only non-zero centroid values are
+/// stored, so the per-element cost in the paper's sparse networks (zero
+/// centroid dominant) is one load + one branch, and the full dense
+/// `[k, n]` dequantized weight matrix is never materialized.
+///
+/// `codebook` must be non-empty — the dense-layer entry points reject an
+/// empty codebook with an error before packing (see
+/// `runtime::host::qdense_gather`).
+pub(crate) fn pack_b_gather(
+    idx: &[i32],
+    codebook: &[f32],
+    n: usize,
+    j0: usize,
+    k: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    assert!(!codebook.is_empty(), "pack_b_gather: empty codebook");
+    let top = (codebook.len() - 1) as i32;
+    let strips = (cols + NR - 1) / NR;
+    for s in 0..strips {
+        let strip = &mut out[s * NR * k..(s + 1) * NR * k];
+        strip.fill(0.0);
+        let jj = j0 + s * NR;
+        let full = NR.min(cols - s * NR);
+        for p in 0..k {
+            let src = &idx[p * n + jj..p * n + jj + full];
+            let dst = &mut strip[p * NR..p * NR + full];
+            for (d, &iv) in dst.iter_mut().zip(src) {
+                let v = codebook[iv.clamp(0, top) as usize];
+                if v != 0.0 {
+                    *d = v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_strips_and_pads() {
+        // 3x2 row-major matrix, MR-padded to one strip (MR >= 3 assumed
+        // false in general, so index formula is exercised directly)
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let v = View::nn(&a, 2);
+        let rows = 3;
+        let k = 2;
+        let strips = (rows + MR - 1) / MR;
+        let mut out = vec![f32::NAN; strips * MR * k];
+        pack_a(v, rows, k, &mut out);
+        // element (r, p) of strip s sits at s*MR*k + p*MR + r
+        for p in 0..k {
+            for r in 0..rows {
+                let s = r / MR;
+                assert_eq!(out[s * MR * k + p * MR + (r % MR)], a[r * 2 + p]);
+            }
+        }
+        // padding slots are zero, not stale NaN
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn pack_b_transposed_view_matches_direct() {
+        // w is [k=2, n=3]; transposed view (element (p, j) = w[j, p])
+        // must equal packing the explicit transpose
+        let w = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let wt = [1.0, 4.0, 2.0, 5.0, 3.0, 6.0]; // [3, 2]
+        let k = 3; // contraction length of the NT form
+        let cols = 2;
+        let strips = (cols + NR - 1) / NR;
+        let mut a_t = vec![0.0; strips * NR * k];
+        let mut a_d = vec![0.0; strips * NR * k];
+        pack_b(View::t(&w, 3), k, cols, &mut a_t);
+        pack_b(View::nn(&wt, 2), k, cols, &mut a_d);
+        assert_eq!(a_t, a_d);
+    }
+
+    #[test]
+    fn pack_b_gather_clamps_and_overwrites_stale() {
+        let cb = [0.0, 0.5, -1.5];
+        let idx = [1, -7, 99, 0]; // [k=2, n=2]; -7 and 99 clamp
+        let k = 2;
+        let cols = 2;
+        let strips = (cols + NR - 1) / NR;
+        let mut out = vec![f32::NAN; strips * NR * k];
+        pack_b_gather(&idx, &cb, 2, 0, k, cols, &mut out);
+        assert_eq!(out[0], 0.5); // (p=0, c=0) -> cb[1]
+        assert_eq!(out[1], 0.0); // clamp(-7) -> cb[0] = 0.0 (skipped store)
+        assert_eq!(out[NR], -1.5); // (p=1, c=0) -> clamp(99) -> cb[2]
+        assert_eq!(out[NR + 1], 0.0); // cb[0]
+        assert!(out.iter().all(|v| v.is_finite()), "stale NaN survived fill");
+    }
+}

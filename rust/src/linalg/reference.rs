@@ -1,0 +1,96 @@
+//! Retained naive reference kernels (the pre-linalg scalar triple loops).
+//!
+//! These are the exact contraction loops the host backend shipped with
+//! before the blocked GEMM core existed, kept verbatim for two reasons:
+//!
+//! 1. they are the oracle of `tests/linalg_gemm_props.rs` — the blocked
+//!    kernels must agree with them elementwise on every shape, ragged or
+//!    not (and do so *exactly* on finite inputs, because the blocked
+//!    micro-kernel accumulates each output element over `k` in the same
+//!    ascending order; see the determinism notes in [`crate::linalg`]);
+//! 2. `benches/perf_micro.rs` times them next to the blocked kernels so
+//!    `BENCH_host.json` records the speedup instead of asserting it.
+//!
+//! They are re-exported as `runtime::host::{matmul, matmul_tn, matmul_nt}`
+//! for backward compatibility with existing call sites and tests.
+
+/// Row-major `a[m,k] @ b[k,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul lhs shape");
+    assert_eq!(b.len(), k * n, "matmul rhs shape");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bkj) in orow.iter_mut().zip(brow) {
+                *o += aik * bkj;
+            }
+        }
+    }
+    out
+}
+
+/// `a[m,k]ᵀ @ b[m,n]` -> `[k,n]` (the batch contraction of LRP / dW).
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let mut out = vec![0.0f32; k * n];
+    for s in 0..m {
+        let arow = &a[s * k..(s + 1) * k];
+        let brow = &b[s * n..(s + 1) * n];
+        for (i, &asi) in arow.iter().enumerate() {
+            if asi == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bsj) in orow.iter_mut().zip(brow) {
+                *o += asi * bsj;
+            }
+        }
+    }
+    out
+}
+
+/// `g[m,n] @ w[k,n]ᵀ` -> `[m,k]` (the input-gradient / R_in contraction).
+pub fn matmul_nt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(g.len(), m * n);
+    assert_eq!(w.len(), k * n);
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        let grow = &g[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (gv, wv) in grow.iter().zip(wrow) {
+                acc += gv * wv;
+            }
+            out[i * k + kk] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_manual() {
+        // [2,3] @ [3,2]
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![4.0, 5.0, 10.0, 11.0]);
+        // transpose identities
+        let tn = matmul_tn(&a, &a, 2, 3, 3); // aᵀa [3,3]
+        assert_eq!(tn[0], 1.0 + 16.0);
+        let nt = matmul_nt(&a, &a, 2, 3, 2); // a aᵀ [2,2]
+        assert_eq!(nt[0], 1.0 + 4.0 + 9.0);
+        assert_eq!(nt[1], 4.0 + 10.0 + 18.0);
+    }
+}

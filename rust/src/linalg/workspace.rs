@@ -1,0 +1,108 @@
+//! Reusable per-worker scratch buffers for the blocked GEMM core.
+//!
+//! Packing A/B panels on every GEMM call would make each dense layer pay
+//! two heap allocations per forward — the dominant allocation source of
+//! steady-state host-backend training. A [`Workspace`] owns those panel
+//! buffers and grows them monotonically: after the first call at a given
+//! shape class the GEMM hot loop performs **zero** heap allocations
+//! (asserted by `tests/alloc_steady_state.rs` with a counting allocator).
+//!
+//! Lifecycle: one workspace per worker thread. [`crate::runtime::Engine`]
+//! keeps one in thread-local storage (so `call_batch` fan-out across
+//! `util::pool` workers gets a private workspace per thread for free), and
+//! long-running loops like the QAT trainer hold an explicit workspace and
+//! use `Engine::call_with` to skip even the TLS lookup.
+//!
+//! Determinism: workspace contents never influence results — the pack
+//! routines fully overwrite every panel slot they hand to the
+//! micro-kernel (including zero padding), so a dirty buffer reused across
+//! calls of different shapes is indistinguishable from a fresh one. This
+//! is property-tested in `tests/linalg_gemm_props.rs`.
+
+use std::cell::RefCell;
+
+/// Reusable packing buffers for [`crate::linalg::gemm`]. Cheap to create
+/// (no allocation until first use); grows to the high-water mark of the
+/// shapes it has served and never shrinks.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    apack: Vec<f32>,
+    bpack: Vec<f32>,
+}
+
+impl Workspace {
+    /// Empty workspace (allocation-free; `const` so it can seed TLS).
+    pub const fn new() -> Workspace {
+        Workspace { apack: Vec::new(), bpack: Vec::new() }
+    }
+
+    /// Bytes currently reserved across all scratch buffers.
+    pub fn reserved_bytes(&self) -> usize {
+        (self.apack.capacity() + self.bpack.capacity()) * std::mem::size_of::<f32>()
+    }
+
+    /// Borrow the A/B panel buffers for [`crate::linalg::gemm()`], grown
+    /// to at least the requested lengths. Contents are unspecified —
+    /// callers must overwrite every slot they read (the pack routines do,
+    /// padding included).
+    pub(crate) fn panels(&mut self, a_len: usize, b_len: usize) -> (&mut [f32], &mut [f32]) {
+        if self.apack.len() < a_len {
+            self.apack.resize(a_len, 0.0);
+        }
+        if self.bpack.len() < b_len {
+            self.bpack.resize(b_len, 0.0);
+        }
+        (&mut self.apack[..a_len], &mut self.bpack[..b_len])
+    }
+}
+
+thread_local! {
+    static TLS_WORKSPACE: RefCell<Workspace> = const { RefCell::new(Workspace::new()) };
+}
+
+/// Run `f` with this thread's shared [`Workspace`].
+///
+/// This is what makes every worker thread of `Engine::call_batch` (and any
+/// plain `Engine::call` site) reuse panel buffers without API changes: the
+/// workspace is keyed by thread, so concurrent workers never share one.
+/// Falls back to a fresh workspace if the thread-local one is already
+/// borrowed (re-entrant use) — results are identical either way, only the
+/// reuse is lost.
+pub fn with_thread_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    TLS_WORKSPACE.with(|ws| match ws.try_borrow_mut() {
+        Ok(mut ws) => f(&mut ws),
+        Err(_) => f(&mut Workspace::new()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_monotonically_and_never_shrinks() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.reserved_bytes(), 0, "no allocation before first use");
+        {
+            let (a, b) = ws.panels(128, 256);
+            assert_eq!((a.len(), b.len()), (128, 256));
+        }
+        let high = ws.reserved_bytes();
+        assert!(high >= (128 + 256) * 4);
+        // a smaller request reuses the same storage
+        let _ = ws.panels(16, 16);
+        assert_eq!(ws.reserved_bytes(), high);
+    }
+
+    #[test]
+    fn tls_workspace_is_reentrant_safe() {
+        let outer = with_thread_workspace(|ws| {
+            let _ = ws.panels(64, 64);
+            // nested borrow must not panic; it just gets a fresh workspace
+            with_thread_workspace(|inner| inner.reserved_bytes())
+        });
+        assert_eq!(outer, 0, "nested workspace starts empty");
+        let reused = with_thread_workspace(|ws| ws.reserved_bytes());
+        assert!(reused >= 64 * 2 * 4, "outer TLS workspace kept its buffers");
+    }
+}

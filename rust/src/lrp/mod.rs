@@ -4,6 +4,12 @@
 //! (after the Pallas kernel and the jnp oracle); integration tests use it
 //! to cross-check the `<model>_lrp` HLO artifact end-to-end on MLP_GSC.
 //! It also powers host-side analyses (relevance-vs-magnitude correlation).
+//!
+//! Deliberately NOT routed through the blocked [`crate::linalg`] core the
+//! host backend runs on: keeping these loops naive and self-contained is
+//! what makes the host-vs-reference cross-checks in
+//! `tests/integration_runtime.rs` meaningful — they would prove nothing
+//! if both sides shared one GEMM implementation.
 
 pub mod analysis;
 

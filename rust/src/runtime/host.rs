@@ -18,12 +18,22 @@
 //! function, which is what lets [`crate::runtime::Engine::call_batch`]
 //! fan host calls across [`crate::util::pool`] workers with bitwise-stable
 //! results.
+//!
+//! All dense contractions run on the blocked GEMM core in
+//! [`crate::linalg`]: bias/ReLU/LRP-scaling passes are fused into the
+//! GEMM epilogue, `qdense_gather` dequantizes codebook panels on the fly
+//! (never materializing the dense weight matrix), and packing scratch is
+//! reused through the per-worker [`Workspace`] threaded in by
+//! [`Backend::execute`]. The pre-linalg naive kernels are retained in
+//! [`crate::linalg::reference`] and re-exported here (`matmul`,
+//! `matmul_tn`, `matmul_nt`) as the conformance oracle.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::{ArtifactSpec, Backend, Manifest};
+use crate::linalg::{self, with_thread_workspace, Epilogue, Workspace};
 use crate::quant::assign_raw;
 use crate::tensor::{Tensor, TensorI32, Value};
 
@@ -38,81 +48,69 @@ const ADAM_EPS: f32 = 1e-8;
 // kernel set (mirrors python/compile/kernels/ref.py)
 // ---------------------------------------------------------------------------
 
-/// Row-major `a[m,k] @ b[k,n]`.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k, "matmul lhs shape");
-    assert_eq!(b.len(), k * n, "matmul rhs shape");
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bkj) in orow.iter_mut().zip(brow) {
-                *o += aik * bkj;
-            }
-        }
-    }
-    out
-}
+// The naive scalar triple loops this backend originally shipped with are
+// retained verbatim in `linalg::reference` as the conformance oracle and
+// re-exported here for existing call sites; the hot paths below run on
+// the blocked `linalg` core instead.
+pub use crate::linalg::reference::{matmul, matmul_nt, matmul_tn};
 
-/// `a[m,k]ᵀ @ b[m,n]` -> `[k,n]` (the batch contraction of LRP / dW).
-pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), m * n);
-    let mut out = vec![0.0f32; k * n];
-    for s in 0..m {
-        let arow = &a[s * k..(s + 1) * k];
-        let brow = &b[s * n..(s + 1) * n];
-        for (i, &asi) in arow.iter().enumerate() {
-            if asi == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bsj) in orow.iter_mut().zip(brow) {
-                *o += asi * bsj;
-            }
-        }
-    }
-    out
-}
-
-/// `g[m,n] @ w[k,n]ᵀ` -> `[m,k]` (the input-gradient / R_in contraction).
-pub fn matmul_nt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    assert_eq!(g.len(), m * n);
-    assert_eq!(w.len(), k * n);
-    let mut out = vec![0.0f32; m * k];
-    for i in 0..m {
-        let grow = &g[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let wrow = &w[kk * n..(kk + 1) * n];
-            let mut acc = 0.0f32;
-            for (gv, wv) in grow.iter().zip(wrow) {
-                acc += gv * wv;
-            }
-            out[i * k + kk] = acc;
-        }
-    }
-    out
+/// Dense layer `z = a @ w + b` with an optionally fused ReLU — one blocked
+/// GEMM with the bias broadcast (and activation) applied in the epilogue,
+/// shared by the train forward, both eval paths and the gather path.
+fn dense_fwd(
+    scratch: &mut Workspace,
+    a: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) -> Vec<f32> {
+    assert_eq!(bias.len(), n, "qdense bias shape");
+    let mut z = vec![0.0f32; m * n];
+    let epi = if relu { Epilogue::BiasRelu(bias) } else { Epilogue::Bias(bias) };
+    linalg::gemm_nn(scratch, a, w, m, k, n, epi, &mut z);
+    z
 }
 
 /// Dense layer `y = a @ w + b` (ref.py `qdense_ref`).
 pub fn qdense(a: &[f32], w: &[f32], bias: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(bias.len(), n, "qdense bias shape");
-    let mut z = matmul(a, w, m, k, n);
-    for row in z.chunks_exact_mut(n) {
-        for (zv, &bv) in row.iter_mut().zip(bias) {
-            *zv += bv;
-        }
+    with_thread_workspace(|ws| dense_fwd(ws, a, w, bias, m, k, n, false))
+}
+
+/// Workspace-threaded core of [`qdense_gather`]: the codebook is gathered
+/// panel-by-panel at pack time (zero centroid skipped), so the dense
+/// `[k,n]` dequantized weight matrix is never materialized. An empty
+/// codebook — possible with a corrupt container — is rejected with an
+/// error instead of panicking the host path.
+fn qdense_gather_ws(
+    scratch: &mut Workspace,
+    a: &[f32],
+    idx: &[i32],
+    codebook: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) -> Result<Vec<f32>> {
+    assert_eq!(idx.len(), k * n, "qdense_gather idx shape");
+    assert_eq!(bias.len(), n, "qdense_gather bias shape");
+    if codebook.is_empty() {
+        bail!("qdense_gather: empty codebook (corrupt container)");
     }
-    z
+    // out-of-range indices clamp inside the gather pack, matching XLA
+    // gather semantics on the PJRT backend
+    let mut z = vec![0.0f32; m * n];
+    let epi = if relu { Epilogue::BiasRelu(bias) } else { Epilogue::Bias(bias) };
+    linalg::gemm_gather_nn(scratch, a, idx, codebook, m, k, n, epi, &mut z);
+    Ok(z)
 }
 
 /// Inference-form dense layer: int32 centroid indices dequantized through
-/// a codebook, then `a @ w + b` (ref.py `qdense_gather_ref`).
+/// a codebook, then `a @ w + b` (ref.py `qdense_gather_ref`). Errors on an
+/// empty codebook.
 pub fn qdense_gather(
     a: &[f32],
     idx: &[i32],
@@ -121,27 +119,31 @@ pub fn qdense_gather(
     m: usize,
     k: usize,
     n: usize,
+) -> Result<Vec<f32>> {
+    with_thread_workspace(|ws| qdense_gather_ws(ws, a, idx, codebook, bias, m, k, n, false))
+}
+
+/// Workspace-threaded core of [`lrp_dense_rw`]: one TN GEMM with the
+/// `w ⊙ ·` scaling fused into the store.
+fn lrp_dense_rw_ws(
+    scratch: &mut Workspace,
+    a: &[f32],
+    s: &[f32],
+    w: &[f32],
+    batch: usize,
+    din: usize,
+    dout: usize,
 ) -> Vec<f32> {
-    assert_eq!(idx.len(), k * n, "qdense_gather idx shape");
-    // out-of-range indices clamp, matching XLA gather semantics on the
-    // PJRT backend (a corrupt container must not panic the host path)
-    let top = (codebook.len() - 1) as i32;
-    let w: Vec<f32> = idx
-        .iter()
-        .map(|&s| codebook[s.clamp(0, top) as usize])
-        .collect();
-    qdense(a, &w, bias, m, k, n)
+    assert_eq!(w.len(), din * dout, "lrp_dense_rw weight shape");
+    let mut rw = vec![0.0f32; din * dout];
+    linalg::gemm_tn(scratch, a, s, batch, din, dout, Epilogue::Scale(w), &mut rw);
+    rw
 }
 
 /// Per-weight epsilon-rule relevance `R_w = w ⊙ (aᵀ @ s)`
 /// (ref.py `lrp_dense_rw_ref`).
 pub fn lrp_dense_rw(a: &[f32], s: &[f32], w: &[f32], batch: usize, din: usize, dout: usize) -> Vec<f32> {
-    assert_eq!(w.len(), din * dout, "lrp_dense_rw weight shape");
-    let mut rw = matmul_tn(a, s, batch, din, dout);
-    for (r, &wv) in rw.iter_mut().zip(w) {
-        *r *= wv;
-    }
-    rw
+    with_thread_workspace(|ws| lrp_dense_rw_ws(ws, a, s, w, batch, din, dout))
 }
 
 fn relu_inplace(z: &mut [f32]) {
@@ -370,30 +372,44 @@ fn dense_params<'a>(slots: &Slots<'a>, nl: usize) -> Result<(Vec<&'a [f32]>, Vec
 }
 
 /// Forward pass keeping every layer input: `acts[i]` feeds layer `i`
-/// (`acts[0] = x`, `acts[i>0] = relu(z_{i-1})`); returns logits.
+/// (`acts[0] = x`, `acts[i>0] = relu(z_{i-1})`, ReLU fused into the GEMM
+/// epilogue); returns logits.
 fn forward_collect(
+    scratch: &mut Workspace,
     sig: &MlpSig,
     ws: &[&[f32]],
     bs: &[&[f32]],
     x: &[f32],
 ) -> (Vec<Vec<f32>>, Vec<f32>) {
     let nl = sig.layers();
-    let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
-    let mut a = x.to_vec();
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
+    acts.push(x.to_vec());
+    let mut logits = Vec::new();
     for i in 0..nl {
-        let mut z = qdense(&a, ws[i], bs[i], sig.batch, sig.dims[i], sig.dims[i + 1]);
+        let z = dense_fwd(
+            scratch,
+            &acts[i],
+            ws[i],
+            bs[i],
+            sig.batch,
+            sig.dims[i],
+            sig.dims[i + 1],
+            i + 1 < nl,
+        );
         if i + 1 < nl {
-            relu_inplace(&mut z);
-            acts.push(z.clone());
+            acts.push(z);
+        } else {
+            logits = z;
         }
-        a = z;
     }
-    (acts, a)
+    (acts, logits)
 }
 
 /// Backward pass of the mean-softmax-xent loss through the dense ladder:
-/// returns per-layer `(dW, db)` given the logit gradient `g`.
+/// returns per-layer `(dW, db)` given the logit gradient `g`. The ReLU
+/// backward mask is fused into the NT GEMM's store.
 fn backward(
+    scratch: &mut Workspace,
     sig: &MlpSig,
     ws: &[&[f32]],
     acts: &[Vec<f32>],
@@ -404,7 +420,9 @@ fn backward(
     let mut dbs: Vec<Vec<f32>> = vec![Vec::new(); nl];
     for i in (0..nl).rev() {
         let (din, dout) = (sig.dims[i], sig.dims[i + 1]);
-        dws[i] = matmul_tn(&acts[i], &g, sig.batch, din, dout);
+        let mut dw = vec![0.0f32; din * dout];
+        linalg::gemm_tn(scratch, &acts[i], &g, sig.batch, din, dout, Epilogue::None, &mut dw);
+        dws[i] = dw;
         let mut db = vec![0.0f32; dout];
         for row in g.chunks_exact(dout) {
             for (d, &gv) in db.iter_mut().zip(row) {
@@ -413,13 +431,18 @@ fn backward(
         }
         dbs[i] = db;
         if i > 0 {
-            let mut gin = matmul_nt(&g, ws[i], sig.batch, dout, din);
             // relu backward: acts[i] = relu(z_{i-1}), so the mask is a > 0
-            for (gv, &av) in gin.iter_mut().zip(acts[i].iter()) {
-                if av <= 0.0 {
-                    *gv = 0.0;
-                }
-            }
+            let mut gin = vec![0.0f32; sig.batch * din];
+            linalg::gemm_nt(
+                scratch,
+                &g,
+                ws[i],
+                sig.batch,
+                dout,
+                din,
+                Epilogue::ReluMask(&acts[i]),
+                &mut gin,
+            );
             g = gin;
         }
     }
@@ -452,6 +475,7 @@ fn train_step(
     spec: &ArtifactSpec,
     inputs: &[Value],
     ste: bool,
+    scratch: &mut Workspace,
 ) -> Result<Vec<Value>> {
     let sig = mlp_sig(spec, "p_w")?;
     let nl = sig.layers();
@@ -479,10 +503,10 @@ fn train_step(
         .map(|(&w, q)| q.unwrap_or(w))
         .collect();
 
-    let (acts, logits) = forward_collect(&sig, &eval_ws, &bs, x);
+    let (acts, logits) = forward_collect(scratch, &sig, &eval_ws, &bs, x);
     let (loss, g) = softmax_xent_grad(&logits, y, sig.batch, sig.classes());
     let correct = correct_count(&logits, y, sig.batch, sig.classes());
-    let (mut dws, dbs) = backward(&sig, &eval_ws, &acts, g);
+    let (mut dws, dbs) = backward(scratch, &sig, &eval_ws, &acts, g);
 
     // Fig. 5 step 3: scale quantized-weight gradients by |centroid|
     if ste && gs > 0.5 {
@@ -523,7 +547,7 @@ fn train_step(
 
 /// Composite epsilon-LRP over the dense ladder (model.py `MlpGsc::lrp`):
 /// per-weight relevances, batch-aggregated, signed.
-fn lrp_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+fn lrp_step(spec: &ArtifactSpec, inputs: &[Value], scratch: &mut Workspace) -> Result<Vec<Value>> {
     let sig = mlp_sig(spec, "p_w")?;
     let nl = sig.layers();
     let slots = Slots::new(spec, inputs);
@@ -533,21 +557,21 @@ fn lrp_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
     let eqw = slots.scalar("eqw")?;
 
     // forward keeping every layer input AND pre-activation (the epsilon
-    // rule needs both, and recomputing z would double the forward cost)
+    // rule needs both, and recomputing z would double the forward cost);
+    // ReLU cannot fuse here because z itself is retained
     let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
     let mut zs: Vec<Vec<f32>> = Vec::with_capacity(nl);
-    let mut a = x.to_vec();
     for i in 0..nl {
-        let z = qdense(&a, ws[i], bs[i], sig.batch, sig.dims[i], sig.dims[i + 1]);
-        zs.push(z.clone());
-        let mut h = z;
+        let (din, dout) = (sig.dims[i], sig.dims[i + 1]);
+        let z = dense_fwd(scratch, &acts[i], ws[i], bs[i], sig.batch, din, dout, false);
         if i + 1 < nl {
+            let mut h = z.clone();
             relu_inplace(&mut h);
-            acts.push(h.clone());
+            acts.push(h);
         }
-        a = h;
+        zs.push(z);
     }
-    let logits = a;
+    let logits = &zs[nl - 1];
     let classes = sig.classes();
     // initial relevance: onehot · (1 or target-class score)
     let mut r = vec![0.0f32; sig.batch * classes];
@@ -562,16 +586,15 @@ fn lrp_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
         let a = &acts[i];
         let z = &zs[i];
         let s: Vec<f32> = r.iter().zip(z.iter()).map(|(&rv, &zv)| rv / stabilize(zv)).collect();
-        let rw = lrp_dense_rw(a, &s, ws[i], sig.batch, din, dout);
+        let rw = lrp_dense_rw_ws(scratch, a, &s, ws[i], sig.batch, din, dout);
         out.insert(
             format!("r_w{i}"),
             Value::F32(Tensor::new(vec![din, dout], rw)),
         );
         if i > 0 {
-            let mut rin = matmul_nt(&s, ws[i], sig.batch, dout, din);
-            for (rv, &av) in rin.iter_mut().zip(a.iter()) {
-                *rv *= av;
-            }
+            // R_in = a ⊙ (s @ wᵀ), the ⊙ fused into the NT GEMM's store
+            let mut rin = vec![0.0f32; sig.batch * din];
+            linalg::gemm_nt(scratch, &s, ws[i], sig.batch, dout, din, Epilogue::Scale(a), &mut rin);
             r = rin;
         }
     }
@@ -580,7 +603,12 @@ fn lrp_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
 
 /// Plain eval (optionally with fake-quantized activations for the Fig. 1
 /// sensitivity probe when the artifact carries an `abits` slot).
-fn eval_step(spec: &ArtifactSpec, inputs: &[Value], actq: bool) -> Result<Vec<Value>> {
+fn eval_step(
+    spec: &ArtifactSpec,
+    inputs: &[Value],
+    actq: bool,
+    scratch: &mut Workspace,
+) -> Result<Vec<Value>> {
     let sig = mlp_sig(spec, "p_w")?;
     let nl = sig.layers();
     let slots = Slots::new(spec, inputs);
@@ -591,12 +619,11 @@ fn eval_step(spec: &ArtifactSpec, inputs: &[Value], actq: bool) -> Result<Vec<Va
 
     let mut a = x.to_vec();
     for i in 0..nl {
-        let mut z = qdense(&a, ws[i], bs[i], sig.batch, sig.dims[i], sig.dims[i + 1]);
-        if i + 1 < nl {
-            relu_inplace(&mut z);
-            if actq {
-                act_fake_quant(&mut z, levels);
-            }
+        let hidden = i + 1 < nl;
+        let mut z =
+            dense_fwd(scratch, &a, ws[i], bs[i], sig.batch, sig.dims[i], sig.dims[i + 1], hidden);
+        if hidden && actq {
+            act_fake_quant(&mut z, levels);
         }
         a = z;
     }
@@ -610,7 +637,11 @@ fn eval_step(spec: &ArtifactSpec, inputs: &[Value], actq: bool) -> Result<Vec<Va
 
 /// Deployment-form gather eval: int32 centroid indices + per-layer
 /// codebook through `qdense_gather` (model.py `eval_gather_mlp`).
-fn eval_gather_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+fn eval_gather_step(
+    spec: &ArtifactSpec,
+    inputs: &[Value],
+    scratch: &mut Workspace,
+) -> Result<Vec<Value>> {
     let sig = mlp_sig(spec, "idx_w")?;
     let nl = sig.layers();
     let slots = Slots::new(spec, inputs);
@@ -622,10 +653,18 @@ fn eval_gather_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>>
         let idx = slots.i32(&format!("idx_w{i}"))?;
         let cb = slots.f32(&format!("cb_w{i}"))?;
         let bias = slots.f32(&format!("p_b{i}"))?;
-        let mut z = qdense_gather(&a, idx, cb, bias, sig.batch, sig.dims[i], sig.dims[i + 1]);
-        if i + 1 < nl {
-            relu_inplace(&mut z);
-        }
+        let z = qdense_gather_ws(
+            scratch,
+            &a,
+            idx,
+            cb,
+            bias,
+            sig.batch,
+            sig.dims[i],
+            sig.dims[i + 1],
+            i + 1 < nl,
+        )
+        .with_context(|| format!("artifact {}: layer {i}", spec.name))?;
         a = z;
     }
     let loss = softmax_xent_loss(&a, y, sig.batch, sig.classes());
@@ -727,14 +766,19 @@ impl Backend for HostBackend {
         }
     }
 
-    fn execute(&self, spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+    fn execute(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Value],
+        scratch: &mut Workspace,
+    ) -> Result<Vec<Value>> {
         match classify(&spec.name)? {
-            Kind::FpTrain => train_step(spec, inputs, false),
-            Kind::SteTrain => train_step(spec, inputs, true),
-            Kind::Lrp => lrp_step(spec, inputs),
-            Kind::Eval => eval_step(spec, inputs, false),
-            Kind::EvalActq => eval_step(spec, inputs, true),
-            Kind::EvalGather => eval_gather_step(spec, inputs),
+            Kind::FpTrain => train_step(spec, inputs, false, scratch),
+            Kind::SteTrain => train_step(spec, inputs, true, scratch),
+            Kind::Lrp => lrp_step(spec, inputs, scratch),
+            Kind::Eval => eval_step(spec, inputs, false, scratch),
+            Kind::EvalActq => eval_step(spec, inputs, true, scratch),
+            Kind::EvalGather => eval_gather_step(spec, inputs, scratch),
             Kind::Assign => assign_step(spec, inputs),
         }
     }
@@ -751,18 +795,21 @@ mod tests {
     use super::*;
 
     #[test]
-    fn matmul_matches_manual() {
-        // [2,3] @ [3,2]
+    fn blocked_kernels_match_retained_naive_references() {
+        // the re-exported naive kernels are the oracle for the blocked
+        // qdense path (the full property suite lives in
+        // tests/linalg_gemm_props.rs)
         let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let b = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
-        let c = matmul(&a, &b, 2, 3, 2);
-        assert_eq!(c, vec![4.0, 5.0, 10.0, 11.0]);
-        // transpose identities
-        let tn = matmul_tn(&a, &a, 2, 3, 3); // aᵀa [3,3]
-        assert_eq!(tn[0], 1.0 + 16.0);
-        let nt = matmul_nt(&a, &a, 2, 3, 2); // a aᵀ [2,2]
-        assert_eq!(nt[0], 1.0 + 4.0 + 9.0);
-        assert_eq!(nt[1], 4.0 + 10.0 + 18.0);
+        assert_eq!(matmul(&a, &b, 2, 3, 2), vec![4.0, 5.0, 10.0, 11.0]);
+        let bias = [0.0, 0.0];
+        assert_eq!(qdense(&a, &b, &bias, 2, 3, 2), matmul(&a, &b, 2, 3, 2));
+        let rw = lrp_dense_rw(&a, &b, &b, 2, 3, 2);
+        let mut want = matmul_tn(&a, &b, 2, 3, 2);
+        for (r, &wv) in want.iter_mut().zip(&b) {
+            *r *= wv;
+        }
+        assert_eq!(rw, want);
     }
 
     #[test]
@@ -774,8 +821,16 @@ mod tests {
         assert_eq!(z, vec![1.75, 1.75]);
         let cb = [0.0, 0.5, -0.5, 0.25];
         let idx = [1, 2, 3, 3];
-        let zg = qdense_gather(&a, &idx, &cb, &bias, 1, 2, 2);
+        let zg = qdense_gather(&a, &idx, &cb, &bias, 1, 2, 2).unwrap();
         assert_eq!(zg, vec![1.75, 1.75]);
+    }
+
+    #[test]
+    fn qdense_gather_rejects_empty_codebook() {
+        // a corrupt container could carry an empty codebook; the host
+        // path must error, not underflow `len() - 1` and panic
+        let err = qdense_gather(&[1.0], &[0], &[], &[0.0], 1, 1, 1).unwrap_err();
+        assert!(format!("{err:?}").contains("empty codebook"));
     }
 
     #[test]

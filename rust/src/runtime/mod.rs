@@ -30,7 +30,9 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
+use crate::linalg::with_thread_workspace;
 use crate::tensor::Value;
+pub use crate::linalg::Workspace;
 pub use host::HostBackend;
 pub use manifest::{ArtifactSpec, DType, Init, Manifest, ModelSpec, ParamSpec, TensorSpec};
 pub use pjrt::{smoke, PjrtBackend};
@@ -72,7 +74,18 @@ pub trait Backend: Send + Sync {
 
     /// Execute one artifact: inputs in manifest order (already validated
     /// against the signature by the engine), outputs in manifest order.
-    fn execute(&self, spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>>;
+    ///
+    /// `scratch` is the caller's reusable [`Workspace`] (one per worker
+    /// thread — the engine hands each thread its own, so steady-state
+    /// execution packs GEMM panels without heap allocation). Backends
+    /// with no host-side math (PJRT) simply ignore it; results must never
+    /// depend on its prior contents.
+    fn execute(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Value],
+        scratch: &mut Workspace,
+    ) -> Result<Vec<Value>>;
 
     /// Compile-time bookkeeping (for §Perf accounting).
     fn stats(&self) -> BackendStats {
@@ -177,11 +190,26 @@ impl Engine {
     }
 
     /// Execute one artifact: inputs in manifest order, outputs in manifest
-    /// order.
+    /// order. Uses this thread's shared [`Workspace`] — every worker
+    /// thread (e.g. of [`Engine::call_batch`]) reuses its own packing
+    /// scratch across calls with no API change at the call site.
     pub fn call(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        with_thread_workspace(|ws| self.call_with(name, inputs, ws))
+    }
+
+    /// [`Engine::call`] with an explicit caller-held [`Workspace`] —
+    /// long-running loops (the QAT trainer, validation passes) hold one
+    /// and skip even the thread-local lookup. Results are identical to
+    /// [`Engine::call`]: workspace state never influences outputs.
+    pub fn call_with(
+        &self,
+        name: &str,
+        inputs: &[Value],
+        scratch: &mut Workspace,
+    ) -> Result<Vec<Value>> {
         let spec = self.manifest.artifact(name)?;
         self.check_inputs(spec, inputs)?;
-        let outs = self.backend.execute(spec, inputs)?;
+        let outs = self.backend.execute(spec, inputs, scratch)?;
         if outs.len() != spec.outputs.len() {
             bail!(
                 "artifact {}: expected {} outputs, got {}",
@@ -195,8 +223,18 @@ impl Engine {
 
     /// Map outputs by name for convenient lookup.
     pub fn call_named(&self, name: &str, inputs: &[Value]) -> Result<HashMap<String, Value>> {
+        with_thread_workspace(|ws| self.call_named_with(name, inputs, ws))
+    }
+
+    /// [`Engine::call_named`] with an explicit caller-held [`Workspace`].
+    pub fn call_named_with(
+        &self,
+        name: &str,
+        inputs: &[Value],
+        scratch: &mut Workspace,
+    ) -> Result<HashMap<String, Value>> {
         let spec = self.manifest.artifact(name)?.clone();
-        let outs = self.call(name, inputs)?;
+        let outs = self.call_with(name, inputs, scratch)?;
         Ok(spec
             .outputs
             .iter()
@@ -210,7 +248,10 @@ impl Engine {
     /// batched-evaluation entry point). The artifact is prepared once up
     /// front — PJRT workers then hit the cache's read path only, host
     /// workers run the validated pure kernels — and outputs come back in
-    /// input order on either backend.
+    /// input order on either backend. Each worker thread executes through
+    /// its own thread-local [`Workspace`], so fanning out does not share
+    /// (or allocate per-call) GEMM packing scratch, and results stay
+    /// independent of the jobs count.
     pub fn call_batch(
         &self,
         name: &str,

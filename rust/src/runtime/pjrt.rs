@@ -14,7 +14,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
-use super::{ArtifactSpec, Backend, BackendStats, DType, TensorSpec};
+use super::{ArtifactSpec, Backend, BackendStats, DType, TensorSpec, Workspace};
 use crate::tensor::{Tensor, TensorI32, Value};
 
 /// Shard count of the executable cache. Power of two, comfortably above
@@ -135,8 +135,14 @@ impl Backend for PjrtBackend {
 
     /// Execute one artifact. (Artifacts are lowered with
     /// return_tuple=True, so the single device output is a tuple literal
-    /// that we decompose against the manifest output signature.)
-    fn execute(&self, spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+    /// that we decompose against the manifest output signature.) All math
+    /// runs on the device, so the host-side GEMM workspace is unused.
+    fn execute(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Value],
+        _scratch: &mut Workspace,
+    ) -> Result<Vec<Value>> {
         let exe = self.executable(spec)?;
         let lits: Vec<xla::Literal> = inputs
             .iter()

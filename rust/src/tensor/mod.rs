@@ -109,6 +109,14 @@ impl Value {
         }
     }
 
+    /// Element count, regardless of dtype.
+    pub fn numel(&self) -> usize {
+        match self {
+            Value::F32(t) => t.numel(),
+            Value::I32(t) => t.numel(),
+        }
+    }
+
     pub fn as_f32(&self) -> &Tensor {
         match self {
             Value::F32(t) => t,
@@ -168,8 +176,10 @@ mod tests {
         let v = Value::F32(Tensor::zeros(&[2]));
         assert_eq!(v.shape(), &[2]);
         assert_eq!(v.as_f32().numel(), 2);
+        assert_eq!(v.numel(), 2);
         let vi = Value::I32(TensorI32::zeros(&[3]));
         assert_eq!(vi.as_i32().numel(), 3);
+        assert_eq!(vi.numel(), 3);
     }
 
     #[test]

@@ -91,7 +91,8 @@ fn golden_qdense_gather_matches_python_reference() {
         m,
         k,
         n,
-    );
+    )
+    .expect("golden fixture carries a non-empty codebook");
     assert_close(&y, &fx.f32s("y"), 1e-5).unwrap();
 }
 

@@ -1,0 +1,174 @@
+//! Property suite for the blocked GEMM core: on every shape — ragged or
+//! block-aligned, degenerate or not — the blocked kernels must agree with
+//! the retained naive reference kernels (`linalg::reference`), and every
+//! fused epilogue must equal its unfused composition.
+//!
+//! The comparisons use `assert_eq!` (no tolerance): the blocked
+//! micro-kernel accumulates each output element over `k` in the same
+//! ascending order as the naive loops and rustc performs no
+//! reassociation or FMA contraction, so on finite inputs the results are
+//! equal to the last bit. That exactness is itself part of the
+//! determinism contract (DESIGN.md §2.2) — if a refactor reorders the
+//! blocked summation, this suite fails loudly instead of silently
+//! shifting golden numbers.
+
+use ecqx::linalg::{self, reference, Epilogue, Workspace, MC, MR, NC, NR};
+use ecqx::runtime::host::qdense_gather;
+use ecqx::util::prop::{check, normal_vec};
+use ecqx::util::Rng;
+
+/// Ragged-heavy dimension pool: degenerate sizes, off-by-one around every
+/// blocking constant, and a couple of comfortably large values.
+fn dim(rng: &mut Rng) -> usize {
+    const POOL: [usize; 16] =
+        [1, 2, 3, MR - 1, MR, MR + 1, NR - 1, NR, NR + 1, 33, MC - 1, MC, MC + 1, 100, NC - 1, 70];
+    POOL[rng.below(POOL.len())]
+}
+
+fn eq(label: &str, got: &[f32], want: &[f32]) -> Result<(), String> {
+    if got == want {
+        Ok(())
+    } else {
+        let i = got
+            .iter()
+            .zip(want)
+            .position(|(a, b)| a != b)
+            .unwrap_or(usize::MAX);
+        Err(format!("{label}: first divergence at flat index {i}"))
+    }
+}
+
+#[test]
+fn blocked_nn_tn_nt_match_naive_on_random_ragged_shapes() {
+    let mut ws = Workspace::new(); // shared across all cases: reuse must be inert
+    check("blocked gemm ≡ naive reference", 60, |rng| {
+        let (m, k, n) = (dim(rng), dim(rng), dim(rng));
+        let a = normal_vec(rng, m * k, 1.0);
+        let b = normal_vec(rng, k * n, 1.0);
+        let g = normal_vec(rng, m * n, 1.0);
+
+        let mut nn = vec![0.0f32; m * n];
+        linalg::gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::None, &mut nn);
+        eq("nn", &nn, &reference::matmul(&a, &b, m, k, n))?;
+
+        let mut tn = vec![0.0f32; k * n];
+        linalg::gemm_tn(&mut ws, &a, &g, m, k, n, Epilogue::None, &mut tn);
+        eq("tn", &tn, &reference::matmul_tn(&a, &g, m, k, n))?;
+
+        let mut nt = vec![0.0f32; m * k];
+        linalg::gemm_nt(&mut ws, &g, &b, m, n, k, Epilogue::None, &mut nt);
+        eq("nt", &nt, &reference::matmul_nt(&g, &b, m, n, k))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn degenerate_shapes_match_naive() {
+    let mut ws = Workspace::new();
+    // m=1 row-vector, k=1 outer-product, and empty m/n/k
+    for &(m, k, n) in &[(1usize, 37, 19), (23, 1, 9), (5, 8, 1), (0, 4, 4), (4, 0, 4), (4, 4, 0)] {
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut out = vec![0.0f32; m * n];
+        linalg::gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
+        assert_eq!(out, reference::matmul(&a, &b, m, k, n), "shape {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn fused_epilogues_match_unfused_composition() {
+    check("fused epilogue ≡ unfused passes", 40, |rng| {
+        let mut ws = Workspace::new();
+        let (m, k, n) = (dim(rng), dim(rng), dim(rng));
+        let a = normal_vec(rng, m * k, 1.0);
+        let b = normal_vec(rng, k * n, 1.0);
+        let bias = normal_vec(rng, n, 1.0);
+        let scale = normal_vec(rng, m * n, 1.0);
+        let base = reference::matmul(&a, &b, m, k, n);
+
+        // bias
+        let mut fused = vec![0.0f32; m * n];
+        linalg::gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::Bias(&bias), &mut fused);
+        let mut want = base.clone();
+        for row in want.chunks_exact_mut(n) {
+            for (z, &bv) in row.iter_mut().zip(&bias) {
+                *z += bv;
+            }
+        }
+        eq("bias", &fused, &want)?;
+
+        // bias + relu
+        linalg::gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::BiasRelu(&bias), &mut fused);
+        for z in want.iter_mut() {
+            if *z < 0.0 {
+                *z = 0.0;
+            }
+        }
+        eq("bias+relu", &fused, &want)?;
+
+        // elementwise scale (the LRP w ⊙ (aᵀ@s) form, applied to NN here)
+        linalg::gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::Scale(&scale), &mut fused);
+        let want: Vec<f32> = base.iter().zip(&scale).map(|(&z, &s)| z * s).collect();
+        eq("scale", &fused, &want)?;
+
+        // relu-backward mask
+        linalg::gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::ReluMask(&scale), &mut fused);
+        let want: Vec<f32> =
+            base.iter().zip(&scale).map(|(&z, &s)| if s > 0.0 { z } else { 0.0 }).collect();
+        eq("relu-mask", &fused, &want)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn gather_gemm_matches_materialized_dense_with_clamping() {
+    check("gather pack ≡ materialize + dense", 40, |rng| {
+        let mut ws = Workspace::new();
+        let (m, k, n) = (dim(rng), dim(rng), dim(rng));
+        let a = normal_vec(rng, m * k, 1.0);
+        let bias = normal_vec(rng, n, 0.5);
+        let ncb = 1 + rng.below(8);
+        let mut cb = normal_vec(rng, ncb, 0.5);
+        cb[0] = 0.0; // the paper's codebooks always carry the zero centroid
+        // ~70% zero centroid + deliberate out-of-range indices (clamp)
+        let idx: Vec<i32> = (0..k * n)
+            .map(|_| {
+                if rng.chance(0.1) {
+                    if rng.chance(0.5) { -3 } else { ncb as i32 + 5 }
+                } else if rng.chance(0.7) {
+                    0
+                } else {
+                    rng.below(ncb) as i32
+                }
+            })
+            .collect();
+        let top = (ncb - 1) as i32;
+        let dense: Vec<f32> = idx.iter().map(|&i| cb[i.clamp(0, top) as usize]).collect();
+
+        let got = qdense_gather(&a, &idx, &cb, &bias, m, k, n)
+            .map_err(|e| format!("gather errored: {e}"))?;
+        let mut want = vec![0.0f32; m * n];
+        linalg::gemm_nn(&mut ws, &a, &dense, m, k, n, Epilogue::Bias(&bias), &mut want);
+        eq("gather", &got, &want)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn workspace_reuse_across_mixed_shapes_is_inert() {
+    // interleave wildly different shapes through ONE workspace and check
+    // each against a fresh-workspace run: panel reuse must never leak
+    let mut shared = Workspace::new();
+    let mut rng = Rng::new(0xD1CE);
+    for _ in 0..10 {
+        let (m, k, n) = (dim(&mut rng), dim(&mut rng), dim(&mut rng));
+        let a = normal_vec(&mut rng, m * k, 1.0);
+        let b = normal_vec(&mut rng, k * n, 1.0);
+        let mut out_shared = vec![0.0f32; m * n];
+        linalg::gemm_nn(&mut shared, &a, &b, m, k, n, Epilogue::None, &mut out_shared);
+        let mut fresh = Workspace::new();
+        let mut out_fresh = vec![0.0f32; m * n];
+        linalg::gemm_nn(&mut fresh, &a, &b, m, k, n, Epilogue::None, &mut out_fresh);
+        assert_eq!(out_shared, out_fresh, "shape {m}x{k}x{n}");
+    }
+}
