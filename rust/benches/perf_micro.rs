@@ -19,7 +19,7 @@ use ecqx::codec::{deepcabac, huffman};
 use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
 use ecqx::data::DataLoader;
 use ecqx::exp;
-use ecqx::linalg::{self, gemm_flops, reference, Epilogue, Workspace};
+use ecqx::linalg::{self, conv2d_flops, gemm_flops, reference, Conv2d, Epilogue, Pad, Workspace};
 use ecqx::quant::{assign_ref, Codebook};
 use ecqx::tensor::{Tensor, Value};
 use ecqx::util::Rng;
@@ -123,6 +123,62 @@ fn main() -> anyhow::Result<()> {
             z
         });
         log.push("qdense_gather_materialized", &[m, k, n], &r, flops);
+    }
+    // ---- conv kernels: the im2col-GEMM lowering vs naive direct conv ----
+    // CIFAR-shaped sizes: the cnn_cifar stem (32×32×3 -> 16) and a mid
+    // stack layer (16×16×32 -> 64, stride 2); shape column is the full
+    // geometry [n, h, w, kh, kw, cin, cout, stride] so BENCH_host.json
+    // rows stay unique across future non-square / non-3×3 cases.
+    let conv_cases: &[Conv2d] = if smoke {
+        &[Conv2d { n: 2, h: 8, w: 8, c: 3, kh: 3, kw: 3, co: 8, stride: 1, pad: Pad::Same }]
+    } else {
+        &[
+            Conv2d { n: 8, h: 32, w: 32, c: 3, kh: 3, kw: 3, co: 16, stride: 1, pad: Pad::Same },
+            Conv2d { n: 8, h: 16, w: 16, c: 32, kh: 3, kw: 3, co: 64, stride: 2, pad: Pad::Same },
+        ]
+    };
+    for g in conv_cases {
+        let shape = [g.n, g.h, g.w, g.kh, g.kw, g.c, g.co, g.stride];
+        let tag = format!("{}x{}x{}x{}->{} s{}", g.n, g.h, g.w, g.c, g.co, g.stride);
+        let x: Vec<f32> = (0..g.in_len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let wf: Vec<f32> = (0..g.filter_len()).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let gout: Vec<f32> = (0..g.out_len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..g.co).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        let flops = Some(conv2d_flops(g));
+        let mut out = vec![0.0f32; g.out_len()];
+        let mut dwf = vec![0.0f32; g.filter_len()];
+        let mut dx = vec![0.0f32; g.in_len()];
+
+        let r = bench(&format!("conv2d naive {tag}"), it(1), it(10), || {
+            reference::conv2d_naive(&x, &wf, g)
+        });
+        log.push("conv2d_naive", &shape, &r, flops);
+        let r = bench(&format!("conv2d im2col {tag}"), it(1), it(10), || {
+            linalg::conv2d(&mut ws, &x, &wf, g, Epilogue::None, &mut out)
+        });
+        log.push("conv2d_im2col", &shape, &r, flops);
+        let r = bench(&format!("conv2d im2col fused bias+relu {tag}"), it(1), it(10), || {
+            linalg::conv2d(&mut ws, &x, &wf, g, Epilogue::BiasRelu(&bias), &mut out)
+        });
+        log.push("conv2d_im2col_bias_relu", &shape, &r, flops);
+
+        let r = bench(&format!("conv2d_bwd_filter naive {tag}"), it(1), it(10), || {
+            reference::conv2d_bwd_filter_naive(&x, &gout, g)
+        });
+        log.push("conv2d_bwd_filter_naive", &shape, &r, flops);
+        let r = bench(&format!("conv2d_bwd_filter im2col {tag}"), it(1), it(10), || {
+            linalg::conv2d_bwd_filter(&mut ws, &x, &gout, g, Epilogue::None, &mut dwf)
+        });
+        log.push("conv2d_bwd_filter_im2col", &shape, &r, flops);
+
+        let r = bench(&format!("conv2d_bwd_input naive {tag}"), it(1), it(10), || {
+            reference::conv2d_bwd_input_naive(&gout, &wf, g)
+        });
+        log.push("conv2d_bwd_input_naive", &shape, &r, flops);
+        let r = bench(&format!("conv2d_bwd_input im2col {tag}"), it(1), it(10), || {
+            linalg::conv2d_bwd_input(&mut ws, &gout, &wf, g, &mut dx)
+        });
+        log.push("conv2d_bwd_input_im2col", &shape, &r, flops);
     }
     println!("  (gemm workspace high-water mark: {} KiB)", ws.reserved_bytes() / 1024);
 

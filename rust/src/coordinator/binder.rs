@@ -147,6 +147,7 @@ mod tests {
         let art = ArtifactSpec {
             name: "toy_eval".into(),
             file: "/dev/null".into(),
+            attrs: Default::default(),
             inputs: vec![
                 TensorSpec { name: "p_w0".into(), dtype: DType::F32, shape: vec![3, 2] },
                 TensorSpec { name: "p_b0".into(), dtype: DType::F32, shape: vec![2] },

@@ -1,6 +1,14 @@
 //! Pre-training (FP32 baseline) and the ECQ^x quantization-aware training
 //! loop (Fig. 5): STE step -> periodic LRP -> relevance pipeline ->
 //! per-layer re-assignment -> eval.
+//!
+//! Both trainers are signature-driven and model-family agnostic: the same
+//! loop runs the dense MLP and the conv-ladder CNN workloads, because all
+//! model structure lives behind the artifact surface (`binder` matches
+//! slots by name, the LRP outputs `r_<param>` map onto quantized
+//! parameter names — `r_w<i>` for dense layers, `r_c<i>` for conv
+//! filters — and the assigner treats every quantized tensor as a flat
+//! weight vector).
 
 use std::collections::BTreeMap;
 
@@ -423,6 +431,28 @@ mod tests {
             }],
         };
         ModelState::init(&spec, 1)
+    }
+
+    #[test]
+    fn collect_relevances_maps_conv_and_dense_outputs_to_param_names() {
+        // the QAT loop feeds LRP artifact outputs straight into the
+        // assigner's per-parameter EMAs: `r_<param>` must strip to the
+        // quantized parameter name for conv filters exactly like dense
+        let mut outs = std::collections::HashMap::new();
+        outs.insert(
+            "r_w0".to_string(),
+            crate::tensor::Value::F32(Tensor::zeros(&[4, 2])),
+        );
+        outs.insert(
+            "r_c0".to_string(),
+            crate::tensor::Value::F32(Tensor::zeros(&[3, 3, 3, 4])),
+        );
+        let rel = collect_relevances(outs);
+        assert_eq!(
+            rel.keys().cloned().collect::<Vec<_>>(),
+            vec!["c0".to_string(), "w0".to_string()]
+        );
+        assert_eq!(rel["c0"].shape, vec![3, 3, 3, 4]);
     }
 
     #[test]

@@ -1,6 +1,12 @@
 //! Synthetic image datasets: CIFAR-10-like (10 classes) and Pascal-VOC-like
 //! (20 classes), 32x32x3 NHWC, class-conditional textures with the paper's
 //! augmentation structure (normalization, random horizontal flip, jitter).
+//!
+//! Layout contract: each sample is flattened HWC — element `(y, x, ch)`
+//! lives at [`hwc_index`]`(y, x, ch)` — so a `[batch, DIM]` batch from the
+//! loader is byte-identical to the `[batch, H, W, C]` NHWC tensor the CNN
+//! manifests declare for their `x` slot. The host conv pipeline relies on
+//! this: batches bind to 4D conv inputs without any transpose.
 
 use super::Dataset;
 use crate::util::Rng;
@@ -9,6 +15,16 @@ pub const H: usize = 32;
 pub const W: usize = 32;
 pub const C: usize = 3;
 pub const DIM: usize = H * W * C;
+/// The NHWC per-sample shape `[H, W, C]` the CNN manifests declare.
+pub const SHAPE: [usize; 3] = [H, W, C];
+
+/// Flat offset of pixel `(y, x)` channel `ch` in a sample — the single
+/// definition of the HWC flattening both this module's generators and the
+/// conv manifests assume.
+#[inline]
+pub fn hwc_index(y: usize, x: usize, ch: usize) -> usize {
+    (y * W + x) * C + ch
+}
 
 /// Class texture: oriented sinusoidal gratings + a colour bias + a
 /// class-dependent blob position. Distinct enough to be learnable,
@@ -41,7 +57,7 @@ fn texture(class: usize, tag: u64, px: &mut [f32]) {
             let d2 = ((x as f32 - bx).powi(2) + (y as f32 - by).powi(2)) / 40.0;
             let blob = (-d2).exp();
             for ch in 0..C {
-                px[(y * W + x) * C + ch] = v * (0.5 + cb[ch]) + blob * (cb[ch] - 0.5) * 2.0;
+                px[hwc_index(y, x, ch)] = v * (0.5 + cb[ch]) + blob * (cb[ch] - 0.5) * 2.0;
             }
         }
     }
@@ -51,7 +67,7 @@ fn hflip(px: &mut [f32]) {
     for y in 0..H {
         for x in 0..W / 2 {
             for ch in 0..C {
-                px.swap((y * W + x) * C + ch, (y * W + (W - 1 - x)) * C + ch);
+                px.swap(hwc_index(y, x, ch), hwc_index(y, W - 1 - x, ch));
             }
         }
     }
@@ -68,8 +84,8 @@ fn jitter(px: &mut [f32], dx: isize, dy: isize) {
             let (sx, sy) = (x - dx, y - dy);
             if sx >= 0 && sx < W as isize && sy >= 0 && sy < H as isize {
                 for ch in 0..C {
-                    tmp[(y as usize * W + x as usize) * C + ch] =
-                        px[(sy as usize * W + sx as usize) * C + ch];
+                    tmp[hwc_index(y as usize, x as usize, ch)] =
+                        px[hwc_index(sy as usize, sx as usize, ch)];
                 }
             }
         }
@@ -219,6 +235,18 @@ mod tests {
         px[(5 * W + 5) * C] = 1.0;
         jitter(&mut px, 2, 3);
         assert_eq!(px[(8 * W + 7) * C], 1.0);
+    }
+
+    #[test]
+    fn flattening_is_nhwc() {
+        // the flat sample layout must match the [H, W, C] row-major
+        // interpretation the CNN manifests declare for the x slot
+        assert_eq!(SHAPE.iter().product::<usize>(), DIM);
+        assert_eq!(hwc_index(0, 0, 0), 0);
+        assert_eq!(hwc_index(0, 0, C - 1), C - 1); // channels innermost
+        assert_eq!(hwc_index(0, 1, 0), C); // then columns
+        assert_eq!(hwc_index(1, 0, 0), W * C); // then rows
+        assert_eq!(hwc_index(H - 1, W - 1, C - 1), DIM - 1);
     }
 
     #[test]

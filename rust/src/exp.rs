@@ -112,6 +112,18 @@ pub const MLP_GSC: ModelExp = ModelExp {
     qat_lr: 2e-4,
 };
 
+/// The host-executable CNN workload: CIFAR-shaped conv ladder + dense
+/// head (`Manifest::synthetic_cnn`), trained on the synthetic CIFAR set.
+pub const CNN_CIFAR: ModelExp = ModelExp {
+    name: "cnn_cifar",
+    train_n: 2048,
+    val_n: 512,
+    pretrain_epochs: 6,
+    pretrain_lr: 1e-3,
+    qat_epochs: 2,
+    qat_lr: 1e-4,
+};
+
 pub const VGG_CIFAR: ModelExp = ModelExp {
     name: "vgg_cifar",
     train_n: 2048,
@@ -145,6 +157,7 @@ pub const RESNET_VOC: ModelExp = ModelExp {
 pub fn model_exp(name: &str) -> Result<ModelExp> {
     Ok(match name {
         "mlp_gsc" => MLP_GSC,
+        "cnn_cifar" => CNN_CIFAR,
         "vgg_cifar" => VGG_CIFAR,
         "vgg_cifar_bn" => VGG_CIFAR_BN,
         "resnet_voc" => RESNET_VOC,
@@ -159,7 +172,7 @@ pub fn datasets(exp: &ModelExp, seed: u64) -> (Box<dyn Dataset>, Box<dyn Dataset
             Box::new(GscDataset::new(exp.train_n, seed, true)),
             Box::new(GscDataset::new(exp.val_n, seed, false)),
         ),
-        "vgg_cifar" | "vgg_cifar_bn" => (
+        "cnn_cifar" | "vgg_cifar" | "vgg_cifar_bn" => (
             Box::new(CifarDataset::new(exp.train_n, seed, true)),
             Box::new(CifarDataset::new(exp.val_n, seed, false)),
         ),

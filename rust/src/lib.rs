@@ -15,8 +15,9 @@
 //!   or PJRT needed)
 //! * [`coordinator`] — QAT loop, parallel sweep campaigns
 //!   ([`coordinator::campaign`]), candidate selection, reports
-//! * [`linalg`] — blocked SIMD-friendly GEMM core with fused epilogues
-//!   and per-worker workspaces (the host backend's hot path)
+//! * [`linalg`] — blocked SIMD-friendly GEMM core with fused epilogues,
+//!   per-worker workspaces, and the im2col conv2d lowering over the same
+//!   core (the host backend's hot path)
 //! * [`quant`] — centroids, entropy, pure-rust assignment reference
 //! * [`lrp`] — relevance pipeline + rust LRP reference implementation
 //! * [`codec`] — CABAC-style coder + baselines (compression ratios)

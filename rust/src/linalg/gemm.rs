@@ -29,6 +29,7 @@
 //! fused epilogues apply exactly the arithmetic the previously separate
 //! full-tensor passes applied, in the same per-element order.
 
+use super::im2col::{pack_patches, pack_patches_t, Conv2d};
 use super::pack::{pack_a, pack_b, pack_b_gather, View};
 use super::workspace::Workspace;
 
@@ -73,6 +74,20 @@ pub enum BOperand<'a> {
     /// row-major `[k, n]` int32 centroid indices + codebook; out-of-range
     /// indices clamp. Must be non-empty (callers pre-validate).
     Gather { idx: &'a [i32], codebook: &'a [f32] },
+}
+
+/// Left-hand operand: a strided dense view, or the *virtual* im2col
+/// matrix of a conv input — patches are extracted straight into the A
+/// panel at pack time, so the `[n·oh·ow, kh·kw·c]` matrix is never
+/// materialized (see [`crate::linalg::im2col`]).
+#[derive(Clone, Copy, Debug)]
+pub enum AOperand<'a> {
+    Dense(View<'a>),
+    /// im2col patch matrix `[geom.rows(), geom.taps()]` over NHWC `x`
+    Patches { x: &'a [f32], geom: Conv2d },
+    /// its transpose `[geom.taps(), geom.rows()]` (the dW / `lrp_conv_rw`
+    /// contraction)
+    PatchesT { x: &'a [f32], geom: Conv2d },
 }
 
 #[inline(always)]
@@ -120,7 +135,7 @@ fn microkernel(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; M
 
 /// `out = epilogue(0)` — shared early-out for an empty contraction
 /// (`k == 0`) and an empty gather codebook (all-zero weights).
-fn epilogue_of_zero(out: &mut [f32], m: usize, n: usize, epi: &Epilogue) {
+pub(crate) fn epilogue_of_zero(out: &mut [f32], m: usize, n: usize, epi: &Epilogue) {
     assert_eq!(out.len(), m * n, "gemm: output buffer shape");
     for i in 0..m {
         for j in 0..n {
@@ -150,15 +165,16 @@ fn store_tile(
 }
 
 /// Blocked GEMM core: `out[m,n] = epilogue(A[m,k] · B[k,n])`, where A and
-/// B are arbitrary strided views (so TN/NT are the same code path) and
-/// `out` is fully overwritten. Single-threaded and deterministic; callers
-/// parallelize across independent GEMMs, never inside one.
+/// B are arbitrary strided views or virtual operands (so TN/NT and the
+/// im2col conv forms are the same code path) and `out` is fully
+/// overwritten. Single-threaded and deterministic; callers parallelize
+/// across independent GEMMs, never inside one.
 pub fn gemm(
     ws: &mut Workspace,
     m: usize,
     n: usize,
     k: usize,
-    a: View,
+    a: AOperand,
     b: BOperand,
     epi: Epilogue,
     out: &mut [f32],
@@ -173,7 +189,45 @@ pub fn gemm(
         epilogue_of_zero(out, m, n, &epi);
         return;
     }
-    let (apack, bpack) = ws.panels(MC * k, NC * k);
+    let (apack, bpack) = ws.panels(panel_rows(m, MC, MR) * k, panel_rows(n, NC, NR) * k);
+    gemm_core(apack, bpack, m, n, k, a, b, epi, out);
+}
+
+/// Strip-rounded panel extent for a matrix dimension: the largest block
+/// the core will pack is `min(block, dim)` rows, rounded up to whole
+/// `strip`-wide strips. Sizing panels by this instead of a flat
+/// `block·k` matters for skewed shapes — the conv dW form has a huge
+/// contraction depth `k` but tiny `n = co`, where a flat `NC·k` B panel
+/// would reserve `NC/co`× more scratch than the pack ever touches.
+pub(crate) fn panel_rows(dim: usize, block: usize, strip: usize) -> usize {
+    block.min(dim.div_ceil(strip) * strip)
+}
+
+/// [`gemm()`] over caller-held packing panels, sized at least
+/// `panel_rows(m, MC, MR)·k` / `panel_rows(n, NC, NR)·k` floats.
+/// [`crate::linalg::conv2d_bwd_input`] uses this to run its per-tile
+/// GEMM while also holding the workspace's dCol tile.
+pub(crate) fn gemm_core(
+    apack: &mut [f32],
+    bpack: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    a: AOperand,
+    b: BOperand,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), m * n, "gemm: output buffer shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        epilogue_of_zero(out, m, n, &epi);
+        return;
+    }
+    // panel capacity is implicitly bounds-checked by the pack routines'
+    // slice indexing; callers size apack/bpack at MC·k / NC·k
     let mut jc = 0;
     while jc < n {
         let nc = NC.min(n - jc);
@@ -186,7 +240,11 @@ pub fn gemm(
         let mut ic = 0;
         while ic < m {
             let mc = MC.min(m - ic);
-            pack_a(a.at(ic, 0), mc, k, apack);
+            match a {
+                AOperand::Dense(av) => pack_a(av.at(ic, 0), mc, k, apack),
+                AOperand::Patches { x, geom } => pack_patches(x, &geom, ic, mc, apack),
+                AOperand::PatchesT { x, geom } => pack_patches_t(x, &geom, ic, mc, apack),
+            }
             let mut jr = 0;
             while jr < nc {
                 let nr = NR.min(nc - jr);
@@ -221,7 +279,7 @@ pub fn gemm_nn(
 ) {
     assert_eq!(a.len(), m * k, "gemm_nn lhs shape");
     assert_eq!(b.len(), k * n, "gemm_nn rhs shape");
-    gemm(ws, m, n, k, View::nn(a, k), BOperand::Dense(View::nn(b, n)), epi, out);
+    gemm(ws, m, n, k, AOperand::Dense(View::nn(a, k)), BOperand::Dense(View::nn(b, n)), epi, out);
 }
 
 /// `out[k,n] = epilogue(a[m,k]ᵀ @ b[m,n])` — the dW / LRP contraction.
@@ -237,7 +295,7 @@ pub fn gemm_tn(
 ) {
     assert_eq!(a.len(), m * k, "gemm_tn lhs shape");
     assert_eq!(b.len(), m * n, "gemm_tn rhs shape");
-    gemm(ws, k, n, m, View::t(a, k), BOperand::Dense(View::nn(b, n)), epi, out);
+    gemm(ws, k, n, m, AOperand::Dense(View::t(a, k)), BOperand::Dense(View::nn(b, n)), epi, out);
 }
 
 /// `out[m,k] = epilogue(g[m,n] @ w[k,n]ᵀ)` — the input-gradient / R_in
@@ -254,7 +312,7 @@ pub fn gemm_nt(
 ) {
     assert_eq!(g.len(), m * n, "gemm_nt lhs shape");
     assert_eq!(w.len(), k * n, "gemm_nt rhs shape");
-    gemm(ws, m, k, n, View::nn(g, n), BOperand::Dense(View::t(w, n)), epi, out);
+    gemm(ws, m, k, n, AOperand::Dense(View::nn(g, n)), BOperand::Dense(View::t(w, n)), epi, out);
 }
 
 /// `out[m,n] = epilogue(a[m,k] @ dequant(idx)[k,n])` — the deployment-form
@@ -280,7 +338,8 @@ pub fn gemm_gather_nn(
         epilogue_of_zero(out, m, n, &epi);
         return;
     }
-    gemm(ws, m, n, k, View::nn(a, k), BOperand::Gather { idx, codebook }, epi, out);
+    let av = AOperand::Dense(View::nn(a, k));
+    gemm(ws, m, n, k, av, BOperand::Gather { idx, codebook }, epi, out);
 }
 
 /// FLOP count of one `m×k×n` GEMM (multiply + add), for GFLOP/s rows in
@@ -337,6 +396,17 @@ mod tests {
             gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
             assert_eq!(out, reference::matmul(&a, &b, m, k, n), "shape {m}x{k}x{n}");
         }
+    }
+
+    #[test]
+    fn panel_rows_is_strip_rounded_and_block_capped() {
+        assert_eq!(panel_rows(1, MC, MR), MR);
+        assert_eq!(panel_rows(MR + 1, MC, MR), 2 * MR);
+        assert_eq!(panel_rows(MC - 1, MC, MR), MC);
+        assert_eq!(panel_rows(MC, MC, MR), MC);
+        assert_eq!(panel_rows(10 * MC, MC, MR), MC);
+        // the skewed conv-dW shape: tiny n never reserves a full NC panel
+        assert_eq!(panel_rows(5, NC, NR), NR);
     }
 
     #[test]

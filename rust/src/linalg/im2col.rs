@@ -1,0 +1,518 @@
+//! Conv2d lowered onto the blocked GEMM core via *virtual* im2col.
+//!
+//! A NHWC convolution `out[n,oh,ow,co] = Σ_{kh,kw,ci} x[n, oh·s+kh-ph,
+//! ow·s+kw-pw, ci] · w[kh,kw,ci,co]` is a GEMM between the im2col patch
+//! matrix `P[n·oh·ow, kh·kw·c]` and the HWIO filter flattened row-major
+//! to `[kh·kw·c, co]` — and because the output rows `[n·oh·ow, co]` are
+//! exactly NHWC layout, no reshapes ever move data. Instead of
+//! materializing `P`, the pack stage of the GEMM extracts patches
+//! directly into the `MR`-strip A panel (`pack_patches`), so conv
+//! costs one panel's worth of scratch from the per-worker
+//! [`Workspace`] — the same buffers every dense layer already reuses.
+//! Out-of-image taps pack `0.0`, which contributes exactly nothing, so
+//! SAME padding needs no input copy either.
+//!
+//! The three conv contraction forms map onto the core as:
+//!
+//! * forward — `P @ W` ([`AOperand::Patches`]), bias/ReLU fused in the
+//!   epilogue; [`conv2d_gather`] swaps in the codebook-gather B operand
+//!   so quantized conv weights dequantize at pack time like
+//!   `qdense_gather` (zero centroid skipped, dense `[k,co]` matrix never
+//!   materialized)
+//! * dW / per-weight LRP — `Pᵀ @ G` ([`AOperand::PatchesT`]), the
+//!   `w ⊙ ·` LRP scaling fused in the epilogue ([`lrp_conv_rw`])
+//! * dX — `G @ Wᵀ` per `MC`-row tile into the workspace's dCol buffer,
+//!   then a col2im scatter-add ([`conv2d_bwd_input`]); the full
+//!   `[n·oh·ow, kh·kw·c]` dCol matrix is never materialized
+//!
+//! Determinism: every GEMM accumulates in ascending contraction order
+//! (gemm.rs invariant) and the col2im scatter adds tile rows in
+//! ascending `(m, tap)` order with a compile-time-fixed tile height, so
+//! conv results — like the dense kernels — are pure functions of the
+//! operand values, bitwise-equal to the retained naive direct kernels
+//! ([`crate::linalg::reference`]) on finite inputs, and identical for
+//! any `--jobs` count or workspace reuse pattern (DESIGN.md §2.3).
+
+use super::gemm::{gemm, gemm_core, AOperand, BOperand, Epilogue, MC, MR};
+use super::pack::View;
+use super::workspace::Workspace;
+
+/// Spatial padding mode (XLA conventions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pad {
+    /// output spatial dims = `ceil(in / stride)`; total padding
+    /// `max((out-1)·stride + k - in, 0)`, split low-before
+    Same,
+    /// no padding; output = `floor((in - k)/stride) + 1` (0 if `in < k`)
+    Valid,
+}
+
+/// Geometry of one NHWC × HWIO convolution (batch baked in).
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2d {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    /// input channels
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// output channels
+    pub co: usize,
+    pub stride: usize,
+    pub pad: Pad,
+}
+
+fn out_dim(input: usize, k: usize, stride: usize, pad: Pad) -> usize {
+    match pad {
+        Pad::Same => input.div_ceil(stride),
+        Pad::Valid => {
+            if input >= k {
+                (input - k) / stride + 1
+            } else {
+                0
+            }
+        }
+    }
+}
+
+impl Conv2d {
+    /// Output spatial dims `(oh, ow)`.
+    pub fn out_hw(&self) -> (usize, usize) {
+        (
+            out_dim(self.h, self.kh, self.stride, self.pad),
+            out_dim(self.w, self.kw, self.stride, self.pad),
+        )
+    }
+
+    /// Padding applied before the first row/column (XLA SAME splits the
+    /// total low-before: `before = total / 2`).
+    pub fn pad_before(&self) -> (usize, usize) {
+        match self.pad {
+            Pad::Valid => (0, 0),
+            Pad::Same => {
+                let (oh, ow) = self.out_hw();
+                let total = |o: usize, k: usize, i: usize| {
+                    if o == 0 {
+                        0
+                    } else {
+                        ((o - 1) * self.stride + k).saturating_sub(i)
+                    }
+                };
+                (total(oh, self.kh, self.h) / 2, total(ow, self.kw, self.w) / 2)
+            }
+        }
+    }
+
+    /// Rows of the virtual im2col matrix (= output spatial positions).
+    pub fn rows(&self) -> usize {
+        let (oh, ow) = self.out_hw();
+        self.n * oh * ow
+    }
+
+    /// Columns of the virtual im2col matrix (= filter taps).
+    pub fn taps(&self) -> usize {
+        self.kh * self.kw * self.c
+    }
+
+    /// Element count of the NHWC input.
+    pub fn in_len(&self) -> usize {
+        self.n * self.h * self.w * self.c
+    }
+
+    /// Element count of the NHWC output.
+    pub fn out_len(&self) -> usize {
+        self.rows() * self.co
+    }
+
+    /// Element count of the HWIO filter.
+    pub fn filter_len(&self) -> usize {
+        self.taps() * self.co
+    }
+}
+
+/// FLOP count of one conv (multiply + add over the im2col GEMM), for the
+/// GFLOP/s rows of `BENCH_host.json`.
+pub fn conv2d_flops(g: &Conv2d) -> f64 {
+    2.0 * g.rows() as f64 * g.taps() as f64 * g.co as f64
+}
+
+/// Pack rows `[row0, row0+rows)` of the virtual im2col matrix into
+/// `MR`-strip A-panel layout (same layout as `pack::pack_a`), extracting
+/// patches straight from the NHWC input. Out-of-image taps and rows past
+/// the last strip's edge pack `0.0` — every slot in use is overwritten,
+/// so dirty workspace reuse stays inert.
+pub(crate) fn pack_patches(x: &[f32], g: &Conv2d, row0: usize, rows: usize, out: &mut [f32]) {
+    let k = g.taps();
+    let (oh, ow) = g.out_hw();
+    let (ph, pw) = g.pad_before();
+    let strips = rows.div_ceil(MR);
+    for s in 0..strips {
+        let strip = &mut out[s * MR * k..(s + 1) * MR * k];
+        let full = MR.min(rows - s * MR);
+        // decompose each strip row's output position once
+        let mut ni = [0usize; MR];
+        let mut ih0 = [0isize; MR];
+        let mut iw0 = [0isize; MR];
+        for r in 0..full {
+            let m = row0 + s * MR + r;
+            let owi = m % ow;
+            let ohi = (m / ow) % oh;
+            ni[r] = m / (ow * oh);
+            ih0[r] = (ohi * g.stride) as isize - ph as isize;
+            iw0[r] = (owi * g.stride) as isize - pw as isize;
+        }
+        let mut p = 0usize;
+        for khi in 0..g.kh {
+            for kwi in 0..g.kw {
+                for ci in 0..g.c {
+                    let dst = &mut strip[p * MR..p * MR + MR];
+                    for (r, d) in dst.iter_mut().enumerate() {
+                        *d = if r < full {
+                            let ih = ih0[r] + khi as isize;
+                            let iw = iw0[r] + kwi as isize;
+                            if ih >= 0
+                                && (ih as usize) < g.h
+                                && iw >= 0
+                                && (iw as usize) < g.w
+                            {
+                                x[((ni[r] * g.h + ih as usize) * g.w + iw as usize) * g.c
+                                    + ci]
+                            } else {
+                                0.0
+                            }
+                        } else {
+                            0.0
+                        };
+                    }
+                    p += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Pack rows `[row0, row0+rows)` of the *transposed* virtual im2col
+/// matrix `[taps, rows]` into `MR`-strip layout — the A operand of the
+/// dW / `lrp_conv_rw` contraction `Pᵀ @ G`.
+pub(crate) fn pack_patches_t(x: &[f32], g: &Conv2d, row0: usize, rows: usize, out: &mut [f32]) {
+    let m = g.rows(); // the contraction depth of this form
+    let (oh, ow) = g.out_hw();
+    let (ph, pw) = g.pad_before();
+    let strips = rows.div_ceil(MR);
+    for s in 0..strips {
+        let strip = &mut out[s * MR * m..(s + 1) * MR * m];
+        let full = MR.min(rows - s * MR);
+        // decompose each strip row's filter tap once
+        let mut ci = [0usize; MR];
+        let mut khi = [0isize; MR];
+        let mut kwi = [0isize; MR];
+        for r in 0..full {
+            let t = row0 + s * MR + r;
+            ci[r] = t % g.c;
+            kwi[r] = ((t / g.c) % g.kw) as isize;
+            khi[r] = (t / (g.c * g.kw)) as isize;
+        }
+        // walk the sample positions incrementally (no div/mod per slot)
+        let (mut ni, mut ohi, mut owi) = (0usize, 0usize, 0usize);
+        for p in 0..m {
+            let ihb = (ohi * g.stride) as isize - ph as isize;
+            let iwb = (owi * g.stride) as isize - pw as isize;
+            let dst = &mut strip[p * MR..p * MR + MR];
+            for (r, d) in dst.iter_mut().enumerate() {
+                *d = if r < full {
+                    let ih = ihb + khi[r];
+                    let iw = iwb + kwi[r];
+                    if ih >= 0 && (ih as usize) < g.h && iw >= 0 && (iw as usize) < g.w {
+                        x[((ni * g.h + ih as usize) * g.w + iw as usize) * g.c + ci[r]]
+                    } else {
+                        0.0
+                    }
+                } else {
+                    0.0
+                };
+            }
+            owi += 1;
+            if owi == ow {
+                owi = 0;
+                ohi += 1;
+                if ohi == oh {
+                    ohi = 0;
+                    ni += 1;
+                }
+            }
+        }
+    }
+}
+
+/// NHWC conv forward: `out[g.rows(), co] = epilogue(P(x) @ w)`, with `w`
+/// the HWIO filter flattened row-major to `[taps, co]`. Output layout is
+/// NHWC `[n, oh, ow, co]` (identical memory). Bias/ReLU fuse via `epi`
+/// exactly like a dense layer.
+pub fn conv2d(
+    ws: &mut Workspace,
+    x: &[f32],
+    w: &[f32],
+    g: &Conv2d,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), g.in_len(), "conv2d input shape");
+    assert_eq!(w.len(), g.filter_len(), "conv2d filter shape");
+    assert_eq!(out.len(), g.out_len(), "conv2d output shape");
+    gemm(
+        ws,
+        g.rows(),
+        g.co,
+        g.taps(),
+        AOperand::Patches { x, geom: *g },
+        BOperand::Dense(View::nn(w, g.co)),
+        epi,
+        out,
+    );
+}
+
+/// Deployment-form conv: int32 centroid indices (flattened HWIO
+/// `[taps, co]`) dequantized through `codebook` at pack time, zero
+/// centroid skipped — the conv twin of `gemm_gather_nn`. An empty
+/// codebook yields `out = epilogue(0)`; the host backend rejects that
+/// case with an error before calling in.
+pub fn conv2d_gather(
+    ws: &mut Workspace,
+    x: &[f32],
+    idx: &[i32],
+    codebook: &[f32],
+    g: &Conv2d,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), g.in_len(), "conv2d_gather input shape");
+    assert_eq!(idx.len(), g.filter_len(), "conv2d_gather idx shape");
+    assert_eq!(out.len(), g.out_len(), "conv2d_gather output shape");
+    if codebook.is_empty() {
+        super::gemm::epilogue_of_zero(out, g.rows(), g.co, &epi);
+        return;
+    }
+    gemm(
+        ws,
+        g.rows(),
+        g.co,
+        g.taps(),
+        AOperand::Patches { x, geom: *g },
+        BOperand::Gather { idx, codebook },
+        epi,
+        out,
+    );
+}
+
+/// Filter gradient: `out[taps, co] = epilogue(P(x)ᵀ @ gout)` — the conv
+/// analogue of the dense TN contraction. `out` is the HWIO gradient
+/// flattened row-major; `Epilogue::Scale(w)` turns this into the
+/// per-weight LRP aggregation (see [`lrp_conv_rw`]).
+pub fn conv2d_bwd_filter(
+    ws: &mut Workspace,
+    x: &[f32],
+    gout: &[f32],
+    g: &Conv2d,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), g.in_len(), "conv2d_bwd_filter input shape");
+    assert_eq!(gout.len(), g.out_len(), "conv2d_bwd_filter gout shape");
+    assert_eq!(out.len(), g.filter_len(), "conv2d_bwd_filter output shape");
+    gemm(
+        ws,
+        g.taps(),
+        g.co,
+        g.rows(),
+        AOperand::PatchesT { x, geom: *g },
+        BOperand::Dense(View::nn(gout, g.co)),
+        epi,
+        out,
+    );
+}
+
+/// Per-weight epsilon-rule conv relevance `R_w = w ⊙ (P(a)ᵀ @ s)` — the
+/// conv twin of `runtime::host::lrp_dense_rw`, with the `w ⊙ ·` scaling
+/// fused into the GEMM store.
+pub fn lrp_conv_rw(
+    ws: &mut Workspace,
+    a: &[f32],
+    s: &[f32],
+    w: &[f32],
+    g: &Conv2d,
+    out: &mut [f32],
+) {
+    assert_eq!(w.len(), g.filter_len(), "lrp_conv_rw filter shape");
+    conv2d_bwd_filter(ws, a, s, g, Epilogue::Scale(w), out);
+}
+
+/// Input gradient: `dx[n,h,w,c] = col2im(gout @ wᵀ)`. The dCol matrix is
+/// produced `MC` rows at a time into the workspace's tile buffer (one
+/// blocked GEMM per tile), then scatter-added into `dx` in ascending
+/// `(m, tap)` order — fixed tiling, fixed order, so the result is
+/// deterministic and bitwise-equal to the naive reference.
+pub fn conv2d_bwd_input(ws: &mut Workspace, gout: &[f32], w: &[f32], g: &Conv2d, dx: &mut [f32]) {
+    assert_eq!(gout.len(), g.out_len(), "conv2d_bwd_input gout shape");
+    assert_eq!(w.len(), g.filter_len(), "conv2d_bwd_input filter shape");
+    assert_eq!(dx.len(), g.in_len(), "conv2d_bwd_input dx shape");
+    dx.fill(0.0);
+    let m = g.rows();
+    let k = g.taps();
+    if m == 0 || k == 0 {
+        return;
+    }
+    let (oh, ow) = g.out_hw();
+    let (ph, pw) = g.pad_before();
+    let (apack, bpack, tile) = ws.panels_and_tile(
+        super::gemm::panel_rows(MC.min(m), MC, MR) * g.co,
+        super::gemm::panel_rows(k, super::gemm::NC, super::gemm::NR) * g.co,
+        MC * k,
+    );
+    let mut m0 = 0;
+    while m0 < m {
+        let rows = MC.min(m - m0);
+        let t = &mut tile[..rows * k];
+        // dCol tile: t[r, tap] = Σ_co gout[m0+r, co] · w[tap, co]
+        gemm_core(
+            apack,
+            bpack,
+            rows,
+            k,
+            g.co,
+            AOperand::Dense(View::nn(gout, g.co).at(m0, 0)),
+            BOperand::Dense(View::t(w, g.co)),
+            Epilogue::None,
+            t,
+        );
+        for r in 0..rows {
+            let mi = m0 + r;
+            let owi = mi % ow;
+            let ohi = (mi / ow) % oh;
+            let ni = mi / (ow * oh);
+            let ih0 = (ohi * g.stride) as isize - ph as isize;
+            let iw0 = (owi * g.stride) as isize - pw as isize;
+            let trow = &t[r * k..(r + 1) * k];
+            let mut p = 0usize;
+            for khi in 0..g.kh {
+                let ih = ih0 + khi as isize;
+                if ih < 0 || ih as usize >= g.h {
+                    p += g.kw * g.c;
+                    continue;
+                }
+                for kwi in 0..g.kw {
+                    let iw = iw0 + kwi as isize;
+                    if iw < 0 || iw as usize >= g.w {
+                        p += g.c;
+                        continue;
+                    }
+                    let base = ((ni * g.h + ih as usize) * g.w + iw as usize) * g.c;
+                    for (d, &v) in dx[base..base + g.c].iter_mut().zip(&trow[p..p + g.c]) {
+                        *d += v;
+                    }
+                    p += g.c;
+                }
+            }
+        }
+        m0 += MC;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+
+    fn geom() -> Conv2d {
+        Conv2d { n: 2, h: 5, w: 6, c: 3, kh: 3, kw: 3, co: 4, stride: 1, pad: Pad::Same }
+    }
+
+    fn seq(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i % 17) as f32 - 8.0) * scale).collect()
+    }
+
+    #[test]
+    fn same_and_valid_output_dims() {
+        let mut g = geom();
+        assert_eq!(g.out_hw(), (5, 6));
+        assert_eq!(g.pad_before(), (1, 1));
+        g.stride = 2;
+        assert_eq!(g.out_hw(), (3, 3)); // ceil(5/2), ceil(6/2)
+        g.pad = Pad::Valid;
+        assert_eq!(g.out_hw(), (2, 2)); // floor((5-3)/2)+1, floor((6-3)/2)+1
+        g.h = 2; // smaller than the kernel
+        assert_eq!(g.out_hw().0, 0);
+    }
+
+    #[test]
+    fn forward_matches_naive_direct() {
+        for stride in [1, 2] {
+            for pad in [Pad::Same, Pad::Valid] {
+                let g = Conv2d { stride, pad, ..geom() };
+                let x = seq(g.in_len(), 0.25);
+                let w = seq(g.filter_len(), 0.125);
+                let mut ws = Workspace::new();
+                let mut out = vec![0.0f32; g.out_len()];
+                conv2d(&mut ws, &x, &w, &g, Epilogue::None, &mut out);
+                assert_eq!(out, reference::conv2d_naive(&x, &w, &g), "s={stride} {pad:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_kernels_match_naive() {
+        let g = Conv2d { stride: 2, ..geom() };
+        let x = seq(g.in_len(), 0.2);
+        let w = seq(g.filter_len(), 0.1);
+        let gout = seq(g.out_len(), 0.3);
+        let mut ws = Workspace::new();
+        let mut dw = vec![0.0f32; g.filter_len()];
+        conv2d_bwd_filter(&mut ws, &x, &gout, &g, Epilogue::None, &mut dw);
+        assert_eq!(dw, reference::conv2d_bwd_filter_naive(&x, &gout, &g));
+        let mut dx = vec![f32::NAN; g.in_len()];
+        conv2d_bwd_input(&mut ws, &gout, &w, &g, &mut dx);
+        assert_eq!(dx, reference::conv2d_bwd_input_naive(&gout, &w, &g));
+    }
+
+    #[test]
+    fn gather_matches_dense_conv() {
+        let g = geom();
+        let x = seq(g.in_len(), 0.2);
+        let cb = [0.0f32, 0.5, -0.5, 0.25];
+        let idx: Vec<i32> = (0..g.filter_len()).map(|i| (i % 4) as i32).collect();
+        let dense: Vec<f32> = idx.iter().map(|&i| cb[i as usize]).collect();
+        let bias = seq(g.co, 0.4);
+        let mut ws = Workspace::new();
+        let mut got = vec![0.0f32; g.out_len()];
+        conv2d_gather(&mut ws, &x, &idx, &cb, &g, Epilogue::Bias(&bias), &mut got);
+        let mut want = vec![0.0f32; g.out_len()];
+        conv2d(&mut ws, &x, &dense, &g, Epilogue::Bias(&bias), &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_codebook_is_epilogue_of_zero() {
+        let g = Conv2d { n: 1, h: 2, w: 2, c: 1, kh: 1, kw: 1, co: 2, stride: 1, pad: Pad::Valid };
+        let x = [1.0f32; 4];
+        let idx = [0i32; 2];
+        let bias = [0.5f32, -0.5];
+        let mut ws = Workspace::new();
+        let mut out = vec![f32::NAN; g.out_len()];
+        conv2d_gather(&mut ws, &x, &idx, &[], &g, Epilogue::Bias(&bias), &mut out);
+        assert_eq!(out, vec![0.5, -0.5, 0.5, -0.5, 0.5, -0.5, 0.5, -0.5]);
+    }
+
+    #[test]
+    fn zero_channel_input_is_bias_only() {
+        // c = 0 ⇒ taps = 0 ⇒ the conv is an empty contraction; the
+        // epilogue still applies, exactly like a k=0 dense layer
+        let g = Conv2d { n: 1, h: 3, w: 3, c: 0, kh: 3, kw: 3, co: 2, stride: 1, pad: Pad::Same };
+        let bias = [1.0f32, -2.0];
+        let mut ws = Workspace::new();
+        let mut out = vec![f32::NAN; g.out_len()];
+        conv2d(&mut ws, &[], &[], &g, Epilogue::BiasRelu(&bias), &mut out);
+        for pair in out.chunks_exact(2) {
+            assert_eq!(pair, [1.0, 0.0]);
+        }
+    }
+}

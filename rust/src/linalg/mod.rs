@@ -19,27 +19,37 @@
 //!   wrappers) — the blocked core and its fixed blocking constants
 //! * [`pack`] — strided [`pack::View`]s and panel packing (incl. the
 //!   codebook gather)
+//! * [`im2col`] — NHWC conv2d lowered onto the same core: virtual patch
+//!   operands packed straight into A panels (forward / dW / LRP), the
+//!   tiled col2im backward, and the codebook-gather conv
 //! * [`workspace`] — [`Workspace`] buffers + the thread-local instance
 //!   behind `Engine::call`
-//! * [`reference`] — the retained naive kernels, kept as the oracle for
-//!   `tests/linalg_gemm_props.rs` and the baseline rows of
-//!   `BENCH_host.json`
+//! * [`reference`] — the retained naive kernels (GEMM *and* direct
+//!   conv), kept as the oracle for `tests/linalg_gemm_props.rs` /
+//!   `tests/conv_props.rs` and the baseline rows of `BENCH_host.json`
 //!
 //! Determinism contract (relied on by the campaign serial-vs-parallel
-//! tests): a GEMM result is a pure function of operand values and shapes.
-//! Blocking is compile-time fixed, each call is single-threaded, each
-//! output element accumulates in ascending-`k` order, and workspace
+//! tests): a GEMM or conv result is a pure function of operand values and
+//! shapes. Blocking is compile-time fixed, each call is single-threaded,
+//! each output element accumulates in ascending contraction order (the
+//! col2im scatter adds in ascending `(m, tap)` order), and workspace
 //! contents cannot leak into results — so outputs are identical for any
-//! `--jobs` count and any workspace reuse pattern. See `DESIGN.md` §2.2.
+//! `--jobs` count and any workspace reuse pattern. See `DESIGN.md`
+//! §2.2–2.3.
 
 pub mod gemm;
+pub mod im2col;
 pub mod pack;
 pub mod reference;
 pub mod workspace;
 
 pub use gemm::{
-    gemm, gemm_flops, gemm_gather_nn, gemm_nn, gemm_nt, gemm_tn, BOperand, Epilogue, MC, MR, NC,
-    NR,
+    gemm, gemm_flops, gemm_gather_nn, gemm_nn, gemm_nt, gemm_tn, AOperand, BOperand, Epilogue, MC,
+    MR, NC, NR,
+};
+pub use im2col::{
+    conv2d, conv2d_bwd_filter, conv2d_bwd_input, conv2d_flops, conv2d_gather, lrp_conv_rw, Conv2d,
+    Pad,
 };
 pub use pack::View;
 pub use workspace::{with_thread_workspace, Workspace};

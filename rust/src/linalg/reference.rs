@@ -13,6 +13,18 @@
 //!
 //! They are re-exported as `runtime::host::{matmul, matmul_tn, matmul_nt}`
 //! for backward compatibility with existing call sites and tests.
+//!
+//! The naive *direct* conv kernels (`conv2d_naive`,
+//! `conv2d_bwd_{filter,input}_naive`) play the same two roles for the
+//! im2col-GEMM lowering in [`crate::linalg::im2col`]: exact-equality
+//! oracle for `tests/conv_props.rs` and baseline rows of the
+//! `conv_kernels` section in `BENCH_host.json`. Each accumulates in the
+//! same order as the blocked path — ascending `(kh, kw, ci)` taps per
+//! output element for the forward, ascending sample `m` for dW, and
+//! ascending `(m, tap)` scatter for dX — so agreement is bitwise on
+//! finite inputs.
+
+use super::im2col::Conv2d;
 
 /// Row-major `a[m,k] @ b[k,n]`.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -75,8 +87,129 @@ pub fn matmul_nt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32>
     out
 }
 
+/// Naive direct NHWC conv (no epilogue): each output element accumulates
+/// its taps in ascending `(kh, kw, ci)` order, skipping out-of-image taps
+/// (which the im2col path packs as `0.0` — the same value).
+pub fn conv2d_naive(x: &[f32], w: &[f32], g: &Conv2d) -> Vec<f32> {
+    assert_eq!(x.len(), g.in_len(), "conv2d_naive input shape");
+    assert_eq!(w.len(), g.filter_len(), "conv2d_naive filter shape");
+    let (oh, ow) = g.out_hw();
+    let (ph, pw) = g.pad_before();
+    let mut out = vec![0.0f32; g.out_len()];
+    for ni in 0..g.n {
+        for ohi in 0..oh {
+            for owi in 0..ow {
+                let orow =
+                    &mut out[((ni * oh + ohi) * ow + owi) * g.co..][..g.co];
+                for khi in 0..g.kh {
+                    let ih = (ohi * g.stride + khi) as isize - ph as isize;
+                    if ih < 0 || ih as usize >= g.h {
+                        continue;
+                    }
+                    for kwi in 0..g.kw {
+                        let iw = (owi * g.stride + kwi) as isize - pw as isize;
+                        if iw < 0 || iw as usize >= g.w {
+                            continue;
+                        }
+                        let xbase =
+                            ((ni * g.h + ih as usize) * g.w + iw as usize) * g.c;
+                        for ci in 0..g.c {
+                            let xv = x[xbase + ci];
+                            let wrow =
+                                &w[((khi * g.kw + kwi) * g.c + ci) * g.co..][..g.co];
+                            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Naive filter gradient `dW[kh,kw,ci,co] = Σ_m patch[m,·] · gout[m,·]`,
+/// accumulating over samples `m` in ascending order.
+pub fn conv2d_bwd_filter_naive(x: &[f32], gout: &[f32], g: &Conv2d) -> Vec<f32> {
+    assert_eq!(x.len(), g.in_len(), "conv2d_bwd_filter_naive input shape");
+    assert_eq!(gout.len(), g.out_len(), "conv2d_bwd_filter_naive gout shape");
+    let (oh, ow) = g.out_hw();
+    let (ph, pw) = g.pad_before();
+    let mut out = vec![0.0f32; g.filter_len()];
+    for mi in 0..g.rows() {
+        let owi = mi % ow;
+        let ohi = (mi / ow) % oh;
+        let ni = mi / (ow * oh);
+        let grow = &gout[mi * g.co..][..g.co];
+        for khi in 0..g.kh {
+            let ih = (ohi * g.stride + khi) as isize - ph as isize;
+            if ih < 0 || ih as usize >= g.h {
+                continue;
+            }
+            for kwi in 0..g.kw {
+                let iw = (owi * g.stride + kwi) as isize - pw as isize;
+                if iw < 0 || iw as usize >= g.w {
+                    continue;
+                }
+                let xbase = ((ni * g.h + ih as usize) * g.w + iw as usize) * g.c;
+                for ci in 0..g.c {
+                    let xv = x[xbase + ci];
+                    let orow =
+                        &mut out[((khi * g.kw + kwi) * g.c + ci) * g.co..][..g.co];
+                    for (o, &gv) in orow.iter_mut().zip(grow) {
+                        *o += xv * gv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Naive input gradient (direct col2im): for each sample position `m` in
+/// ascending order, each in-image tap in ascending order, scatter-add
+/// `Σ_co gout[m,co]·w[tap,co]` (ascending `co`) into `dx` — the exact
+/// accumulation order of the tiled im2col backward.
+pub fn conv2d_bwd_input_naive(gout: &[f32], w: &[f32], g: &Conv2d) -> Vec<f32> {
+    assert_eq!(gout.len(), g.out_len(), "conv2d_bwd_input_naive gout shape");
+    assert_eq!(w.len(), g.filter_len(), "conv2d_bwd_input_naive filter shape");
+    let (oh, ow) = g.out_hw();
+    let (ph, pw) = g.pad_before();
+    let mut dx = vec![0.0f32; g.in_len()];
+    for mi in 0..g.rows() {
+        let owi = mi % ow;
+        let ohi = (mi / ow) % oh;
+        let ni = mi / (ow * oh);
+        let grow = &gout[mi * g.co..][..g.co];
+        for khi in 0..g.kh {
+            let ih = (ohi * g.stride + khi) as isize - ph as isize;
+            if ih < 0 || ih as usize >= g.h {
+                continue;
+            }
+            for kwi in 0..g.kw {
+                let iw = (owi * g.stride + kwi) as isize - pw as isize;
+                if iw < 0 || iw as usize >= g.w {
+                    continue;
+                }
+                let base = ((ni * g.h + ih as usize) * g.w + iw as usize) * g.c;
+                for ci in 0..g.c {
+                    let wrow = &w[((khi * g.kw + kwi) * g.c + ci) * g.co..][..g.co];
+                    let mut acc = 0.0f32;
+                    for (&gv, &wv) in grow.iter().zip(wrow) {
+                        acc += gv * wv;
+                    }
+                    dx[base + ci] += acc;
+                }
+            }
+        }
+    }
+    dx
+}
+
 #[cfg(test)]
 mod tests {
+    use super::super::im2col::Pad;
     use super::*;
 
     #[test]
@@ -92,5 +225,17 @@ mod tests {
         let nt = matmul_nt(&a, &a, 2, 3, 2); // a aᵀ [2,2]
         assert_eq!(nt[0], 1.0 + 4.0 + 9.0);
         assert_eq!(nt[1], 4.0 + 10.0 + 18.0);
+    }
+
+    #[test]
+    fn naive_conv_identity_kernel_passes_input_through() {
+        // 1x1 identity filter: conv is a per-pixel copy
+        let g = Conv2d { n: 1, h: 2, w: 2, c: 1, kh: 1, kw: 1, co: 1, stride: 1, pad: Pad::Valid };
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(conv2d_naive(&x, &[1.0], &g), x.to_vec());
+        // dX of the identity conv is the output gradient itself
+        assert_eq!(conv2d_bwd_input_naive(&x, &[1.0], &g), x.to_vec());
+        // dW aggregates x ⊙ g over all positions
+        assert_eq!(conv2d_bwd_filter_naive(&x, &x, &g), vec![1.0 + 4.0 + 9.0 + 16.0]);
     }
 }

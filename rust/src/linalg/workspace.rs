@@ -28,17 +28,21 @@ use std::cell::RefCell;
 pub struct Workspace {
     apack: Vec<f32>,
     bpack: Vec<f32>,
+    /// dCol tile scratch of the conv backward-input pass
+    /// ([`crate::linalg::conv2d_bwd_input`]); unused by plain GEMMs
+    tile: Vec<f32>,
 }
 
 impl Workspace {
     /// Empty workspace (allocation-free; `const` so it can seed TLS).
     pub const fn new() -> Workspace {
-        Workspace { apack: Vec::new(), bpack: Vec::new() }
+        Workspace { apack: Vec::new(), bpack: Vec::new(), tile: Vec::new() }
     }
 
     /// Bytes currently reserved across all scratch buffers.
     pub fn reserved_bytes(&self) -> usize {
-        (self.apack.capacity() + self.bpack.capacity()) * std::mem::size_of::<f32>()
+        (self.apack.capacity() + self.bpack.capacity() + self.tile.capacity())
+            * std::mem::size_of::<f32>()
     }
 
     /// Borrow the A/B panel buffers for [`crate::linalg::gemm()`], grown
@@ -53,6 +57,32 @@ impl Workspace {
             self.bpack.resize(b_len, 0.0);
         }
         (&mut self.apack[..a_len], &mut self.bpack[..b_len])
+    }
+
+    /// [`Workspace::panels`] plus the conv dCol tile buffer, borrowed
+    /// disjointly so `conv2d_bwd_input` can run its per-tile GEMM into the
+    /// tile while holding the packing panels. Same contract: contents are
+    /// unspecified, every slot read must first be overwritten.
+    pub(crate) fn panels_and_tile(
+        &mut self,
+        a_len: usize,
+        b_len: usize,
+        t_len: usize,
+    ) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        if self.apack.len() < a_len {
+            self.apack.resize(a_len, 0.0);
+        }
+        if self.bpack.len() < b_len {
+            self.bpack.resize(b_len, 0.0);
+        }
+        if self.tile.len() < t_len {
+            self.tile.resize(t_len, 0.0);
+        }
+        (
+            &mut self.apack[..a_len],
+            &mut self.bpack[..b_len],
+            &mut self.tile[..t_len],
+        )
     }
 }
 

@@ -10,13 +10,16 @@
 //!   compress <model>           quantize + write/reload a .ecqx container
 //!   eval <model> <file.ecqx>   evaluate a compressed container
 //!
-//! Options: --backend auto|host|pjrt --method ecq|ecqx --bits N
-//!          --lambda F --p F --epochs N --lr F --seed N --jobs N
-//!          --paper-scale --out PATH
+//! Options: --backend auto|host|pjrt --model mlp|cnn --method ecq|ecqx
+//!          --bits N --lambda F --p F --epochs N --lr F --seed N
+//!          --jobs N --paper-scale --out PATH
 //!
 //! `--backend host` runs the whole pipeline on the pure-rust reference
 //! backend (no artifacts/, no PJRT); `auto` (default) picks PJRT when the
 //! artifacts + real bindings are present and falls back to host.
+//! `--model mlp|cnn` selects the host workload family (aliases for the
+//! `mlp_gsc` / `cnn_cifar` model names; the positional `<model>` argument
+//! still accepts any manifest model name).
 //!
 //! Full per-flag documentation lives in README.md.
 
@@ -148,10 +151,20 @@ fn cmd_smoke(args: &Args) -> Result<()> {
 }
 
 fn model_arg(args: &Args) -> Result<exp::ModelExp> {
-    let name = args
-        .positional
-        .get(1)
-        .context("missing <model> argument (mlp_gsc|vgg_cifar|vgg_cifar_bn|resnet_voc)")?;
+    // `--model mlp|cnn` selects a host workload family by alias; the
+    // positional argument still takes any manifest model name
+    if let Some(m) = args.flags.get("model") {
+        let name = match m.as_str() {
+            "mlp" => "mlp_gsc",
+            "cnn" => "cnn_cifar",
+            other => other,
+        };
+        return exp::model_exp(name);
+    }
+    let name = args.positional.get(1).context(
+        "missing model: pass --model mlp|cnn or a model name \
+         (mlp_gsc|cnn_cifar|vgg_cifar|vgg_cifar_bn|resnet_voc)",
+    )?;
     exp::model_exp(name)
 }
 
@@ -285,7 +298,15 @@ fn cmd_compress(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let exp_ = model_arg(args)?;
-    let path = args.positional.get(2).context("missing <file.ecqx>")?;
+    // `eval <model> <file>`, or with --model the file is the last
+    // positional (`eval <file> --model mlp|cnn`; a redundant positional
+    // model name may precede it) — `eval <model>` alone still errors
+    let path = if args.has("model") {
+        args.positional.last().filter(|_| args.positional.len() >= 2)
+    } else {
+        args.positional.get(2)
+    }
+    .context("missing <file.ecqx>")?;
     let eng = engine_of(args)?;
     let seed = args.get("seed", 17u64);
     let qm = checkpoint::load_quantized(std::path::Path::new(path))?;

@@ -10,9 +10,12 @@
 //! `<model>_lrp`, `<model>_eval[_q|_actq]`, `assign_<bucket>`).
 //! Execution is driven entirely by the manifest's shape/dtype contract:
 //! the dense-layer ladder is recovered from the `p_w<i>`/`idx_w<i>` input
-//! signatures, so any manifest whose model is a pure MLP runs unchanged.
-//! Conv/BN models (`vgg_*`, `resnet_*`) are *not* host-executable and
-//! fail loudly at [`Backend::prepare`] time.
+//! signatures, and conv ladders from the `p_c<i>`/`idx_c<i>` signatures
+//! plus the `conv_strides`/`conv_pads` artifact attrs (executed by
+//! [`super::host_cnn`] over the im2col lowering in
+//! [`crate::linalg::im2col`]). BatchNorm/maxpool models (`vgg_*`,
+//! `resnet_*`) are *not* host-executable and fail loudly at
+//! [`Backend::prepare`] time.
 //!
 //! The backend is stateless and every kernel is a deterministic pure
 //! function, which is what lets [`crate::runtime::Engine::call_batch`]
@@ -57,7 +60,7 @@ pub use crate::linalg::reference::{matmul, matmul_nt, matmul_tn};
 /// Dense layer `z = a @ w + b` with an optionally fused ReLU — one blocked
 /// GEMM with the bias broadcast (and activation) applied in the epilogue,
 /// shared by the train forward, both eval paths and the gather path.
-fn dense_fwd(
+pub(crate) fn dense_fwd(
     scratch: &mut Workspace,
     a: &[f32],
     w: &[f32],
@@ -84,7 +87,7 @@ pub fn qdense(a: &[f32], w: &[f32], bias: &[f32], m: usize, k: usize, n: usize) 
 /// `[k,n]` dequantized weight matrix is never materialized. An empty
 /// codebook — possible with a corrupt container — is rejected with an
 /// error instead of panicking the host path.
-fn qdense_gather_ws(
+pub(crate) fn qdense_gather_ws(
     scratch: &mut Workspace,
     a: &[f32],
     idx: &[i32],
@@ -125,7 +128,7 @@ pub fn qdense_gather(
 
 /// Workspace-threaded core of [`lrp_dense_rw`]: one TN GEMM with the
 /// `w ⊙ ·` scaling fused into the store.
-fn lrp_dense_rw_ws(
+pub(crate) fn lrp_dense_rw_ws(
     scratch: &mut Workspace,
     a: &[f32],
     s: &[f32],
@@ -146,7 +149,7 @@ pub fn lrp_dense_rw(a: &[f32], s: &[f32], w: &[f32], batch: usize, din: usize, d
     with_thread_workspace(|ws| lrp_dense_rw_ws(ws, a, s, w, batch, din, dout))
 }
 
-fn relu_inplace(z: &mut [f32]) {
+pub(crate) fn relu_inplace(z: &mut [f32]) {
     for v in z.iter_mut() {
         if *v < 0.0 {
             *v = 0.0;
@@ -155,7 +158,7 @@ fn relu_inplace(z: &mut [f32]) {
 }
 
 /// `z + eps·sign(z)` with `sign(0) := 1` (paper Sec. 4.1).
-fn stabilize(z: f32) -> f32 {
+pub(crate) fn stabilize(z: f32) -> f32 {
     if z >= 0.0 {
         z + EPS
     } else {
@@ -180,7 +183,7 @@ fn round_ties_even(x: f32) -> f32 {
 
 /// Uniform fake-quantization of a non-negative activation tensor to
 /// `levels` levels, per-tensor dynamic scale (model.py `act_fake_quant`).
-fn act_fake_quant(x: &mut [f32], levels: f32) {
+pub(crate) fn act_fake_quant(x: &mut [f32], levels: f32) {
     let mx = x.iter().fold(0.0f32, |m, &v| m.max(v)).max(1e-8);
     let s = mx / (levels - 1.0);
     for v in x.iter_mut() {
@@ -195,7 +198,7 @@ fn row_lse(row: &[f32]) -> f32 {
 }
 
 /// Mean softmax cross-entropy (the eval hot path: no gradient tensor).
-fn softmax_xent_loss(logits: &[f32], y: &[i32], batch: usize, classes: usize) -> f32 {
+pub(crate) fn softmax_xent_loss(logits: &[f32], y: &[i32], batch: usize, classes: usize) -> f32 {
     let mut loss = 0.0f64;
     for s in 0..batch {
         let row = &logits[s * classes..(s + 1) * classes];
@@ -205,7 +208,12 @@ fn softmax_xent_loss(logits: &[f32], y: &[i32], batch: usize, classes: usize) ->
 }
 
 /// Mean softmax cross-entropy + its logit gradient `(softmax - onehot)/B`.
-fn softmax_xent_grad(logits: &[f32], y: &[i32], batch: usize, classes: usize) -> (f32, Vec<f32>) {
+pub(crate) fn softmax_xent_grad(
+    logits: &[f32],
+    y: &[i32],
+    batch: usize,
+    classes: usize,
+) -> (f32, Vec<f32>) {
     let mut loss = 0.0f64;
     let mut grad = vec![0.0f32; batch * classes];
     for s in 0..batch {
@@ -223,7 +231,7 @@ fn softmax_xent_grad(logits: &[f32], y: &[i32], batch: usize, classes: usize) ->
 }
 
 /// `Σ_b [argmax(logits_b) == y_b]` with first-max tie-breaking (jnp.argmax).
-fn correct_count(logits: &[f32], y: &[i32], batch: usize, classes: usize) -> f32 {
+pub(crate) fn correct_count(logits: &[f32], y: &[i32], batch: usize, classes: usize) -> f32 {
     let mut correct = 0.0f32;
     for s in 0..batch {
         let row = &logits[s * classes..(s + 1) * classes];
@@ -241,7 +249,7 @@ fn correct_count(logits: &[f32], y: &[i32], batch: usize, classes: usize) -> f32
 }
 
 /// One Adam step (model.py `adam_update`), updating `p`/`m`/`v` in place.
-fn adam_update(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], t: f32, lr: f32) {
+pub(crate) fn adam_update(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], t: f32, lr: f32) {
     let bc1 = 1.0 - ADAM_B1.powf(t);
     let bc2 = 1.0 - ADAM_B2.powf(t);
     for i in 0..p.len() {
@@ -257,19 +265,21 @@ fn adam_update(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], t: f32, l
 // signature-driven MLP view
 // ---------------------------------------------------------------------------
 
-/// Dense-layer ladder recovered from an artifact's input signature.
-struct MlpSig {
+/// Dense-layer ladder recovered from an artifact's input signature (also
+/// the dense-head sub-ladder of a CNN signature — see
+/// [`super::host_cnn`]).
+pub(crate) struct MlpSig {
     /// layer widths `[d0, d1, ..., classes]`
-    dims: Vec<usize>,
-    batch: usize,
+    pub(crate) dims: Vec<usize>,
+    pub(crate) batch: usize,
 }
 
 impl MlpSig {
-    fn layers(&self) -> usize {
+    pub(crate) fn layers(&self) -> usize {
         self.dims.len() - 1
     }
 
-    fn classes(&self) -> usize {
+    pub(crate) fn classes(&self) -> usize {
         *self.dims.last().unwrap()
     }
 }
@@ -318,13 +328,13 @@ fn mlp_sig(spec: &ArtifactSpec, w_prefix: &str) -> Result<MlpSig> {
 }
 
 /// Name-indexed view over the (already shape-checked) input values.
-struct Slots<'a> {
+pub(crate) struct Slots<'a> {
     map: HashMap<&'a str, &'a Value>,
     artifact: &'a str,
 }
 
 impl<'a> Slots<'a> {
-    fn new(spec: &'a ArtifactSpec, inputs: &'a [Value]) -> Slots<'a> {
+    pub(crate) fn new(spec: &'a ArtifactSpec, inputs: &'a [Value]) -> Slots<'a> {
         Slots {
             map: spec
                 .inputs
@@ -336,32 +346,68 @@ impl<'a> Slots<'a> {
         }
     }
 
-    fn get(&self, name: &str) -> Result<&'a Value> {
+    pub(crate) fn get(&self, name: &str) -> Result<&'a Value> {
         self.map
             .get(name)
             .copied()
             .ok_or_else(|| anyhow!("artifact {}: missing input {name}", self.artifact))
     }
 
-    fn f32(&self, name: &str) -> Result<&'a [f32]> {
+    pub(crate) fn f32(&self, name: &str) -> Result<&'a [f32]> {
         Ok(&self.get(name)?.as_f32().data)
     }
 
-    fn i32(&self, name: &str) -> Result<&'a [i32]> {
+    pub(crate) fn i32(&self, name: &str) -> Result<&'a [i32]> {
         Ok(&self.get(name)?.as_i32().data)
     }
 
-    fn scalar(&self, name: &str) -> Result<f32> {
+    pub(crate) fn scalar(&self, name: &str) -> Result<f32> {
         Ok(self.get(name)?.as_f32().as_scalar())
     }
 
-    fn has(&self, name: &str) -> bool {
+    pub(crate) fn has(&self, name: &str) -> bool {
         self.map.contains_key(name)
     }
 }
 
+/// Collect the `q_<prefix><i>` quantized-copy slots present in the
+/// signature (one entry per layer, `None` where the slot is absent).
+pub(crate) fn q_slots<'a>(
+    slots: &Slots<'a>,
+    prefix: &str,
+    n: usize,
+) -> Result<Vec<Option<&'a [f32]>>> {
+    let mut q: Vec<Option<&'a [f32]>> = vec![None; n];
+    for (i, qi) in q.iter_mut().enumerate() {
+        let name = format!("q_{prefix}{i}");
+        if slots.has(&name) {
+            *qi = Some(slots.f32(&name)?);
+        }
+    }
+    Ok(q)
+}
+
+/// Fig. 5 step 3: scale the gradients of quantized weights by the
+/// magnitude of their (non-zero) centroid value — the single definition
+/// of the STE gradient-scaling rule, shared by the MLP and CNN train
+/// steps.
+pub(crate) fn ste_scale_grads(dws: &mut [Vec<f32>], qs: &[Option<&[f32]>]) {
+    for (dw, q) in dws.iter_mut().zip(qs) {
+        if let Some(qw) = q {
+            for (gv, &qv) in dw.iter_mut().zip(qw.iter()) {
+                if qv != 0.0 {
+                    *gv *= qv.abs();
+                }
+            }
+        }
+    }
+}
+
 /// Collect the per-layer `w`/`b` slices from `p_w<i>` / `p_b<i>` slots.
-fn dense_params<'a>(slots: &Slots<'a>, nl: usize) -> Result<(Vec<&'a [f32]>, Vec<&'a [f32]>)> {
+pub(crate) fn dense_params<'a>(
+    slots: &Slots<'a>,
+    nl: usize,
+) -> Result<(Vec<&'a [f32]>, Vec<&'a [f32]>)> {
     let mut ws = Vec::with_capacity(nl);
     let mut bs = Vec::with_capacity(nl);
     for i in 0..nl {
@@ -374,7 +420,7 @@ fn dense_params<'a>(slots: &Slots<'a>, nl: usize) -> Result<(Vec<&'a [f32]>, Vec
 /// Forward pass keeping every layer input: `acts[i]` feeds layer `i`
 /// (`acts[0] = x`, `acts[i>0] = relu(z_{i-1})`, ReLU fused into the GEMM
 /// epilogue); returns logits.
-fn forward_collect(
+pub(crate) fn forward_collect(
     scratch: &mut Workspace,
     sig: &MlpSig,
     ws: &[&[f32]],
@@ -406,18 +452,23 @@ fn forward_collect(
 }
 
 /// Backward pass of the mean-softmax-xent loss through the dense ladder:
-/// returns per-layer `(dW, db)` given the logit gradient `g`. The ReLU
-/// backward mask is fused into the NT GEMM's store.
-fn backward(
+/// returns per-layer `(dW, db)` given the logit gradient `g`, plus — when
+/// `input_grad` is set — the gradient at the ladder's input, ReLU-masked
+/// by `acts[0]` (the CNN head hands it back to the conv stack, whose last
+/// layer owns that ReLU). The ReLU backward mask is fused into the NT
+/// GEMM's store throughout.
+pub(crate) fn backward(
     scratch: &mut Workspace,
     sig: &MlpSig,
     ws: &[&[f32]],
     acts: &[Vec<f32>],
     mut g: Vec<f32>,
-) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    input_grad: bool,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Option<Vec<f32>>) {
     let nl = sig.layers();
     let mut dws: Vec<Vec<f32>> = vec![Vec::new(); nl];
     let mut dbs: Vec<Vec<f32>> = vec![Vec::new(); nl];
+    let mut gin0 = None;
     for i in (0..nl).rev() {
         let (din, dout) = (sig.dims[i], sig.dims[i + 1]);
         let mut dw = vec![0.0f32; din * dout];
@@ -430,8 +481,9 @@ fn backward(
             }
         }
         dbs[i] = db;
-        if i > 0 {
-            // relu backward: acts[i] = relu(z_{i-1}), so the mask is a > 0
+        if i > 0 || input_grad {
+            // relu backward: acts[i] = relu(z_{i-1}) (or, for i == 0 of a
+            // CNN head, the last conv layer's ReLU output) — mask is a > 0
             let mut gin = vec![0.0f32; sig.batch * din];
             linalg::gemm_nt(
                 scratch,
@@ -443,14 +495,48 @@ fn backward(
                 Epilogue::ReluMask(&acts[i]),
                 &mut gin,
             );
-            g = gin;
+            if i > 0 {
+                g = gin;
+            } else {
+                gin0 = Some(gin);
+            }
         }
     }
-    (dws, dbs)
+    (dws, dbs, gin0)
+}
+
+/// Adam-update the `p_/m_/v_` slots of `grads`' parameters and stage the
+/// results in `out` (shared by the MLP and CNN train steps; grads are
+/// applied in the given order, which callers keep deterministic).
+pub(crate) fn adam_emit(
+    spec: &ArtifactSpec,
+    slots: &Slots,
+    grads: &[(String, Vec<f32>)],
+    t: f32,
+    lr: f32,
+    out: &mut HashMap<String, Value>,
+) -> Result<()> {
+    for (pname, grad) in grads {
+        let mut p = slots.f32(&format!("p_{pname}"))?.to_vec();
+        let mut m = slots.f32(&format!("m_{pname}"))?.to_vec();
+        let mut v = slots.f32(&format!("v_{pname}"))?.to_vec();
+        adam_update(&mut p, &mut m, &mut v, grad, t, lr);
+        let shape = spec
+            .inputs
+            .iter()
+            .find(|s| s.name == format!("p_{pname}"))
+            .ok_or_else(|| anyhow!("artifact {}: no p_{pname} slot", spec.name))?
+            .shape
+            .clone();
+        out.insert(format!("p_{pname}"), Value::F32(Tensor::new(shape.clone(), p)));
+        out.insert(format!("m_{pname}"), Value::F32(Tensor::new(shape.clone(), m)));
+        out.insert(format!("v_{pname}"), Value::F32(Tensor::new(shape, v)));
+    }
+    Ok(())
 }
 
 /// Emit outputs in manifest order from a name -> value map.
-fn emit(spec: &ArtifactSpec, mut by_name: HashMap<String, Value>) -> Result<Vec<Value>> {
+pub(crate) fn emit(spec: &ArtifactSpec, mut by_name: HashMap<String, Value>) -> Result<Vec<Value>> {
     spec.outputs
         .iter()
         .map(|o| {
@@ -461,7 +547,7 @@ fn emit(spec: &ArtifactSpec, mut by_name: HashMap<String, Value>) -> Result<Vec<
         .collect()
 }
 
-fn scalar_out(v: f32) -> Value {
+pub(crate) fn scalar_out(v: f32) -> Value {
     Value::F32(Tensor::scalar(v))
 }
 
@@ -488,15 +574,7 @@ fn train_step(
     let gs = if ste { slots.scalar("gs")? } else { 0.0 };
 
     // STE: quantized copies occupy the weight slots of the forward pass
-    let mut qws: Vec<Option<&[f32]>> = vec![None; nl];
-    if ste {
-        for (i, q) in qws.iter_mut().enumerate() {
-            let name = format!("q_w{i}");
-            if slots.has(&name) {
-                *q = Some(slots.f32(&name)?);
-            }
-        }
-    }
+    let qws = if ste { q_slots(&slots, "w", nl)? } else { vec![None; nl] };
     let eval_ws: Vec<&[f32]> = ws
         .iter()
         .zip(qws.iter())
@@ -506,59 +584,44 @@ fn train_step(
     let (acts, logits) = forward_collect(scratch, &sig, &eval_ws, &bs, x);
     let (loss, g) = softmax_xent_grad(&logits, y, sig.batch, sig.classes());
     let correct = correct_count(&logits, y, sig.batch, sig.classes());
-    let (mut dws, dbs) = backward(scratch, &sig, &eval_ws, &acts, g);
+    let (mut dws, mut dbs, _) = backward(scratch, &sig, &eval_ws, &acts, g, false);
 
     // Fig. 5 step 3: scale quantized-weight gradients by |centroid|
     if ste && gs > 0.5 {
-        for (dw, q) in dws.iter_mut().zip(qws.iter()) {
-            if let Some(qw) = q {
-                for (gv, &qv) in dw.iter_mut().zip(qw.iter()) {
-                    if qv != 0.0 {
-                        *gv *= qv.abs();
-                    }
-                }
-            }
-        }
+        ste_scale_grads(&mut dws, &qws);
     }
 
-    let mut out: HashMap<String, Value> = HashMap::new();
+    let mut grads = Vec::with_capacity(2 * nl);
     for i in 0..nl {
-        for (pname, grad) in [(format!("w{i}"), &dws[i]), (format!("b{i}"), &dbs[i])] {
-            let mut p = slots.f32(&format!("p_{pname}"))?.to_vec();
-            let mut m = slots.f32(&format!("m_{pname}"))?.to_vec();
-            let mut v = slots.f32(&format!("v_{pname}"))?.to_vec();
-            adam_update(&mut p, &mut m, &mut v, grad, t, lr);
-            let shape = spec
-                .inputs
-                .iter()
-                .find(|s| s.name == format!("p_{pname}"))
-                .unwrap()
-                .shape
-                .clone();
-            out.insert(format!("p_{pname}"), Value::F32(Tensor::new(shape.clone(), p)));
-            out.insert(format!("m_{pname}"), Value::F32(Tensor::new(shape.clone(), m)));
-            out.insert(format!("v_{pname}"), Value::F32(Tensor::new(shape, v)));
-        }
+        grads.push((format!("w{i}"), std::mem::take(&mut dws[i])));
+        grads.push((format!("b{i}"), std::mem::take(&mut dbs[i])));
     }
+    let mut out: HashMap<String, Value> = HashMap::new();
+    adam_emit(spec, &slots, &grads, t, lr, &mut out)?;
     out.insert("loss".into(), scalar_out(loss));
     out.insert("correct".into(), scalar_out(correct));
     emit(spec, out)
 }
 
-/// Composite epsilon-LRP over the dense ladder (model.py `MlpGsc::lrp`):
-/// per-weight relevances, batch-aggregated, signed.
-fn lrp_step(spec: &ArtifactSpec, inputs: &[Value], scratch: &mut Workspace) -> Result<Vec<Value>> {
-    let sig = mlp_sig(spec, "p_w")?;
+/// Epsilon-rule LRP through a dense ladder starting at activation `x`
+/// (model.py `MlpGsc::lrp`): forward keeping every layer input AND
+/// pre-activation (the epsilon rule needs both, so ReLU cannot fuse),
+/// relevance init at the logits, per-layer `r_w<i>` staged into `out`.
+/// With `input_relevance`, also returns the relevance at the ladder's
+/// input — the CNN head hands it back to its conv stack. Shared by the
+/// MLP and CNN LRP artifacts so the dense rule exists exactly once.
+pub(crate) fn lrp_dense_ladder(
+    scratch: &mut Workspace,
+    sig: &MlpSig,
+    ws: &[&[f32]],
+    bs: &[&[f32]],
+    x: &[f32],
+    y: &[i32],
+    eqw: f32,
+    input_relevance: bool,
+    out: &mut HashMap<String, Value>,
+) -> Option<Vec<f32>> {
     let nl = sig.layers();
-    let slots = Slots::new(spec, inputs);
-    let (ws, bs) = dense_params(&slots, nl)?;
-    let x = slots.f32("x")?;
-    let y = slots.i32("y")?;
-    let eqw = slots.scalar("eqw")?;
-
-    // forward keeping every layer input AND pre-activation (the epsilon
-    // rule needs both, and recomputing z would double the forward cost);
-    // ReLU cannot fuse here because z itself is retained
     let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
     let mut zs: Vec<Vec<f32>> = Vec::with_capacity(nl);
     for i in 0..nl {
@@ -580,7 +643,6 @@ fn lrp_step(spec: &ArtifactSpec, inputs: &[Value], scratch: &mut Workspace) -> R
         let score = logits[s * classes + yc];
         r[s * classes + yc] = if eqw > 0.5 { 1.0 } else { score };
     }
-    let mut out: HashMap<String, Value> = HashMap::new();
     for i in (0..nl).rev() {
         let (din, dout) = (sig.dims[i], sig.dims[i + 1]);
         let a = &acts[i];
@@ -591,14 +653,59 @@ fn lrp_step(spec: &ArtifactSpec, inputs: &[Value], scratch: &mut Workspace) -> R
             format!("r_w{i}"),
             Value::F32(Tensor::new(vec![din, dout], rw)),
         );
-        if i > 0 {
+        if i > 0 || input_relevance {
             // R_in = a ⊙ (s @ wᵀ), the ⊙ fused into the NT GEMM's store
             let mut rin = vec![0.0f32; sig.batch * din];
             linalg::gemm_nt(scratch, &s, ws[i], sig.batch, dout, din, Epilogue::Scale(a), &mut rin);
-            r = rin;
+            if i > 0 {
+                r = rin;
+            } else {
+                return Some(rin);
+            }
         }
     }
+    None
+}
+
+/// Composite epsilon-LRP over the dense ladder: per-weight relevances,
+/// batch-aggregated, signed.
+fn lrp_step(spec: &ArtifactSpec, inputs: &[Value], scratch: &mut Workspace) -> Result<Vec<Value>> {
+    let sig = mlp_sig(spec, "p_w")?;
+    let slots = Slots::new(spec, inputs);
+    let (ws, bs) = dense_params(&slots, sig.layers())?;
+    let x = slots.f32("x")?;
+    let y = slots.i32("y")?;
+    let eqw = slots.scalar("eqw")?;
+    let mut out: HashMap<String, Value> = HashMap::new();
+    lrp_dense_ladder(scratch, &sig, &ws, &bs, x, y, eqw, false, &mut out);
     emit(spec, out)
+}
+
+/// Dense eval ladder from activation `a0`: ReLU fused on hidden layers,
+/// optional per-tensor activation fake-quant (the Fig. 1 probe); returns
+/// the logits. Shared by the MLP and CNN eval artifacts.
+pub(crate) fn eval_dense_ladder(
+    scratch: &mut Workspace,
+    sig: &MlpSig,
+    ws: &[&[f32]],
+    bs: &[&[f32]],
+    a0: &[f32],
+    actq_levels: Option<f32>,
+) -> Vec<f32> {
+    let nl = sig.layers();
+    let mut a = a0.to_vec();
+    for i in 0..nl {
+        let hidden = i + 1 < nl;
+        let mut z =
+            dense_fwd(scratch, &a, ws[i], bs[i], sig.batch, sig.dims[i], sig.dims[i + 1], hidden);
+        if hidden {
+            if let Some(levels) = actq_levels {
+                act_fake_quant(&mut z, levels);
+            }
+        }
+        a = z;
+    }
+    a
 }
 
 /// Plain eval (optionally with fake-quantized activations for the Fig. 1
@@ -610,23 +717,13 @@ fn eval_step(
     scratch: &mut Workspace,
 ) -> Result<Vec<Value>> {
     let sig = mlp_sig(spec, "p_w")?;
-    let nl = sig.layers();
     let slots = Slots::new(spec, inputs);
-    let (ws, bs) = dense_params(&slots, nl)?;
+    let (ws, bs) = dense_params(&slots, sig.layers())?;
     let x = slots.f32("x")?;
     let y = slots.i32("y")?;
-    let levels = if actq { 2.0f32.powf(slots.scalar("abits")?) } else { 0.0 };
+    let levels = if actq { Some(2.0f32.powf(slots.scalar("abits")?)) } else { None };
 
-    let mut a = x.to_vec();
-    for i in 0..nl {
-        let hidden = i + 1 < nl;
-        let mut z =
-            dense_fwd(scratch, &a, ws[i], bs[i], sig.batch, sig.dims[i], sig.dims[i + 1], hidden);
-        if hidden && actq {
-            act_fake_quant(&mut z, levels);
-        }
-        a = z;
-    }
+    let a = eval_dense_ladder(scratch, &sig, &ws, &bs, x, levels);
     let loss = softmax_xent_loss(&a, y, sig.batch, sig.classes());
     let correct = correct_count(&a, y, sig.batch, sig.classes());
     let mut out = HashMap::new();
@@ -733,6 +830,12 @@ fn classify(name: &str) -> Result<Kind> {
     }
 }
 
+/// True when the artifact's signature carries a conv ladder (executed by
+/// [`super::host_cnn`] instead of the dense-MLP paths here).
+fn is_cnn(spec: &ArtifactSpec) -> bool {
+    spec.inputs.iter().any(|s| s.name == "p_c0" || s.name == "idx_c0")
+}
+
 /// The pure-rust host backend (stateless; `Send + Sync` trivially).
 #[derive(Default)]
 pub struct HostBackend;
@@ -749,8 +852,9 @@ impl Backend for HostBackend {
         "host"
     }
 
-    /// Validate an artifact is host-executable (dense MLP signature or an
-    /// assign bucket) without running it — the host analogue of a compile.
+    /// Validate an artifact is host-executable (dense MLP or conv-ladder
+    /// CNN signature, or an assign bucket) without running it — the host
+    /// analogue of a compile.
     fn prepare(&self, spec: &ArtifactSpec) -> Result<()> {
         match classify(&spec.name)? {
             Kind::Assign => {
@@ -761,7 +865,11 @@ impl Backend for HostBackend {
                 }
                 Ok(())
             }
+            Kind::EvalGather if is_cnn(spec) => {
+                super::host_cnn::cnn_sig(spec, "idx_c", "idx_w").map(|_| ())
+            }
             Kind::EvalGather => mlp_sig(spec, "idx_w").map(|_| ()),
+            _ if is_cnn(spec) => super::host_cnn::cnn_sig(spec, "p_c", "p_w").map(|_| ()),
             _ => mlp_sig(spec, "p_w").map(|_| ()),
         }
     }
@@ -772,7 +880,15 @@ impl Backend for HostBackend {
         inputs: &[Value],
         scratch: &mut Workspace,
     ) -> Result<Vec<Value>> {
+        use super::host_cnn;
+        let cnn = is_cnn(spec);
         match classify(&spec.name)? {
+            Kind::FpTrain if cnn => host_cnn::train_step(spec, inputs, false, scratch),
+            Kind::SteTrain if cnn => host_cnn::train_step(spec, inputs, true, scratch),
+            Kind::Lrp if cnn => host_cnn::lrp_step(spec, inputs, scratch),
+            Kind::Eval if cnn => host_cnn::eval_step(spec, inputs, false, scratch),
+            Kind::EvalActq if cnn => host_cnn::eval_step(spec, inputs, true, scratch),
+            Kind::EvalGather if cnn => host_cnn::eval_gather_step(spec, inputs, scratch),
             Kind::FpTrain => train_step(spec, inputs, false, scratch),
             Kind::SteTrain => train_step(spec, inputs, true, scratch),
             Kind::Lrp => lrp_step(spec, inputs, scratch),
@@ -784,10 +900,20 @@ impl Backend for HostBackend {
     }
 }
 
-/// Default host manifest: the paper's MLP_GSC ladder + the shared assign
-/// buckets (the host twin of `python -m compile.aot` for dense models).
+/// Default host manifest: the paper's MLP_GSC ladder plus the CIFAR-shaped
+/// CNN workload and the shared assign buckets (the host twin of
+/// `python -m compile.aot` for the host-executable models).
 pub fn default_manifest() -> Manifest {
-    Manifest::synthetic_mlp("mlp_gsc", &Manifest::MLP_GSC_DIMS, 128)
+    Manifest::synthetic_mlp("mlp_gsc", &Manifest::MLP_GSC_DIMS, 128).merge(
+        Manifest::synthetic_cnn(
+            "cnn_cifar",
+            (32, 32),
+            3,
+            &Manifest::CNN_CIFAR_CONVS,
+            &Manifest::CNN_CIFAR_FC,
+            32,
+        ),
+    )
 }
 
 #[cfg(test)]

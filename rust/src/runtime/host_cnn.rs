@@ -1,0 +1,526 @@
+//! Conv-ladder (CNN) execution paths of the host backend.
+//!
+//! The host backend recovers a CNN from an artifact signature the same
+//! way it recovers an MLP: the conv chain from the 4D HWIO `p_c<i>` /
+//! `idx_c<i>` slots (strides and padding travel in the `conv_strides` /
+//! `conv_pads` artifact attrs, since tensor shapes cannot carry them),
+//! and the dense head from the `p_w<i>` / `idx_w<i>` slots chaining off
+//! the flattened conv output. Because NHWC output rows are exactly the
+//! im2col GEMM's row-major layout, the flatten between the conv stack
+//! and the dense head never moves data.
+//!
+//! All convolutions run on the im2col lowering in
+//! [`crate::linalg::im2col`]: forward with bias/ReLU fused into the GEMM
+//! epilogue, dW via the transposed-patch GEMM, dX via the tiled col2im,
+//! and quantized conv weights dequantized at pack time
+//! ([`crate::linalg::conv2d_gather`]) exactly like `qdense_gather`.
+//!
+//! LRP: the host CNN uses the epsilon rule uniformly — per-weight
+//! relevance `R_w = w ⊙ (P(a)ᵀ @ s)` and `R_in = a ⊙ col2im(s @ wᵀ)`,
+//! the direct conv generalization of the dense path. This is a
+//! documented substitution for the paper's alpha-beta conv rule
+//! (DESIGN.md §2.3): it keeps the same conservation structure (asserted
+//! by `tests/conv_props.rs`) with one bwd_filter + one bwd_input per
+//! layer instead of eight conv VJPs.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::host::{
+    act_fake_quant, adam_emit, backward, correct_count, dense_params, emit, eval_dense_ladder,
+    forward_collect, lrp_dense_ladder, q_slots, qdense_gather_ws, relu_inplace, scalar_out,
+    softmax_xent_grad, softmax_xent_loss, stabilize, ste_scale_grads, MlpSig, Slots,
+};
+use super::ArtifactSpec;
+use crate::linalg::{self, Conv2d, Epilogue, Pad, Workspace};
+use crate::tensor::{Tensor, Value};
+
+/// Conv ladder + dense head recovered from an artifact's signature.
+pub(crate) struct CnnSig {
+    pub(crate) batch: usize,
+    /// per-conv-layer geometry (batch baked into `n`)
+    pub(crate) convs: Vec<Conv2d>,
+    /// the dense head, starting at the flattened conv output
+    pub(crate) dense: MlpSig,
+}
+
+fn parse_pads(spec: &ArtifactSpec) -> Result<Vec<Pad>> {
+    match spec.attrs.get("conv_pads") {
+        None => Ok(Vec::new()),
+        Some(s) => s
+            .split(',')
+            .map(|p| match p {
+                "same" => Ok(Pad::Same),
+                "valid" => Ok(Pad::Valid),
+                other => Err(anyhow::anyhow!(
+                    "artifact {}: unknown conv pad {other}",
+                    spec.name
+                )),
+            })
+            .collect(),
+    }
+}
+
+fn parse_strides(spec: &ArtifactSpec) -> Result<Vec<usize>> {
+    match spec.attrs.get("conv_strides") {
+        None => Ok(Vec::new()),
+        Some(s) => s
+            .split(',')
+            .map(|v| {
+                v.parse::<usize>()
+                    .with_context(|| format!("artifact {}: bad conv stride {v}", spec.name))
+            })
+            .collect(),
+    }
+}
+
+/// Recover the conv ladder from `<conv_prefix><i>` slots and the dense
+/// head from `<w_prefix><i>` slots. A manifest without the
+/// `conv_strides`/`conv_pads` attrs defaults every layer to stride 1 /
+/// SAME; an attr that is *present* must carry one entry per conv layer
+/// (and strides must be ≥ 1) or the signature is rejected — geometry
+/// mistakes fail loudly at `prepare` instead of surfacing as a
+/// confusing dense-chain mismatch later.
+pub(crate) fn cnn_sig(spec: &ArtifactSpec, conv_prefix: &str, w_prefix: &str) -> Result<CnnSig> {
+    let shape_of = |name: &str| -> Option<&Vec<usize>> {
+        spec.inputs.iter().find(|s| s.name == name).map(|s| &s.shape)
+    };
+    let x = shape_of("x").with_context(|| format!("artifact {}: no x input", spec.name))?;
+    if x.len() != 4 {
+        bail!(
+            "artifact {}: conv models need NHWC [batch, h, w, c] inputs, got {:?}",
+            spec.name,
+            x
+        );
+    }
+    let (batch, mut h, mut w, mut c) = (x[0], x[1], x[2], x[3]);
+    let strides = parse_strides(spec)?;
+    let pads = parse_pads(spec)?;
+    let mut convs = Vec::new();
+    let mut i = 0usize;
+    while let Some(shape) = shape_of(&format!("{conv_prefix}{i}")) {
+        if shape.len() != 4 || shape[2] != c {
+            bail!(
+                "artifact {}: {conv_prefix}{i} shape {:?} does not chain from {c} channels \
+                 (HWIO filters expected)",
+                spec.name,
+                shape
+            );
+        }
+        let stride = if strides.is_empty() {
+            1
+        } else {
+            *strides.get(i).with_context(|| {
+                format!(
+                    "artifact {}: conv_strides has no entry for conv layer {i}",
+                    spec.name
+                )
+            })?
+        };
+        if stride == 0 {
+            bail!("artifact {}: conv layer {i} has stride 0", spec.name);
+        }
+        let pad = if pads.is_empty() {
+            Pad::Same
+        } else {
+            *pads.get(i).with_context(|| {
+                format!(
+                    "artifact {}: conv_pads has no entry for conv layer {i}",
+                    spec.name
+                )
+            })?
+        };
+        let g = Conv2d {
+            n: batch,
+            h,
+            w,
+            c,
+            kh: shape[0],
+            kw: shape[1],
+            co: shape[3],
+            stride,
+            pad,
+        };
+        let (oh, ow) = g.out_hw();
+        if oh == 0 || ow == 0 {
+            bail!(
+                "artifact {}: conv layer {i} collapses the spatial dims to zero",
+                spec.name
+            );
+        }
+        h = oh;
+        w = ow;
+        c = g.co;
+        convs.push(g);
+        i += 1;
+    }
+    if i == 0 {
+        bail!(
+            "artifact {}: no {conv_prefix}0 slot — not a conv signature",
+            spec.name
+        );
+    }
+    let flat = h * w * c;
+    let mut dims = vec![flat];
+    let mut din = flat;
+    let mut j = 0usize;
+    while let Some(shape) = shape_of(&format!("{w_prefix}{j}")) {
+        if shape.len() != 2 || shape[0] != din {
+            bail!(
+                "artifact {}: {w_prefix}{j} shape {:?} does not chain from the flattened conv \
+                 output of width {din}",
+                spec.name,
+                shape
+            );
+        }
+        din = shape[1];
+        dims.push(din);
+        j += 1;
+    }
+    if j == 0 {
+        bail!("artifact {}: conv model has no dense head", spec.name);
+    }
+    Ok(CnnSig { batch, convs, dense: MlpSig { dims, batch } })
+}
+
+/// Collect the per-conv-layer `c`/`cb` slices from `p_c<i>` / `p_cb<i>`.
+fn conv_params<'a>(slots: &Slots<'a>, nc: usize) -> Result<(Vec<&'a [f32]>, Vec<&'a [f32]>)> {
+    let mut cs = Vec::with_capacity(nc);
+    let mut cbs = Vec::with_capacity(nc);
+    for i in 0..nc {
+        cs.push(slots.f32(&format!("p_c{i}"))?);
+        cbs.push(slots.f32(&format!("p_cb{i}"))?);
+    }
+    Ok((cs, cbs))
+}
+
+/// Conv-stack forward keeping every layer input (the backward pass needs
+/// them): `acts[0] = x`, `acts[i>0] = relu(conv_i-1 + bias)` with the
+/// ReLU fused into the GEMM epilogue.
+fn conv_forward_collect(
+    scratch: &mut Workspace,
+    sig: &CnnSig,
+    cws: &[&[f32]],
+    cbs: &[&[f32]],
+    x: &[f32],
+) -> Vec<Vec<f32>> {
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(sig.convs.len() + 1);
+    acts.push(x.to_vec());
+    for (i, g) in sig.convs.iter().enumerate() {
+        let mut z = vec![0.0f32; g.out_len()];
+        linalg::conv2d(scratch, &acts[i], cws[i], g, Epilogue::BiasRelu(cbs[i]), &mut z);
+        acts.push(z);
+    }
+    acts
+}
+
+/// Shared CNN train-step core: conv + dense forward/backward at the
+/// (optionally STE-substituted) weights, Adam applied to the `p_`
+/// background parameters — the conv twin of `host::train_step`.
+pub(crate) fn train_step(
+    spec: &ArtifactSpec,
+    inputs: &[Value],
+    ste: bool,
+    scratch: &mut Workspace,
+) -> Result<Vec<Value>> {
+    let sig = cnn_sig(spec, "p_c", "p_w")?;
+    let nc = sig.convs.len();
+    let nd = sig.dense.layers();
+    let slots = Slots::new(spec, inputs);
+    let (cws, cbs) = conv_params(&slots, nc)?;
+    let (dws_p, dbs_p) = dense_params(&slots, nd)?;
+    let x = slots.f32("x")?;
+    let y = slots.i32("y")?;
+    let t = slots.scalar("t")?;
+    let lr = slots.scalar("lr")?;
+    let gs = if ste { slots.scalar("gs")? } else { 0.0 };
+
+    // STE: quantized copies occupy the weight slots of the forward pass
+    let qcs = if ste { q_slots(&slots, "c", nc)? } else { vec![None; nc] };
+    let qds = if ste { q_slots(&slots, "w", nd)? } else { vec![None; nd] };
+    let eval_cw: Vec<&[f32]> =
+        cws.iter().zip(qcs.iter()).map(|(&w, q)| q.unwrap_or(w)).collect();
+    let eval_dw: Vec<&[f32]> =
+        dws_p.iter().zip(qds.iter()).map(|(&w, q)| q.unwrap_or(w)).collect();
+
+    // forward: conv stack (ReLU fused), then the dense head
+    let conv_acts = conv_forward_collect(scratch, &sig, &eval_cw, &cbs, x);
+    let (dacts, logits) =
+        forward_collect(scratch, &sig.dense, &eval_dw, &dbs_p, conv_acts.last().unwrap());
+    let classes = sig.dense.classes();
+    let (loss, g0) = softmax_xent_grad(&logits, y, sig.batch, classes);
+    let correct = correct_count(&logits, y, sig.batch, classes);
+
+    // dense backward, handing the flattened gradient back to the convs
+    let (mut d_dw, mut d_db, gflat) =
+        backward(scratch, &sig.dense, &eval_dw, &dacts, g0, true);
+    let mut g = gflat.expect("input_grad requested");
+
+    // conv backward: dW via the transposed-patch GEMM, dX via col2im
+    let mut d_cw: Vec<Vec<f32>> = vec![Vec::new(); nc];
+    let mut d_cb: Vec<Vec<f32>> = vec![Vec::new(); nc];
+    for i in (0..nc).rev() {
+        let geom = &sig.convs[i];
+        let mut dw = vec![0.0f32; geom.filter_len()];
+        linalg::conv2d_bwd_filter(scratch, &conv_acts[i], &g, geom, Epilogue::None, &mut dw);
+        d_cw[i] = dw;
+        let mut db = vec![0.0f32; geom.co];
+        for row in g.chunks_exact(geom.co) {
+            for (d, &gv) in db.iter_mut().zip(row) {
+                *d += gv;
+            }
+        }
+        d_cb[i] = db;
+        if i > 0 {
+            let mut gin = vec![0.0f32; geom.in_len()];
+            linalg::conv2d_bwd_input(scratch, &g, eval_cw[i], geom, &mut gin);
+            // relu backward: conv_acts[i] is the previous layer's fused
+            // ReLU output, so the mask is act > 0
+            for (gv, &av) in gin.iter_mut().zip(conv_acts[i].iter()) {
+                if av <= 0.0 {
+                    *gv = 0.0;
+                }
+            }
+            g = gin;
+        }
+    }
+
+    // Fig. 5 step 3: scale quantized-weight gradients by |centroid|
+    if ste && gs > 0.5 {
+        ste_scale_grads(&mut d_cw, &qcs);
+        ste_scale_grads(&mut d_dw, &qds);
+    }
+
+    let mut grads = Vec::with_capacity(2 * (nc + nd));
+    for i in 0..nc {
+        grads.push((format!("c{i}"), std::mem::take(&mut d_cw[i])));
+        grads.push((format!("cb{i}"), std::mem::take(&mut d_cb[i])));
+    }
+    for i in 0..nd {
+        grads.push((format!("w{i}"), std::mem::take(&mut d_dw[i])));
+        grads.push((format!("b{i}"), std::mem::take(&mut d_db[i])));
+    }
+    let mut out: HashMap<String, Value> = HashMap::new();
+    adam_emit(spec, &slots, &grads, t, lr, &mut out)?;
+    out.insert("loss".into(), scalar_out(loss));
+    out.insert("correct".into(), scalar_out(correct));
+    emit(spec, out)
+}
+
+/// Composite epsilon-LRP through the dense head and the conv stack:
+/// per-weight relevances, batch-aggregated, signed — the conv twin of
+/// `host::lrp_step` (see the module docs on the epsilon-rule
+/// substitution for conv layers).
+pub(crate) fn lrp_step(
+    spec: &ArtifactSpec,
+    inputs: &[Value],
+    scratch: &mut Workspace,
+) -> Result<Vec<Value>> {
+    let sig = cnn_sig(spec, "p_c", "p_w")?;
+    let nc = sig.convs.len();
+    let nd = sig.dense.layers();
+    let slots = Slots::new(spec, inputs);
+    let (cws, cbs) = conv_params(&slots, nc)?;
+    let (dws_p, dbs_p) = dense_params(&slots, nd)?;
+    let x = slots.f32("x")?;
+    let y = slots.i32("y")?;
+    let eqw = slots.scalar("eqw")?;
+
+    // conv forward keeping both the layer inputs and the pre-activations
+    // (the epsilon rule needs z itself, so ReLU cannot fuse here)
+    let mut cacts: Vec<Vec<f32>> = vec![x.to_vec()];
+    let mut czs: Vec<Vec<f32>> = Vec::with_capacity(nc);
+    for (i, g) in sig.convs.iter().enumerate() {
+        let mut z = vec![0.0f32; g.out_len()];
+        linalg::conv2d(scratch, &cacts[i], cws[i], g, Epilogue::Bias(cbs[i]), &mut z);
+        let mut h = z.clone();
+        relu_inplace(&mut h);
+        czs.push(z);
+        cacts.push(h);
+    }
+    // dense head: shared epsilon-rule ladder, handing the relevance at
+    // the flatten boundary back to the conv stack
+    let mut out: HashMap<String, Value> = HashMap::new();
+    let mut r = lrp_dense_ladder(
+        scratch,
+        &sig.dense,
+        &dws_p,
+        &dbs_p,
+        cacts.last().unwrap(),
+        y,
+        eqw,
+        true,
+        &mut out,
+    )
+    .expect("input_relevance requested");
+    // conv stack backward (epsilon rule on the im2col lowering)
+    for i in (0..nc).rev() {
+        let geom = &sig.convs[i];
+        let a = &cacts[i];
+        let z = &czs[i];
+        let s: Vec<f32> =
+            r.iter().zip(z.iter()).map(|(&rv, &zv)| rv / stabilize(zv)).collect();
+        let mut rw = vec![0.0f32; geom.filter_len()];
+        linalg::lrp_conv_rw(scratch, a, &s, cws[i], geom, &mut rw);
+        out.insert(
+            format!("r_c{i}"),
+            Value::F32(Tensor::new(vec![geom.kh, geom.kw, geom.c, geom.co], rw)),
+        );
+        if i > 0 {
+            let mut rin = vec![0.0f32; geom.in_len()];
+            linalg::conv2d_bwd_input(scratch, &s, cws[i], geom, &mut rin);
+            for (rv, &av) in rin.iter_mut().zip(a.iter()) {
+                *rv *= av;
+            }
+            r = rin;
+        }
+    }
+    emit(spec, out)
+}
+
+/// Plain CNN eval (optionally with fake-quantized activations) — the conv
+/// twin of `host::eval_step`.
+pub(crate) fn eval_step(
+    spec: &ArtifactSpec,
+    inputs: &[Value],
+    actq: bool,
+    scratch: &mut Workspace,
+) -> Result<Vec<Value>> {
+    let sig = cnn_sig(spec, "p_c", "p_w")?;
+    let nc = sig.convs.len();
+    let nd = sig.dense.layers();
+    let slots = Slots::new(spec, inputs);
+    let (cws, cbs) = conv_params(&slots, nc)?;
+    let (dws_p, dbs_p) = dense_params(&slots, nd)?;
+    let x = slots.f32("x")?;
+    let y = slots.i32("y")?;
+    let levels = if actq { Some(2.0f32.powf(slots.scalar("abits")?)) } else { None };
+
+    // rolling activation buffer: eval never needs earlier conv outputs
+    let mut a = x.to_vec();
+    for (i, g) in sig.convs.iter().enumerate() {
+        let mut z = vec![0.0f32; g.out_len()];
+        linalg::conv2d(scratch, &a, cws[i], g, Epilogue::BiasRelu(cbs[i]), &mut z);
+        if let Some(lv) = levels {
+            act_fake_quant(&mut z, lv);
+        }
+        a = z;
+    }
+    let a = eval_dense_ladder(scratch, &sig.dense, &dws_p, &dbs_p, &a, levels);
+    let classes = sig.dense.classes();
+    let loss = softmax_xent_loss(&a, y, sig.batch, classes);
+    let correct = correct_count(&a, y, sig.batch, classes);
+    let mut out = HashMap::new();
+    out.insert("loss".to_string(), scalar_out(loss));
+    out.insert("correct".to_string(), scalar_out(correct));
+    emit(spec, out)
+}
+
+/// Deployment-form gather eval: conv and dense centroid indices
+/// dequantized through their per-layer codebooks at pack time — the conv
+/// twin of `host::eval_gather_step`.
+pub(crate) fn eval_gather_step(
+    spec: &ArtifactSpec,
+    inputs: &[Value],
+    scratch: &mut Workspace,
+) -> Result<Vec<Value>> {
+    let sig = cnn_sig(spec, "idx_c", "idx_w")?;
+    let nd = sig.dense.layers();
+    let slots = Slots::new(spec, inputs);
+    let x = slots.f32("x")?;
+    let y = slots.i32("y")?;
+
+    let mut a = x.to_vec();
+    for (i, g) in sig.convs.iter().enumerate() {
+        let idx = slots.i32(&format!("idx_c{i}"))?;
+        let cb = slots.f32(&format!("cb_c{i}"))?;
+        let bias = slots.f32(&format!("p_cb{i}"))?;
+        if cb.is_empty() {
+            bail!(
+                "artifact {}: conv layer {i}: empty codebook (corrupt container)",
+                spec.name
+            );
+        }
+        let mut z = vec![0.0f32; g.out_len()];
+        linalg::conv2d_gather(scratch, &a, idx, cb, g, Epilogue::BiasRelu(bias), &mut z);
+        a = z;
+    }
+    for i in 0..nd {
+        let idx = slots.i32(&format!("idx_w{i}"))?;
+        let cb = slots.f32(&format!("cb_w{i}"))?;
+        let bias = slots.f32(&format!("p_b{i}"))?;
+        let z = qdense_gather_ws(
+            scratch,
+            &a,
+            idx,
+            cb,
+            bias,
+            sig.batch,
+            sig.dense.dims[i],
+            sig.dense.dims[i + 1],
+            i + 1 < nd,
+        )
+        .with_context(|| format!("artifact {}: dense layer {i}", spec.name))?;
+        a = z;
+    }
+    let classes = sig.dense.classes();
+    let loss = softmax_xent_loss(&a, y, sig.batch, classes);
+    let correct = correct_count(&a, y, sig.batch, classes);
+    let mut out = HashMap::new();
+    out.insert("loss".to_string(), scalar_out(loss));
+    out.insert("correct".to_string(), scalar_out(correct));
+    emit(spec, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Manifest;
+    use super::*;
+
+    fn tiny() -> Manifest {
+        Manifest::synthetic_cnn("t", (8, 8), 3, &[(4, 2), (8, 2)], &[16, 5], 2)
+    }
+
+    #[test]
+    fn cnn_sig_recovers_geometry_from_signature_and_attrs() {
+        let m = tiny();
+        let spec = m.artifact("t_fp_train").unwrap();
+        let sig = cnn_sig(spec, "p_c", "p_w").unwrap();
+        assert_eq!(sig.batch, 2);
+        assert_eq!(sig.convs.len(), 2);
+        assert_eq!(sig.convs[0].stride, 2);
+        assert_eq!(sig.convs[0].pad, Pad::Same);
+        assert_eq!(sig.convs[1].c, 4);
+        assert_eq!(sig.convs[1].out_hw(), (2, 2));
+        assert_eq!(sig.dense.dims, vec![2 * 2 * 8, 16, 5]);
+        // gather signature recovers the same ladder from idx_ slots
+        let evq = m.artifact("t_eval_q").unwrap();
+        let gsig = cnn_sig(evq, "idx_c", "idx_w").unwrap();
+        assert_eq!(gsig.dense.dims, sig.dense.dims);
+    }
+
+    #[test]
+    fn cnn_sig_rejects_broken_chains() {
+        let m = tiny();
+        let mut spec = m.artifact("t_eval").unwrap().clone();
+        // flat [batch, dim] input is an MLP signature, not a CNN one
+        spec.inputs.iter_mut().find(|s| s.name == "x").unwrap().shape = vec![2, 192];
+        assert!(cnn_sig(&spec, "p_c", "p_w").is_err());
+        // channel-chain mismatch fails loudly
+        let mut spec = m.artifact("t_eval").unwrap().clone();
+        spec.inputs.iter_mut().find(|s| s.name == "p_c1").unwrap().shape = vec![3, 3, 7, 8];
+        assert!(cnn_sig(&spec, "p_c", "p_w").is_err());
+        // a conv_strides attr that is present but short fails loudly at
+        // signature recovery, not as a later dense-chain mismatch
+        let mut spec = m.artifact("t_eval").unwrap().clone();
+        spec.attrs.insert("conv_strides".into(), "2".into());
+        let err = cnn_sig(&spec, "p_c", "p_w").unwrap_err();
+        assert!(format!("{err:?}").contains("no entry for conv layer 1"), "{err:?}");
+        // stride 0 is rejected instead of silently clamped
+        let mut spec = m.artifact("t_eval").unwrap().clone();
+        spec.attrs.insert("conv_strides".into(), "0,2".into());
+        let err = cnn_sig(&spec, "p_c", "p_w").unwrap_err();
+        assert!(format!("{err:?}").contains("stride 0"), "{err:?}");
+    }
+}

@@ -101,6 +101,12 @@ pub struct ArtifactSpec {
     pub file: PathBuf,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+    /// Free-form key/value attributes (`attr <key> <value>` lines).
+    /// Carries execution metadata tensor shapes cannot: the host backend
+    /// reads `conv_strides` / `conv_pads` (comma-separated, one entry per
+    /// conv layer) to recover conv geometry. The PJRT backend ignores
+    /// attrs — geometry is baked into its lowered HLO.
+    pub attrs: BTreeMap<String, String>,
 }
 
 /// The whole manifest.
@@ -210,6 +216,7 @@ impl Manifest {
                     name,
                     inputs,
                     outputs,
+                    attrs: BTreeMap::new(),
                 },
             );
         };
@@ -296,6 +303,250 @@ impl Manifest {
         }
     }
 
+    /// Conv ladder of the host CNN workload (`cnn_cifar`): `(cout,
+    /// stride)` per 3×3 SAME conv layer. Downsampling is by strided convs
+    /// (32→16→8→4), keeping the host kernel set to conv + dense — the
+    /// CIFAR-shaped stand-in for the paper's VGG-slim stack (DESIGN.md
+    /// §2.3).
+    pub const CNN_CIFAR_CONVS: [(usize, usize); 4] = [(16, 1), (32, 2), (64, 2), (64, 2)];
+    /// Dense head of the host CNN workload: hidden width + classes.
+    pub const CNN_CIFAR_FC: [usize; 2] = [128, 10];
+
+    /// Synthesize the manifest of a conv-ladder + dense-head CNN (the
+    /// conv twin of [`Manifest::synthetic_mlp`]): 3×3 SAME conv layers
+    /// `convs = [(cout, stride), ..]` over an `hw.0 × hw.1 × cin` NHWC
+    /// input, flattened into the dense ladder `fc = [hidden.., classes]`.
+    /// Emits the same six artifact kinds plus the shared `assign_<bucket>`
+    /// artifacts; conv geometry that tensor shapes cannot carry (stride,
+    /// padding) travels in the `conv_strides` / `conv_pads` artifact
+    /// attrs, which is what makes the host backend's signature-driven
+    /// execution work for CNNs.
+    pub fn synthetic_cnn(
+        model: &str,
+        hw: (usize, usize),
+        cin: usize,
+        convs: &[(usize, usize)],
+        fc: &[usize],
+        batch: usize,
+    ) -> Manifest {
+        assert!(!convs.is_empty(), "a CNN needs at least one conv layer");
+        assert!(!fc.is_empty(), "a CNN needs a dense head");
+        let (mut h, mut w) = hw;
+        let mut c = cin;
+        let mut params = Vec::new();
+        for (i, &(cout, stride)) in convs.iter().enumerate() {
+            params.push(ParamSpec {
+                name: format!("c{i}"),
+                shape: vec![3, 3, c, cout],
+                init: Init::HeIn,
+                quantize: true,
+            });
+            params.push(ParamSpec {
+                name: format!("cb{i}"),
+                shape: vec![cout],
+                init: Init::Zeros,
+                quantize: false,
+            });
+            let g = crate::linalg::Conv2d {
+                n: batch,
+                h,
+                w,
+                c,
+                kh: 3,
+                kw: 3,
+                co: cout,
+                stride,
+                pad: crate::linalg::Pad::Same,
+            };
+            let (oh, ow) = g.out_hw();
+            assert!(oh > 0 && ow > 0, "conv ladder collapsed the spatial dims");
+            h = oh;
+            w = ow;
+            c = cout;
+        }
+        let flat = h * w * c;
+        let mut dims = vec![flat];
+        dims.extend_from_slice(fc);
+        for i in 0..dims.len() - 1 {
+            params.push(ParamSpec {
+                name: format!("w{i}"),
+                shape: vec![dims[i], dims[i + 1]],
+                init: Init::HeIn,
+                quantize: true,
+            });
+            params.push(ParamSpec {
+                name: format!("b{i}"),
+                shape: vec![dims[i + 1]],
+                init: Init::Zeros,
+                quantize: false,
+            });
+        }
+        let spec = ModelSpec {
+            name: model.to_string(),
+            batch,
+            classes: *fc.last().unwrap(),
+            input_dim: hw.0 * hw.1 * cin,
+            params,
+        };
+
+        let f32s = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.to_string(),
+            dtype: DType::F32,
+            shape,
+        };
+        let i32s = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.to_string(),
+            dtype: DType::I32,
+            shape,
+        };
+        let param_ins = |prefix: &str| -> Vec<TensorSpec> {
+            spec.params
+                .iter()
+                .map(|p| f32s(&format!("{prefix}{}", p.name), p.shape.clone()))
+                .collect()
+        };
+        let x_in = f32s("x", vec![batch, hw.0, hw.1, cin]);
+        let y_in = i32s("y", vec![batch]);
+        let train_outs = || -> Vec<TensorSpec> {
+            let mut outs = Vec::new();
+            for prefix in ["p_", "m_", "v_"] {
+                outs.extend(param_ins(prefix));
+            }
+            outs.push(f32s("loss", vec![]));
+            outs.push(f32s("correct", vec![]));
+            outs
+        };
+        let eval_outs = vec![f32s("loss", vec![]), f32s("correct", vec![])];
+
+        let strides_attr = convs
+            .iter()
+            .map(|&(_, s)| s.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        let pads_attr = vec!["same"; convs.len()].join(",");
+        let mut artifacts = BTreeMap::new();
+        let mut add = |name: String, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: PathBuf::from(format!("<host:{name}>")),
+                    name,
+                    inputs,
+                    outputs,
+                    attrs: BTreeMap::from([
+                        ("conv_strides".to_string(), strides_attr.clone()),
+                        ("conv_pads".to_string(), pads_attr.clone()),
+                    ]),
+                },
+            );
+        };
+
+        // fp_train: p_* m_* v_* x y t lr -> p_* m_* v_* loss correct
+        let mut ins = param_ins("p_");
+        ins.extend(param_ins("m_"));
+        ins.extend(param_ins("v_"));
+        ins.extend([x_in.clone(), y_in.clone(), f32s("t", vec![]), f32s("lr", vec![])]);
+        add(format!("{model}_fp_train"), ins, train_outs());
+
+        // ste_train: p_* q_<quantized>* m_* v_* x y t lr gs
+        let mut ins = param_ins("p_");
+        for p in spec.quantized_params() {
+            ins.push(f32s(&format!("q_{}", p.name), p.shape.clone()));
+        }
+        ins.extend(param_ins("m_"));
+        ins.extend(param_ins("v_"));
+        ins.extend([
+            x_in.clone(),
+            y_in.clone(),
+            f32s("t", vec![]),
+            f32s("lr", vec![]),
+            f32s("gs", vec![]),
+        ]);
+        add(format!("{model}_ste_train"), ins, train_outs());
+
+        // lrp: p_* x y eqw -> r_<quantized>*
+        let mut ins = param_ins("p_");
+        ins.extend([x_in.clone(), y_in.clone(), f32s("eqw", vec![])]);
+        let outs = spec
+            .quantized_params()
+            .map(|p| f32s(&format!("r_{}", p.name), p.shape.clone()))
+            .collect();
+        add(format!("{model}_lrp"), ins, outs);
+
+        // eval / eval_actq: p_* x y [abits] -> loss correct
+        let mut ins = param_ins("p_");
+        ins.extend([x_in.clone(), y_in.clone()]);
+        add(format!("{model}_eval"), ins.clone(), eval_outs.clone());
+        ins.push(f32s("abits", vec![]));
+        add(format!("{model}_eval_actq"), ins, eval_outs.clone());
+
+        // eval_q: idx_<q>* cb_<q>* p_<biases>* x y -> loss correct
+        let mut ins = Vec::new();
+        for p in spec.quantized_params() {
+            ins.push(i32s(&format!("idx_{}", p.name), p.shape.clone()));
+        }
+        for p in spec.quantized_params() {
+            ins.push(f32s(&format!("cb_{}", p.name), vec![Self::K_MAX]));
+        }
+        for p in spec.params.iter().filter(|p| !p.quantize) {
+            ins.push(f32s(&format!("p_{}", p.name), p.shape.clone()));
+        }
+        ins.extend([x_in, y_in]);
+        add(format!("{model}_eval_q"), ins, eval_outs);
+
+        // assign_<bucket>: shared with the dense models (no conv attrs)
+        for &n in &Self::ASSIGN_BUCKETS {
+            let name = format!("assign_{n}");
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: PathBuf::from(format!("<host:{name}>")),
+                    name,
+                    inputs: vec![
+                        f32s("w", vec![n]),
+                        f32s("r", vec![n]),
+                        f32s("mask", vec![n]),
+                        f32s("centroids", vec![Self::K_MAX]),
+                        f32s("cvalid", vec![Self::K_MAX]),
+                        f32s("lam", vec![]),
+                    ],
+                    outputs: vec![
+                        i32s("idx", vec![n]),
+                        f32s("qw", vec![n]),
+                        f32s("counts", vec![Self::K_MAX]),
+                    ],
+                    attrs: BTreeMap::new(),
+                },
+            );
+        }
+
+        Manifest {
+            hash: format!("host-synthetic-{model}"),
+            models: BTreeMap::from([(model.to_string(), spec)]),
+            artifacts,
+            kmax: Self::K_MAX,
+            buckets: Self::ASSIGN_BUCKETS.to_vec(),
+            dir: PathBuf::from("<host>"),
+        }
+    }
+
+    /// Merge another manifest's models and artifacts into this one (the
+    /// host backend serves the MLP and CNN workloads from one merged
+    /// manifest). Same-name entries — e.g. the shared `assign_<bucket>`
+    /// artifacts — are taken from `other`.
+    pub fn merge(mut self, other: Manifest) -> Manifest {
+        self.models.extend(other.models);
+        self.artifacts.extend(other.artifacts);
+        if self.kmax == 0 {
+            self.kmax = other.kmax;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = other.buckets;
+        }
+        self.hash = format!("{}+{}", self.hash, other.hash);
+        self
+    }
+
     /// Parse `<dir>/manifest.txt`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.txt");
@@ -375,9 +626,21 @@ impl Manifest {
                             file: dir.join(file),
                             inputs: vec![],
                             outputs: vec![],
+                            attrs: BTreeMap::new(),
                         },
                     );
                     cur_art = Some(name);
+                }
+                "attr" => {
+                    let art = cur_art.as_ref().context("attr outside artifact")?;
+                    if toks.len() < 3 {
+                        bail!("attr needs <key> <value> ({})", ctx());
+                    }
+                    m.artifacts
+                        .get_mut(art)
+                        .unwrap()
+                        .attrs
+                        .insert(toks[1].to_string(), toks[2].to_string());
                 }
                 "in" | "out" => {
                     let art = cur_art.as_ref().context("in/out outside artifact")?;
@@ -510,6 +773,82 @@ mod tests {
         let evq = m.artifact("tiny_eval_q").unwrap();
         assert_eq!(evq.inputs[0].dtype, DType::I32);
         assert_eq!(m.bucket_for(6 * 4).unwrap(), 1024);
+    }
+
+    #[test]
+    fn synthetic_cnn_mirrors_aot_contract() {
+        let m = Manifest::synthetic_cnn("tcnn", (8, 8), 3, &[(4, 2), (8, 2)], &[16, 5], 2);
+        let spec = m.model("tcnn").unwrap();
+        assert_eq!(spec.classes, 5);
+        assert_eq!(spec.input_dim, 8 * 8 * 3);
+        // c0 cb0 c1 cb1 w0 b0 w1 b1
+        assert_eq!(spec.params.len(), 8);
+        assert_eq!(spec.params[0].shape, vec![3, 3, 3, 4]);
+        // flat = 2·2·8 = 32 after two stride-2 SAME convs on 8×8
+        let w0 = spec.params.iter().find(|p| p.name == "w0").unwrap();
+        assert_eq!(w0.shape, vec![32, 16]);
+        for art in [
+            "tcnn_fp_train",
+            "tcnn_ste_train",
+            "tcnn_lrp",
+            "tcnn_eval",
+            "tcnn_eval_actq",
+            "tcnn_eval_q",
+        ] {
+            let a = m.artifact(art).unwrap();
+            assert_eq!(a.attrs["conv_strides"], "2,2", "{art}");
+            assert_eq!(a.attrs["conv_pads"], "same,same", "{art}");
+        }
+        // one relevance output per quantized layer, conv shapes 4D
+        let lrp = m.artifact("tcnn_lrp").unwrap();
+        assert_eq!(lrp.outputs.len(), 4);
+        assert_eq!(lrp.outputs[0].name, "r_c0");
+        assert_eq!(lrp.outputs[0].shape, vec![3, 3, 3, 4]);
+        // gather eval: 4D i32 idx slots + the conv bias slots
+        let evq = m.artifact("tcnn_eval_q").unwrap();
+        assert_eq!(evq.inputs[0].name, "idx_c0");
+        assert_eq!(evq.inputs[0].dtype, DType::I32);
+        assert!(evq.inputs.iter().any(|s| s.name == "p_cb0"));
+        // x is 4D NHWC
+        let ev = m.artifact("tcnn_eval").unwrap();
+        let x = ev.inputs.iter().find(|s| s.name == "x").unwrap();
+        assert_eq!(x.shape, vec![2, 8, 8, 3]);
+        assert!(m.artifact("assign_1024").is_ok());
+    }
+
+    #[test]
+    fn merge_serves_both_models() {
+        let m = Manifest::synthetic_mlp("m", &[6, 4, 3], 2)
+            .merge(Manifest::synthetic_cnn("c", (8, 8), 3, &[(4, 2)], &[3], 2));
+        assert!(m.model("m").is_ok() && m.model("c").is_ok());
+        assert!(m.artifact("m_eval").is_ok() && m.artifact("c_eval").is_ok());
+        assert!(m.artifact("assign_1024").is_ok());
+        assert_eq!(m.kmax, Manifest::K_MAX);
+    }
+
+    #[test]
+    fn attr_directive_round_trips() {
+        let dir = write_tmp(
+            "hash abc\n\
+             artifact a file=a.hlo.txt\n\
+             attr conv_strides 1,2\n\
+             attr conv_pads same,valid\n\
+             in x f32 2x4x4x3\n\
+             out y f32 scalar\n\
+             end\n",
+        );
+        let parsed = Manifest::load(&dir).unwrap();
+        let a = parsed.artifact("a").unwrap();
+        assert_eq!(a.attrs["conv_strides"], "1,2");
+        assert_eq!(a.attrs["conv_pads"], "same,valid");
+        assert_eq!(a.inputs[0].shape, vec![2, 4, 4, 3]);
+        // a malformed attr line (value dropped) is a contextual parse
+        // error carrying the line, not an index panic
+        let dir = write_tmp("hash x\nartifact a file=a.hlo.txt\nattr conv_strides\nend\n");
+        let err = Manifest::load(&dir).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("attr needs"), "{msg}");
+        assert!(msg.contains("line 3"), "{msg}");
     }
 
     #[test]

@@ -10,10 +10,12 @@
 //!   under a single shard's write lock.
 //! * [`host::HostBackend`] — a pure-rust reference backend executing the
 //!   dense-model kernel set (`qdense`, `qdense_gather`, `lrp_dense_rw`,
-//!   the ECQ^x assignment, …) directly on [`Value`]s, mirroring
-//!   `python/compile/kernels/ref.py`; it needs neither an `artifacts/`
-//!   directory nor real PJRT bindings, which is what turns the end-to-end
-//!   suite into an always-on tier-1 gate.
+//!   the ECQ^x assignment, …) and the conv-ladder kernel set (`conv2d`
+//!   and its backward/LRP/gather forms, lowered over im2col —
+//!   `runtime::host_cnn`) directly on [`Value`]s, mirroring
+//!   `python/compile/kernels/ref.py` and `model.py`; it needs neither an
+//!   `artifacts/` directory nor real PJRT bindings, which is what turns
+//!   the end-to-end suite into an always-on tier-1 gate.
 //!
 //! The engine owns the manifest and checks every call against the
 //! artifact signature (shape + dtype), so binding bugs fail loudly at the
@@ -22,6 +24,7 @@
 //! reference across the whole campaign worker pool.
 
 pub mod host;
+pub mod host_cnn;
 pub mod manifest;
 pub mod pjrt;
 
@@ -119,13 +122,15 @@ impl Engine {
     }
 
     /// Host engine over the default synthesized manifest (the paper's
-    /// MLP_GSC ladder + assign buckets) — no `artifacts/`, no PJRT.
+    /// MLP_GSC ladder, the CIFAR-shaped `cnn_cifar` conv workload and the
+    /// shared assign buckets) — no `artifacts/`, no PJRT.
     pub fn host() -> Engine {
         Engine::host_with(host::default_manifest())
     }
 
     /// Host engine over a caller-provided manifest (tests use this with
-    /// small [`Manifest::synthetic_mlp`] ladders).
+    /// small [`Manifest::synthetic_mlp`] / [`Manifest::synthetic_cnn`]
+    /// models).
     pub fn host_with(manifest: Manifest) -> Engine {
         Engine { manifest, backend: Box::new(HostBackend::new()) }
     }

@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
 use ecqx::data::Batch;
-use ecqx::linalg::{self, Epilogue, Workspace};
+use ecqx::linalg::{self, Conv2d, Epilogue, Pad, Workspace};
 use ecqx::nn::ModelState;
 use ecqx::runtime::{Engine, Manifest};
 use ecqx::tensor::{Tensor, TensorI32, Value};
@@ -83,6 +83,32 @@ fn warm_workspace_gemm_is_allocation_free_and_engine_steps_reach_steady_state() 
         "warm-workspace GEMM must not touch the heap (packing scratch is reused)"
     );
 
+    // -- phase 1b: the im2col conv kernels through the same workspace --
+    // forward, dW and the tiled col2im backward all draw their scratch
+    // (panels + dCol tile) from the workspace; warm, they allocate nothing
+    let geom = Conv2d { n: 2, h: 9, w: 7, c: 3, kh: 3, kw: 3, co: 5, stride: 2, pad: Pad::Same };
+    let cx: Vec<f32> = (0..geom.in_len()).map(|i| (i as f32 * 0.19).sin()).collect();
+    let cw: Vec<f32> = (0..geom.filter_len()).map(|i| (i as f32 * 0.23).cos()).collect();
+    let cg: Vec<f32> = (0..geom.out_len()).map(|i| (i as f32 * 0.31).sin()).collect();
+    let cbias: Vec<f32> = (0..geom.co).map(|i| i as f32 * 0.01).collect();
+    let mut cout = vec![0.0f32; geom.out_len()];
+    let mut cdw = vec![0.0f32; geom.filter_len()];
+    let mut cdx = vec![0.0f32; geom.in_len()];
+    linalg::conv2d(&mut ws, &cx, &cw, &geom, Epilogue::BiasRelu(&cbias), &mut cout);
+    linalg::conv2d_bwd_filter(&mut ws, &cx, &cg, &geom, Epilogue::None, &mut cdw);
+    linalg::conv2d_bwd_input(&mut ws, &cg, &cw, &geom, &mut cdx);
+    let before = allocs();
+    for _ in 0..10 {
+        linalg::conv2d(&mut ws, &cx, &cw, &geom, Epilogue::BiasRelu(&cbias), &mut cout);
+        linalg::lrp_conv_rw(&mut ws, &cx, &cg, &cw, &geom, &mut cdw);
+        linalg::conv2d_bwd_input(&mut ws, &cg, &cw, &geom, &mut cdx);
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "warm-workspace conv2d must not touch the heap (panels + dCol tile are reused)"
+    );
+
     // -- phase 2: full host-backend engine steps reach steady state --
     // Output Values must be freshly allocated each call (they are moved
     // to the caller), so the step count cannot be zero — but in steady
@@ -124,4 +150,41 @@ fn warm_workspace_gemm_is_allocation_free_and_engine_steps_reach_steady_state() 
     let train_inputs =
         bind_inputs(&art, &state, ParamSource::Fp, Some(&train_batch), &scalars).unwrap();
     steady("t_fp_train", &train_inputs, &mut scratch);
+
+    // -- phase 2b: the CNN engine paths reach the same steady state --
+    // a full conv train step (im2col forward + dW + col2im dX + Adam)
+    // must show a constant per-step allocation count once warm
+    let ceng = Engine::host_with(Manifest::synthetic_cnn(
+        "tc",
+        (8, 8),
+        3,
+        &[(4, 2), (8, 2)],
+        &[16, 3],
+        2,
+    ));
+    let cstate = ModelState::init(ceng.manifest.model("tc").unwrap(), 5);
+    let ceval = ceng.manifest.artifact("tc_eval").unwrap().clone();
+    let cnn_batch = Batch { x: vec![0.5; 2 * 8 * 8 * 3], y: vec![0, 2], batch: 2 };
+    let ceval_inputs =
+        bind_inputs(&ceval, &cstate, ParamSource::Fp, Some(&cnn_batch), &Scalars::default())
+            .unwrap();
+    let mut cscratch = Workspace::new();
+    let csteady = |name: &str, ins: &[Value], scratch: &mut Workspace| {
+        ceng.call_with(name, ins, scratch).unwrap(); // warm
+        let c0 = allocs();
+        ceng.call_with(name, ins, scratch).unwrap();
+        let c1 = allocs();
+        ceng.call_with(name, ins, scratch).unwrap();
+        let c2 = allocs();
+        assert_eq!(
+            c1 - c0,
+            c2 - c1,
+            "{name}: steady-state per-step allocation count drifted"
+        );
+    };
+    csteady("tc_eval", &ceval_inputs, &mut cscratch);
+    let ctrain = ceng.manifest.artifact("tc_fp_train").unwrap().clone();
+    let ctrain_inputs =
+        bind_inputs(&ctrain, &cstate, ParamSource::Fp, Some(&cnn_batch), &scalars).unwrap();
+    csteady("tc_fp_train", &ctrain_inputs, &mut cscratch);
 }

@@ -18,6 +18,7 @@ use ecqx::coordinator::sweep::{SweepConfig, SweepRunner};
 use ecqx::coordinator::trainer::{evaluate, Pretrainer};
 use ecqx::coordinator::{AssignConfig, Method, QatConfig};
 use ecqx::data::gsc::GscDataset;
+use ecqx::data::images::CifarDataset;
 use ecqx::data::DataLoader;
 use ecqx::metrics::WorkingPoint;
 use ecqx::nn::ModelState;
@@ -230,6 +231,69 @@ fn host_backend_trials_match_serial_bitwise() {
         let a: Vec<String> = serial.iter().map(|p| p.to_csv()).collect();
         let b: Vec<String> = par.iter().map(|p| p.to_csv()).collect();
         assert_eq!(a, b, "host rows must be bitwise identical at jobs={jobs}");
+    }
+}
+
+/// The CNN twin of the host-trial determinism gate: a lambda sweep of
+/// engine-backed QAT runs over the conv workload (im2col forward, col2im
+/// backward, conv LRP, conv weight assignment) must produce
+/// bitwise-identical rows at any job count. This is what licenses
+/// `sweep --model cnn --jobs N` — conv results are pure functions of the
+/// operand values (ascending-order accumulation, fixed col2im tiling), so
+/// worker scheduling cannot leak into them.
+#[test]
+fn cnn_host_backend_trials_match_serial_bitwise() {
+    let engine = Engine::host_with(Manifest::synthetic_cnn(
+        "cnn_tiny",
+        (32, 32),
+        3,
+        &[(4, 2), (8, 2)],
+        &[32, 10],
+        16,
+    ));
+    let spec = engine.manifest.model("cnn_tiny").unwrap().clone();
+    let train = CifarDataset::new(64, 9, true);
+    let val = CifarDataset::new(32, 9, false);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 9);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 9);
+
+    // brief pre-training so the trials quantize a non-degenerate model
+    let mut state = ModelState::init(&spec, 9);
+    let pre = Pretrainer { lr: 1e-3, verbose: false, ..Default::default() };
+    pre.run(&engine, &mut state, &train_dl, 1).unwrap();
+    let baseline = evaluate(&engine, &state, &val_dl, ParamSource::Fp).unwrap();
+
+    let runner = SweepRunner::new(&engine, state);
+    let cfg = SweepConfig {
+        model: "cnn_tiny".into(),
+        method: Method::Ecqx,
+        bits: 4,
+        lambdas: vec![0.0, 4.0],
+        p: 0.2,
+        qat: QatConfig {
+            assign: AssignConfig::default(),
+            epochs: 1,
+            lr: 4e-4,
+            lrp_warmup: 2,
+            verbose: false,
+            ..Default::default()
+        },
+        baseline_acc: baseline.accuracy,
+        seed: 23,
+    };
+    let serial = runner.run_parallel(&cfg, &train_dl, &val_dl, 1).unwrap();
+    assert_eq!(serial.len(), 2);
+    for wp in &serial {
+        // real host-executed conv results, not placeholders
+        assert!((0.0..=1.0).contains(&wp.accuracy), "{wp:?}");
+        assert!(wp.size_bytes > 0 && wp.compression_ratio > 1.0, "{wp:?}");
+        assert!((0.0..1.0).contains(&wp.sparsity), "{wp:?}");
+    }
+    for jobs in [2, 4] {
+        let par = runner.run_parallel(&cfg, &train_dl, &val_dl, jobs).unwrap();
+        let a: Vec<String> = serial.iter().map(|p| p.to_csv()).collect();
+        let b: Vec<String> = par.iter().map(|p| p.to_csv()).collect();
+        assert_eq!(a, b, "CNN host rows must be bitwise identical at jobs={jobs}");
     }
 }
 

@@ -1,0 +1,334 @@
+//! Property suite for the im2col-GEMM conv lowering: on every geometry —
+//! strided or not, SAME or VALID, 1×1 or ragged kernels, degenerate
+//! 0-sized dims — the blocked conv kernels must agree with the retained
+//! naive direct kernels (`linalg::reference`) **exactly**, the backward
+//! kernels must be true adjoints of the forward, and the epsilon-rule
+//! conv LRP must conserve relevance (mirroring
+//! `python/tests/test_lrp_properties.py`).
+//!
+//! Forward/backward comparisons use `assert_eq!`-style exact equality:
+//! the im2col path accumulates each output element in the same ascending
+//! order as the naive loops (taps for the forward, samples for dW,
+//! `(m, tap)` scatter for dX), so on finite inputs the results are equal
+//! to the last bit — the conv extension of the DESIGN.md §2.2 exactness
+//! contract (§2.3).
+
+use ecqx::linalg::{self, reference, Conv2d, Epilogue, Pad, Workspace};
+use ecqx::util::prop::{check, normal_vec};
+use ecqx::util::Rng;
+
+/// Geometry pool: tiny-to-moderate spatial dims, ragged kernels (incl.
+/// 1×1 and non-square), strides 1–3, both paddings.
+fn rand_geom(rng: &mut Rng) -> Conv2d {
+    Conv2d {
+        n: 1 + rng.below(3),
+        h: 1 + rng.below(8),
+        w: 1 + rng.below(8),
+        c: 1 + rng.below(4),
+        kh: 1 + rng.below(3),
+        kw: 1 + rng.below(3),
+        // crosses the NR=16 strip boundary now and then
+        co: 1 + rng.below(20),
+        stride: 1 + rng.below(3),
+        pad: if rng.chance(0.5) { Pad::Same } else { Pad::Valid },
+    }
+}
+
+fn eq(label: &str, got: &[f32], want: &[f32]) -> Result<(), String> {
+    if got == want {
+        Ok(())
+    } else {
+        let i = got
+            .iter()
+            .zip(want)
+            .position(|(a, b)| a != b)
+            .unwrap_or(usize::MAX);
+        Err(format!("{label}: first divergence at flat index {i}"))
+    }
+}
+
+#[test]
+fn im2col_conv_equals_naive_direct_exactly() {
+    let mut ws = Workspace::new(); // shared across cases: reuse must be inert
+    check("im2col conv ≡ naive direct", 60, |rng| {
+        let g = rand_geom(rng);
+        if g.out_len() == 0 {
+            return Ok(()); // VALID with kernel > input: covered below
+        }
+        let x = normal_vec(rng, g.in_len(), 1.0);
+        let w = normal_vec(rng, g.filter_len(), 0.5);
+        let bias = normal_vec(rng, g.co, 0.5);
+
+        let mut out = vec![0.0f32; g.out_len()];
+        linalg::conv2d(&mut ws, &x, &w, &g, Epilogue::None, &mut out);
+        let base = reference::conv2d_naive(&x, &w, &g);
+        eq(&format!("{g:?}"), &out, &base)?;
+
+        // fused bias and bias+relu equal the unfused composition
+        linalg::conv2d(&mut ws, &x, &w, &g, Epilogue::Bias(&bias), &mut out);
+        let mut want: Vec<f32> = base
+            .chunks_exact(g.co)
+            .flat_map(|row| row.iter().zip(&bias).map(|(&z, &b)| z + b))
+            .collect();
+        eq("bias", &out, &want)?;
+        linalg::conv2d(&mut ws, &x, &w, &g, Epilogue::BiasRelu(&bias), &mut out);
+        for z in want.iter_mut() {
+            if *z < 0.0 {
+                *z = 0.0;
+            }
+        }
+        eq("bias+relu", &out, &want)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn one_by_one_kernel_is_a_pointwise_gemm() {
+    // a 1×1 stride-1 conv is per-pixel matmul: SAME ≡ VALID ≡ plain GEMM
+    let mut ws = Workspace::new();
+    let (n, h, w, c, co) = (2, 5, 7, 3, 6);
+    let mut rng = Rng::new(0xC0);
+    let x = normal_vec(&mut rng, n * h * w * c, 1.0);
+    let wf = normal_vec(&mut rng, c * co, 1.0);
+    let mk = |pad| Conv2d { n, h, w, c, kh: 1, kw: 1, co, stride: 1, pad };
+    let mut same = vec![0.0f32; n * h * w * co];
+    let mut valid = vec![0.0f32; n * h * w * co];
+    linalg::conv2d(&mut ws, &x, &wf, &mk(Pad::Same), Epilogue::None, &mut same);
+    linalg::conv2d(&mut ws, &x, &wf, &mk(Pad::Valid), Epilogue::None, &mut valid);
+    assert_eq!(same, valid);
+    let mut gemm = vec![0.0f32; n * h * w * co];
+    linalg::gemm_nn(&mut ws, &x, &wf, n * h * w, c, co, Epilogue::None, &mut gemm);
+    assert_eq!(same, gemm);
+}
+
+#[test]
+fn degenerate_dims_are_well_formed() {
+    let mut ws = Workspace::new();
+    let base = Conv2d { n: 2, h: 4, w: 4, c: 2, kh: 3, kw: 3, co: 3, stride: 1, pad: Pad::Same };
+    // empty batch, empty output channels, kernel larger than a VALID input
+    for g in [
+        Conv2d { n: 0, ..base },
+        Conv2d { co: 0, ..base },
+        Conv2d { h: 2, pad: Pad::Valid, ..base },
+    ] {
+        let x = vec![0.5f32; g.in_len()];
+        let w = vec![0.25f32; g.filter_len()];
+        let mut out = vec![0.0f32; g.out_len()];
+        linalg::conv2d(&mut ws, &x, &w, &g, Epilogue::None, &mut out);
+        assert_eq!(out, reference::conv2d_naive(&x, &w, &g), "{g:?}");
+        // backward shapes stay consistent too
+        let gout = vec![0.5f32; g.out_len()];
+        let mut dw = vec![0.0f32; g.filter_len()];
+        linalg::conv2d_bwd_filter(&mut ws, &x, &gout, &g, Epilogue::None, &mut dw);
+        assert_eq!(dw, reference::conv2d_bwd_filter_naive(&x, &gout, &g), "{g:?}");
+        let mut dx = vec![f32::NAN; g.in_len()];
+        linalg::conv2d_bwd_input(&mut ws, &gout, &w, &g, &mut dx);
+        assert_eq!(dx, reference::conv2d_bwd_input_naive(&gout, &w, &g), "{g:?}");
+    }
+    // zero input channels: an empty contraction, so the epilogue of zero
+    // applies (bias-only) — the conv analogue of a k=0 dense layer
+    let g = Conv2d { c: 0, ..base };
+    let bias = [1.0f32, -1.0, 2.0];
+    let mut out = vec![f32::NAN; g.out_len()];
+    linalg::conv2d(&mut ws, &[], &[], &g, Epilogue::Bias(&bias), &mut out);
+    for row in out.chunks_exact(3) {
+        assert_eq!(row, [1.0, -1.0, 2.0]);
+    }
+}
+
+#[test]
+fn backward_kernels_equal_naive_exactly() {
+    let mut ws = Workspace::new();
+    check("conv backward ≡ naive direct", 60, |rng| {
+        let g = rand_geom(rng);
+        if g.out_len() == 0 {
+            return Ok(());
+        }
+        let x = normal_vec(rng, g.in_len(), 1.0);
+        let w = normal_vec(rng, g.filter_len(), 0.5);
+        let gout = normal_vec(rng, g.out_len(), 1.0);
+
+        let mut dw = vec![0.0f32; g.filter_len()];
+        linalg::conv2d_bwd_filter(&mut ws, &x, &gout, &g, Epilogue::None, &mut dw);
+        eq("bwd_filter", &dw, &reference::conv2d_bwd_filter_naive(&x, &gout, &g))?;
+
+        let mut dx = vec![f32::NAN; g.in_len()];
+        linalg::conv2d_bwd_input(&mut ws, &gout, &w, &g, &mut dx);
+        eq("bwd_input", &dx, &reference::conv2d_bwd_input_naive(&gout, &w, &g))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn backward_kernels_are_adjoints_of_the_forward() {
+    // ⟨conv(x, w), g⟩ = ⟨x, bwd_input(g, w)⟩ = ⟨w, bwd_filter(x, g)⟩ —
+    // the defining property of the backward pass (f64 accumulation)
+    let mut ws = Workspace::new();
+    check("conv bwd adjoint identities", 40, |rng| {
+        let g = rand_geom(rng);
+        if g.out_len() == 0 || g.in_len() == 0 || g.filter_len() == 0 {
+            return Ok(());
+        }
+        let x = normal_vec(rng, g.in_len(), 1.0);
+        let w = normal_vec(rng, g.filter_len(), 0.5);
+        let gout = normal_vec(rng, g.out_len(), 1.0);
+        let dot = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(&u, &v)| u as f64 * v as f64).sum()
+        };
+        let mut out = vec![0.0f32; g.out_len()];
+        linalg::conv2d(&mut ws, &x, &w, &g, Epilogue::None, &mut out);
+        let lhs = dot(&out, &gout);
+        let mut dx = vec![0.0f32; g.in_len()];
+        linalg::conv2d_bwd_input(&mut ws, &gout, &w, &g, &mut dx);
+        let via_x = dot(&x, &dx);
+        let mut dw = vec![0.0f32; g.filter_len()];
+        linalg::conv2d_bwd_filter(&mut ws, &x, &gout, &g, Epilogue::None, &mut dw);
+        let via_w = dot(&w, &dw);
+        let scale = lhs.abs().max(1.0);
+        if (lhs - via_x).abs() > 1e-3 * scale {
+            return Err(format!("⟨y,g⟩={lhs} vs ⟨x,dx⟩={via_x} ({g:?})"));
+        }
+        if (lhs - via_w).abs() > 1e-3 * scale {
+            return Err(format!("⟨y,g⟩={lhs} vs ⟨w,dw⟩={via_w} ({g:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gather_conv_equals_materialized_dense_with_clamping() {
+    let mut ws = Workspace::new();
+    check("conv gather ≡ materialize + dense", 40, |rng| {
+        let g = rand_geom(rng);
+        if g.out_len() == 0 {
+            return Ok(());
+        }
+        let x = normal_vec(rng, g.in_len(), 1.0);
+        let bias = normal_vec(rng, g.co, 0.5);
+        let ncb = 1 + rng.below(8);
+        let mut cb = normal_vec(rng, ncb, 0.5);
+        cb[0] = 0.0; // the paper's codebooks always carry the zero centroid
+        // ~70% zero centroid + deliberate out-of-range indices (clamp)
+        let idx: Vec<i32> = (0..g.filter_len())
+            .map(|_| {
+                if rng.chance(0.1) {
+                    if rng.chance(0.5) {
+                        -3
+                    } else {
+                        ncb as i32 + 5
+                    }
+                } else if rng.chance(0.7) {
+                    0
+                } else {
+                    rng.below(ncb) as i32
+                }
+            })
+            .collect();
+        let top = (ncb - 1) as i32;
+        let dense: Vec<f32> = idx.iter().map(|&i| cb[i.clamp(0, top) as usize]).collect();
+        let mut got = vec![0.0f32; g.out_len()];
+        linalg::conv2d_gather(&mut ws, &x, &idx, &cb, &g, Epilogue::Bias(&bias), &mut got);
+        let mut want = vec![0.0f32; g.out_len()];
+        linalg::conv2d(&mut ws, &x, &dense, &g, Epilogue::Bias(&bias), &mut want);
+        eq("gather", &got, &want)?;
+        Ok(())
+    });
+}
+
+/// Epsilon-rule stabilizer (runtime::host::stabilize semantics).
+fn stabilize(z: f32) -> f32 {
+    if z >= 0.0 {
+        z + 1e-6
+    } else {
+        z - 1e-6
+    }
+}
+
+#[test]
+fn lrp_conv_rw_conserves_relevance() {
+    // With zero bias, the epsilon rule conserves relevance through a conv
+    // layer: Σ R_w ≈ Σ R_out and Σ R_in ≈ Σ R_out (small eps absorption
+    // aside) — the conv mirror of test_dense_eps_conservation in
+    // python/tests/test_lrp_properties.py.
+    let mut ws = Workspace::new();
+    check("epsilon conv LRP conservation", 30, |rng| {
+        let g = Conv2d {
+            n: 1 + rng.below(2),
+            h: 4 + rng.below(4),
+            w: 4 + rng.below(4),
+            c: 2 + rng.below(2),
+            kh: 3,
+            kw: 3,
+            co: 3 + rng.below(3),
+            stride: 1 + rng.below(2),
+            pad: Pad::Same,
+        };
+        let a = normal_vec(rng, g.in_len(), 1.0);
+        let w = normal_vec(rng, g.filter_len(), 0.4);
+        let mut z = vec![0.0f32; g.out_len()];
+        linalg::conv2d(&mut ws, &a, &w, &g, Epilogue::None, &mut z);
+        // a pre-activation near zero makes the stabilizer dominate that
+        // unit's ratio; give those units zero relevance (their share of
+        // both sides is then exactly zero) instead of asserting through
+        // the eps spike
+        let r: Vec<f32> = z
+            .iter()
+            .map(|&zv| if zv.abs() < 1e-2 { 0.0 } else { rng.range(0.0, 1.0) })
+            .collect();
+        let s: Vec<f32> = r.iter().zip(&z).map(|(&rv, &zv)| rv / stabilize(zv)).collect();
+
+        let mut rw = vec![0.0f32; g.filter_len()];
+        linalg::lrp_conv_rw(&mut ws, &a, &s, &w, &g, &mut rw);
+        let mut rin = vec![0.0f32; g.in_len()];
+        linalg::conv2d_bwd_input(&mut ws, &s, &w, &g, &mut rin);
+        for (rv, &av) in rin.iter_mut().zip(&a) {
+            *rv *= av;
+        }
+
+        let total: f64 = r.iter().map(|&v| v as f64).sum();
+        let sum_rw: f64 = rw.iter().map(|&v| v as f64).sum();
+        let sum_rin: f64 = rin.iter().map(|&v| v as f64).sum();
+        let tol = 1e-2 * (1.0 + total.abs());
+        if (sum_rw - total).abs() > tol {
+            return Err(format!("Σ R_w = {sum_rw} vs Σ R_out = {total} ({g:?})"));
+        }
+        if (sum_rin - total).abs() > tol {
+            return Err(format!("Σ R_in = {sum_rin} vs Σ R_out = {total} ({g:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn workspace_reuse_across_conv_shapes_is_inert() {
+    // interleave wildly different conv shapes (and a dense GEMM) through
+    // ONE workspace and check each against a fresh-workspace run
+    let mut shared = Workspace::new();
+    let mut rng = Rng::new(0xC0D3);
+    for _ in 0..10 {
+        let g = rand_geom(&mut rng);
+        let x = normal_vec(&mut rng, g.in_len(), 1.0);
+        let w = normal_vec(&mut rng, g.filter_len(), 0.5);
+        let mut out_shared = vec![0.0f32; g.out_len()];
+        linalg::conv2d(&mut shared, &x, &w, &g, Epilogue::None, &mut out_shared);
+        // pollute with an unrelated dense GEMM between conv calls
+        let a = normal_vec(&mut rng, 33 * 17, 1.0);
+        let b = normal_vec(&mut rng, 17 * 29, 1.0);
+        let mut sink = vec![0.0f32; 33 * 29];
+        linalg::gemm_nn(&mut shared, &a, &b, 33, 17, 29, Epilogue::None, &mut sink);
+        let mut fresh = Workspace::new();
+        let mut out_fresh = vec![0.0f32; g.out_len()];
+        linalg::conv2d(&mut fresh, &x, &w, &g, Epilogue::None, &mut out_fresh);
+        assert_eq!(out_shared, out_fresh, "{g:?}");
+        // the tiled backward shares the same workspace including the
+        // dCol tile buffer
+        if g.out_len() > 0 {
+            let gout = normal_vec(&mut rng, g.out_len(), 1.0);
+            let mut dx_shared = vec![0.0f32; g.in_len()];
+            linalg::conv2d_bwd_input(&mut shared, &gout, &w, &g, &mut dx_shared);
+            let mut dx_fresh = vec![0.0f32; g.in_len()];
+            linalg::conv2d_bwd_input(&mut fresh, &gout, &w, &g, &mut dx_fresh);
+            assert_eq!(dx_shared, dx_fresh, "{g:?}");
+        }
+    }
+}

@@ -6,6 +6,7 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
+use ecqx::linalg::{self, Conv2d, Epilogue, Pad, Workspace};
 use ecqx::quant::assign_raw;
 use ecqx::runtime::host::{lrp_dense_rw, qdense, qdense_gather};
 use ecqx::util::prop::assert_close;
@@ -103,6 +104,97 @@ fn golden_lrp_dense_rw_matches_python_reference() {
     let dout = fx.shape("s")[1];
     let rw = lrp_dense_rw(&fx.f32s("a"), &fx.f32s("s"), &fx.f32s("w"), batch, din, dout);
     assert_close(&rw, &fx.f32s("rw"), 1e-5).unwrap();
+}
+
+/// Conv geometry from the fixture's NHWC input + HWIO filter shapes.
+fn conv_geom(fx: &Fixture, x: &str, w: &str, stride: usize, pad: Pad) -> Conv2d {
+    let xs = fx.shape(x);
+    let ws = fx.shape(w);
+    assert_eq!(xs.len(), 4, "{x} must be NHWC");
+    assert_eq!(ws.len(), 4, "{w} must be HWIO");
+    Conv2d {
+        n: xs[0],
+        h: xs[1],
+        w: xs[2],
+        c: xs[3],
+        kh: ws[0],
+        kw: ws[1],
+        co: ws[3],
+        stride,
+        pad,
+    }
+}
+
+#[test]
+fn golden_conv2d_matches_python_reference() {
+    let fx = Fixture::load("conv2d");
+    let mut ws = Workspace::new();
+    for (out_name, stride, pad) in
+        [("y_s1_same", 1, Pad::Same), ("y_s2_valid", 2, Pad::Valid)]
+    {
+        let g = conv_geom(&fx, "x", "w", stride, pad);
+        let want = fx.f32s(out_name);
+        assert_eq!(g.out_len(), want.len(), "{out_name}: fixture shape drifted");
+        let mut y = vec![0.0f32; g.out_len()];
+        let b = fx.f32s("b");
+        linalg::conv2d(&mut ws, &fx.f32s("x"), &fx.f32s("w"), &g, Epilogue::Bias(&b), &mut y);
+        assert_close(&y, &want, 1e-5).unwrap_or_else(|e| panic!("{out_name}: {e}"));
+    }
+}
+
+#[test]
+fn golden_conv2d_backward_matches_python_reference() {
+    let fx = Fixture::load("conv2d_bwd");
+    let g = conv_geom(&fx, "x", "w", 2, Pad::Same);
+    let mut ws = Workspace::new();
+    let mut dw = vec![0.0f32; g.filter_len()];
+    linalg::conv2d_bwd_filter(&mut ws, &fx.f32s("x"), &fx.f32s("g"), &g, Epilogue::None, &mut dw);
+    assert_close(&dw, &fx.f32s("dw"), 1e-5).unwrap();
+    let mut dx = vec![0.0f32; g.in_len()];
+    linalg::conv2d_bwd_input(&mut ws, &fx.f32s("g"), &fx.f32s("w"), &g, &mut dx);
+    assert_close(&dx, &fx.f32s("dx"), 1e-5).unwrap();
+}
+
+#[test]
+fn golden_lrp_conv_rw_matches_python_reference() {
+    let fx = Fixture::load("lrp_conv_rw");
+    let g = conv_geom(&fx, "a", "w", 1, Pad::Same);
+    let mut ws = Workspace::new();
+    let w = fx.f32s("w");
+    let mut rw = vec![0.0f32; g.filter_len()];
+    linalg::lrp_conv_rw(&mut ws, &fx.f32s("a"), &fx.f32s("s"), &w, &g, &mut rw);
+    assert_close(&rw, &fx.f32s("rw"), 1e-5).unwrap();
+}
+
+#[test]
+fn golden_conv2d_gather_matches_python_reference() {
+    let fx = Fixture::load("conv2d_gather");
+    let xs = fx.shape("x").to_vec();
+    let is = fx.shape("idx").to_vec();
+    let g = Conv2d {
+        n: xs[0],
+        h: xs[1],
+        w: xs[2],
+        c: xs[3],
+        kh: is[0],
+        kw: is[1],
+        co: is[3],
+        stride: 1,
+        pad: Pad::Same,
+    };
+    let mut ws = Workspace::new();
+    let b = fx.f32s("b");
+    let mut y = vec![0.0f32; g.out_len()];
+    linalg::conv2d_gather(
+        &mut ws,
+        &fx.f32s("x"),
+        &fx.i32s("idx"),
+        &fx.f32s("codebook"),
+        &g,
+        Epilogue::Bias(&b),
+        &mut y,
+    );
+    assert_close(&y, &fx.f32s("y"), 1e-5).unwrap();
 }
 
 #[test]

@@ -376,6 +376,98 @@ fn host_full_pipeline_end_to_end() {
     std::fs::remove_file(&path).ok();
 }
 
+// ---------------------------------------------------------------------------
+// host tier — conv workload (im2col lowering through the same engine)
+// ---------------------------------------------------------------------------
+
+/// Tiny conv ladder + dense head over an 8×8×3 input.
+fn cnn_engine() -> Engine {
+    let m = Manifest::synthetic_cnn("cnn_tiny", (8, 8), 3, &[(4, 2), (8, 2)], &[16, 5], 4);
+    Engine::host_with(m)
+}
+
+/// Deterministic hand-rolled NHWC batch matching the tiny CNN's x slot.
+fn cnn_batch(spec: &ModelSpec, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let dim = spec.input_dim;
+    let x: Vec<f32> = (0..spec.batch * dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..spec.batch).map(|_| rng.below(spec.classes) as i32).collect();
+    Batch { x, y, batch: spec.batch }
+}
+
+#[test]
+fn host_cnn_train_steps_are_identity_at_zero_lr() {
+    let eng = cnn_engine();
+    let spec = eng.manifest.model("cnn_tiny").unwrap().clone();
+    let mut state = ModelState::init(&spec, 31);
+    quantize_state(&mut state, 4, 0.0);
+    let batch = cnn_batch(&spec, 7);
+    let scalars = Scalars { t: 1.0, lr: 0.0, gs: 1.0, ..Default::default() };
+    for art_name in ["cnn_tiny_fp_train", "cnn_tiny_ste_train"] {
+        let art = eng.manifest.artifact(art_name).unwrap().clone();
+        let inputs =
+            bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &scalars).unwrap();
+        let outs = eng.call_named(&art.name, &inputs).unwrap();
+        for name in state.pnames() {
+            let before = &state.params[&name];
+            let after = outs[&format!("p_{name}")].as_f32();
+            for (a, b) in before.data.iter().zip(after.data.iter()) {
+                assert_eq!(a, b, "{art_name} changed {name} at lr=0");
+            }
+        }
+        assert!(outs["loss"].as_f32().as_scalar() > 0.0);
+    }
+}
+
+#[test]
+fn host_cnn_gather_eval_matches_dense_eval() {
+    let eng = cnn_engine();
+    let spec = eng.manifest.model("cnn_tiny").unwrap().clone();
+    let mut state = ModelState::init(&spec, 33);
+    quantize_state(&mut state, 4, 1e-4);
+    let batch = cnn_batch(&spec, 11);
+    let scalars = Scalars::default();
+
+    let art_f = eng.manifest.artifact("cnn_tiny_eval").unwrap().clone();
+    let inp_f =
+        bind_inputs(&art_f, &state, ParamSource::Quantized, Some(&batch), &scalars).unwrap();
+    let out_f = eng.call_named(&art_f.name, &inp_f).unwrap();
+
+    let art_q = eng.manifest.artifact("cnn_tiny_eval_q").unwrap().clone();
+    let inp_q =
+        bind_inputs(&art_q, &state, ParamSource::Quantized, Some(&batch), &scalars).unwrap();
+    let out_q = eng.call_named(&art_q.name, &inp_q).unwrap();
+
+    let lf = out_f["loss"].as_f32().as_scalar();
+    let lq = out_q["loss"].as_f32().as_scalar();
+    assert!((lf - lq).abs() < 1e-4, "loss {lf} vs {lq}");
+    assert_eq!(
+        out_f["correct"].as_f32().as_scalar(),
+        out_q["correct"].as_f32().as_scalar()
+    );
+}
+
+#[test]
+fn host_cnn_lrp_emits_finite_per_layer_relevances() {
+    // the conv LRP path must emit one well-formed, nonzero relevance
+    // tensor per quantized layer (shape-checked by the engine against the
+    // manifest); the conservation *property* lives in tests/conv_props.rs
+    let eng = cnn_engine();
+    let spec = eng.manifest.model("cnn_tiny").unwrap().clone();
+    let state = ModelState::init(&spec, 35);
+    let batch = cnn_batch(&spec, 13);
+    let art = eng.manifest.artifact("cnn_tiny_lrp").unwrap().clone();
+    let scalars = Scalars { eqw: 1.0, ..Default::default() };
+    let inputs = bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &scalars).unwrap();
+    let outs = eng.call_named(&art.name, &inputs).unwrap();
+    for name in ["r_c0", "r_c1", "r_w0", "r_w1"] {
+        let rw = outs[name].as_f32();
+        assert!(rw.data.iter().all(|v| v.is_finite()), "{name} not finite");
+        assert!(rw.data.iter().any(|&v| v != 0.0), "{name} all-zero");
+    }
+    assert_eq!(outs["r_c0"].shape(), &[3, 3, 3, 4]);
+}
+
 #[test]
 fn host_evaluate_many_fans_out_and_matches_serial() {
     let eng = host_engine();
