@@ -232,11 +232,12 @@ fn main() -> anyhow::Result<()> {
     println!("    -> {}", throughput(&res, levels.len()));
     log.push("cabac_encode", &[nlev], &res, None);
     let res = bench("cabac decode levels", it(1), it(10), || {
-        deepcabac::decode_levels(&enc, levels.len())
+        deepcabac::decode_levels(&enc, levels.len()).unwrap()
     });
     println!("    -> {}", throughput(&res, levels.len()));
     log.push("cabac_decode", &[nlev], &res, None);
-    let res = bench("huffman encode levels", it(1), it(10), || huffman::encode(&levels));
+    let res =
+        bench("huffman encode levels", it(1), it(10), || huffman::encode(&levels).unwrap());
     println!("    -> {}", throughput(&res, levels.len()));
     log.push("huffman_encode", &[nlev], &res, None);
 

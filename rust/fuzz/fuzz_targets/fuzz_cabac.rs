@@ -1,0 +1,19 @@
+//! Totality of the raw range-coder primitives under the DeepCABAC bit
+//! patterns: adaptive contexts, bypass bits, and the bounded exp-golomb
+//! bypass (the one fallible primitive — it must Err, not spin, on
+//! zero-extended tails).
+
+#![no_main]
+
+use ecqx::codec::cabac::{BinDecoder, BinProb};
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let mut dec = BinDecoder::new(data);
+    let mut ctx = BinProb::default();
+    for _ in 0..512 {
+        let _ = dec.decode(&mut ctx);
+        let _ = dec.decode_bypass();
+    }
+    let _ = dec.decode_exp_golomb_bypass(32);
+});

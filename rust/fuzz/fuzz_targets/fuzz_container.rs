@@ -1,0 +1,23 @@
+//! Totality of the chunked tensor container decoder: bit width and
+//! element count are taken from the input head so corrupt metadata
+//! (absurd shapes, off-grid bit widths) and corrupt chunk framing are
+//! explored together.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    if data.len() < 3 {
+        return;
+    }
+    let bits = (data[0] % 20) as u32;
+    let n = u16::from_le_bytes([data[1], data[2]]) as usize;
+    let enc = ecqx::codec::EncodedTensor {
+        shape: vec![n],
+        step: 0.02,
+        bits,
+        payload: data[3..].to_vec(),
+    };
+    let _ = ecqx::codec::decode_tensor(&enc);
+});

@@ -1,0 +1,18 @@
+//! Totality of the DeepCABAC level decoder: the element count is read
+//! from the input head so corrupt counts (including absurd ones) are
+//! explored alongside corrupt payloads.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let n = if data.len() >= 2 {
+        u16::from_le_bytes([data[0], data[1]]) as usize
+    } else {
+        64
+    };
+    let _ = ecqx::codec::deepcabac::decode_levels(data, n);
+    // the count ceiling must reject without allocating
+    let _ = ecqx::codec::deepcabac::decode_levels(data, usize::MAX);
+});

@@ -1,0 +1,11 @@
+//! Totality of the zlib/DEFLATE inflater: header checks, stored and
+//! fixed-Huffman blocks, match copies, Adler-32 — all must reject
+//! corruption with CodecError, never panic or over-allocate.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let _ = ecqx::codec::deflate::decompress(data);
+});

@@ -1,0 +1,10 @@
+//! Totality of the canonical Huffman decoder: any byte sequence must
+//! yield Ok or CodecError — no panics, no unbounded allocation.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let _ = ecqx::codec::huffman::decode(data);
+});

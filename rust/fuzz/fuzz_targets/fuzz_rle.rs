@@ -1,0 +1,14 @@
+//! Totality of the RLE decoder: the bit width comes from the input head
+//! (spanning valid and invalid widths), the rest is the stream.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    if data.is_empty() {
+        return;
+    }
+    let bits = (data[0] % 20) as u32;
+    let _ = ecqx::codec::sparse::rle_decode(&data[1..], bits);
+});

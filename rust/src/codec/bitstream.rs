@@ -1,4 +1,12 @@
 //! Bit-level I/O for the entropy coders.
+//!
+//! The reader is *fallible*: every read past the end of the buffer is an
+//! [`CodecError::UnexpectedEof`], never a silent zero-pad. Encoders pad
+//! only within the final byte, so a well-formed decode never consumes a
+//! bit beyond `buf.len() * 8` — any overrun is proof of corruption and
+//! surfaces as an error at the exact bit offset.
+
+use super::error::{CodecError, CodecResult};
 
 /// MSB-first bit writer.
 #[derive(Default)]
@@ -53,7 +61,7 @@ impl BitWriter {
     }
 }
 
-/// MSB-first bit reader.
+/// MSB-first fallible bit reader.
 pub struct BitReader<'a> {
     buf: &'a [u8],
     pos: usize, // bit position
@@ -64,34 +72,47 @@ impl<'a> BitReader<'a> {
         BitReader { buf, pos: 0 }
     }
 
-    pub fn get_bit(&mut self) -> bool {
+    /// Current bit offset into the buffer.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bits left before the reader runs off the end of the buffer.
+    pub fn remaining_bits(&self) -> usize {
+        (self.buf.len() * 8).saturating_sub(self.pos)
+    }
+
+    pub fn get_bit(&mut self) -> CodecResult<bool> {
         let byte = self.pos / 8;
+        if byte >= self.buf.len() {
+            return Err(CodecError::UnexpectedEof { at_bit: self.pos });
+        }
         let off = 7 - (self.pos % 8);
         self.pos += 1;
-        if byte >= self.buf.len() {
-            return false; // zero-padded tail
-        }
-        (self.buf[byte] >> off) & 1 == 1
+        Ok((self.buf[byte] >> off) & 1 == 1)
     }
 
-    pub fn get_bits(&mut self, n: u32) -> u64 {
+    pub fn get_bits(&mut self, n: u32) -> CodecResult<u64> {
         let mut v = 0u64;
         for _ in 0..n {
-            v = (v << 1) | self.get_bit() as u64;
+            v = (v << 1) | self.get_bit()? as u64;
         }
-        v
+        Ok(v)
     }
 
-    pub fn get_exp_golomb(&mut self) -> u64 {
+    /// Order-0 Exp-Golomb decode. A zero-run longer than 63 bits cannot
+    /// come from [`BitWriter::put_exp_golomb`] and is rejected as a
+    /// corrupt prefix instead of overflowing the shift below.
+    pub fn get_exp_golomb(&mut self) -> CodecResult<u64> {
         let mut zeros = 0u32;
-        while !self.get_bit() {
+        while !self.get_bit()? {
             zeros += 1;
             if zeros > 63 {
-                return 0;
+                return Err(CodecError::CorruptPrefix { at_bit: self.pos });
             }
         }
-        let rest = self.get_bits(zeros);
-        ((1u64 << zeros) | rest) - 1
+        let rest = self.get_bits(zeros)?;
+        Ok(((1u64 << zeros) | rest) - 1)
     }
 }
 
@@ -107,9 +128,9 @@ mod tests {
         w.put_bit(true);
         let bytes = w.finish();
         let mut r = BitReader::new(&bytes);
-        assert_eq!(r.get_bits(4), 0b1011);
-        assert_eq!(r.get_bits(16), 0xDEAD);
-        assert!(r.get_bit());
+        assert_eq!(r.get_bits(4).unwrap(), 0b1011);
+        assert_eq!(r.get_bits(16).unwrap(), 0xDEAD);
+        assert!(r.get_bit().unwrap());
     }
 
     #[test]
@@ -122,7 +143,7 @@ mod tests {
         let bytes = w.finish();
         let mut r = BitReader::new(&bytes);
         for &v in &vals {
-            assert_eq!(r.get_exp_golomb(), v);
+            assert_eq!(r.get_exp_golomb().unwrap(), v);
         }
     }
 
@@ -132,5 +153,35 @@ mod tests {
         w.put_bits(0, 13);
         assert_eq!(w.bit_len(), 13);
         assert_eq!(w.finish().len(), 2);
+    }
+
+    #[test]
+    fn read_past_end_is_eof_not_zero() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert_eq!(r.get_bits(8).unwrap(), 0xFF);
+        assert_eq!(r.remaining_bits(), 0);
+        assert_eq!(r.get_bit(), Err(CodecError::UnexpectedEof { at_bit: 8 }));
+        // an empty buffer fails immediately
+        let mut r = BitReader::new(&[]);
+        assert!(r.get_bit().is_err());
+        assert!(r.get_bits(3).is_err());
+        assert!(r.get_exp_golomb().is_err());
+    }
+
+    #[test]
+    fn all_zero_prefix_is_corrupt_not_infinite() {
+        // 9 bytes of zeros: 72 zero bits, no terminating 1 — the exp-golomb
+        // prefix walk must reject after 64 zeros, not loop or shift-overflow
+        let err = BitReader::new(&[0u8; 9]).get_exp_golomb().unwrap_err();
+        assert!(matches!(err, CodecError::CorruptPrefix { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn remaining_bits_tracks_position() {
+        let mut r = BitReader::new(&[0xAB, 0xCD]);
+        assert_eq!(r.remaining_bits(), 16);
+        r.get_bits(5).unwrap();
+        assert_eq!(r.remaining_bits(), 11);
+        assert_eq!(r.bit_pos(), 5);
     }
 }

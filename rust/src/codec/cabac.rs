@@ -1,6 +1,19 @@
 //! Context-adaptive binary arithmetic coder (LZMA-style range coder with
 //! 11-bit adaptive probabilities) — the engine of the DeepCABAC-style
 //! weight codec.
+//!
+//! Robustness contract: the per-bit decode primitives are *total* — any
+//! byte sequence yields some bit sequence (a range coder cannot detect
+//! corruption at the bit level), so they stay infallible and corrupt
+//! streams are rejected one layer up, at the binarization
+//! ([`crate::codec::deepcabac`]) and container ([`crate::codec`]) layers.
+//! The one place a raw CABAC read can diverge — an unbounded zero-run in
+//! an Exp-Golomb bypass prefix — is fallible here:
+//! [`BinDecoder::decode_exp_golomb_bypass`] bounds the prefix walk and
+//! returns [`CodecError::CorruptPrefix`] instead of spinning on an
+//! exhausted buffer.
+
+use super::error::{CodecError, CodecResult};
 
 const PROB_BITS: u32 = 11;
 const PROB_INIT: u16 = 1 << (PROB_BITS - 1); // 1024 == p(0) = 0.5
@@ -105,6 +118,17 @@ impl BinEncoder {
         }
     }
 
+    /// Bypass-coded order-0 Exp-Golomb (the DeepCABAC remainder
+    /// binarization). Inverse: [`BinDecoder::decode_exp_golomb_bypass`].
+    pub fn encode_exp_golomb_bypass(&mut self, v: u64) {
+        let x = v + 1;
+        let nbits = 64 - x.leading_zeros();
+        for _ in 0..nbits - 1 {
+            self.encode_bypass(false);
+        }
+        self.encode_bypass_bits(x, nbits);
+    }
+
     pub fn finish(mut self) -> Vec<u8> {
         for _ in 0..5 {
             self.shift_low();
@@ -178,6 +202,27 @@ impl<'a> BinDecoder<'a> {
         }
         v
     }
+
+    /// Fallible inverse of [`BinEncoder::encode_exp_golomb_bypass`].
+    ///
+    /// A well-formed prefix has at most `max_prefix` zeros (the encoder
+    /// emits `nbits - 1 <= 63`; callers pass the bound their value range
+    /// implies, e.g. 32 for an `i32` remainder). A longer run can only
+    /// come from a corrupt or exhausted stream — on a zeroed tail the raw
+    /// bypass read yields `false` forever, so without this bound the loop
+    /// would never terminate in release builds.
+    pub fn decode_exp_golomb_bypass(&mut self, max_prefix: u32) -> CodecResult<u64> {
+        debug_assert!(max_prefix < 64);
+        let mut zeros = 0u32;
+        while !self.decode_bypass() {
+            zeros += 1;
+            if zeros > max_prefix {
+                return Err(CodecError::CorruptPrefix { at_bit: self.pos * 8 });
+            }
+        }
+        let rest = self.decode_bypass_bits(zeros);
+        Ok(((1u64 << zeros) | rest) - 1)
+    }
 }
 
 #[cfg(test)]
@@ -240,6 +285,29 @@ mod tests {
         for &v in &vals {
             assert_eq!(dec.decode_bypass_bits(16), v);
         }
+    }
+
+    #[test]
+    fn exp_golomb_bypass_roundtrip() {
+        let vals = [0u64, 1, 2, 3, 7, 100, 65_535, (1 << 31) - 1];
+        let mut enc = BinEncoder::new();
+        for &v in &vals {
+            enc.encode_exp_golomb_bypass(v);
+        }
+        let bytes = enc.finish();
+        let mut dec = BinDecoder::new(&bytes);
+        for &v in &vals {
+            assert_eq!(dec.decode_exp_golomb_bypass(32).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn exp_golomb_bypass_bounds_zero_runs() {
+        // a stream whose bypass bits are all zeros must be rejected by the
+        // prefix bound, not spin forever on the zero-extended tail
+        let mut dec = BinDecoder::new(&[0u8; 16]);
+        let err = dec.decode_exp_golomb_bypass(32).unwrap_err();
+        assert!(matches!(err, CodecError::CorruptPrefix { .. }), "{err:?}");
     }
 
     #[test]

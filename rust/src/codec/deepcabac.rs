@@ -8,9 +8,17 @@
 //!   * abs > 1, abs > 2, abs > 3 — per-position adaptive contexts,
 //!   * remainder (abs - 4)       — order-0 Exp-Golomb in bypass mode.
 //!
-//! Fully lossless: `decode_levels(encode_levels(x)).unwrap() == x`.
+//! Fully lossless: `decode_levels(&encode_levels(x), x.len()).unwrap() == x`.
+//!
+//! Decoding is fallible and total: the range-coder primitives always
+//! yield bits, so corruption is detected at this binarization layer —
+//! bounded remainder prefixes ([`CodecError::CorruptPrefix`]), magnitude
+//! caps ([`CodecError::ValueOverflow`]) and an element-count ceiling
+//! ([`crate::codec::MAX_DECODE_ELEMS`]) keep hostile streams from
+//! panicking, spinning, or allocating unboundedly.
 
 use super::cabac::{BinDecoder, BinEncoder, BinProb};
+use super::error::{CodecError, CodecResult};
 
 /// Context bank for one tensor.
 #[derive(Default)]
@@ -45,20 +53,26 @@ pub fn encode_levels(levels: &[i32]) -> Vec<u8> {
         }
         if coded == 4 && abs >= 4 {
             // Exp-Golomb order-0 remainder in bypass mode.
-            let v = (abs - 4) as u64;
-            let x = v + 1;
-            let nbits = 64 - x.leading_zeros();
-            for _ in 0..nbits - 1 {
-                enc.encode_bypass(false);
-            }
-            enc.encode_bypass_bits(x, nbits);
+            enc.encode_exp_golomb_bypass((abs - 4) as u64);
         }
     }
     enc.finish()
 }
 
 /// Decode `n` integer weight levels from a CABAC bitstream.
-pub fn decode_levels(buf: &[u8], n: usize) -> Vec<i32> {
+///
+/// `n` is the caller's element count (the CABAC stream is headerless);
+/// container layers validate it against their framing first, and it is
+/// re-checked here against [`crate::codec::MAX_DECODE_ELEMS`] so no call
+/// path can turn a corrupt count into an unbounded allocation.
+pub fn decode_levels(buf: &[u8], n: usize) -> CodecResult<Vec<i32>> {
+    if n > super::MAX_DECODE_ELEMS {
+        return Err(CodecError::LengthOverflow {
+            field: "level count",
+            claimed: n as u64,
+            max: super::MAX_DECODE_ELEMS as u64,
+        });
+    }
     let mut dec = BinDecoder::new(buf);
     let mut ctx = Contexts::default();
     let mut prev_sig = 0usize;
@@ -71,28 +85,29 @@ pub fn decode_levels(buf: &[u8], n: usize) -> Vec<i32> {
             continue;
         }
         let neg = dec.decode(&mut ctx.sign);
-        let mut abs = 1u32;
+        let mut abs = 1u64;
         for (i, c) in ctx.gt.iter_mut().enumerate() {
             if dec.decode(c) {
-                abs = i as u32 + 2;
+                abs = i as u64 + 2;
             } else {
                 break;
             }
         }
         if abs == 4 {
-            // matches the encoder: abs >= 4 carries a remainder
-            let mut zeros = 0u32;
-            while !dec.decode_bypass() {
-                zeros += 1;
-                debug_assert!(zeros < 64);
-            }
-            let rest = dec.decode_bypass_bits(zeros);
-            let v = ((1u64 << zeros) | rest) - 1;
-            abs = 4 + v as u32;
+            // matches the encoder: abs >= 4 carries a remainder whose
+            // prefix is bounded (a valid i32 magnitude needs <= 32 zeros)
+            abs = 4 + dec.decode_exp_golomb_bypass(32)?;
+        }
+        // the encoder only ever emits |level| <= i32::MAX; anything above
+        // is corruption, and signed conversion below must not wrap
+        if abs > i32::MAX as u64 {
+            return Err(CodecError::ValueOverflow {
+                detail: "level magnitude exceeds i32::MAX",
+            });
         }
         out.push(if neg { -(abs as i32) } else { abs as i32 });
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -102,7 +117,7 @@ mod tests {
 
     fn roundtrip(levels: &[i32]) -> usize {
         let bytes = encode_levels(levels);
-        let dec = decode_levels(&bytes, levels.len());
+        let dec = decode_levels(&bytes, levels.len()).unwrap();
         assert_eq!(dec, levels);
         bytes.len()
     }
@@ -142,7 +157,36 @@ mod tests {
 
     #[test]
     fn roundtrip_empty() {
-        assert_eq!(decode_levels(&encode_levels(&[]), 0), Vec::<i32>::new());
+        assert_eq!(decode_levels(&encode_levels(&[]), 0).unwrap(), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn oversized_count_rejected_before_allocation() {
+        // a corrupt container could claim astronomically many levels for a
+        // tiny stream; the ceiling must reject it without allocating
+        let bytes = encode_levels(&[1, -1, 0]);
+        let err = decode_levels(&bytes, usize::MAX).unwrap_err();
+        assert!(matches!(err, CodecError::LengthOverflow { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn random_buffers_decode_totally() {
+        // decode over noise must terminate with Ok or Err — bounded
+        // remainder prefixes keep zero-extended tails from spinning
+        crate::util::prop::check("deepcabac total on noise", 25, |rng| {
+            let len = rng.below(256);
+            let buf: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let n = rng.below(4096);
+            match decode_levels(&buf, n) {
+                Ok(out) => {
+                    if out.len() != n {
+                        return Err(format!("decoded {} of {n} levels", out.len()));
+                    }
+                }
+                Err(_) => {}
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -181,7 +225,7 @@ mod tests {
                 })
                 .collect();
             let bytes = encode_levels(&levels);
-            if decode_levels(&bytes, n) != levels {
+            if decode_levels(&bytes, n).unwrap() != levels {
                 return Err("roundtrip mismatch".into());
             }
             Ok(())

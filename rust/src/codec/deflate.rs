@@ -1,13 +1,23 @@
-//! Minimal zlib/DEFLATE encoder — the offline stand-in for `flate2`
+//! Minimal zlib/DEFLATE codec — the offline stand-in for `flate2`
 //! (general-purpose baseline in the codec comparison; see the DESIGN.md
 //! substitution table).
 //!
-//! Emits RFC 1950/1951-conformant output: a zlib header, one final
-//! fixed-Huffman DEFLATE block, and the Adler-32 trailer. Matching is
-//! deliberately simple — distance-1 run matches only (the dominant
+//! [`compress`] emits RFC 1950/1951-conformant output: a zlib header, one
+//! final fixed-Huffman DEFLATE block, and the Adler-32 trailer. Matching
+//! is deliberately simple — distance-1 run matches only (the dominant
 //! structure of sparse quantized weight tensors is zero runs) — so this
 //! is a *size baseline*, not a competitive compressor; CABAC/Huffman must
 //! beat it on the paper's sources and the comparison stays honest.
+//!
+//! [`decompress`] is the fallible inverse: it inflates stored and
+//! fixed-Huffman blocks (any match distance, not just 1), verifies the
+//! Adler-32 trailer, and rejects malformed input with [`CodecError`]
+//! instead of panicking. Output allocation is structurally bounded: every
+//! emitted byte consumes stream bits (a literal >= 7 bits, a match of
+//! <= 258 bytes >= 12 bits), so a `len`-byte input can never inflate past
+//! ~172x `len` and no header field is trusted for a pre-allocation.
+
+use super::error::{CodecError, CodecResult};
 
 /// LSB-first bit writer (DEFLATE bit order: codes MSB-first, everything
 /// else LSB-first, bytes filled from the low bit).
@@ -156,6 +166,208 @@ pub fn compress(bytes: &[u8]) -> Vec<u8> {
     out
 }
 
+/// Fixed distance code table: (extra_bits, base_distance) per RFC 1951.
+const DIST_CODES: [(u32, u32); 30] = [
+    (0, 1),
+    (0, 2),
+    (0, 3),
+    (0, 4),
+    (1, 5),
+    (1, 7),
+    (2, 9),
+    (2, 13),
+    (3, 17),
+    (3, 25),
+    (4, 33),
+    (4, 49),
+    (5, 65),
+    (5, 97),
+    (6, 129),
+    (6, 193),
+    (7, 257),
+    (7, 385),
+    (8, 513),
+    (8, 769),
+    (9, 1025),
+    (9, 1537),
+    (10, 2049),
+    (10, 3073),
+    (11, 4097),
+    (11, 6145),
+    (12, 8193),
+    (12, 12289),
+    (13, 16385),
+    (13, 24577),
+];
+
+/// LSB-first fallible bit reader (DEFLATE bit order).
+struct LsbReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> LsbReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        LsbReader { buf, pos: 0 }
+    }
+
+    fn get_bit(&mut self) -> CodecResult<u32> {
+        let byte = self.pos / 8;
+        if byte >= self.buf.len() {
+            return Err(CodecError::UnexpectedEof { at_bit: self.pos });
+        }
+        let bit = (self.buf[byte] >> (self.pos % 8)) & 1;
+        self.pos += 1;
+        Ok(bit as u32)
+    }
+
+    /// Read `n <= 32` bits, LSB-first (extra bits, headers).
+    fn get(&mut self, n: u32) -> CodecResult<u32> {
+        let mut v = 0u32;
+        for i in 0..n {
+            v |= self.get_bit()? << i;
+        }
+        Ok(v)
+    }
+
+    /// Discard padding up to the next byte boundary (stored blocks,
+    /// trailer).
+    fn align_byte(&mut self) {
+        self.pos = self.pos.div_ceil(8) * 8;
+    }
+
+    fn byte_pos(&self) -> usize {
+        self.pos / 8
+    }
+}
+
+/// Decode one fixed-Huffman literal/length symbol (inverse of
+/// [`put_litlen`]): codes are read MSB-first and resolved at lengths
+/// 7, 8 and 9 per RFC 1951 §3.2.6.
+fn get_litlen(r: &mut LsbReader) -> CodecResult<u32> {
+    let mut code = 0u32;
+    for _ in 0..7 {
+        code = (code << 1) | r.get_bit()?;
+    }
+    if code <= 0x17 {
+        return Ok(256 + code);
+    }
+    code = (code << 1) | r.get_bit()?;
+    if (0x30..=0xBF).contains(&code) {
+        return Ok(code - 0x30);
+    }
+    if (0xC0..=0xC7).contains(&code) {
+        return Ok(280 + (code - 0xC0));
+    }
+    code = (code << 1) | r.get_bit()?;
+    if (0x190..=0x1FF).contains(&code) {
+        return Ok(144 + (code - 0x190));
+    }
+    Err(CodecError::CorruptPrefix { at_bit: r.pos })
+}
+
+/// Inflate a zlib stream produced by [`compress`] (or any stored /
+/// fixed-Huffman zlib stream) and verify its Adler-32 trailer.
+pub fn decompress(buf: &[u8]) -> CodecResult<Vec<u8>> {
+    if buf.len() < 2 {
+        return Err(CodecError::Malformed { detail: "zlib header truncated" });
+    }
+    let (cmf, flg) = (buf[0] as u32, buf[1] as u32);
+    if cmf & 0x0F != 8 {
+        return Err(CodecError::Unsupported { detail: "zlib CM != 8 (not deflate)" });
+    }
+    if (cmf * 256 + flg) % 31 != 0 {
+        return Err(CodecError::Malformed { detail: "zlib header check bits" });
+    }
+    if flg & 0x20 != 0 {
+        return Err(CodecError::Unsupported { detail: "zlib preset dictionary" });
+    }
+    let body = &buf[2..];
+    let mut r = LsbReader::new(body);
+    let mut out = Vec::new();
+    loop {
+        let bfinal = r.get(1)?;
+        match r.get(2)? {
+            0 => {
+                // stored block: LEN/NLEN are a 1's-complement pair and LEN
+                // is checked against the remaining bytes before any copy
+                r.align_byte();
+                let len = r.get(16)? as usize;
+                let nlen = r.get(16)? as usize;
+                if len != !nlen & 0xFFFF {
+                    return Err(CodecError::Malformed { detail: "stored LEN != !NLEN" });
+                }
+                let start = r.byte_pos();
+                if start + len > body.len() {
+                    return Err(CodecError::UnexpectedEof { at_bit: r.pos });
+                }
+                out.extend_from_slice(&body[start..start + len]);
+                r.pos = (start + len) * 8;
+            }
+            1 => loop {
+                let sym = get_litlen(&mut r)?;
+                if sym < 256 {
+                    out.push(sym as u8);
+                    continue;
+                }
+                if sym == 256 {
+                    break; // end of block
+                }
+                if sym > 285 {
+                    return Err(CodecError::Malformed { detail: "invalid length code" });
+                }
+                let (_, extra, base) = LEN_CODES[(sym - 257) as usize];
+                let len = (base + r.get(extra)?) as usize;
+                let mut dcode = 0u32;
+                for _ in 0..5 {
+                    dcode = (dcode << 1) | r.get_bit()?;
+                }
+                if dcode >= 30 {
+                    return Err(CodecError::Malformed { detail: "invalid distance code" });
+                }
+                let (dextra, dbase) = DIST_CODES[dcode as usize];
+                let dist = (dbase + r.get(dextra)?) as usize;
+                if dist > out.len() {
+                    return Err(CodecError::Malformed {
+                        detail: "match distance beyond produced output",
+                    });
+                }
+                // byte-by-byte copy: overlapping matches (dist < len)
+                // replicate the run, exactly as LZ77 defines
+                for _ in 0..len {
+                    let b = out[out.len() - dist];
+                    out.push(b);
+                }
+            },
+            2 => {
+                return Err(CodecError::Unsupported {
+                    detail: "dynamic Huffman block (encoder never emits one)",
+                })
+            }
+            _ => return Err(CodecError::Malformed { detail: "reserved block type 11" }),
+        }
+        if bfinal == 1 {
+            break;
+        }
+    }
+    r.align_byte();
+    let start = r.byte_pos();
+    if start + 4 > body.len() {
+        return Err(CodecError::Malformed { detail: "Adler-32 trailer truncated" });
+    }
+    let stored = u32::from_be_bytes([
+        body[start],
+        body[start + 1],
+        body[start + 2],
+        body[start + 3],
+    ]);
+    let computed = adler32(&out);
+    if stored != computed {
+        return Err(CodecError::ChecksumMismatch { stored, computed });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +411,62 @@ mod tests {
         let sparse = compress(&mk(0.95, &mut rng)).len();
         let dense = compress(&mk(0.30, &mut rng)).len();
         assert!(sparse < dense, "sparse={sparse} dense={dense}");
+    }
+
+    #[test]
+    fn decompress_roundtrips() {
+        for data in [
+            Vec::new(),
+            b"hello".to_vec(),
+            vec![0u8; 4096],
+            b"abcabcabcabc".to_vec(),
+        ] {
+            assert_eq!(decompress(&compress(&data)).unwrap(), data, "{} bytes", data.len());
+        }
+        let mut rng = Rng::new(21);
+        for n in [1usize, 63, 1024, 16384] {
+            let mix: Vec<u8> = (0..n)
+                .map(|_| if rng.chance(0.7) { 0u8 } else { (rng.next_u64() & 0xFF) as u8 })
+                .collect();
+            assert_eq!(decompress(&compress(&mix)).unwrap(), mix);
+        }
+    }
+
+    #[test]
+    fn decompress_rejects_corrupt_header() {
+        assert!(matches!(
+            decompress(&[]),
+            Err(CodecError::Malformed { .. })
+        ));
+        // CM != 8
+        assert!(matches!(
+            decompress(&[0x79, 0x9C, 0, 0]),
+            Err(CodecError::Unsupported { .. } | CodecError::Malformed { .. })
+        ));
+        // broken FCHECK
+        assert!(matches!(
+            decompress(&[0x78, 0x9D, 0, 0]),
+            Err(CodecError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn decompress_rejects_bad_checksum() {
+        let mut bytes = compress(b"checksummed payload");
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        let err = decompress(&bytes).unwrap_err();
+        assert!(matches!(err, CodecError::ChecksumMismatch { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn decompress_rejects_truncation_everywhere() {
+        let bytes = compress(b"some payload with a zero run \0\0\0\0\0\0\0\0 inside");
+        for cut in 0..bytes.len() {
+            let res = decompress(&bytes[..cut]);
+            assert!(res.is_err(), "truncation at {cut} must fail, got {res:?}");
+        }
+        assert!(decompress(&bytes).is_ok());
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! The `CodecError` taxonomy of the fallible decode surface (DESIGN.md
+//! §2.4).
+//!
+//! Every decoder in [`crate::codec`] is *total*: any byte sequence — a
+//! truncation, a bit flip, or pure noise — yields `Ok` or one of these
+//! variants. No panics, no unwinding, and no allocation proportional to a
+//! corrupt length field (the allocation-bounding rule: every in-stream
+//! length/count is validated against a bound derived from the remaining
+//! payload, or against [`crate::codec::MAX_DECODE_ELEMS`] when the coder
+//! is sub-linear and no payload bound exists).
+
+use std::fmt;
+
+/// Why a bitstream or container was rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// The stream ended while more payload bits were required.
+    UnexpectedEof {
+        /// Bit offset at which the read ran past the buffer.
+        at_bit: usize,
+    },
+    /// A decoded length/count field exceeds what the payload could
+    /// possibly back — rejected *before* any allocation.
+    LengthOverflow {
+        /// Which header field made the claim.
+        field: &'static str,
+        /// The claimed count (saturated to `u64::MAX` on overflow).
+        claimed: u64,
+        /// The payload-derived (or policy) bound it violated.
+        max: u64,
+    },
+    /// A prefix-code walk left the valid code space (corrupt prefix).
+    CorruptPrefix {
+        /// Approximate bit offset of the failed walk.
+        at_bit: usize,
+    },
+    /// A Huffman code table violating the Kraft inequality or carrying a
+    /// zero/overlong code length.
+    InvalidTable {
+        /// What was wrong with the table.
+        detail: &'static str,
+    },
+    /// Encoding met a symbol outside the code table's alphabet.
+    UnknownSymbol {
+        /// The out-of-alphabet level.
+        symbol: i32,
+    },
+    /// A decoded value is outside the representable/plausible range.
+    ValueOverflow {
+        /// Which value overflowed and its bound.
+        detail: &'static str,
+    },
+    /// Container-level framing violation (magic, section or chunk
+    /// structure).
+    Malformed {
+        /// What the framing check found.
+        detail: &'static str,
+    },
+    /// A stored checksum does not match the decoded payload.
+    ChecksumMismatch {
+        /// Checksum carried by the stream.
+        stored: u32,
+        /// Checksum recomputed over the decoded payload.
+        computed: u32,
+    },
+    /// Structurally valid but intentionally unsupported (e.g. dynamic
+    /// Huffman blocks in the deflate stand-in).
+    Unsupported {
+        /// The unsupported feature.
+        detail: &'static str,
+    },
+}
+
+/// Result alias for the codec decode surface.
+pub type CodecResult<T> = std::result::Result<T, CodecError>;
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::UnexpectedEof { at_bit } => {
+                write!(f, "bitstream ended early (at bit {at_bit})")
+            }
+            CodecError::LengthOverflow { field, claimed, max } => {
+                write!(f, "{field} claims {claimed} but the payload bounds it at {max}")
+            }
+            CodecError::CorruptPrefix { at_bit } => {
+                write!(f, "prefix-code walk left the code space near bit {at_bit}")
+            }
+            CodecError::InvalidTable { detail } => write!(f, "invalid code table: {detail}"),
+            CodecError::UnknownSymbol { symbol } => {
+                write!(f, "symbol {symbol} is outside the code alphabet")
+            }
+            CodecError::ValueOverflow { detail } => {
+                write!(f, "decoded value out of range: {detail}")
+            }
+            CodecError::Malformed { detail } => write!(f, "malformed stream: {detail}"),
+            CodecError::ChecksumMismatch { stored, computed } => {
+                write!(f, "checksum mismatch: stored {stored:#010x}, computed {computed:#010x}")
+            }
+            CodecError::Unsupported { detail } => {
+                write!(f, "unsupported stream feature: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = CodecError::LengthOverflow { field: "nsym", claimed: 1 << 40, max: 128 };
+        let s = e.to_string();
+        assert!(s.contains("nsym") && s.contains("128"), "{s}");
+        let e = CodecError::ChecksumMismatch { stored: 0xDEAD_BEEF, computed: 1 };
+        assert!(e.to_string().contains("0xdeadbeef"), "{e}");
+    }
+
+    #[test]
+    fn is_std_error_and_converts_to_anyhow() {
+        fn f() -> anyhow::Result<()> {
+            Err(CodecError::InvalidTable { detail: "zero-length code" })?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("zero-length code"));
+    }
+}

@@ -1,16 +1,38 @@
 //! Canonical Huffman coder over integer weight levels — the classic
 //! baseline the CABAC codec is compared against (Deep Compression [16]
 //! uses Huffman as its third stage).
+//!
+//! Both directions are fallible: [`encode_with_table`] rejects
+//! out-of-alphabet symbols ([`CodecError::UnknownSymbol`]) and [`decode`]
+//! rejects corrupt streams — oversized count fields are bounded against
+//! the payload *before* any allocation, code tables must satisfy the
+//! Kraft inequality, and a prefix walk that leaves the code space is a
+//! [`CodecError::CorruptPrefix`], never a panic.
 
 use std::collections::BTreeMap;
 
 use super::bitstream::{BitReader, BitWriter};
+use super::error::{CodecError, CodecResult};
 
-/// Code table: symbol -> (code, length).
+/// Longest representable code: lengths are stored in 5 bits.
+const MAX_CODE_LEN: u8 = 31;
+
+/// Code table: sorted symbols with canonical code lengths.
 #[derive(Debug, Clone)]
 pub struct HuffTable {
     /// sorted symbols with canonical code lengths
     pub lengths: Vec<(i32, u8)>,
+}
+
+impl HuffTable {
+    /// Build a table from the frequency profile of `levels`.
+    pub fn from_levels(levels: &[i32]) -> Self {
+        let mut freqs = BTreeMap::new();
+        for &l in levels {
+            *freqs.entry(l).or_insert(0u64) += 1;
+        }
+        HuffTable { lengths: build_lengths(&freqs) }
+    }
 }
 
 fn build_lengths(freqs: &BTreeMap<i32, u64>) -> Vec<(i32, u8)> {
@@ -57,30 +79,52 @@ fn build_lengths(freqs: &BTreeMap<i32, u64>) -> Vec<(i32, u8)> {
     out
 }
 
+/// Assign canonical codes to validated lengths (each `1..=MAX_CODE_LEN`,
+/// Kraft sum <= 1 — both checked by the callers, so the shifts below
+/// cannot overflow).
 fn canonical_codes(lengths: &[(i32, u8)]) -> Vec<(i32, u32, u8)> {
     let mut sorted: Vec<(i32, u8)> = lengths.to_vec();
     sorted.sort_by_key(|&(s, l)| (l, s));
     let mut codes = Vec::with_capacity(sorted.len());
-    let mut code = 0u32;
+    let mut code = 0u64;
     let mut prev_len = 0u8;
     for &(s, l) in &sorted {
         code <<= l - prev_len;
-        codes.push((s, code, l));
+        codes.push((s, code as u32, l));
         code += 1;
         prev_len = l;
     }
     codes
 }
 
-/// Encode levels; the output embeds the code table (symbol set + lengths)
-/// so the measured size is a fair end-to-end file size.
-pub fn encode(levels: &[i32]) -> Vec<u8> {
-    let mut freqs = BTreeMap::new();
-    for &l in levels {
-        *freqs.entry(l).or_insert(0u64) += 1;
+/// Check lengths are in range and the Kraft inequality holds (the code
+/// space is not over-subscribed), so canonical assignment is well-defined.
+fn validate_lengths(lengths: &[(i32, u8)]) -> CodecResult<()> {
+    let mut kraft = 0u64; // in units of 2^-MAX_CODE_LEN
+    for &(_, l) in lengths {
+        if l == 0 {
+            return Err(CodecError::InvalidTable { detail: "zero code length" });
+        }
+        if l > MAX_CODE_LEN {
+            return Err(CodecError::InvalidTable { detail: "code length exceeds 31" });
+        }
+        kraft += 1u64 << (MAX_CODE_LEN - l);
+        if kraft > 1u64 << MAX_CODE_LEN {
+            return Err(CodecError::InvalidTable {
+                detail: "Kraft inequality violated (over-subscribed code space)",
+            });
+        }
     }
-    let lengths = build_lengths(&freqs);
-    let codes = canonical_codes(&lengths);
+    Ok(())
+}
+
+/// Encode levels with an explicit table; the output embeds the table
+/// (symbol set + lengths) so the measured size is a fair end-to-end file
+/// size. Fails with [`CodecError::UnknownSymbol`] on any level outside
+/// the table's alphabet.
+pub fn encode_with_table(table: &HuffTable, levels: &[i32]) -> CodecResult<Vec<u8>> {
+    validate_lengths(&table.lengths)?;
+    let codes = canonical_codes(&table.lengths);
     let by_sym: BTreeMap<i32, (u32, u8)> =
         codes.iter().map(|&(s, c, l)| (s, (c, l))).collect();
 
@@ -94,32 +138,55 @@ pub fn encode(levels: &[i32]) -> Vec<u8> {
         w.put_bits(l as u64, 5);
     }
     for &lv in levels {
-        let (c, l) = by_sym[&lv];
+        let (c, l) = *by_sym
+            .get(&lv)
+            .ok_or(CodecError::UnknownSymbol { symbol: lv })?;
         w.put_bits(c as u64, l as u32);
     }
-    w.finish()
+    Ok(w.finish())
+}
+
+/// Encode levels under a table fitted to their own frequency profile.
+pub fn encode(levels: &[i32]) -> CodecResult<Vec<u8>> {
+    encode_with_table(&HuffTable::from_levels(levels), levels)
 }
 
 /// Decode a stream produced by [`encode`].
-pub fn decode(buf: &[u8]) -> Vec<i32> {
+pub fn decode(buf: &[u8]) -> CodecResult<Vec<i32>> {
     let mut r = BitReader::new(buf);
-    let nsym = r.get_exp_golomb() as usize;
-    let n = r.get_exp_golomb() as usize;
+    let nsym = r.get_exp_golomb()?;
+    // each table entry costs >= 6 bits (1-bit exp-golomb + 5-bit length)
+    let max_sym = (r.remaining_bits() / 6) as u64;
+    if nsym > max_sym {
+        return Err(CodecError::LengthOverflow { field: "nsym", claimed: nsym, max: max_sym });
+    }
+    let n = r.get_exp_golomb()?;
+    // each coded level costs >= 1 bit of payload
+    let max_n = (buf.len() * 8) as u64;
+    if n > max_n {
+        return Err(CodecError::LengthOverflow { field: "n", claimed: n, max: max_n });
+    }
+    let (nsym, n) = (nsym as usize, n as usize);
     let mut lengths = Vec::with_capacity(nsym);
     for _ in 0..nsym {
-        let zz = r.get_exp_golomb() as u32;
+        let zz = r.get_exp_golomb()? as u32;
         let s = ((zz >> 1) as i32) ^ -((zz & 1) as i32);
-        let l = r.get_bits(5) as u8;
+        let l = r.get_bits(5)? as u8;
         lengths.push((s, l));
     }
+    if nsym == 0 && n > 0 {
+        return Err(CodecError::InvalidTable { detail: "empty table with nonzero count" });
+    }
+    validate_lengths(&lengths)?;
     let codes = canonical_codes(&lengths);
+    let max_len = lengths.iter().map(|&(_, l)| l).max().unwrap_or(0);
     // decode by longest-prefix walk (tiny alphabets -> linear scan is fine)
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         let mut code = 0u32;
         let mut len = 0u8;
         loop {
-            code = (code << 1) | r.get_bit() as u32;
+            code = (code << 1) | r.get_bit()? as u32;
             len += 1;
             if let Some(&(s, _, _)) =
                 codes.iter().find(|&&(_, c, l)| l == len && c == code)
@@ -127,10 +194,14 @@ pub fn decode(buf: &[u8]) -> Vec<i32> {
                 out.push(s);
                 break;
             }
-            assert!(len < 32, "corrupt huffman stream");
+            if len >= max_len {
+                // an under-subscribed table leaves unassigned prefixes;
+                // landing on one is proof of corruption
+                return Err(CodecError::CorruptPrefix { at_bit: r.bit_pos() });
+            }
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -150,8 +221,8 @@ mod tests {
                 }
             })
             .collect();
-        let bytes = encode(&levels);
-        assert_eq!(decode(&bytes), levels);
+        let bytes = encode(&levels).unwrap();
+        assert_eq!(decode(&bytes).unwrap(), levels);
         // entropy ~1.7 bits; symbol-granular huffman pays the 1-bit floor
         // on the 80%-probable zero symbol but must beat 5-bit packing
         let bits = bytes.len() as f64 * 8.0 / levels.len() as f64;
@@ -161,12 +232,12 @@ mod tests {
     #[test]
     fn roundtrip_single_symbol() {
         let levels = vec![3i32; 100];
-        assert_eq!(decode(&encode(&levels)), levels);
+        assert_eq!(decode(&encode(&levels).unwrap()).unwrap(), levels);
     }
 
     #[test]
     fn roundtrip_empty() {
-        assert_eq!(decode(&encode(&[])), Vec::<i32>::new());
+        assert_eq!(decode(&encode(&[]).unwrap()).unwrap(), Vec::<i32>::new());
     }
 
     #[test]
@@ -176,10 +247,72 @@ mod tests {
             let levels: Vec<i32> = (0..n)
                 .map(|_| rng.below(31) as i32 - 15)
                 .collect();
-            if decode(&encode(&levels)) != levels {
+            if decode(&encode(&levels).unwrap()).unwrap() != levels {
                 return Err("mismatch".into());
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn unknown_symbol_is_an_error_not_a_panic() {
+        // regression: encoding a level outside the table's alphabet used
+        // to panic on `by_sym[&lv]`
+        let table = HuffTable::from_levels(&[0, 0, 1, -1]);
+        let err = encode_with_table(&table, &[0, 5]).unwrap_err();
+        assert_eq!(err, CodecError::UnknownSymbol { symbol: 5 });
+    }
+
+    #[test]
+    fn corrupt_prefix_is_an_error_not_a_panic() {
+        // regression: an under-subscribed table (Kraft sum 1/2) leaves the
+        // prefix `1` unassigned; a payload presenting it used to trip
+        // `assert!(len < 32, "corrupt huffman stream")`
+        let mut w = BitWriter::new();
+        w.put_exp_golomb(1); // nsym = 1
+        w.put_exp_golomb(2); // n = 2
+        w.put_exp_golomb(0); // symbol 0 (zigzag)
+        w.put_bits(2, 5); // length 2 -> only code 00 is assigned
+        w.put_bits(0b00, 2); // first level decodes fine
+        w.put_bits(0b11, 2); // second lands on an unassigned prefix
+        let err = decode(&w.finish()).unwrap_err();
+        assert!(matches!(err, CodecError::CorruptPrefix { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn oversubscribed_table_rejected() {
+        // three symbols of length 1 violate Kraft (2^-1 * 3 > 1)
+        let mut w = BitWriter::new();
+        w.put_exp_golomb(3); // nsym
+        w.put_exp_golomb(0); // n
+        for zz in [0u64, 1, 2] {
+            w.put_exp_golomb(zz);
+            w.put_bits(1, 5); // length 1
+        }
+        let err = decode(&w.finish()).unwrap_err();
+        assert!(matches!(err, CodecError::InvalidTable { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn zero_code_length_rejected() {
+        let mut w = BitWriter::new();
+        w.put_exp_golomb(1);
+        w.put_exp_golomb(1);
+        w.put_exp_golomb(0);
+        w.put_bits(0, 5); // length 0 is meaningless
+        let err = decode(&w.finish()).unwrap_err();
+        assert_eq!(err, CodecError::InvalidTable { detail: "zero code length" });
+    }
+
+    #[test]
+    fn truncated_stream_is_eof() {
+        let bytes = encode(&[1, 2, 3, 4, 5, 1, 2, 3]).unwrap();
+        // cutting the stream in half lands mid-table: reads must hit EOF,
+        // not read zeros off the end
+        let err = decode(&bytes[..bytes.len() / 2]).unwrap_err();
+        assert!(
+            matches!(err, CodecError::UnexpectedEof { .. } | CodecError::CorruptPrefix { .. }),
+            "{err:?}"
+        );
     }
 }

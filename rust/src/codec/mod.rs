@@ -1,18 +1,56 @@
 //! Entropy-coding substrate: the DeepCABAC-style codec (the paper's
 //! compression-ratio measurements, Table 1 / Figs. 9-10) plus baselines
 //! (Huffman, RLE, CSR size model, deflate) for the codec comparison.
+//!
+//! Robustness contract (DESIGN.md §2.4): every decoder in this tree is
+//! *total* — an arbitrary byte buffer yields `Ok` or a [`CodecError`],
+//! never a panic, an unbounded allocation, or a spin. Length and count
+//! fields read from a stream are validated against payload-derived
+//! bounds before any allocation; where a coder is sub-linear (zero-run
+//! coding) and no payload bound exists, the policy ceiling
+//! [`MAX_DECODE_ELEMS`] applies instead.
+//!
+//! Tensor payloads are chunked at fixed [`CHUNK_LEVELS`] boundaries so
+//! [`encode_tensor_jobs`] can fan chunks out across the worker pool;
+//! because the boundaries are data-independent and the pool map is
+//! order-preserving, the serial and parallel encodings are bitwise
+//! identical by construction.
 
 pub mod bitstream;
 pub mod cabac;
 pub mod deepcabac;
 pub mod deflate;
+pub mod error;
 pub mod huffman;
 pub mod sparse;
 
+pub use error::{CodecError, CodecResult};
+
 use crate::quant::Codebook;
 use crate::tensor::TensorI32;
+use crate::util::pool::par_map_indexed;
+
+/// Ceiling on any in-stream element count a decoder will honor.
+///
+/// Zero-run coders (CABAC sigflag runs, RLE) spend sub-linear bits per
+/// element, so a tiny hostile stream can claim astronomically many
+/// elements; counts are clamped here (2^27 ~ 134M levels, far above any
+/// single layer in the paper's models) before `Vec::with_capacity`.
+pub const MAX_DECODE_ELEMS: usize = 1 << 27;
+
+/// Fixed chunk size (in levels) for tensor payload framing.
+///
+/// Boundaries depend only on element count — never on values — which is
+/// what makes parallel encoding deterministic: chunk `i` always covers
+/// levels `[i * CHUNK_LEVELS, (i + 1) * CHUNK_LEVELS)` regardless of how
+/// many workers encode it.
+pub const CHUNK_LEVELS: usize = 1 << 16;
 
 /// Compressed representation of one quantized tensor.
+///
+/// `payload` is a sequence of `ceil(numel / CHUNK_LEVELS)` frames, each
+/// `[u32 LE byte length || DeepCABAC stream]`; the chunk count is implied
+/// by `shape`, so a corrupt count cannot be smuggled in-band.
 #[derive(Clone, Debug)]
 pub struct EncodedTensor {
     pub shape: Vec<usize>,
@@ -29,27 +67,140 @@ pub fn slots_to_levels(idx: &TensorI32) -> Vec<i32> {
         .collect()
 }
 
+/// Encode integer levels into the chunked container payload.
+fn encode_levels_chunked(levels: &[i32], jobs: usize) -> Vec<u8> {
+    let chunks: Vec<&[i32]> = levels.chunks(CHUNK_LEVELS).collect();
+    let encoded = par_map_indexed(&chunks, jobs, |_, c| deepcabac::encode_levels(c));
+    let mut payload = Vec::with_capacity(encoded.iter().map(|e| 4 + e.len()).sum());
+    for e in &encoded {
+        payload.extend_from_slice(&(e.len() as u32).to_le_bytes());
+        payload.extend_from_slice(e);
+    }
+    payload
+}
+
 /// Encode a quantized tensor (slot indices + codebook metadata) with the
-/// DeepCABAC-style coder.
+/// DeepCABAC-style coder, serially. Equivalent to
+/// [`encode_tensor_jobs`] with `jobs == 1` — and bitwise identical to it
+/// at any job count.
 pub fn encode_tensor(idx: &TensorI32, cb: &Codebook) -> EncodedTensor {
+    encode_tensor_jobs(idx, cb, 1)
+}
+
+/// Encode a quantized tensor, fanning chunks across `jobs` workers.
+pub fn encode_tensor_jobs(idx: &TensorI32, cb: &Codebook, jobs: usize) -> EncodedTensor {
     let levels = slots_to_levels(idx);
     EncodedTensor {
         shape: idx.shape.clone(),
         step: cb.step,
         bits: cb.bits,
-        payload: deepcabac::encode_levels(&levels),
+        payload: encode_levels_chunked(&levels, jobs),
     }
 }
 
-/// Decode back to slot indices (lossless inverse of [`encode_tensor`]).
-pub fn decode_tensor(enc: &EncodedTensor) -> TensorI32 {
-    let n: usize = enc.shape.iter().product();
-    let levels = deepcabac::decode_levels(&enc.payload, n);
-    let data = levels
+/// Encode many tensors in one pool pass, fanning the flat list of
+/// (tensor, chunk) work units across `jobs` workers so small layers do
+/// not serialize behind large ones. Output order matches input order and
+/// each payload is bitwise identical to its [`encode_tensor`] encoding.
+pub fn encode_tensors_jobs(
+    inputs: &[(&TensorI32, &Codebook)],
+    jobs: usize,
+) -> Vec<EncodedTensor> {
+    let all_levels: Vec<Vec<i32>> =
+        inputs.iter().map(|(idx, _)| slots_to_levels(idx)).collect();
+    let units: Vec<(usize, &[i32])> = all_levels
         .iter()
-        .map(|&l| Codebook::level_to_slot(l) as i32)
+        .enumerate()
+        .flat_map(|(ti, lv)| lv.chunks(CHUNK_LEVELS).map(move |c| (ti, c)))
         .collect();
-    TensorI32::new(enc.shape.clone(), data)
+    let encoded = par_map_indexed(&units, jobs, |_, &(_, c)| deepcabac::encode_levels(c));
+    let mut out: Vec<EncodedTensor> = inputs
+        .iter()
+        .map(|(idx, cb)| EncodedTensor {
+            shape: idx.shape.clone(),
+            step: cb.step,
+            bits: cb.bits,
+            payload: Vec::new(),
+        })
+        .collect();
+    // units iterates chunks in-order per tensor and par_map_indexed
+    // preserves unit order, so this assembly is position-deterministic
+    for (&(ti, _), e) in units.iter().zip(&encoded) {
+        out[ti].payload.extend_from_slice(&(e.len() as u32).to_le_bytes());
+        out[ti].payload.extend_from_slice(e);
+    }
+    out
+}
+
+/// Decode back to slot indices (lossless inverse of [`encode_tensor`]).
+///
+/// Total over arbitrary `EncodedTensor` contents: the shape product is
+/// clamped by [`MAX_DECODE_ELEMS`] before allocation, every chunk length
+/// is validated against the remaining payload, decoded levels must fit
+/// the `bits`-wide codebook grid (so `Codebook::level_to_slot` cannot
+/// overflow and downstream codebook lookups cannot index out of bounds),
+/// and trailing bytes after the final chunk are rejected.
+pub fn decode_tensor(enc: &EncodedTensor) -> CodecResult<TensorI32> {
+    if enc.bits == 0 || enc.bits > 16 {
+        return Err(CodecError::Malformed { detail: "codebook bit-width outside 1..=16" });
+    }
+    let mut numel: u128 = 1;
+    for &d in &enc.shape {
+        numel = numel
+            .checked_mul(d as u128)
+            .ok_or(CodecError::LengthOverflow {
+                field: "tensor numel",
+                claimed: u64::MAX,
+                max: MAX_DECODE_ELEMS as u64,
+            })?;
+    }
+    if numel > MAX_DECODE_ELEMS as u128 {
+        return Err(CodecError::LengthOverflow {
+            field: "tensor numel",
+            claimed: numel.min(u64::MAX as u128) as u64,
+            max: MAX_DECODE_ELEMS as u64,
+        });
+    }
+    let n = numel as usize;
+    let nchunks = n.div_ceil(CHUNK_LEVELS);
+    // Every frame is 4 length bytes plus a CABAC stream of >= 5 bytes
+    // (BinEncoder::finish always flushes five), so this floor holds for
+    // any well-formed payload and bounds the work loop up front.
+    if enc.payload.len() < nchunks * 9 {
+        return Err(CodecError::Malformed { detail: "payload shorter than its chunk-framing floor" });
+    }
+    let side = (1u32 << (enc.bits - 1)) - 1;
+    let mut data: Vec<i32> = Vec::with_capacity(n);
+    let mut off = 0usize;
+    for ci in 0..nchunks {
+        let want = (n - ci * CHUNK_LEVELS).min(CHUNK_LEVELS);
+        let Some(hdr) = enc.payload.get(off..off + 4) else {
+            return Err(CodecError::UnexpectedEof { at_bit: enc.payload.len() * 8 });
+        };
+        let clen = u32::from_le_bytes(hdr.try_into().unwrap()) as usize;
+        off += 4;
+        if clen > enc.payload.len() - off {
+            return Err(CodecError::LengthOverflow {
+                field: "chunk byte length",
+                claimed: clen as u64,
+                max: (enc.payload.len() - off) as u64,
+            });
+        }
+        let levels = deepcabac::decode_levels(&enc.payload[off..off + clen], want)?;
+        off += clen;
+        for &lv in &levels {
+            if lv.unsigned_abs() > side {
+                return Err(CodecError::ValueOverflow {
+                    detail: "level outside the codebook grid",
+                });
+            }
+            data.push(Codebook::level_to_slot(lv) as i32);
+        }
+    }
+    if off != enc.payload.len() {
+        return Err(CodecError::Malformed { detail: "trailing bytes after final chunk" });
+    }
+    Ok(TensorI32::new(enc.shape.clone(), data))
 }
 
 /// Size comparison of one tensor across codecs (bytes).
@@ -78,7 +229,9 @@ pub fn compare_codecs(idx: &TensorI32, bits: u32) -> CodecComparison {
         fp32: n * 4,
         packed,
         cabac: deepcabac::encode_levels(&levels).len(),
-        huffman: huffman::encode(&levels).len(),
+        huffman: huffman::encode(&levels)
+            .expect("a freshly built table covers its own input")
+            .len(),
         rle: sparse::rle_encode(&levels, bits).len(),
         csr: sparse::csr_size_bytes(rows, cols, nnz, bits),
         deflate,
@@ -118,9 +271,126 @@ mod tests {
         let idx = random_idx(4096, 4, 0.8, 1);
         let cb = Codebook::symmetric(4, 0.02);
         let enc = encode_tensor(&idx, &cb);
-        let dec = decode_tensor(&enc);
+        let dec = decode_tensor(&enc).unwrap();
         assert_eq!(dec.data, idx.data);
         assert_eq!(enc.step, cb.step);
+    }
+
+    #[test]
+    fn multi_chunk_roundtrip() {
+        // spans three CHUNK_LEVELS frames, including a partial tail
+        let n = 2 * CHUNK_LEVELS + CHUNK_LEVELS / 3;
+        let idx = random_idx(n, 4, 0.85, 7);
+        let cb = Codebook::symmetric(4, 0.02);
+        let enc = encode_tensor(&idx, &cb);
+        assert_eq!(decode_tensor(&enc).unwrap().data, idx.data);
+    }
+
+    #[test]
+    fn parallel_encode_is_bitwise_identical() {
+        let n = 2 * CHUNK_LEVELS + 1234;
+        let idx = random_idx(n, 4, 0.9, 8);
+        let cb = Codebook::symmetric(4, 0.02);
+        let serial = encode_tensor_jobs(&idx, &cb, 1);
+        for jobs in 2..=4 {
+            let par = encode_tensor_jobs(&idx, &cb, jobs);
+            assert_eq!(par.payload, serial.payload, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn multi_tensor_encode_matches_per_tensor() {
+        // the flat (tensor, chunk) fan-out must reassemble each payload
+        // exactly as the single-tensor path produces it, at any job count
+        let a = random_idx(CHUNK_LEVELS + 77, 4, 0.9, 10);
+        let b = random_idx(513, 2, 0.7, 11);
+        let c = random_idx(3 * CHUNK_LEVELS, 4, 0.95, 12);
+        let cba = Codebook::symmetric(4, 0.02);
+        let cbb = Codebook::symmetric(2, 0.05);
+        let inputs = vec![(&a, &cba), (&b, &cbb), (&c, &cba)];
+        let serial: Vec<EncodedTensor> =
+            inputs.iter().map(|&(idx, cb)| encode_tensor(idx, cb)).collect();
+        for jobs in 1..=4 {
+            let par = encode_tensors_jobs(&inputs, jobs);
+            assert_eq!(par.len(), serial.len());
+            for (p, s) in par.iter().zip(&serial) {
+                assert_eq!(p.payload, s.payload, "jobs={jobs}");
+                assert_eq!(p.shape, s.shape);
+                assert_eq!(p.bits, s.bits);
+            }
+        }
+    }
+
+    #[test]
+    fn absurd_shape_rejected_before_allocation() {
+        // a 16-byte payload claiming 2^40 elements must be rejected by the
+        // numel ceiling, not attempted as a terabyte allocation
+        let enc = EncodedTensor {
+            shape: vec![1 << 20, 1 << 20],
+            step: 0.02,
+            bits: 4,
+            payload: vec![0u8; 16],
+        };
+        let err = decode_tensor(&enc).unwrap_err();
+        assert!(matches!(err, CodecError::LengthOverflow { field: "tensor numel", .. }), "{err:?}");
+        // and a shape product that overflows u128 is the same error
+        let enc = EncodedTensor {
+            shape: vec![usize::MAX, usize::MAX, usize::MAX],
+            step: 0.02,
+            bits: 4,
+            payload: vec![0u8; 16],
+        };
+        assert!(matches!(decode_tensor(&enc), Err(CodecError::LengthOverflow { .. })));
+    }
+
+    #[test]
+    fn corrupt_framing_rejected() {
+        let idx = random_idx(1000, 4, 0.8, 9);
+        let cb = Codebook::symmetric(4, 0.02);
+        let good = encode_tensor(&idx, &cb);
+
+        // payload below the 9-byte/chunk floor
+        let mut enc = good.clone();
+        enc.payload.truncate(6);
+        assert!(matches!(decode_tensor(&enc), Err(CodecError::Malformed { .. })));
+
+        // chunk length pointing past the payload end
+        let mut enc = good.clone();
+        enc.payload[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_tensor(&enc), Err(CodecError::LengthOverflow { .. })));
+
+        // trailing garbage after the final chunk
+        let mut enc = good.clone();
+        enc.payload.push(0xAB);
+        assert!(matches!(
+            decode_tensor(&enc),
+            Err(CodecError::Malformed { detail: "trailing bytes after final chunk" })
+        ));
+
+        // nonsense bit-width
+        let mut enc = good;
+        enc.bits = 99;
+        assert!(matches!(decode_tensor(&enc), Err(CodecError::Malformed { .. })));
+    }
+
+    #[test]
+    fn off_grid_level_rejected() {
+        // a stream carrying |level| beyond the bits-wide grid must not
+        // become an out-of-range slot index for codebook lookups
+        let levels = vec![0i32, 100, -3];
+        let payload = encode_levels_chunked(&levels, 1);
+        let enc = EncodedTensor { shape: vec![3], step: 0.02, bits: 4, payload };
+        let err = decode_tensor(&enc).unwrap_err();
+        assert!(matches!(err, CodecError::ValueOverflow { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn empty_tensor_roundtrip() {
+        let idx = TensorI32::new(vec![0], vec![]);
+        let cb = Codebook::symmetric(4, 0.02);
+        let enc = encode_tensor(&idx, &cb);
+        assert!(enc.payload.is_empty());
+        assert_eq!(decode_tensor(&enc).unwrap().data, Vec::<i32>::new());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! inference directly in the compressed representation.
 
 use super::bitstream::{BitReader, BitWriter};
+use super::error::{CodecError, CodecResult};
 
 /// RLE + fixed-width packing: zero runs as Exp-Golomb, non-zero levels as
 /// sign + (bits-1)-bit magnitude.
@@ -29,23 +30,39 @@ pub fn rle_encode(levels: &[i32], bits: u32) -> Vec<u8> {
 }
 
 /// Decode an RLE stream (inverse of [`rle_encode`]).
-pub fn rle_decode(buf: &[u8], bits: u32) -> Vec<i32> {
+///
+/// Zero runs code sub-linearly, so the element count cannot be bounded by
+/// the payload size; it is bounded by [`crate::codec::MAX_DECODE_ELEMS`]
+/// instead, and every read past the true end of the stream is an error
+/// rather than a zero-fill.
+pub fn rle_decode(buf: &[u8], bits: u32) -> CodecResult<Vec<i32>> {
+    if bits == 0 || bits > 16 {
+        return Err(CodecError::Malformed { detail: "bit-width outside 1..=16" });
+    }
     let mag_bits = bits - 1;
     let mut r = BitReader::new(buf);
-    let n = r.get_exp_golomb() as usize;
+    let n = r.get_exp_golomb()?;
+    if n > super::MAX_DECODE_ELEMS as u64 {
+        return Err(CodecError::LengthOverflow {
+            field: "element count",
+            claimed: n,
+            max: super::MAX_DECODE_ELEMS as u64,
+        });
+    }
+    let n = n as usize;
     let mut out = Vec::with_capacity(n);
     while out.len() < n {
-        let run = r.get_exp_golomb() as usize;
+        let run = r.get_exp_golomb()? as usize;
         for _ in 0..run.min(n - out.len()) {
             out.push(0);
         }
         if out.len() < n {
-            let neg = r.get_bit();
-            let mag = r.get_bits(mag_bits) as i32;
+            let neg = r.get_bit()?;
+            let mag = r.get_bits(mag_bits)? as i32;
             out.push(if neg { -mag } else { mag });
         }
     }
-    out
+    Ok(out)
 }
 
 /// CSR size model (bytes) for a sparse matrix of `rows x cols` with `nnz`
@@ -66,7 +83,7 @@ mod tests {
     fn rle_roundtrip() {
         let levels = vec![0, 0, 0, 5, -3, 0, 0, 1, 0, 0, 0, 0, -7, 0];
         let b = rle_encode(&levels, 4);
-        assert_eq!(rle_decode(&b, 4), levels);
+        assert_eq!(rle_decode(&b, 4).unwrap(), levels);
     }
 
     #[test]
@@ -74,14 +91,32 @@ mod tests {
         let levels = vec![0i32; 100_000];
         let b = rle_encode(&levels, 4);
         assert!(b.len() < 16, "all-zero RLE should be tiny, got {}", b.len());
-        assert_eq!(rle_decode(&b, 4), levels);
+        assert_eq!(rle_decode(&b, 4).unwrap(), levels);
     }
 
     #[test]
     fn rle_no_zeros() {
         let levels = vec![1, -1, 2, -2, 3, -3];
         let b = rle_encode(&levels, 3);
-        assert_eq!(rle_decode(&b, 3), levels);
+        assert_eq!(rle_decode(&b, 3).unwrap(), levels);
+    }
+
+    #[test]
+    fn rle_rejects_absurd_count_and_truncation() {
+        // a count field beyond the decode ceiling is rejected before any
+        // allocation; a truncated nonzero entry is an EOF, not a zero-fill
+        let mut w = BitWriter::new();
+        w.put_exp_golomb(1 << 40);
+        let err = rle_decode(&w.finish(), 4).unwrap_err();
+        assert!(matches!(err, CodecError::LengthOverflow { .. }), "{err:?}");
+
+        let b = rle_encode(&[0, 0, 7, -7, 3], 4);
+        let err = rle_decode(&b[..b.len() - 1], 4).unwrap_err();
+        assert!(
+            matches!(err, CodecError::UnexpectedEof { .. } | CodecError::CorruptPrefix { .. }),
+            "{err:?}"
+        );
+        assert!(matches!(rle_decode(&b, 0), Err(CodecError::Malformed { .. })));
     }
 
     #[test]

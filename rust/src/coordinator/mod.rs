@@ -20,10 +20,23 @@ use crate::nn::ModelState;
 /// for quantized layers + raw fp32 for the rest + per-layer header,
 /// matching the `.ecqx` container layout.
 pub fn compressed_size(state: &ModelState) -> usize {
+    compressed_size_jobs(state, 1)
+}
+
+/// [`compressed_size`] with the per-layer entropy coding fanned out over
+/// `jobs` workers. Chunk boundaries are data-independent, so the result
+/// is identical at any job count (serial == parallel, bitwise).
+pub fn compressed_size_jobs(state: &ModelState, jobs: usize) -> usize {
     let mut total = 8; // magic
-    for name in state.qnames() {
-        let ql = &state.qlayers[&name];
-        let enc = codec::encode_tensor(&ql.idx, &ql.codebook);
+    let qnames = state.qnames();
+    let inputs: Vec<_> = qnames
+        .iter()
+        .map(|name| {
+            let ql = &state.qlayers[name];
+            (&ql.idx, &ql.codebook)
+        })
+        .collect();
+    for (name, enc) in qnames.iter().zip(codec::encode_tensors_jobs(&inputs, jobs)) {
         total += enc.payload.len() + 16 + name.len();
     }
     for (name, t) in &state.params {

@@ -8,6 +8,8 @@
 //!                              (--jobs N fans trials over N workers;
 //!                              rows are identical for any N)
 //!   compress <model>           quantize + write/reload a .ecqx container
+//!                              (--jobs N fans the entropy coding over N
+//!                              workers; the file is identical for any N)
 //!   eval <model> <file.ecqx>   evaluate a compressed container
 //!
 //! Options: --backend auto|host|pjrt --model mlp|cnn --method ecq|ecqx
@@ -286,7 +288,8 @@ fn cmd_compress(args: &Args) -> Result<()> {
         .get("out")
         .cloned()
         .unwrap_or_else(|| format!("{}.ecqx", exp_.name));
-    let size = checkpoint::save_quantized(std::path::Path::new(&out), &state)?;
+    let jobs = args.get("jobs", 1usize).max(1);
+    let size = checkpoint::save_quantized_jobs(std::path::Path::new(&out), &state, jobs)?;
     println!(
         "wrote {out}: {:.1} kB on disk (CR {:.1}x vs {:.1} kB fp32)",
         size as f64 / 1000.0,

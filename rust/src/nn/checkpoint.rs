@@ -54,6 +54,41 @@ fn read_str(r: &mut impl Read) -> Result<String> {
     Ok(String::from_utf8(buf)?)
 }
 
+const MAX_RANK: usize = 8;
+
+/// Read a shape header, validating rank and element count against the
+/// same ceiling as the codec ([`codec::MAX_DECODE_ELEMS`]) so a corrupt
+/// header cannot drive an unbounded allocation downstream.
+fn read_shape(r: &mut impl Read) -> Result<(Vec<usize>, usize)> {
+    let rank = read_u32(r)? as usize;
+    if rank > MAX_RANK {
+        bail!("tensor rank {rank} exceeds {MAX_RANK}");
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(read_u32(r)? as usize);
+    }
+    let mut numel = 1usize;
+    for &d in &shape {
+        numel = match numel.checked_mul(d) {
+            Some(n) if n <= codec::MAX_DECODE_ELEMS => n,
+            _ => bail!("tensor numel exceeds decode ceiling (shape {shape:?})"),
+        };
+    }
+    Ok((shape, numel))
+}
+
+/// Read `numel` little-endian f32s. Capacity grows with bytes actually
+/// read, so a header claiming more elements than the file holds fails at
+/// the first short read instead of pre-allocating the claimed size.
+fn read_f32_vec(r: &mut impl Read, numel: usize) -> Result<Vec<f32>> {
+    let mut data = Vec::with_capacity(numel.min(1 << 16));
+    for _ in 0..numel {
+        data.push(read_f32(r)?);
+    }
+    Ok(data)
+}
+
 /// Save the FP parameter store (pre-trained baseline snapshot).
 pub fn save_fp(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
     let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
@@ -86,16 +121,9 @@ pub fn load_fp(path: &Path) -> Result<BTreeMap<String, Tensor>> {
     let mut out = BTreeMap::new();
     for _ in 0..n {
         let name = read_str(&mut r)?;
-        let rank = read_u32(&mut r)? as usize;
-        let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            shape.push(read_u32(&mut r)? as usize);
-        }
-        let numel: usize = shape.iter().product();
-        let mut data = Vec::with_capacity(numel);
-        for _ in 0..numel {
-            data.push(read_f32(&mut r)?);
-        }
+        let (shape, numel) = read_shape(&mut r)?;
+        let data = read_f32_vec(&mut r, numel)
+            .with_context(|| format!("read FP tensor {name}"))?;
         out.insert(name, Tensor::new(shape, data));
     }
     Ok(out)
@@ -111,17 +139,31 @@ pub struct QuantizedLayer {
 /// layer + FP32 payload for the unquantized parameters (biases, BN).
 /// Returns the container size in bytes.
 pub fn save_quantized(path: &Path, state: &ModelState) -> Result<usize> {
+    save_quantized_jobs(path, state, 1)
+}
+
+/// [`save_quantized`] with the per-layer entropy coding fanned out over
+/// `jobs` workers (flat (layer, chunk) work units via
+/// [`codec::encode_tensors_jobs`]). The written container is bitwise
+/// identical at any job count.
+pub fn save_quantized_jobs(path: &Path, state: &ModelState, jobs: usize) -> Result<usize> {
     let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
     w.write_all(Q_MAGIC)?;
     write_str(&mut w, &state.spec.name)?;
     let qnames = state.qnames();
     write_u32(&mut w, qnames.len() as u32)?;
-    for name in &qnames {
-        let ql = state
-            .qlayers
-            .get(name)
-            .with_context(|| format!("layer {name} not quantized"))?;
-        let enc = codec::encode_tensor(&ql.idx, &ql.codebook);
+    let inputs = qnames
+        .iter()
+        .map(|name| {
+            let ql = state
+                .qlayers
+                .get(name)
+                .with_context(|| format!("layer {name} not quantized"))?;
+            Ok((&ql.idx, &ql.codebook))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let encs = codec::encode_tensors_jobs(&inputs, jobs);
+    for (name, enc) in qnames.iter().zip(&encs) {
         write_str(&mut w, name)?;
         write_u32(&mut w, enc.bits)?;
         write_f32(&mut w, enc.step)?;
@@ -176,33 +218,33 @@ pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
     for _ in 0..nq {
         let name = read_str(&mut r)?;
         let bits = read_u32(&mut r)?;
-        let step = read_f32(&mut r)?;
-        let rank = read_u32(&mut r)? as usize;
-        let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            shape.push(read_u32(&mut r)? as usize);
+        // Codebook::symmetric asserts this range — reject corrupt headers
+        // here so a hostile container errors instead of panicking
+        if !(2..=5).contains(&bits) {
+            bail!("layer {name}: bit width {bits} outside 2..=5");
         }
-        let plen = read_u32(&mut r)? as usize;
-        let mut payload = vec![0u8; plen];
-        r.read_exact(&mut payload)?;
+        let step = read_f32(&mut r)?;
+        let (shape, _numel) = read_shape(&mut r)?;
+        let plen = read_u32(&mut r)? as u64;
+        // take()-bounded read: allocation grows with bytes actually
+        // present, so a corrupt plen cannot demand 4 GiB up front
+        let mut payload = Vec::new();
+        let got = r.by_ref().take(plen).read_to_end(&mut payload)? as u64;
+        if got != plen {
+            bail!("layer {name}: payload truncated ({got} of {plen} bytes)");
+        }
         let enc = codec::EncodedTensor { shape, step, bits, payload };
-        let idx = codec::decode_tensor(&enc);
+        let idx = codec::decode_tensor(&enc)
+            .with_context(|| format!("decode layer {name}"))?;
         layers.insert(name, (idx, Codebook::symmetric(bits, step)));
     }
     let no = read_u32(&mut r)? as usize;
     let mut other = BTreeMap::new();
     for _ in 0..no {
         let name = read_str(&mut r)?;
-        let rank = read_u32(&mut r)? as usize;
-        let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            shape.push(read_u32(&mut r)? as usize);
-        }
-        let numel: usize = shape.iter().product();
-        let mut data = Vec::with_capacity(numel);
-        for _ in 0..numel {
-            data.push(read_f32(&mut r)?);
-        }
+        let (shape, numel) = read_shape(&mut r)?;
+        let data = read_f32_vec(&mut r, numel)
+            .with_context(|| format!("read FP tensor {name}"))?;
         other.insert(name, Tensor::new(shape, data));
     }
     Ok(QuantizedModel { model, layers, other })
@@ -283,6 +325,68 @@ mod tests {
         std::fs::write(&p, b"NOTAMAGIC123").unwrap();
         assert!(load_fp(&p).is_err());
         assert!(load_quantized(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn save_jobs_bitwise_identical() {
+        let st = toy_state();
+        let p1 = tmp("q-j1.ecqx");
+        let p3 = tmp("q-j3.ecqx");
+        save_quantized_jobs(&p1, &st, 1).unwrap();
+        save_quantized_jobs(&p3, &st, 3).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p3).unwrap());
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p3).ok();
+    }
+
+    #[test]
+    fn truncated_container_is_error_not_panic() {
+        let st = toy_state();
+        let p = tmp("q-trunc.ecqx");
+        save_quantized(&p, &st).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        for cut in [bytes.len() / 4, bytes.len() / 2, bytes.len() - 1] {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(load_quantized(&p).is_err(), "cut at {cut} should fail cleanly");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn absurd_header_claims_rejected() {
+        // hand-built container claiming a ~4 GiB payload for an 8-element
+        // layer: must error at the framing check, not allocate the claim
+        let p = tmp("q-absurd.ecqx");
+        let mut b = Vec::new();
+        b.extend_from_slice(Q_MAGIC);
+        b.extend_from_slice(&3u32.to_le_bytes()); // model name len
+        b.extend_from_slice(b"toy");
+        b.extend_from_slice(&1u32.to_le_bytes()); // one quantized layer
+        b.extend_from_slice(&2u32.to_le_bytes()); // name len
+        b.extend_from_slice(b"w0");
+        b.extend_from_slice(&4u32.to_le_bytes()); // bits
+        b.extend_from_slice(&0.1f32.to_le_bytes()); // step
+        b.extend_from_slice(&1u32.to_le_bytes()); // rank
+        b.extend_from_slice(&8u32.to_le_bytes()); // dim
+        b.extend_from_slice(&u32::MAX.to_le_bytes()); // plen claim
+        b.extend_from_slice(&[0u8; 16]); // ...but only 16 bytes present
+        std::fs::write(&p, &b).unwrap();
+        let err = load_quantized(&p).unwrap_err();
+        assert!(format!("{err:?}").contains("truncated"), "{err:?}");
+
+        // and an FP tensor whose shape overflows the decode ceiling
+        let mut b = Vec::new();
+        b.extend_from_slice(FP_MAGIC);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(b"w");
+        b.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        let err = load_fp(&p).unwrap_err();
+        assert!(format!("{err:?}").contains("ceiling"), "{err:?}");
         std::fs::remove_file(&p).ok();
     }
 }

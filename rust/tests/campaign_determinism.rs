@@ -297,6 +297,82 @@ fn cnn_host_backend_trials_match_serial_bitwise() {
     }
 }
 
+/// Serial-vs-parallel determinism of the *encoder* fan-out: a multi-layer
+/// model (one layer spanning several CHUNK_LEVELS frames, one small, one
+/// unquantized) written via `save_quantized_jobs` must produce a
+/// byte-identical `.ecqx` container at every job count, and the in-memory
+/// size model must agree with itself — the ISSUE-6 acceptance gate for
+/// parallel DeepCABAC encoding.
+#[test]
+fn quantized_container_matches_serial_bitwise() {
+    use ecqx::codec::CHUNK_LEVELS;
+    use ecqx::nn::{checkpoint, QLayer};
+    use ecqx::quant::Codebook;
+    use ecqx::runtime::{Init, ModelSpec, ParamSpec};
+    use ecqx::tensor::{Tensor, TensorI32};
+
+    let pspec = |name: &str, shape: Vec<usize>, quantize: bool| ParamSpec {
+        name: name.into(),
+        shape,
+        init: Init::HeIn,
+        quantize,
+    };
+    let spec = ModelSpec {
+        name: "enc_det".into(),
+        batch: 2,
+        classes: 12,
+        input_dim: 300,
+        params: vec![
+            // 300*240 = 72_000 levels: spans two CHUNK_LEVELS frames
+            pspec("w0", vec![300, 240], true),
+            pspec("w1", vec![240, 12], true),
+            pspec("b0", vec![12], false),
+        ],
+    };
+    assert!(300 * 240 > CHUNK_LEVELS);
+    let mut state = ModelState::init(&spec, 31);
+    let cb = Codebook::symmetric(4, 0.02);
+    let mut rng = Rng::new(31);
+    for (name, shape) in [("w0", vec![300usize, 240]), ("w1", vec![240, 12])] {
+        let n: usize = shape.iter().product();
+        // sample valid slots only (values is padded to K_MAX; the live
+        // grid for `bits` has 2^bits - 1 slots)
+        let nvalid = cb.n_valid();
+        let slots: Vec<i32> =
+            (0..n).map(|_| if rng.chance(0.85) { 0 } else { rng.below(nvalid) as i32 }).collect();
+        let idx = TensorI32::new(shape.clone(), slots);
+        let qw = Tensor::new(
+            shape,
+            idx.data.iter().map(|&s| cb.values[s as usize]).collect(),
+        );
+        state.qlayers.insert(name.into(), QLayer { qw, idx, codebook: cb.clone() });
+    }
+
+    let tmp = |jobs: usize| {
+        std::env::temp_dir().join(format!("ecqx-encdet-{}-{jobs}.ecqx", std::process::id()))
+    };
+    let p1 = tmp(1);
+    checkpoint::save_quantized_jobs(&p1, &state, 1).unwrap();
+    let serial = std::fs::read(&p1).unwrap();
+    let size1 = ecqx::coordinator::compressed_size_jobs(&state, 1);
+    for jobs in 2..=4 {
+        let pj = tmp(jobs);
+        checkpoint::save_quantized_jobs(&pj, &state, jobs).unwrap();
+        assert_eq!(
+            std::fs::read(&pj).unwrap(),
+            serial,
+            "container must be byte-identical at jobs={jobs}"
+        );
+        assert_eq!(ecqx::coordinator::compressed_size_jobs(&state, jobs), size1);
+        std::fs::remove_file(&pj).ok();
+    }
+    // and the container still decodes losslessly
+    let qm = checkpoint::load_quantized(&p1).unwrap();
+    assert_eq!(qm.layers["w0"].0.data, state.qlayers["w0"].idx.data);
+    assert_eq!(qm.layers["w1"].0.data, state.qlayers["w1"].idx.data);
+    std::fs::remove_file(&p1).ok();
+}
+
 #[test]
 fn failures_surface_deterministically() {
     let trials = test_grid();

@@ -1,0 +1,189 @@
+//! Adversarial decode tests: the totality contract of DESIGN.md §2.4
+//! exercised from outside the crate. Every decoder must map hostile
+//! input — absurd length claims, truncations, pure noise — to a
+//! `CodecError`, never a panic, a spin, or an allocation proportional to
+//! a corrupt header field. These are the CI-pinned regressions backing
+//! the fuzz layer (`fuzz_fallback` explores; these assert the exact
+//! cases the ISSUE names).
+
+use ecqx::codec::bitstream::BitWriter;
+use ecqx::codec::{self, deepcabac, deflate, huffman, sparse, CodecError};
+use ecqx::quant::Codebook;
+use ecqx::tensor::TensorI32;
+use ecqx::util::prop;
+use ecqx::util::Rng;
+
+/// The ISSUE's canonical attack: a 16-byte stream claiming 2^40 symbols.
+/// Every count-carrying decoder must reject it before allocating.
+#[test]
+fn sixteen_bytes_claiming_a_trillion_symbols() {
+    // huffman: header [nsym=1, n=2^40, one table entry], 16 bytes total
+    let mut w = BitWriter::new();
+    w.put_exp_golomb(1); // nsym
+    w.put_exp_golomb(1 << 40); // n
+    w.put_exp_golomb(0); // symbol 0
+    w.put_bits(1, 5); // length 1
+    let mut bytes = w.finish();
+    bytes.resize(16, 0);
+    let err = huffman::decode(&bytes).unwrap_err();
+    assert!(
+        matches!(err, CodecError::LengthOverflow { field: "n", .. }),
+        "huffman must bound n against the payload: {err:?}"
+    );
+
+    // rle: count field of 2^40 in a tiny stream
+    let mut w = BitWriter::new();
+    w.put_exp_golomb(1 << 40);
+    let mut bytes = w.finish();
+    bytes.resize(16, 0);
+    let err = sparse::rle_decode(&bytes, 4).unwrap_err();
+    assert!(matches!(err, CodecError::LengthOverflow { .. }), "{err:?}");
+
+    // deepcabac: the count is caller-supplied; the ceiling still applies
+    let err = deepcabac::decode_levels(&[0u8; 16], 1 << 40).unwrap_err();
+    assert!(matches!(err, CodecError::LengthOverflow { .. }), "{err:?}");
+
+    // container: a 16-byte payload under a 2^40-element shape
+    let enc = codec::EncodedTensor {
+        shape: vec![1 << 40],
+        step: 0.02,
+        bits: 4,
+        payload: vec![0u8; 16],
+    };
+    let err = codec::decode_tensor(&enc).unwrap_err();
+    assert!(matches!(err, CodecError::LengthOverflow { .. }), "{err:?}");
+}
+
+#[test]
+fn huffman_bounds_table_size_against_payload() {
+    // nsym beyond what the remaining bits could encode (>= 6 bits/entry)
+    let mut w = BitWriter::new();
+    w.put_exp_golomb(1 << 40);
+    let mut bytes = w.finish();
+    bytes.resize(16, 0);
+    let err = huffman::decode(&bytes).unwrap_err();
+    assert!(
+        matches!(err, CodecError::LengthOverflow { field: "nsym", .. }),
+        "{err:?}"
+    );
+}
+
+fn valid_streams(seed: u64) -> (Vec<i32>, Vec<u8>, Vec<u8>, Vec<u8>, Vec<u8>) {
+    let mut rng = Rng::new(seed);
+    let levels: Vec<i32> = (0..600)
+        .map(|_| {
+            if rng.chance(0.8) {
+                0
+            } else {
+                let m = 1 + rng.below(7) as i32;
+                if rng.chance(0.5) { m } else { -m }
+            }
+        })
+        .collect();
+    let huff = huffman::encode(&levels).unwrap();
+    let cab = deepcabac::encode_levels(&levels);
+    let rle = sparse::rle_encode(&levels, 4);
+    let bytes_i8: Vec<u8> = levels.iter().map(|&l| l as i8 as u8).collect();
+    let defl = deflate::compress(&bytes_i8);
+    (levels, huff, cab, rle, defl)
+}
+
+#[test]
+fn truncation_sweep_every_decoder() {
+    // every prefix of a valid stream decodes totally (Ok or Err, no
+    // panic); prefixes cut inside required payload must not Ok-decode to
+    // the full original
+    let (levels, huff, cab, rle, defl) = valid_streams(41);
+    for cut in 0..huff.len() {
+        if let Ok(out) = huffman::decode(&huff[..cut]) {
+            assert_ne!(out, levels, "truncated huffman stream decoded to the original");
+        }
+    }
+    for cut in 0..cab.len() {
+        // cabac zero-extends by design; totality is the contract here
+        let _ = deepcabac::decode_levels(&cab[..cut], levels.len());
+    }
+    for cut in 0..rle.len() {
+        if let Ok(out) = sparse::rle_decode(&rle[..cut], 4) {
+            assert_ne!(out, levels, "truncated rle stream decoded to the original");
+        }
+    }
+    for cut in 0..defl.len() {
+        assert!(
+            deflate::decompress(&defl[..cut]).is_err(),
+            "deflate truncated at {cut} must fail (checksum/EOF)"
+        );
+    }
+}
+
+#[test]
+fn random_buffers_every_decoder() {
+    prop::check("random buffers decode totally", 40, |rng| {
+        let n = rng.below(300);
+        let buf: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let _ = huffman::decode(&buf);
+        let _ = deepcabac::decode_levels(&buf, rng.below(4096));
+        let _ = sparse::rle_decode(&buf, 1 + rng.below(16) as u32);
+        let _ = deflate::decompress(&buf);
+        let enc = codec::EncodedTensor {
+            shape: vec![rng.below(65536)],
+            step: 0.02,
+            bits: 1 + rng.below(16) as u32,
+            payload: buf,
+        };
+        let _ = codec::decode_tensor(&enc);
+        Ok(())
+    });
+}
+
+#[test]
+fn container_rejects_corrupt_chunk_framing() {
+    let mut rng = Rng::new(7);
+    let cb = Codebook::symmetric(4, 0.02);
+    let nvalid = cb.n_valid();
+    let idx = TensorI32::new(
+        vec![codec::CHUNK_LEVELS + 100],
+        (0..codec::CHUNK_LEVELS + 100)
+            .map(|_| {
+                if rng.chance(0.9) {
+                    0
+                } else {
+                    rng.below(nvalid) as i32
+                }
+            })
+            .collect(),
+    );
+    let good = codec::encode_tensor(&idx, &cb);
+    assert_eq!(codec::decode_tensor(&good).unwrap().data, idx.data);
+
+    // second chunk's length field stomped to overshoot the payload
+    let first_clen = u32::from_le_bytes(good.payload[0..4].try_into().unwrap()) as usize;
+    let second_hdr = 4 + first_clen;
+    let mut bad = good.clone();
+    bad.payload[second_hdr..second_hdr + 4].copy_from_slice(&(u32::MAX / 2).to_le_bytes());
+    assert!(matches!(
+        codec::decode_tensor(&bad),
+        Err(CodecError::LengthOverflow { field: "chunk byte length", .. })
+    ));
+
+    // payload truncated mid-chunk
+    let mut bad = good.clone();
+    bad.payload.truncate(second_hdr + 2);
+    assert!(codec::decode_tensor(&bad).is_err());
+
+    // shape shrunk below the payload's chunk count -> trailing bytes
+    let mut bad = good;
+    bad.shape = vec![100];
+    assert!(codec::decode_tensor(&bad).is_err());
+}
+
+#[test]
+fn zero_extended_tails_terminate() {
+    // the release-mode hang regression: CABAC streams followed by (or
+    // consisting of) zeros drive decode_bypass to return `false` forever;
+    // the bounded exp-golomb prefix must turn that into an error
+    let _ = deepcabac::decode_levels(&[0xFF; 4], 1000); // termination is the assertion
+    let mut cab = deepcabac::encode_levels(&[1000000, -1000000]);
+    cab.extend_from_slice(&[0u8; 64]);
+    let _ = deepcabac::decode_levels(&cab, 4096); // must return, not spin
+}

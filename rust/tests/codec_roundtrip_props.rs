@@ -4,7 +4,7 @@
 //! reference), driven by the offline property harness (`util::prop`).
 
 use ecqx::codec::cabac::{BinDecoder, BinEncoder, BinProb};
-use ecqx::codec::{self, deepcabac, huffman};
+use ecqx::codec::{self, deepcabac, deflate, huffman, sparse};
 use ecqx::quant::{assign_ref, Codebook};
 use ecqx::tensor::TensorI32;
 use ecqx::util::prop;
@@ -29,7 +29,8 @@ fn property_huffman_roundtrip_on_assignments() {
         let lam = rng.range(0.0, 2e-3);
         let (idx, _) = sparse_assignment(rng, n, bits, lam);
         let levels = codec::slots_to_levels(&idx);
-        let decoded = huffman::decode(&huffman::encode(&levels));
+        let bytes = huffman::encode(&levels).map_err(|e| format!("encode: {e}"))?;
+        let decoded = huffman::decode(&bytes).map_err(|e| format!("decode: {e}"))?;
         if decoded != levels {
             return Err("huffman roundtrip mismatch".into());
         }
@@ -46,7 +47,9 @@ fn property_deepcabac_roundtrip_on_assignments() {
         let (idx, _) = sparse_assignment(rng, n, bits, lam);
         let levels = codec::slots_to_levels(&idx);
         let bytes = deepcabac::encode_levels(&levels);
-        if deepcabac::decode_levels(&bytes, levels.len()) != levels {
+        let decoded =
+            deepcabac::decode_levels(&bytes, levels.len()).map_err(|e| format!("{e}"))?;
+        if decoded != levels {
             return Err("deepcabac roundtrip mismatch".into());
         }
         // the paper's compressibility claim: sparse sources stay far
@@ -106,9 +109,69 @@ fn property_tensor_container_roundtrip() {
         let (mut idx, cb) = sparse_assignment(rng, rows * cols, bits, 1e-4);
         idx.shape = vec![rows, cols];
         let enc = codec::encode_tensor(&idx, &cb);
-        let dec = codec::decode_tensor(&enc);
+        let dec = codec::decode_tensor(&enc).map_err(|e| format!("decode: {e}"))?;
         if dec.data != idx.data || dec.shape != idx.shape {
             return Err("tensor container roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_single_bit_flips_never_panic() {
+    // Adversarial mutation sweep: every encoder's output, re-decoded after
+    // flipping each bit position in turn. Each flip must yield Err or a
+    // differing-but-valid payload — a panic anywhere fails the test. Small
+    // streams keep the full sweep (every encoder x every bit) cheap.
+    prop::check("single-bit flips decode totally", 6, |rng| {
+        let n = 32 + rng.below(64);
+        let bits = 2 + (rng.below(4) as u32);
+        let (idx, cb) = sparse_assignment(rng, n, bits, 1e-3);
+        let levels = codec::slots_to_levels(&idx);
+
+        let huff = huffman::encode(&levels).map_err(|e| format!("{e}"))?;
+        for i in 0..huff.len() * 8 {
+            let mut m = huff.clone();
+            m[i / 8] ^= 1 << (i % 8);
+            let _ = huffman::decode(&m); // Ok or Err, never panic
+        }
+
+        let cab = deepcabac::encode_levels(&levels);
+        for i in 0..cab.len() * 8 {
+            let mut m = cab.clone();
+            m[i / 8] ^= 1 << (i % 8);
+            let _ = deepcabac::decode_levels(&m, levels.len());
+        }
+
+        let rle = sparse::rle_encode(&levels, bits);
+        for i in 0..rle.len() * 8 {
+            let mut m = rle.clone();
+            m[i / 8] ^= 1 << (i % 8);
+            let _ = sparse::rle_decode(&m, bits);
+        }
+
+        let bytes_i8: Vec<u8> = levels.iter().map(|&l| l as i8 as u8).collect();
+        let defl = deflate::compress(&bytes_i8);
+        for i in 0..defl.len() * 8 {
+            let mut m = defl.clone();
+            m[i / 8] ^= 1 << (i % 8);
+            let _ = deflate::decompress(&m);
+        }
+
+        let enc = codec::encode_tensor(&idx, &cb);
+        for i in 0..enc.payload.len() * 8 {
+            let mut m = enc.clone();
+            m.payload[i / 8] ^= 1 << (i % 8);
+            if let Ok(dec) = codec::decode_tensor(&m) {
+                // a surviving flip must still be a valid payload of the
+                // declared shape, with every slot on the codebook grid
+                if dec.data.len() != n {
+                    return Err(format!("flip {i}: decoded wrong length"));
+                }
+                if dec.data.iter().any(|&s| s as usize >= cb.values.len()) {
+                    return Err(format!("flip {i}: off-grid slot survived"));
+                }
+            }
         }
         Ok(())
     });

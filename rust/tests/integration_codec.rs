@@ -21,7 +21,7 @@ fn encode_decode_identity_across_bitwidths() {
     for bits in 2..=5u32 {
         let (idx, cb) = realistic_assignment(4096, bits, 2e-4, bits as u64);
         let enc = codec::encode_tensor(&idx, &cb);
-        let dec = codec::decode_tensor(&enc);
+        let dec = codec::decode_tensor(&enc).unwrap();
         assert_eq!(dec.data, idx.data, "bits={bits}");
         assert_eq!(dec.shape, idx.shape);
     }
