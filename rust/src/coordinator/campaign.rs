@@ -12,6 +12,16 @@
 //!    trial id)` — see [`trial_seed`] — never of execution order, and
 //! 2. results are collected into grid order (by trial position), so the
 //!    returned rows are bitwise identical for any `jobs`.
+//!
+//! On top of the determinism contract sits the robustness layer used by
+//! the durable-store sweeps ([`run_with`]): every trial attempt runs
+//! under `catch_unwind`, a failed attempt can be retried with a fresh
+//! re-derived seed ([`RetryPolicy`], [`trial_seed_attempt`]), a trial
+//! that exhausts its attempts can be *quarantined* (recorded as
+//! [`TrialResult::Failed`] while its siblings keep running) instead of
+//! tearing the campaign down, and an external cancellation flag stops new
+//! claims while in-flight trials drain — the graceful-shutdown path
+//! behind `ecqx sweep --resume`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -90,6 +100,19 @@ impl Grid {
     }
 }
 
+/// Bounded retry of failed trial attempts. Attempt `k` (0-based) runs
+/// with the re-derived seed [`trial_seed_attempt`]`(seed, id, k)`, so a
+/// transiently-poisoned random stream cannot fail the same way twice;
+/// attempt 0 uses the classic [`trial_seed`], keeping deterministic trial
+/// functions bitwise-stable across retry policies.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RetryPolicy {
+    /// extra attempts after the first (0 = fail on first error)
+    pub retries: u32,
+    /// base backoff before attempt k+1, doubling per retry (0 = none)
+    pub backoff_ms: u64,
+}
+
 /// Options controlling the campaign worker pool.
 #[derive(Clone, Copy, Debug)]
 pub struct CampaignOptions {
@@ -102,11 +125,25 @@ pub struct CampaignOptions {
     pub max_in_flight: usize,
     /// campaign-level seed; per-trial seeds derive from it and the trial id
     pub seed: u64,
+    /// retry failed attempts before declaring the trial failed
+    pub retry: RetryPolicy,
+    /// quarantine exhausted trials (record + continue) instead of
+    /// failing the campaign fast
+    pub quarantine: bool,
+    /// emit [`Event::Heartbeat`] every this many trial outcomes (0 = off)
+    pub heartbeat_every: usize,
 }
 
 impl Default for CampaignOptions {
     fn default() -> Self {
-        CampaignOptions { jobs: 1, max_in_flight: 0, seed: 17 }
+        CampaignOptions {
+            jobs: 1,
+            max_in_flight: 0,
+            seed: 17,
+            retry: RetryPolicy::default(),
+            quarantine: false,
+            heartbeat_every: 0,
+        }
     }
 }
 
@@ -127,13 +164,69 @@ pub enum Event {
         /// trial wall-clock seconds
         wall_s: f64,
     },
-    /// a trial failed (the campaign still drains, then errors)
-    Failed {
+    /// an attempt failed and a retry with a re-derived seed follows
+    TrialRetried {
         /// trial id
         id: usize,
-        /// rendered error chain
+        /// rendered error chain of the failed attempt
         error: String,
+        /// 1-based attempt number that just failed
+        attempt: u32,
     },
+    /// a trial exhausted its attempts. Quarantined (siblings continue)
+    /// when [`CampaignOptions::quarantine`] is set, fatal otherwise
+    TrialFailed {
+        /// trial id
+        id: usize,
+        /// rendered error chain of the last attempt
+        error: String,
+        /// attempts consumed (1 + retries actually taken)
+        attempts: u32,
+    },
+    /// periodic progress: emitted after every
+    /// [`CampaignOptions::heartbeat_every`] trial outcomes
+    Heartbeat {
+        /// trials finished successfully so far (this run)
+        done: usize,
+        /// trials quarantined so far (this run)
+        failed: usize,
+        /// trials this run will attempt
+        total: usize,
+    },
+}
+
+/// Terminal outcome of one trial.
+#[derive(Clone, Debug)]
+pub enum TrialResult {
+    /// the trial produced a working point
+    Done(WorkingPoint),
+    /// the trial failed every attempt and was quarantined
+    Failed {
+        /// rendered error chain of the last attempt
+        error: String,
+        /// attempts consumed
+        attempts: u32,
+    },
+}
+
+/// One trial's terminal outcome, tagged with its grid id.
+#[derive(Clone, Debug)]
+pub struct TrialOutcome {
+    /// trial id (grid position)
+    pub id: usize,
+    /// what happened
+    pub result: TrialResult,
+}
+
+/// What a [`run_with`] campaign produced: grid-ordered outcomes for every
+/// trial that ran to completion this invocation. Trials never claimed
+/// (cancelled, or drained after a fatal failure) are simply absent.
+#[derive(Clone, Debug, Default)]
+pub struct CampaignRun {
+    /// terminal outcomes in grid order
+    pub outcomes: Vec<TrialOutcome>,
+    /// true when the cancellation flag stopped the campaign early
+    pub cancelled: bool,
 }
 
 fn trial_context(t: &TrialSpec) -> String {
@@ -155,33 +248,110 @@ pub fn trial_seed(campaign_seed: u64, trial_id: u64) -> u64 {
     r.next_u64()
 }
 
+/// Per-attempt trial seed: attempt 0 is exactly [`trial_seed`] (so retry
+/// policies do not perturb deterministic campaigns), later attempts mix
+/// the attempt index into the campaign seed so a retry sees a fresh,
+/// reproducible stream.
+pub fn trial_seed_attempt(campaign_seed: u64, trial_id: u64, attempt: u32) -> u64 {
+    if attempt == 0 {
+        return trial_seed(campaign_seed, trial_id);
+    }
+    let mixed = campaign_seed ^ (attempt as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+    trial_seed(mixed, trial_id)
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run all attempts of one trial: `catch_unwind` around every attempt (a
+/// panicking trial is an error, not a pool teardown), bounded retries
+/// with doubling backoff, `emit` called for each retry event.
+///
+/// `AssertUnwindSafe` is sound here because a failed attempt's partial
+/// effects are confined to the attempt: trial functions receive shared
+/// state immutably (`F: Fn + Sync`) and build their outputs privately, so
+/// nothing observable is left half-mutated when an unwind is caught.
+fn attempt_trial<F>(
+    t: &TrialSpec,
+    campaign_seed: u64,
+    retry: RetryPolicy,
+    run_trial: &F,
+    mut emit: impl FnMut(Event),
+) -> TrialResult
+where
+    F: Fn(&TrialSpec, u64) -> Result<WorkingPoint> + Sync,
+{
+    let attempts_max = retry.retries.saturating_add(1);
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        if attempt > 1 && retry.backoff_ms > 0 {
+            let shift = (attempt - 2).min(6);
+            std::thread::sleep(std::time::Duration::from_millis(
+                retry.backoff_ms << shift,
+            ));
+        }
+        let seed = trial_seed_attempt(campaign_seed, t.id as u64, attempt - 1);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_trial(t, seed)
+        }))
+        .unwrap_or_else(|p| Err(anyhow!("trial panicked: {}", panic_message(&*p))));
+        match res {
+            Ok(point) => return TrialResult::Done(point),
+            Err(e) if attempt < attempts_max => {
+                emit(Event::TrialRetried {
+                    id: t.id,
+                    error: format!("{e:?}"),
+                    attempt,
+                });
+            }
+            Err(e) => {
+                return TrialResult::Failed { error: format!("{e:?}"), attempts: attempt }
+            }
+        }
+    }
+}
+
 /// Run every trial through `run_trial`, fanning out over `opts.jobs`
-/// scoped worker threads.
+/// scoped worker threads, with panic isolation, bounded retries,
+/// optional quarantine, and cooperative cancellation.
 ///
-/// `run_trial` receives the trial spec and its [`trial_seed`]-derived seed;
-/// it must be a pure function of those (plus shared immutable state such as
-/// the engine and pre-trained snapshot) for the determinism guarantee to
-/// hold. `on_event` is invoked on the calling thread, in completion order,
-/// as trials start and finish — use it to stream progress. The returned
-/// rows are in grid order (trial position), identical for any job count.
+/// `run_trial` receives the trial spec and its per-attempt seed
+/// ([`trial_seed_attempt`]); it must be a pure function of those (plus
+/// shared immutable state) for the determinism guarantee to hold.
+/// `on_event` is invoked on the calling thread, in completion order —
+/// the durable-store sweep uses it to persist each row as it lands.
+/// When `cancel` is set (by a signal handler, a trial cap, or a store
+/// error), workers stop claiming new trials, in-flight trials drain to
+/// their events, and the run returns with `cancelled = true` — resuming
+/// later from a persisted store re-runs exactly the absent trials.
 ///
-/// On trial failure the campaign fails fast: workers stop claiming new
-/// trials, already-running trials drain, and the failed trial's error is
-/// returned (lowest grid position first — claims are handed out in grid
-/// order, so every position before a failure has a result and the error
-/// choice is deterministic).
-pub fn run<F>(
+/// Failure semantics: a trial that exhausts its attempts becomes a
+/// [`TrialResult::Failed`] outcome. With `opts.quarantine` the campaign
+/// keeps going (the paper grid loses one dot, not hours of compute);
+/// without it, workers stop claiming and the caller decides — [`run`]
+/// turns the lowest-grid-position failure into an error, preserving the
+/// classic fail-fast contract.
+pub fn run_with<F>(
     trials: &[TrialSpec],
     opts: &CampaignOptions,
     run_trial: F,
     mut on_event: impl FnMut(&Event),
-) -> Result<Vec<WorkingPoint>>
+    cancel: Option<&AtomicBool>,
+) -> Result<CampaignRun>
 where
     F: Fn(&TrialSpec, u64) -> Result<WorkingPoint> + Sync,
 {
     let n = trials.len();
     if n == 0 {
-        return Ok(Vec::new());
+        return Ok(CampaignRun::default());
     }
     let pos_of: HashMap<usize, usize> =
         trials.iter().enumerate().map(|(pos, t)| (t.id, pos)).collect();
@@ -193,44 +363,71 @@ where
         jobs = jobs.min(opts.max_in_flight.max(1));
     }
     let seed = opts.seed;
+    let retry = opts.retry;
+    let hb = opts.heartbeat_every;
+    let is_cancelled = || cancel.map_or(false, |c| c.load(Ordering::Relaxed));
     if jobs == 1 {
         // strictly serial: run on the caller's thread (no worker, so
-        // trial output and streamed events stay in order) and fail fast
-        let mut points = Vec::with_capacity(n);
+        // trial output and streamed events stay in order)
+        let mut outcomes = Vec::with_capacity(n);
+        let (mut done, mut failed) = (0usize, 0usize);
+        let mut cancelled = false;
         for t in trials {
+            if is_cancelled() {
+                cancelled = true;
+                break;
+            }
             on_event(&Event::Started { id: t.id });
             let t0 = std::time::Instant::now();
-            match run_trial(t, trial_seed(seed, t.id as u64)) {
-                Ok(point) => {
+            let result = attempt_trial(t, seed, retry, &run_trial, |ev| on_event(&ev));
+            let is_failed = match &result {
+                TrialResult::Done(point) => {
+                    done += 1;
                     on_event(&Event::Finished {
                         id: t.id,
                         point: point.clone(),
                         wall_s: t0.elapsed().as_secs_f64(),
                     });
-                    points.push(point);
+                    false
                 }
-                Err(e) => {
-                    on_event(&Event::Failed { id: t.id, error: format!("{e:?}") });
-                    return Err(e).with_context(|| trial_context(t));
+                TrialResult::Failed { error, attempts } => {
+                    failed += 1;
+                    on_event(&Event::TrialFailed {
+                        id: t.id,
+                        error: error.clone(),
+                        attempts: *attempts,
+                    });
+                    true
                 }
+            };
+            outcomes.push(TrialOutcome { id: t.id, result });
+            if hb > 0 && (done + failed) % hb == 0 {
+                on_event(&Event::Heartbeat { done, failed, total: n });
+            }
+            if is_failed && !opts.quarantine {
+                break; // fail fast: stop claiming further trials
             }
         }
-        return Ok(points);
+        return Ok(CampaignRun { outcomes, cancelled });
     }
     let next = AtomicUsize::new(0);
     let stop = AtomicBool::new(false);
     let (tx, rx) = mpsc::channel::<Event>();
-    let mut slots: Vec<Option<Result<WorkingPoint>>> = (0..n).map(|_| None).collect();
+    let mut slots: Vec<Option<TrialResult>> = (0..n).map(|_| None).collect();
     std::thread::scope(|s| {
         for _ in 0..jobs {
             let tx = tx.clone();
             let next = &next;
             let stop = &stop;
             let run_trial = &run_trial;
+            let quarantine = opts.quarantine;
             s.spawn(move || loop {
-                // check stop BEFORE claiming: a claimed index must always
-                // run to an event, or the result prefix would have holes
-                if stop.load(Ordering::Relaxed) {
+                // check stop/cancel BEFORE claiming: a claimed index must
+                // always run to an event, or the result set would have
+                // silent holes that look like completed-and-lost trials
+                if stop.load(Ordering::Relaxed)
+                    || cancel.map_or(false, |c| c.load(Ordering::Relaxed))
+                {
                     break;
                 }
                 let i = next.fetch_add(1, Ordering::Relaxed);
@@ -242,16 +439,21 @@ where
                     break;
                 }
                 let t0 = std::time::Instant::now();
-                let ev = match run_trial(t, trial_seed(seed, t.id as u64)) {
-                    Ok(point) => Event::Finished {
+                let result = attempt_trial(t, seed, retry, run_trial, |ev| {
+                    let _ = tx.send(ev);
+                });
+                let ev = match result {
+                    TrialResult::Done(point) => Event::Finished {
                         id: t.id,
                         point,
                         wall_s: t0.elapsed().as_secs_f64(),
                     },
-                    Err(e) => {
-                        // fail fast: no new claims; running trials drain
-                        stop.store(true, Ordering::Relaxed);
-                        Event::Failed { id: t.id, error: format!("{e:?}") }
+                    TrialResult::Failed { error, attempts } => {
+                        if !quarantine {
+                            // fail fast: no new claims; running trials drain
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                        Event::TrialFailed { id: t.id, error, attempts }
                     }
                 };
                 if tx.send(ev).is_err() {
@@ -261,45 +463,76 @@ where
         }
         drop(tx);
         // collector: stream events to the caller, file results by position
+        let (mut done, mut failed) = (0usize, 0usize);
         for ev in rx {
-            match &ev {
+            let outcome = match &ev {
                 Event::Finished { id, point, .. } => {
-                    slots[pos_of[id]] = Some(Ok(point.clone()));
+                    slots[pos_of[id]] = Some(TrialResult::Done(point.clone()));
+                    done += 1;
+                    true
                 }
-                Event::Failed { id, error } => {
-                    slots[pos_of[id]] = Some(Err(anyhow!("{error}")));
+                Event::TrialFailed { id, error, attempts } => {
+                    slots[pos_of[id]] = Some(TrialResult::Failed {
+                        error: error.clone(),
+                        attempts: *attempts,
+                    });
+                    failed += 1;
+                    true
                 }
-                Event::Started { .. } => {}
-            }
+                _ => false,
+            };
             on_event(&ev);
+            if outcome && hb > 0 && (done + failed) % hb == 0 {
+                on_event(&Event::Heartbeat { done, failed, total: n });
+            }
         }
     });
-    // lowest-position error wins; a None slot is only legitimate when the
-    // campaign stopped early after a failure elsewhere, so errors are
-    // preferred over missing-result complaints
-    let mut points = Vec::with_capacity(n);
-    let mut first_err: Option<(usize, anyhow::Error)> = None;
-    let mut first_missing: Option<usize> = None;
-    for (pos, slot) in slots.into_iter().enumerate() {
-        match slot {
-            Some(Ok(p)) => points.push(p),
-            Some(Err(e)) => {
-                if first_err.is_none() {
-                    first_err = Some((pos, e));
-                }
+    let outcomes = slots
+        .into_iter()
+        .enumerate()
+        .filter_map(|(pos, slot)| {
+            slot.map(|result| TrialOutcome { id: trials[pos].id, result })
+        })
+        .collect();
+    Ok(CampaignRun { outcomes, cancelled: is_cancelled() })
+}
+
+/// Classic strict campaign: every trial must succeed; the rows come back
+/// in grid order, bitwise identical for any job count.
+///
+/// Thin wrapper over [`run_with`] (no cancellation) that converts the
+/// lowest-grid-position failure into an error — claims are handed out in
+/// grid order, so every position before a failure has a result and the
+/// error choice is deterministic.
+pub fn run<F>(
+    trials: &[TrialSpec],
+    opts: &CampaignOptions,
+    run_trial: F,
+    on_event: impl FnMut(&Event),
+) -> Result<Vec<WorkingPoint>>
+where
+    F: Fn(&TrialSpec, u64) -> Result<WorkingPoint> + Sync,
+{
+    let by_id: HashMap<usize, &TrialSpec> = trials.iter().map(|t| (t.id, t)).collect();
+    let run = run_with(trials, opts, run_trial, on_event, None)?;
+    // outcomes are grid-ordered, so the first failure is the lowest position
+    let mut got: HashMap<usize, WorkingPoint> = HashMap::with_capacity(trials.len());
+    for o in run.outcomes {
+        match o.result {
+            TrialResult::Done(p) => {
+                got.insert(o.id, p);
             }
-            None => {
-                if first_missing.is_none() {
-                    first_missing = Some(pos);
-                }
+            TrialResult::Failed { error, .. } => {
+                return Err(anyhow!("{error}")).with_context(|| trial_context(by_id[&o.id]));
             }
         }
     }
-    if let Some((pos, e)) = first_err {
-        return Err(e).with_context(|| trial_context(&trials[pos]));
-    }
-    if let Some(pos) = first_missing {
-        anyhow::bail!("campaign trial {} never produced a result", trials[pos].id);
+    let mut points = Vec::with_capacity(trials.len());
+    for t in trials {
+        match got.remove(&t.id) {
+            Some(p) => points.push(p),
+            None => anyhow::bail!("campaign trial {} never produced a result", t.id),
+        }
     }
     Ok(points)
 }
@@ -340,6 +573,19 @@ mod tests {
         uniq.dedup();
         assert_eq!(uniq.len(), seeds.len(), "per-trial seeds must differ");
         assert_ne!(trial_seed(17, 0), trial_seed(18, 0), "campaign seed matters");
+    }
+
+    #[test]
+    fn attempt_seeds_rederive_per_attempt() {
+        // attempt 0 is the classic trial seed: retry policies must not
+        // perturb deterministic campaigns
+        assert_eq!(trial_seed_attempt(17, 3, 0), trial_seed(17, 3));
+        // later attempts see fresh, reproducible streams
+        let a1 = trial_seed_attempt(17, 3, 1);
+        let a2 = trial_seed_attempt(17, 3, 2);
+        assert_ne!(a1, trial_seed(17, 3));
+        assert_ne!(a1, a2);
+        assert_eq!(a1, trial_seed_attempt(17, 3, 1));
     }
 
     #[test]

@@ -5,12 +5,14 @@
 pub mod assign;
 pub mod binder;
 pub mod campaign;
+pub mod store;
 pub mod sweep;
 pub mod trainer;
 
 pub use assign::{AssignConfig, Assigner, Method};
-pub use campaign::{CampaignOptions, Grid, TrialSpec};
-pub use sweep::{SweepConfig, SweepRunner};
+pub use campaign::{CampaignOptions, Grid, RetryPolicy, TrialSpec};
+pub use store::ResultStore;
+pub use sweep::{SweepConfig, SweepRunner, StoreSweepOptions, StoreSweepOutcome};
 pub use trainer::{EvalResult, Pretrainer, QatConfig, QatTrainer};
 
 use crate::codec;

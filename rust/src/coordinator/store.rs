@@ -1,0 +1,786 @@
+//! Durable campaign results: an append-only JSONL store that survives
+//! anything short of disk loss, and the resume / shard / merge logic
+//! built on top of it.
+//!
+//! ## On-disk format (DESIGN.md §2.5)
+//!
+//! One line per record. The first line is a `meta` record binding the
+//! store to a campaign identity — model, backend, campaign seed, and a
+//! fingerprint of the trial grid — so a store can never silently be
+//! resumed against a different campaign. Every following line is a `row`
+//! record: the terminal outcome of one trial, keyed by the working-point
+//! hash of `(campaign seed, method, bits, lambda, p, model, backend)`.
+//!
+//! Every line is *sealed*: its body is suffixed with
+//! `,"crc":"<fnv1a64 of body, 16 hex>"}`. The file itself is only ever
+//! replaced whole via tmp-file + atomic rename ([`crate::util::fsx`]),
+//! so a `kill -9` mid-flush leaves either the previous complete store or
+//! the new complete store. The per-row checksum is the second line of
+//! defence — against torn appends from foreign writers, filesystem-level
+//! corruption, or hand edits: a corrupt **last** line is detected and
+//! dropped (at most one trial re-runs on resume), a corrupt line
+//! anywhere else is an error, never silently skipped.
+//!
+//! Rows carry no timestamps or wall-clock fields: a row's bytes are a
+//! pure function of the trial's inputs, which is what lets the
+//! resume/shard bitwise-identity gate ([`ResultStore::canonical_lines`])
+//! compare whole stores by string equality.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::campaign::{TrialResult, TrialSpec};
+use crate::metrics::WorkingPoint;
+use crate::util::jsonx::{self, Val};
+use crate::util::{fnv1a64, fsx};
+
+/// Campaign identity a store is bound to. Two stores are mergeable and a
+/// store is resumable exactly when these match.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreMeta {
+    /// model name the campaign quantizes
+    pub model: String,
+    /// backend name ("host", "xla", ...)
+    pub backend: String,
+    /// campaign-level seed (per-trial seeds derive from it)
+    pub seed: u64,
+    /// fingerprint of the full trial grid — see [`grid_hash`]
+    pub grid_hash: u64,
+    /// number of trials in the full (unsharded) grid
+    pub n_trials: usize,
+}
+
+/// One persisted trial outcome.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// working-point key — see [`working_point_key`]
+    pub key: u64,
+    /// trial id (grid position)
+    pub id: usize,
+    /// what happened
+    pub result: TrialResult,
+}
+
+/// Seal a JSON body (everything up to but excluding the closing brace)
+/// with its FNV-1a checksum: `{…` → `{…,"crc":"<16 hex>"}`.
+fn seal(body: &str) -> String {
+    format!("{body},\"crc\":\"{:016x}\"}}", fnv1a64(body.as_bytes()))
+}
+
+/// Split a sealed line back into its body and verify the checksum.
+fn unseal(line: &str) -> Result<&str> {
+    const MARK: &str = ",\"crc\":\"";
+    let at = line.rfind(MARK).ok_or_else(|| anyhow!("line has no crc seal"))?;
+    let body = &line[..at];
+    let rest = &line[at + MARK.len()..];
+    let hex = rest
+        .strip_suffix("\"}")
+        .ok_or_else(|| anyhow!("malformed crc seal framing"))?;
+    let stored = u64::from_str_radix(hex, 16)
+        .map_err(|_| anyhow!("crc is not 16 hex digits"))?;
+    if hex.len() != 16 {
+        bail!("crc is not 16 hex digits");
+    }
+    let actual = fnv1a64(body.as_bytes());
+    if stored != actual {
+        bail!("crc mismatch: stored {stored:016x}, computed {actual:016x}");
+    }
+    Ok(body)
+}
+
+impl StoreMeta {
+    fn to_line(&self) -> String {
+        // the u64 seed is stored as a string: it can exceed 2^53, and the
+        // store must not depend on any reader's float-free integer range
+        let body = format!(
+            "{{\"kind\":\"meta\",\"v\":1,\"model\":{},\"backend\":{},\"seed\":\"{}\",\
+             \"grid\":\"{:016x}\",\"trials\":{}",
+            jsonx::quote(&self.model),
+            jsonx::quote(&self.backend),
+            self.seed,
+            self.grid_hash,
+            self.n_trials
+        );
+        seal(&body)
+    }
+
+    fn from_json(obj: &BTreeMap<String, Val>) -> Result<StoreMeta> {
+        let v: u32 = field_num(obj, "v")?;
+        if v != 1 {
+            bail!("unsupported store version {v}");
+        }
+        Ok(StoreMeta {
+            model: field_str(obj, "model")?.to_string(),
+            backend: field_str(obj, "backend")?.to_string(),
+            seed: field_num(obj, "seed")?,
+            grid_hash: field_hex(obj, "grid")?,
+            n_trials: field_num(obj, "trials")?,
+        })
+    }
+}
+
+fn field<'a>(obj: &'a BTreeMap<String, Val>, k: &str) -> Result<&'a Val> {
+    obj.get(k).ok_or_else(|| anyhow!("missing field {k:?}"))
+}
+
+fn field_str<'a>(obj: &'a BTreeMap<String, Val>, k: &str) -> Result<&'a str> {
+    field(obj, k)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field {k:?} must be a string"))
+}
+
+fn field_num<T: std::str::FromStr>(obj: &BTreeMap<String, Val>, k: &str) -> Result<T> {
+    field(obj, k)?
+        .num()
+        .ok_or_else(|| anyhow!("field {k:?} is not a valid number"))
+}
+
+fn field_hex(obj: &BTreeMap<String, Val>, k: &str) -> Result<u64> {
+    let s = field_str(obj, k)?;
+    u64::from_str_radix(s, 16).map_err(|_| anyhow!("field {k:?} is not hex"))
+}
+
+impl Row {
+    /// Serialize to one sealed JSONL line. Byte-deterministic: two rows
+    /// for the same trial outcome are identical strings.
+    pub fn to_line(&self) -> String {
+        let head = format!(
+            "{{\"kind\":\"row\",\"k\":\"{:016x}\",\"id\":{}",
+            self.key, self.id
+        );
+        let body = match &self.result {
+            TrialResult::Done(p) => {
+                format!("{head},\"status\":\"done\",{}", p.json_fields())
+            }
+            TrialResult::Failed { error, attempts } => format!(
+                "{head},\"status\":\"failed\",\"attempts\":{attempts},\"error\":{}",
+                jsonx::quote(error)
+            ),
+        };
+        seal(&body)
+    }
+
+    fn from_json(obj: &BTreeMap<String, Val>) -> Result<Row> {
+        let key = field_hex(obj, "k")?;
+        let id = field_num(obj, "id")?;
+        let result = match field_str(obj, "status")? {
+            "done" => TrialResult::Done(WorkingPoint::from_json(obj)?),
+            "failed" => TrialResult::Failed {
+                error: field_str(obj, "error")?.to_string(),
+                attempts: field_num(obj, "attempts")?,
+            },
+            other => bail!("unknown row status {other:?}"),
+        };
+        Ok(Row { key, id, result })
+    }
+}
+
+enum Record {
+    Meta(StoreMeta),
+    Row(Row),
+}
+
+fn parse_record(line: &str) -> Result<Record> {
+    let body = unseal(line)?;
+    let obj = jsonx::parse_object(&format!("{body}}}")).map_err(|e| anyhow!(e))?;
+    match field_str(&obj, "kind")? {
+        "meta" => Ok(Record::Meta(StoreMeta::from_json(&obj)?)),
+        "row" => Ok(Record::Row(Row::from_json(&obj)?)),
+        other => bail!("unknown record kind {other:?}"),
+    }
+}
+
+/// The durable results store: campaign meta + rows, mirrored to a JSONL
+/// file on every append via atomic whole-file replace.
+#[derive(Debug)]
+pub struct ResultStore {
+    path: PathBuf,
+    meta: Option<StoreMeta>,
+    rows: Vec<Row>,
+    dropped_tail: bool,
+}
+
+impl ResultStore {
+    /// Open `path` if it exists (validating every line), otherwise start
+    /// an empty store that will be created on the first flush.
+    pub fn open_or_create(path: &Path) -> Result<ResultStore> {
+        if path.exists() {
+            Self::open_existing(path)
+        } else {
+            Ok(ResultStore {
+                path: path.to_path_buf(),
+                meta: None,
+                rows: Vec::new(),
+                dropped_tail: false,
+            })
+        }
+    }
+
+    /// Open an existing store file; errors if it is missing or invalid.
+    pub fn open_existing(path: &Path) -> Result<ResultStore> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read results store {}", path.display()))?;
+        let mut meta: Option<StoreMeta> = None;
+        let mut rows: Vec<Row> = Vec::new();
+        let mut dropped_tail = false;
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        for (i, line) in lines.iter().enumerate() {
+            match parse_record(line) {
+                Ok(Record::Meta(m)) => {
+                    if meta.is_some() || !rows.is_empty() {
+                        bail!(
+                            "{}: line {}: meta record must be the first line",
+                            path.display(),
+                            i + 1
+                        );
+                    }
+                    meta = Some(m);
+                }
+                Ok(Record::Row(r)) => {
+                    if meta.is_none() {
+                        bail!(
+                            "{}: line {}: row before meta record",
+                            path.display(),
+                            i + 1
+                        );
+                    }
+                    rows.push(r);
+                }
+                Err(e) if i + 1 == lines.len() => {
+                    // torn tail: a foreign append died mid-line. Drop it —
+                    // at worst one trial re-runs on resume.
+                    eprintln!(
+                        "[store] {}: dropping truncated tail line ({e:#})",
+                        path.display()
+                    );
+                    dropped_tail = true;
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "{}: line {} is corrupt (not the tail — refusing to \
+                             silently drop completed results)",
+                            path.display(),
+                            i + 1
+                        )
+                    })
+                }
+            }
+        }
+        Ok(ResultStore { path: path.to_path_buf(), meta, rows, dropped_tail })
+    }
+
+    /// Bind the store to a campaign identity. A fresh store adopts `meta`
+    /// and flushes; an existing store must match exactly, else this is a
+    /// wrong-campaign resume and we refuse.
+    pub fn ensure_meta(&mut self, meta: &StoreMeta) -> Result<()> {
+        match &self.meta {
+            Some(have) if have == meta => Ok(()),
+            Some(have) => bail!(
+                "store {} belongs to a different campaign: \
+                 store has model={} backend={} seed={} grid={:016x} trials={}, \
+                 this run has model={} backend={} seed={} grid={:016x} trials={}",
+                self.path.display(),
+                have.model,
+                have.backend,
+                have.seed,
+                have.grid_hash,
+                have.n_trials,
+                meta.model,
+                meta.backend,
+                meta.seed,
+                meta.grid_hash,
+                meta.n_trials
+            ),
+            None => {
+                self.meta = Some(meta.clone());
+                self.flush()
+            }
+        }
+    }
+
+    /// Record one trial outcome and mirror the store to disk immediately
+    /// — after this returns, the row survives `kill -9`.
+    pub fn append(&mut self, row: Row) -> Result<()> {
+        self.rows.push(row);
+        self.flush()
+    }
+
+    /// Rewrite the backing file atomically (tmp + rename). The store is
+    /// small (one line per trial), so whole-file replace keeps the
+    /// crash-safety argument trivial: the destination path always holds a
+    /// complete, checksummed store.
+    pub fn flush(&self) -> Result<()> {
+        fsx::atomic_write_with(&self.path, |w| {
+            use std::io::Write;
+            if let Some(m) = &self.meta {
+                writeln!(w, "{}", m.to_line())?;
+            }
+            for r in &self.rows {
+                writeln!(w, "{}", r.to_line())?;
+            }
+            Ok(())
+        })
+        .with_context(|| format!("flush results store {}", self.path.display()))
+    }
+
+    /// The campaign identity, if the store has one yet.
+    pub fn meta(&self) -> Option<&StoreMeta> {
+        self.meta.as_ref()
+    }
+
+    /// All rows in append order (including superseded ones).
+    pub fn rows(&self) -> &[Row] {
+        &self.rows
+    }
+
+    /// Path of the backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// True when loading dropped a truncated tail line.
+    pub fn dropped_tail(&self) -> bool {
+        self.dropped_tail
+    }
+
+    /// Latest outcome per trial id. `Done` supersedes `Failed` (a
+    /// quarantined trial that later succeeds on resume is healed); among
+    /// rows of equal status the last append wins.
+    pub fn latest_by_id(&self) -> BTreeMap<usize, &Row> {
+        let mut out: BTreeMap<usize, &Row> = BTreeMap::new();
+        for r in &self.rows {
+            match out.get(&r.id) {
+                Some(prev)
+                    if matches!(prev.result, TrialResult::Done(_))
+                        && matches!(r.result, TrialResult::Failed { .. }) => {}
+                _ => {
+                    out.insert(r.id, r);
+                }
+            }
+        }
+        out
+    }
+
+    /// Working-point keys of successfully completed trials — resume
+    /// skips exactly these. Failed (quarantined) trials are *not* here:
+    /// a resume retries them.
+    pub fn done_keys(&self) -> BTreeSet<u64> {
+        self.latest_by_id()
+            .values()
+            .filter(|r| matches!(r.result, TrialResult::Done(_)))
+            .map(|r| r.key)
+            .collect()
+    }
+
+    /// Completed working points in grid (trial id) order.
+    pub fn done_points(&self) -> Vec<(usize, WorkingPoint)> {
+        self.latest_by_id()
+            .into_iter()
+            .filter_map(|(id, r)| match &r.result {
+                TrialResult::Done(p) => Some((id, p.clone())),
+                TrialResult::Failed { .. } => None,
+            })
+            .collect()
+    }
+
+    /// Quarantined trials (latest outcome is a failure), grid order.
+    pub fn quarantined(&self) -> Vec<(usize, String, u32)> {
+        self.latest_by_id()
+            .into_iter()
+            .filter_map(|(id, r)| match &r.result {
+                TrialResult::Failed { error, attempts } => {
+                    Some((id, error.clone(), *attempts))
+                }
+                TrialResult::Done(_) => None,
+            })
+            .collect()
+    }
+
+    /// Canonical serialized form: latest row per trial, sorted by id, one
+    /// sealed line each. Two stores describe the same campaign results
+    /// iff these line vectors are equal — the bitwise-identity gate for
+    /// resume and shard-union runs.
+    pub fn canonical_lines(&self) -> Vec<String> {
+        self.latest_by_id().values().map(|r| r.to_line()).collect()
+    }
+}
+
+/// Merge shard stores into one row set. All metas must match; `Done`
+/// supersedes `Failed` per trial id; two *different* `Done` rows for the
+/// same id mean the shards disagree about a completed trial — that is
+/// corruption or a seed mismatch, and the merge refuses.
+pub fn merge(stores: &[ResultStore]) -> Result<(StoreMeta, Vec<Row>)> {
+    let first = stores
+        .first()
+        .ok_or_else(|| anyhow!("merge needs at least one store"))?;
+    let meta = first
+        .meta()
+        .ok_or_else(|| anyhow!("store {} has no meta record", first.path().display()))?
+        .clone();
+    let mut by_id: BTreeMap<usize, Row> = BTreeMap::new();
+    for s in stores {
+        let m = s
+            .meta()
+            .ok_or_else(|| anyhow!("store {} has no meta record", s.path().display()))?;
+        if *m != meta {
+            bail!(
+                "store {} belongs to a different campaign than {}",
+                s.path().display(),
+                first.path().display()
+            );
+        }
+        for (id, r) in s.latest_by_id() {
+            match by_id.get(&id) {
+                None => {
+                    by_id.insert(id, r.clone());
+                }
+                Some(prev) => match (&prev.result, &r.result) {
+                    (TrialResult::Done(_), TrialResult::Done(_)) => {
+                        if prev.to_line() != r.to_line() {
+                            bail!(
+                                "conflicting completed rows for trial {id} across \
+                                 stores (results differ — wrong seed or corrupt shard?)"
+                            );
+                        }
+                    }
+                    (TrialResult::Done(_), TrialResult::Failed { .. }) => {}
+                    _ => {
+                        by_id.insert(id, r.clone());
+                    }
+                },
+            }
+        }
+    }
+    Ok((meta, by_id.into_values().collect()))
+}
+
+/// Working-point key: a stable 64-bit fingerprint of everything that
+/// determines a trial's result. Floats enter by bit pattern, not by
+/// formatting, so `0.1f32` and a re-parsed `0.1` always agree.
+pub fn working_point_key(
+    model: &str,
+    backend: &str,
+    seed: u64,
+    method: &str,
+    bits: u32,
+    lambda: f32,
+    p: f64,
+) -> u64 {
+    let canon = format!(
+        "{model}|{backend}|{seed}|{method}|{bits}|{:08x}|{:016x}",
+        lambda.to_bits(),
+        p.to_bits()
+    );
+    fnv1a64(canon.as_bytes())
+}
+
+/// [`working_point_key`] for a grid trial.
+pub fn trial_key(meta: &StoreMeta, t: &TrialSpec) -> u64 {
+    working_point_key(
+        &meta.model,
+        &meta.backend,
+        meta.seed,
+        t.method.as_str(),
+        t.bits,
+        t.lambda,
+        t.p,
+    )
+}
+
+/// Fingerprint of a trial grid: order-sensitive digest of every trial's
+/// id and hyperparameters. Resuming with a different grid (different
+/// lambda list, bit set, ...) changes this and is refused.
+pub fn grid_hash(trials: &[TrialSpec]) -> u64 {
+    let mut canon = String::new();
+    for t in trials {
+        canon.push_str(&format!(
+            "{}:{}:{}:{:08x}:{:016x};",
+            t.id,
+            t.method.as_str(),
+            t.bits,
+            t.lambda.to_bits(),
+            t.p.to_bits()
+        ));
+    }
+    fnv1a64(canon.as_bytes())
+}
+
+/// Parse a `--shard i/n` spec: zero-based index `i` of `n` partitions.
+pub fn parse_shard(s: &str) -> Result<(usize, usize)> {
+    let (i, n) = s
+        .split_once('/')
+        .ok_or_else(|| anyhow!("shard spec must be i/n, e.g. 0/4 (got {s:?})"))?;
+    let i: usize = i
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("shard index {i:?} is not an integer"))?;
+    let n: usize = n
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("shard count {n:?} is not an integer"))?;
+    if n == 0 {
+        bail!("shard count must be >= 1");
+    }
+    if i >= n {
+        bail!("shard index {i} out of range for {n} shards (use 0..{})", n - 1);
+    }
+    Ok((i, n))
+}
+
+/// The subset of `trials` shard `i` of `n` owns: deterministic partition
+/// by trial id (`id % n == i`), independent of job count or timing.
+pub fn shard_trials(trials: &[TrialSpec], i: usize, n: usize) -> Vec<TrialSpec> {
+    trials.iter().filter(|t| t.id % n == i).cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+
+    use super::*;
+    use crate::coordinator::assign::Method;
+
+    fn wp(lambda: f32) -> WorkingPoint {
+        WorkingPoint {
+            method: "ECQx".into(),
+            bits: 4,
+            lambda,
+            p: 0.3,
+            accuracy: 0.9125,
+            acc_drop: -0.0125,
+            sparsity: 0.8,
+            size_bytes: 10_000,
+            compression_ratio: 12.5,
+        }
+    }
+
+    fn meta() -> StoreMeta {
+        StoreMeta {
+            model: "mlp_gsc".into(),
+            backend: "host".into(),
+            seed: u64::MAX - 3, // above 2^53: exercises string-seed storage
+            grid_hash: 0xdead_beef_cafe_f00d,
+            n_trials: 4,
+        }
+    }
+
+    fn row(id: usize, result: TrialResult) -> Row {
+        Row { key: 0x1000 + id as u64, id, result }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ecqx-store-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrips_meta_and_rows() {
+        let p = tmp("roundtrip.jsonl");
+        std::fs::remove_file(&p).ok();
+        let mut s = ResultStore::open_or_create(&p).unwrap();
+        s.ensure_meta(&meta()).unwrap();
+        s.append(row(0, TrialResult::Done(wp(0.02)))).unwrap();
+        s.append(row(
+            1,
+            TrialResult::Failed { error: "trial panicked: \"boom\"\nline2".into(), attempts: 3 },
+        ))
+        .unwrap();
+        let back = ResultStore::open_existing(&p).unwrap();
+        assert_eq!(back.meta(), Some(&meta()));
+        assert!(!back.dropped_tail());
+        assert_eq!(back.rows().len(), 2);
+        assert_eq!(back.canonical_lines(), s.canonical_lines());
+        let done = back.done_points();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].0, 0);
+        assert_eq!(done[0].1.lambda.to_bits(), 0.02f32.to_bits());
+        let q = back.quarantined();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].0, 1);
+        assert!(q[0].1.contains("boom"));
+        assert_eq!(q[0].2, 3);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_tail_is_dropped_not_fatal() {
+        let p = tmp("tail.jsonl");
+        std::fs::remove_file(&p).ok();
+        let mut s = ResultStore::open_or_create(&p).unwrap();
+        s.ensure_meta(&meta()).unwrap();
+        s.append(row(0, TrialResult::Done(wp(0.0)))).unwrap();
+        s.append(row(1, TrialResult::Done(wp(0.1)))).unwrap();
+        // simulate a foreign writer dying mid-append
+        let text = std::fs::read_to_string(&p).unwrap();
+        let cut = text.len() - 10;
+        std::fs::write(&p, &text[..cut]).unwrap();
+        let back = ResultStore::open_existing(&p).unwrap();
+        assert!(back.dropped_tail());
+        assert_eq!(back.rows().len(), 1, "only the torn row is lost");
+        assert_eq!(back.rows()[0].id, 0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mid_file_corruption_is_fatal() {
+        let p = tmp("midfile.jsonl");
+        std::fs::remove_file(&p).ok();
+        let mut s = ResultStore::open_or_create(&p).unwrap();
+        s.ensure_meta(&meta()).unwrap();
+        s.append(row(0, TrialResult::Done(wp(0.0)))).unwrap();
+        s.append(row(1, TrialResult::Done(wp(0.1)))).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let mut lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        // flip one byte inside the first row's payload (not the tail line)
+        let bytes = unsafe { lines[1].as_bytes_mut() };
+        bytes[20] ^= 1;
+        std::fs::write(&p, lines.join("\n")).unwrap();
+        let err = ResultStore::open_existing(&p).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("refusing"), "{msg}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn crc_catches_any_single_bit_flip_in_tail() {
+        let r = row(7, TrialResult::Done(wp(0.25)));
+        let line = r.to_line();
+        assert!(unseal(&line).is_ok());
+        // flip each byte of the body once; the seal must always catch it
+        for i in 0..line.rfind(",\"crc\":\"").unwrap() {
+            let mut b = line.clone().into_bytes();
+            b[i] ^= 0x01;
+            if let Ok(bad) = String::from_utf8(b) {
+                assert!(
+                    parse_record(&bad).is_err(),
+                    "bit flip at byte {i} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resume_against_wrong_campaign_is_refused() {
+        let p = tmp("wrongmeta.jsonl");
+        std::fs::remove_file(&p).ok();
+        let mut s = ResultStore::open_or_create(&p).unwrap();
+        s.ensure_meta(&meta()).unwrap();
+        let mut other = meta();
+        other.seed ^= 1;
+        let err = s.ensure_meta(&other).unwrap_err();
+        assert!(format!("{err:?}").contains("different campaign"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn done_supersedes_failed_and_resume_retries_failures() {
+        let p = tmp("supersede.jsonl");
+        std::fs::remove_file(&p).ok();
+        let mut s = ResultStore::open_or_create(&p).unwrap();
+        s.ensure_meta(&meta()).unwrap();
+        s.append(row(0, TrialResult::Failed { error: "flake".into(), attempts: 1 }))
+            .unwrap();
+        s.append(row(1, TrialResult::Done(wp(0.1)))).unwrap();
+        // failed trials are not "done": resume will retry them
+        assert!(!s.done_keys().contains(&0x1000));
+        assert!(s.done_keys().contains(&0x1001));
+        // the trial later succeeds on resume; Done wins
+        s.append(row(0, TrialResult::Done(wp(0.0)))).unwrap();
+        assert!(s.done_keys().contains(&0x1000));
+        assert!(s.quarantined().is_empty());
+        // and a stale Failed appended after a Done cannot demote it
+        s.append(row(1, TrialResult::Failed { error: "stale".into(), attempts: 1 }))
+            .unwrap();
+        assert!(s.done_keys().contains(&0x1001));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn merge_unions_shards_and_rejects_conflicts() {
+        let pa = tmp("merge-a.jsonl");
+        let pb = tmp("merge-b.jsonl");
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+        let mut a = ResultStore::open_or_create(&pa).unwrap();
+        let mut b = ResultStore::open_or_create(&pb).unwrap();
+        a.ensure_meta(&meta()).unwrap();
+        b.ensure_meta(&meta()).unwrap();
+        a.append(row(0, TrialResult::Done(wp(0.0)))).unwrap();
+        a.append(row(2, TrialResult::Done(wp(0.2)))).unwrap();
+        b.append(row(1, TrialResult::Done(wp(0.1)))).unwrap();
+        b.append(row(3, TrialResult::Failed { error: "q".into(), attempts: 2 }))
+            .unwrap();
+        let (m, rows) = merge(&[a, b]).unwrap();
+        assert_eq!(m, meta());
+        assert_eq!(rows.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        // conflicting Done rows for the same trial are refused
+        let mut c = ResultStore::open_or_create(&pa).unwrap();
+        let mut d = ResultStore::open_or_create(&pb).unwrap();
+        c.ensure_meta(&meta()).unwrap();
+        d.ensure_meta(&meta()).unwrap();
+        c.append(row(0, TrialResult::Done(wp(0.0)))).unwrap();
+        d.append(row(0, TrialResult::Done(wp(0.5)))).unwrap();
+        let err = merge(&[c, d]).unwrap_err();
+        assert!(format!("{err:?}").contains("conflicting"));
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+    }
+
+    #[test]
+    fn working_point_keys_are_distinct_per_axis() {
+        let base = working_point_key("m", "host", 17, "ECQx", 4, 0.02, 0.3);
+        assert_eq!(base, working_point_key("m", "host", 17, "ECQx", 4, 0.02, 0.3));
+        let variants = [
+            working_point_key("m2", "host", 17, "ECQx", 4, 0.02, 0.3),
+            working_point_key("m", "xla", 17, "ECQx", 4, 0.02, 0.3),
+            working_point_key("m", "host", 18, "ECQx", 4, 0.02, 0.3),
+            working_point_key("m", "host", 17, "ECQ", 4, 0.02, 0.3),
+            working_point_key("m", "host", 17, "ECQx", 2, 0.02, 0.3),
+            working_point_key("m", "host", 17, "ECQx", 4, 0.021, 0.3),
+            working_point_key("m", "host", 17, "ECQx", 4, 0.02, 0.31),
+        ];
+        let mut all: HashSet<u64> = variants.iter().copied().collect();
+        all.insert(base);
+        assert_eq!(all.len(), variants.len() + 1, "every axis must perturb the key");
+    }
+
+    #[test]
+    fn shard_partition_is_exact_and_disjoint() {
+        let trials: Vec<TrialSpec> = (0..10)
+            .map(|id| TrialSpec { id, method: Method::Ecqx, bits: 4, lambda: 0.0, p: 0.3 })
+            .collect();
+        assert!(parse_shard("0/1").is_ok());
+        assert_eq!(parse_shard("2/3").unwrap(), (2, 3));
+        assert!(parse_shard("3/3").is_err());
+        assert!(parse_shard("1").is_err());
+        assert!(parse_shard("a/2").is_err());
+        assert!(parse_shard("0/0").is_err());
+        let s0 = shard_trials(&trials, 0, 3);
+        let s1 = shard_trials(&trials, 1, 3);
+        let s2 = shard_trials(&trials, 2, 3);
+        let mut union: Vec<usize> =
+            s0.iter().chain(&s1).chain(&s2).map(|t| t.id).collect();
+        union.sort_unstable();
+        assert_eq!(union, (0..10).collect::<Vec<_>>());
+        assert_eq!(s0.iter().map(|t| t.id).collect::<Vec<_>>(), vec![0, 3, 6, 9]);
+    }
+
+    #[test]
+    fn grid_hash_is_order_and_value_sensitive() {
+        let t = |id, lambda| TrialSpec {
+            id,
+            method: Method::Ecq,
+            bits: 4,
+            lambda,
+            p: 0.3,
+        };
+        let a = grid_hash(&[t(0, 0.0), t(1, 0.1)]);
+        assert_eq!(a, grid_hash(&[t(0, 0.0), t(1, 0.1)]));
+        assert_ne!(a, grid_hash(&[t(1, 0.1), t(0, 0.0)]));
+        assert_ne!(a, grid_hash(&[t(0, 0.0), t(1, 0.2)]));
+        assert_ne!(a, grid_hash(&[t(0, 0.0)]));
+    }
+}

@@ -8,11 +8,15 @@
 //! [`WorkingPoint`]. Rows are identical for any `jobs` count (see the
 //! campaign module's determinism invariants).
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use anyhow::Result;
 
 use super::assign::AssignConfig;
 use super::binder::ParamSource;
-use super::campaign::{self, CampaignOptions, Event, Grid, TrialSpec};
+use super::campaign::{self, CampaignOptions, Event, Grid, RetryPolicy, TrialSpec};
+use super::store::{self, ResultStore, Row, StoreMeta};
 use super::trainer::{evaluate, QatConfig, QatTrainer};
 use super::{compressed_size, compression_ratio, Method};
 use crate::data::{DataLoader, Dataset};
@@ -176,6 +180,182 @@ impl<'e> SweepRunner<'e> {
                 }
             },
         )
+    }
+}
+
+/// Options for a durable (store-backed) sweep campaign.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreSweepOptions {
+    /// worker threads (1 = serial; rows are identical regardless)
+    pub jobs: usize,
+    /// run only shard `(i, n)` of the grid (`id % n == i`); `None` = all
+    pub shard: Option<(usize, usize)>,
+    /// retry policy for failed trial attempts
+    pub retry: RetryPolicy,
+    /// emit a progress heartbeat every this many trial outcomes (0 = off)
+    pub heartbeat_every: usize,
+    /// cancel after this many trial outcomes this run (0 = unlimited).
+    /// With `jobs == 1` exactly this many trials run — the deterministic
+    /// interruption hook behind the resume tests and CI smoke job
+    pub max_trials: usize,
+}
+
+/// What a durable sweep run did (this invocation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreSweepOutcome {
+    /// trials attempted this run
+    pub ran: usize,
+    /// trials skipped because the store already had their results
+    pub skipped: usize,
+    /// trials whose latest outcome (across the whole store) is a failure
+    pub quarantined: usize,
+    /// true when cancellation (external flag or `max_trials`) stopped the
+    /// run before the grid was exhausted
+    pub cancelled: bool,
+}
+
+impl<'e> SweepRunner<'e> {
+    /// Run a grid campaign against a durable [`ResultStore`]: every trial
+    /// outcome is persisted (atomically) the moment it lands, completed
+    /// points already in the store are skipped (resume), an optional
+    /// shard spec restricts this process to its deterministic slice of
+    /// the grid, failed trials are quarantined as store rows instead of
+    /// aborting siblings, and `cancel` stops new claims while in-flight
+    /// trials drain to disk.
+    ///
+    /// Determinism contract: the union of rows across any combination of
+    /// shards, resumes, and job counts is bitwise identical to one
+    /// uninterrupted serial campaign — rows contain no wall-clock fields
+    /// and every trial's inputs derive only from `(cfg.seed, trial id)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_store<D: Dataset>(
+        &self,
+        cfg: &SweepConfig,
+        grid: &Grid,
+        train: &DataLoader<D>,
+        val: &DataLoader<D>,
+        result_store: &mut ResultStore,
+        opts: &StoreSweepOptions,
+        cancel: Option<&AtomicBool>,
+    ) -> Result<StoreSweepOutcome> {
+        let full = grid.trials();
+        let meta = StoreMeta {
+            model: cfg.model.clone(),
+            backend: self.engine.backend_name().to_string(),
+            seed: cfg.seed,
+            grid_hash: store::grid_hash(&full),
+            n_trials: full.len(),
+        };
+        result_store.ensure_meta(&meta)?;
+        let owned = match opts.shard {
+            Some((i, n)) => store::shard_trials(&full, i, n),
+            None => full.clone(),
+        };
+        let done = result_store.done_keys();
+        let pending: Vec<TrialSpec> = owned
+            .iter()
+            .filter(|t| !done.contains(&store::trial_key(&meta, t)))
+            .cloned()
+            .collect();
+        let skipped = owned.len() - pending.len();
+        let key_of: HashMap<usize, u64> =
+            pending.iter().map(|t| (t.id, store::trial_key(&meta, t))).collect();
+        let n_pending = pending.len();
+        let prior_done = done.len();
+        // one flag merges external cancellation (signal, trial cap) with
+        // internal must-stop conditions (a store write failure): workers
+        // poll it before claiming, in-flight trials still drain to disk
+        let local_cancel = AtomicBool::new(false);
+        let cancel_flag = cancel.unwrap_or(&local_cancel);
+        let mut store_err: Option<anyhow::Error> = None;
+        let mut outcomes_seen = 0usize;
+        let mut trial_cfg = cfg.clone();
+        trial_cfg.qat.verbose = cfg.qat.verbose && opts.jobs <= 1;
+        let copts = CampaignOptions {
+            jobs: opts.jobs.max(1),
+            seed: cfg.seed,
+            retry: opts.retry,
+            quarantine: true,
+            heartbeat_every: opts.heartbeat_every,
+            ..Default::default()
+        };
+        let run = campaign::run_with(
+            &pending,
+            &copts,
+            |t, _seed| {
+                self.run_trial_spec(&trial_cfg, t, train, val).map(|(wp, _)| wp)
+            },
+            |ev| {
+                let persist: Option<Row> = match ev {
+                    Event::Finished { id, point, .. } => Some(Row {
+                        key: key_of[id],
+                        id: *id,
+                        result: campaign::TrialResult::Done(point.clone()),
+                    }),
+                    Event::TrialFailed { id, error, attempts } => {
+                        eprintln!(
+                            "[sweep] trial {id} quarantined after {attempts} \
+                             attempt(s): {}",
+                            error.lines().next().unwrap_or("")
+                        );
+                        Some(Row {
+                            key: key_of[id],
+                            id: *id,
+                            result: campaign::TrialResult::Failed {
+                                error: error.clone(),
+                                attempts: *attempts,
+                            },
+                        })
+                    }
+                    Event::TrialRetried { id, error, attempt } => {
+                        eprintln!(
+                            "[sweep] trial {id} attempt {attempt} failed, retrying \
+                             with a fresh seed: {}",
+                            error.lines().next().unwrap_or("")
+                        );
+                        None
+                    }
+                    Event::Heartbeat { done, failed, total } => {
+                        println!(
+                            "[sweep] {}/{} done ({skipped} resumed), {failed} \
+                             quarantined this run ({}/{total} this shard)",
+                            prior_done + done,
+                            meta.n_trials,
+                            done + failed
+                        );
+                        None
+                    }
+                    Event::Started { .. } => None,
+                };
+                if let Some(row) = persist {
+                    outcomes_seen += 1;
+                    if store_err.is_none() {
+                        if let Err(e) = result_store.append(row) {
+                            // stop claiming: results we cannot persist
+                            // would be silently lost on the next crash
+                            store_err = Some(e);
+                            cancel_flag.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    if opts.max_trials > 0 && outcomes_seen >= opts.max_trials {
+                        cancel_flag.store(true, Ordering::Relaxed);
+                    }
+                }
+            },
+            Some(cancel_flag),
+        )?;
+        if let Some(e) = store_err {
+            return Err(e);
+        }
+        // cancelled = this run left owned trials unattempted (quarantine
+        // mode means every *claimed* trial produces an outcome, so any
+        // shortfall is unclaimed work that a resume will pick up)
+        Ok(StoreSweepOutcome {
+            ran: run.outcomes.len(),
+            skipped,
+            quarantined: result_store.quarantined().len(),
+            cancelled: run.outcomes.len() < n_pending,
+        })
     }
 }
 

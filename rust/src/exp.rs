@@ -256,8 +256,11 @@ pub fn pretrained(engine: &Engine, exp: &ModelExp, seed: u64) -> Result<Pretrain
     // the host backend runs with no artifacts/ directory present — create
     // the cache location on demand
     std::fs::create_dir_all(artifacts_dir()).ok();
+    // checkpoint first, meta second, both atomic: a crash between the two
+    // leaves a stale/missing meta, which just re-trains — never a meta
+    // that vouches for a half-written checkpoint
     checkpoint::save_fp(&ckpt, &state.params)?;
-    std::fs::write(&meta, format!("{tag}\n{}\n", ev.accuracy))?;
+    crate::util::fsx::atomic_write(&meta, format!("{tag}\n{}\n", ev.accuracy).as_bytes())?;
     Ok(Pretrained { state, baseline_acc: ev.accuracy })
 }
 

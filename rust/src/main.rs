@@ -6,7 +6,10 @@
 //!   quantize <model> [opts]    one QAT run (ECQ or ECQx)
 //!   sweep <model> [opts]       lambda sweep -> working points CSV
 //!                              (--jobs N fans trials over N workers;
-//!                              rows are identical for any N)
+//!                              rows are identical for any N; --store /
+//!                              --resume / --shard make it crash-safe)
+//!   report <store...>          aggregate durable store(s) -> CSV +
+//!                              candidate selection (shards are merged)
 //!   compress <model>           quantize + write/reload a .ecqx container
 //!                              (--jobs N fans the entropy coding over N
 //!                              workers; the file is identical for any N)
@@ -15,6 +18,12 @@
 //! Options: --backend auto|host|pjrt --model mlp|cnn --method ecq|ecqx
 //!          --bits N --lambda F --p F --epochs N --lr F --seed N
 //!          --jobs N --paper-scale --out PATH
+//! Durable sweeps: --store PATH --resume PATH --shard i/n --retries N
+//!          --backoff-ms N --heartbeat N --max-trials N
+//!
+//! Flag values are validated strictly: an unparseable value
+//! (`--bits four`) or an unknown/typo'd flag (`--resme`) is an error
+//! with a usage hint, never a silent fallback to the default.
 //!
 //! `--backend host` runs the whole pipeline on the pure-rust reference
 //! backend (no artifacts/, no PJRT); `auto` (default) picks PJRT when the
@@ -26,48 +35,166 @@
 //! Full per-flag documentation lives in README.md.
 
 use std::collections::HashMap;
+use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use ecqx::coordinator::binder::ParamSource;
-use ecqx::coordinator::sweep::{select, SweepConfig, SweepRunner};
+use ecqx::coordinator::store::{self, ResultStore};
+use ecqx::coordinator::sweep::{select, StoreSweepOptions, SweepConfig, SweepRunner};
 use ecqx::coordinator::trainer::{evaluate, QatConfig, QatTrainer};
-use ecqx::coordinator::{compressed_size, compression_ratio, AssignConfig, Method};
+use ecqx::coordinator::{
+    compressed_size, compression_ratio, AssignConfig, Grid, Method, RetryPolicy,
+};
 use ecqx::data::DataLoader;
 use ecqx::exp;
 use ecqx::metrics::WorkingPoint;
 use ecqx::nn::checkpoint;
+use ecqx::util::fsx;
+
+/// Flags that never take a value. Everything else consumes the next
+/// token — and *requires* one, so `--seed` at the end of the line is an
+/// error rather than a silently-adopted `"true"`.
+const BOOL_FLAGS: &[&str] = &["paper-scale", "no-grad-scale", "lrp-equal-weight", "help"];
+
+/// QAT hyperparameter flags shared by quantize / sweep / compress.
+const QAT_FLAGS: &[&str] = &[
+    "method",
+    "bits",
+    "lambda",
+    "p",
+    "momentum",
+    "beta0",
+    "epochs",
+    "lr",
+    "lrp-every",
+    "retune-every",
+    "lrp-warmup",
+    "assign-every",
+    "no-grad-scale",
+    "lrp-equal-weight",
+];
+
+const COMMON_FLAGS: &[&str] = &["backend", "model", "seed", "help"];
+
+/// Durable-campaign flags of `ecqx sweep`.
+const STORE_FLAGS: &[&str] = &[
+    "store",
+    "resume",
+    "shard",
+    "retries",
+    "backoff-ms",
+    "heartbeat",
+    "max-trials",
+];
+
+fn allowed_flags(cmd: &str) -> Vec<&'static str> {
+    let mut out: Vec<&'static str> = COMMON_FLAGS.to_vec();
+    match cmd {
+        "smoke" | "pretrain" | "eval" => {}
+        "quantize" => out.extend(QAT_FLAGS),
+        "sweep" => {
+            out.extend(QAT_FLAGS);
+            out.extend(["jobs", "paper-scale", "out"]);
+            out.extend(STORE_FLAGS);
+        }
+        "compress" => {
+            out.extend(QAT_FLAGS);
+            out.extend(["jobs", "out"]);
+        }
+        "report" => out.extend(["out"]),
+        _ => {}
+    }
+    out
+}
 
 struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
 }
 
-fn parse_args() -> Args {
+fn parse_args(argv: &[String]) -> Result<Args> {
     let mut positional = Vec::new();
     let mut flags = HashMap::new();
-    let mut it = std::env::args().skip(1).peekable();
+    let mut it = argv.iter().peekable();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
-            let val = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                it.next().unwrap()
-            } else {
-                "true".to_string()
-            };
-            flags.insert(name.to_string(), val);
+            // --name=value is always unambiguous
+            if let Some((name, val)) = name.split_once('=') {
+                flags.insert(name.to_string(), val.to_string());
+                continue;
+            }
+            if BOOL_FLAGS.contains(&name) {
+                flags.insert(name.to_string(), "true".to_string());
+                continue;
+            }
+            let val = it
+                .peek()
+                .filter(|n| !n.starts_with("--"))
+                .with_context(|| format!("flag --{name} requires a value"))?;
+            flags.insert(name.to_string(), val.to_string());
+            it.next();
         } else {
-            positional.push(a);
+            positional.push(a.clone());
         }
     }
-    Args { positional, flags }
+    Ok(Args { positional, flags })
+}
+
+fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// Reject unknown flags, with a did-you-mean hint for near misses —
+/// `--resme` must be an error, never a silently ignored no-op.
+fn validate_flags(args: &Args, cmd: &str) -> Result<()> {
+    let allowed = allowed_flags(cmd);
+    for name in args.flags.keys() {
+        if allowed.contains(&name.as_str()) {
+            continue;
+        }
+        let near = allowed
+            .iter()
+            .map(|c| (levenshtein(name, c), *c))
+            .min()
+            .filter(|(d, _)| *d <= 2)
+            .map(|(_, c)| format!(" (did you mean --{c}?)"))
+            .unwrap_or_default();
+        bail!(
+            "unknown flag --{name} for `ecqx {cmd}`{near}\n  allowed flags: {}",
+            allowed
+                .iter()
+                .map(|f| format!("--{f}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
+    Ok(())
 }
 
 impl Args {
-    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
-        self.flags
-            .get(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    /// Flag value parsed as `T`, or `default` when absent. An *unparseable*
+    /// value is an error — never a silent fallback to the default.
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "invalid value for --{name}: {v:?} (expected {})",
+                    std::any::type_name::<T>()
+                )
+            }),
+        }
     }
 
     fn has(&self, name: &str) -> bool {
@@ -84,54 +211,63 @@ fn engine_of(args: &Args) -> Result<ecqx::runtime::Engine> {
 }
 
 fn method_of(args: &Args) -> Result<Method> {
-    match args.get::<String>("method", "ecqx".into()).as_str() {
+    match args.get::<String>("method", "ecqx".into())?.as_str() {
         "ecq" => Ok(Method::Ecq),
         "ecqx" => Ok(Method::Ecqx),
         other => bail!("unknown method {other} (use ecq|ecqx)"),
     }
 }
 
-fn qat_config(args: &Args, exp_: &exp::ModelExp, method: Method) -> QatConfig {
-    QatConfig {
+fn qat_config(args: &Args, exp_: &exp::ModelExp, method: Method) -> Result<QatConfig> {
+    Ok(QatConfig {
         assign: AssignConfig {
             method,
-            bits: args.get("bits", 4u32),
-            lambda: args.get("lambda", 0.02f32),
-            p: args.get("p", 0.3f64),
-            momentum: args.get("momentum", 0.95f32),
-            beta0: args.get("beta0", 1.0f32),
+            bits: args.get("bits", 4u32)?,
+            lambda: args.get("lambda", 0.02f32)?,
+            p: args.get("p", 0.3f64)?,
+            momentum: args.get("momentum", 0.95f32)?,
+            beta0: args.get("beta0", 1.0f32)?,
             ..Default::default()
         },
-        epochs: args.get("epochs", exp_.qat_epochs),
-        lr: args.get("lr", exp_.qat_lr),
-        lrp_every: args.get("lrp-every", 2),
-        retune_every: args.get("retune-every", 8),
-        lrp_warmup: args.get("lrp-warmup", 12),
-        assign_every: args.get("assign-every", 2),
+        epochs: args.get("epochs", exp_.qat_epochs)?,
+        lr: args.get("lr", exp_.qat_lr)?,
+        lrp_every: args.get("lrp-every", 2)?,
+        retune_every: args.get("retune-every", 8)?,
+        lrp_warmup: args.get("lrp-warmup", 12)?,
+        assign_every: args.get("assign-every", 2)?,
         grad_scale: !args.has("no-grad-scale"),
         lrp_equal_weight: args.has("lrp-equal-weight"),
         verbose: true,
-    }
+    })
+}
+
+fn usage() -> &'static str {
+    "ecqx — Explainability-Driven Quantization (paper reproduction)\n\n\
+     usage: ecqx <smoke|pretrain|quantize|sweep|report|compress|eval> [args]\n\
+     durable sweeps: ecqx sweep ... --store run.jsonl [--shard i/n]\n\
+                     ecqx sweep ... --resume run.jsonl\n\
+                     ecqx report run.jsonl [more-shards.jsonl ...]\n\
+     see README.md for full per-flag documentation"
 }
 
 fn main() -> Result<()> {
-    let args = parse_args();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&argv)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    if cmd == "help" || args.has("help") {
+        println!("{}", usage());
+        return Ok(());
+    }
+    validate_flags(&args, cmd)?;
     match cmd {
         "smoke" => cmd_smoke(&args),
         "pretrain" => cmd_pretrain(&args),
         "quantize" => cmd_quantize(&args),
         "sweep" => cmd_sweep(&args),
+        "report" => cmd_report(&args),
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
-        _ => {
-            println!(
-                "ecqx — Explainability-Driven Quantization (paper reproduction)\n\n\
-                 usage: ecqx <smoke|pretrain|quantize|sweep|compress|eval> [args]\n\
-                 see `ecqx <cmd> --help` comments in rust/src/main.rs and README.md"
-            );
-            Ok(())
-        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
     }
 }
 
@@ -173,7 +309,7 @@ fn model_arg(args: &Args) -> Result<exp::ModelExp> {
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let exp_ = model_arg(args)?;
     let eng = engine_of(args)?;
-    let seed = args.get("seed", 17u64);
+    let seed = args.get("seed", 17u64)?;
     let pre = exp::pretrained(&eng, &exp_, seed)?;
     println!(
         "pretrained {}: baseline val acc {:.4} ({} params, {:.1} kB fp32)",
@@ -188,7 +324,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
 fn cmd_quantize(args: &Args) -> Result<()> {
     let exp_ = model_arg(args)?;
     let eng = engine_of(args)?;
-    let seed = args.get("seed", 17u64);
+    let seed = args.get("seed", 17u64)?;
     let method = method_of(args)?;
     let pre = exp::pretrained(&eng, &exp_, seed)?;
     let (train, val) = exp::datasets(&exp_, seed);
@@ -196,7 +332,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let train_dl = DataLoader::new(&train, spec.batch, true, seed);
     let val_dl = DataLoader::new(&val, spec.batch, false, seed);
     let mut state = pre.state;
-    let cfg = qat_config(args, &exp_, method);
+    let cfg = qat_config(args, &exp_, method)?;
     let trainer = QatTrainer::new(cfg);
     let out = trainer.run(&eng, &mut state, &train_dl, &val_dl)?;
     let ev = evaluate(&eng, &state, &val_dl, ParamSource::Quantized)?;
@@ -214,10 +350,36 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn print_points(points: &[WorkingPoint]) {
+    println!("\n{}", WorkingPoint::csv_header());
+    for p in points {
+        println!("{}", p.to_csv());
+    }
+    if let Some(best) = select::best_accuracy(points) {
+        println!("\nbest accuracy:        {}", best.to_csv());
+    }
+    if let Some(best) = select::best_cr_no_degradation(points) {
+        println!("best CR (no drop):    {}", best.to_csv());
+    }
+    if let Some(best) = select::best_cr_negligible(points, 0.01) {
+        println!("best CR (negligible): {}", best.to_csv());
+    }
+}
+
+fn write_csv(out: &str, points: &[WorkingPoint]) -> Result<()> {
+    let mut csv = WorkingPoint::csv_header().to_string() + "\n";
+    for p in points {
+        csv += &(p.to_csv() + "\n");
+    }
+    fsx::atomic_write(Path::new(out), csv.as_bytes())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let exp_ = model_arg(args)?;
     let eng = engine_of(args)?;
-    let seed = args.get("seed", 17u64);
+    let seed = args.get("seed", 17u64)?;
     let method = method_of(args)?;
     let scale = if args.has("paper-scale") { exp::Scale::Paper } else { exp::Scale::Bench };
     let pre = exp::pretrained(&eng, &exp_, seed)?;
@@ -226,46 +388,141 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let train_dl = DataLoader::new(&train, spec.batch, true, seed);
     let val_dl = DataLoader::new(&val, spec.batch, false, seed);
     let baseline = pre.baseline_acc;
-    let jobs = args.get("jobs", 1usize).max(1);
+    let jobs = args.get("jobs", 1usize)?.max(1);
     let runner = SweepRunner::new(&eng, pre.state);
     let cfg = SweepConfig {
         model: exp_.name.to_string(),
         method,
-        bits: args.get("bits", 4u32),
+        bits: args.get("bits", 4u32)?,
         lambdas: exp::lambda_grid(scale),
-        p: args.get("p", 0.3f64),
-        qat: qat_config(args, &exp_, method),
+        p: args.get("p", 0.3f64)?,
+        qat: qat_config(args, &exp_, method)?,
         baseline_acc: baseline,
         seed,
     };
-    if jobs > 1 {
-        println!(
-            "[sweep] fanning {} trials over {jobs} workers (rows are \
-             deterministic; identical to --jobs 1)",
-            cfg.lambdas.len()
+    // durable path: --store creates-or-resumes, --resume requires the file
+    let store_path = match (args.flags.get("store"), args.flags.get("resume")) {
+        (Some(_), Some(_)) => bail!("--store and --resume are mutually exclusive"),
+        (Some(s), None) => Some((s.clone(), false)),
+        (None, Some(r)) => Some((r.clone(), true)),
+        (None, None) => None,
+    };
+    if store_path.is_none() {
+        for f in STORE_FLAGS.iter().filter(|f| !matches!(**f, "store" | "resume")) {
+            if args.has(f) {
+                bail!("--{f} requires a durable campaign (--store or --resume)");
+            }
+        }
+        if jobs > 1 {
+            println!(
+                "[sweep] fanning {} trials over {jobs} workers (rows are \
+                 deterministic; identical to --jobs 1)",
+                cfg.lambdas.len()
+            );
+        }
+        let points = runner.run_parallel(&cfg, &train_dl, &val_dl, jobs)?;
+        print_points(&points);
+        if let Some(out) = args.flags.get("out") {
+            write_csv(out, &points)?;
+        }
+        return Ok(());
+    }
+    let (path, must_exist) = store_path.unwrap();
+    let mut rs = if must_exist {
+        ResultStore::open_existing(Path::new(&path))?
+    } else {
+        ResultStore::open_or_create(Path::new(&path))?
+    };
+    let shard = args
+        .flags
+        .get("shard")
+        .map(|s| store::parse_shard(s))
+        .transpose()?;
+    let opts = StoreSweepOptions {
+        jobs,
+        shard,
+        retry: RetryPolicy {
+            retries: args.get("retries", 0u32)?,
+            backoff_ms: args.get("backoff-ms", 0u64)?,
+        },
+        heartbeat_every: args.get("heartbeat", 10usize)?,
+        max_trials: args.get("max-trials", 0usize)?,
+    };
+    let grid = Grid::lambda_sweep(cfg.method, cfg.bits, &cfg.lambdas, cfg.p);
+    println!(
+        "[sweep] durable campaign -> {path} ({} trials{}, jobs={jobs})",
+        grid.len(),
+        shard
+            .map(|(i, n)| format!(", shard {i}/{n}"))
+            .unwrap_or_default()
+    );
+    let outcome = runner.run_store(&cfg, &grid, &train_dl, &val_dl, &mut rs, &opts, None)?;
+    println!(
+        "[sweep] ran {} trial(s), skipped {} already-complete, {} quarantined",
+        outcome.ran, outcome.skipped, outcome.quarantined
+    );
+    for (id, error, attempts) in rs.quarantined() {
+        eprintln!(
+            "[sweep] quarantined trial {id} ({attempts} attempt(s)): {}",
+            error.lines().next().unwrap_or("")
         );
     }
-    let points = runner.run_parallel(&cfg, &train_dl, &val_dl, jobs)?;
-    println!("\n{}", WorkingPoint::csv_header());
-    for p in &points {
-        println!("{}", p.to_csv());
+    if outcome.cancelled {
+        eprintln!(
+            "[sweep] campaign interrupted before completion — all finished \
+             trials are safe in {path}; resume with:\n  ecqx sweep {} --resume {path}",
+            exp_.name
+        );
+        std::process::exit(3);
     }
-    if let Some(best) = select::best_accuracy(&points) {
-        println!("\nbest accuracy:        {}", best.to_csv());
-    }
-    if let Some(best) = select::best_cr_no_degradation(&points) {
-        println!("best CR (no drop):    {}", best.to_csv());
-    }
-    if let Some(best) = select::best_cr_negligible(&points, 0.01) {
-        println!("best CR (negligible): {}", best.to_csv());
-    }
+    let points: Vec<WorkingPoint> = rs.done_points().into_iter().map(|(_, p)| p).collect();
+    print_points(&points);
     if let Some(out) = args.flags.get("out") {
-        let mut csv = WorkingPoint::csv_header().to_string() + "\n";
-        for p in &points {
-            csv += &(p.to_csv() + "\n");
+        write_csv(out, &points)?;
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let paths = &args.positional[1..];
+    if paths.is_empty() {
+        bail!("usage: ecqx report <store.jsonl> [more-shards.jsonl ...] [--out csv]");
+    }
+    let stores: Vec<ResultStore> = paths
+        .iter()
+        .map(|p| ResultStore::open_existing(Path::new(p)))
+        .collect::<Result<_>>()?;
+    let (meta, rows) = store::merge(&stores)?;
+    let mut points: Vec<WorkingPoint> = Vec::new();
+    let mut quarantined: Vec<(usize, String, u32)> = Vec::new();
+    for r in &rows {
+        match &r.result {
+            ecqx::coordinator::campaign::TrialResult::Done(p) => points.push(p.clone()),
+            ecqx::coordinator::campaign::TrialResult::Failed { error, attempts } => {
+                quarantined.push((r.id, error.clone(), *attempts))
+            }
         }
-        std::fs::write(out, csv)?;
-        println!("wrote {out}");
+    }
+    println!(
+        "campaign {} on {} (seed {}): {}/{} trials complete, {} quarantined, \
+         {} missing",
+        meta.model,
+        meta.backend,
+        meta.seed,
+        points.len(),
+        meta.n_trials,
+        quarantined.len(),
+        meta.n_trials - points.len() - quarantined.len()
+    );
+    for (id, error, attempts) in &quarantined {
+        eprintln!(
+            "quarantined trial {id} ({attempts} attempt(s)): {}",
+            error.lines().next().unwrap_or("")
+        );
+    }
+    print_points(&points);
+    if let Some(out) = args.flags.get("out") {
+        write_csv(out, &points)?;
     }
     Ok(())
 }
@@ -273,7 +530,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 fn cmd_compress(args: &Args) -> Result<()> {
     let exp_ = model_arg(args)?;
     let eng = engine_of(args)?;
-    let seed = args.get("seed", 17u64);
+    let seed = args.get("seed", 17u64)?;
     let method = method_of(args)?;
     let pre = exp::pretrained(&eng, &exp_, seed)?;
     let (train, val) = exp::datasets(&exp_, seed);
@@ -281,15 +538,15 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let train_dl = DataLoader::new(&train, spec.batch, true, seed);
     let val_dl = DataLoader::new(&val, spec.batch, false, seed);
     let mut state = pre.state;
-    let trainer = QatTrainer::new(qat_config(args, &exp_, method));
+    let trainer = QatTrainer::new(qat_config(args, &exp_, method)?);
     trainer.run(&eng, &mut state, &train_dl, &val_dl)?;
     let out = args
         .flags
         .get("out")
         .cloned()
         .unwrap_or_else(|| format!("{}.ecqx", exp_.name));
-    let jobs = args.get("jobs", 1usize).max(1);
-    let size = checkpoint::save_quantized_jobs(std::path::Path::new(&out), &state, jobs)?;
+    let jobs = args.get("jobs", 1usize)?.max(1);
+    let size = checkpoint::save_quantized_jobs(Path::new(&out), &state, jobs)?;
     println!(
         "wrote {out}: {:.1} kB on disk (CR {:.1}x vs {:.1} kB fp32)",
         size as f64 / 1000.0,
@@ -311,8 +568,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     }
     .context("missing <file.ecqx>")?;
     let eng = engine_of(args)?;
-    let seed = args.get("seed", 17u64);
-    let qm = checkpoint::load_quantized(std::path::Path::new(path))?;
+    let seed = args.get("seed", 17u64)?;
+    let qm = checkpoint::load_quantized(Path::new(path))?;
     if qm.model != exp_.name {
         bail!("container is for model {} not {}", qm.model, exp_.name);
     }
@@ -343,4 +600,75 @@ fn cmd_eval(args: &Args) -> Result<()> {
         state.quantized_sparsity()
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_parse_values_and_bools() {
+        let a = parse_args(&argv(&[
+            "sweep",
+            "mlp_gsc",
+            "--bits",
+            "2",
+            "--paper-scale",
+            "--out=points.csv",
+            "--jobs",
+            "4",
+        ]))
+        .unwrap();
+        assert_eq!(a.positional, vec!["sweep", "mlp_gsc"]);
+        assert_eq!(a.get("bits", 4u32).unwrap(), 2);
+        assert_eq!(a.get("jobs", 1usize).unwrap(), 4);
+        assert!(a.has("paper-scale"));
+        assert_eq!(a.flags.get("out").map(|s| s.as_str()), Some("points.csv"));
+        // bool flags must not swallow the token after them
+        let a = parse_args(&argv(&["sweep", "--paper-scale", "mlp_gsc"])).unwrap();
+        assert_eq!(a.positional, vec!["sweep", "mlp_gsc"]);
+    }
+
+    #[test]
+    fn unparseable_values_error_not_default() {
+        let a = parse_args(&argv(&["sweep", "--bits", "four"])).unwrap();
+        let err = a.get("bits", 4u32).unwrap_err();
+        assert!(format!("{err}").contains("--bits"), "{err}");
+        // absent flag still yields the default
+        assert_eq!(a.get("seed", 17u64).unwrap(), 17);
+    }
+
+    #[test]
+    fn value_flags_require_a_value() {
+        let err = parse_args(&argv(&["sweep", "--seed"])).unwrap_err();
+        assert!(format!("{err:#}").contains("--seed"), "{err:#}");
+        let err = parse_args(&argv(&["sweep", "--seed", "--jobs", "2"])).unwrap_err();
+        assert!(format!("{err:#}").contains("requires a value"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_flags_get_a_suggestion() {
+        let a = parse_args(&argv(&["sweep", "mlp_gsc", "--resme", "x.jsonl"])).unwrap();
+        let err = validate_flags(&a, "sweep").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--resme"), "{msg}");
+        assert!(msg.contains("did you mean --resume"), "{msg}");
+        // and flags valid for one command are rejected for another
+        let a = parse_args(&argv(&["pretrain", "mlp_gsc", "--shard", "0/2"])).unwrap();
+        assert!(validate_flags(&a, "pretrain").is_err());
+        let a = parse_args(&argv(&["sweep", "mlp_gsc", "--shard", "0/2"])).unwrap();
+        assert!(validate_flags(&a, "sweep").is_ok());
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("resme", "resume"), 1);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("same", "same"), 0);
+        assert!(levenshtein("bits", "backend") > 2);
+    }
 }

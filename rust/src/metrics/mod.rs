@@ -1,6 +1,12 @@
 //! Metrics + report formatting: accuracy meters, run records, and the
 //! markdown/CSV tables that regenerate the paper's figures.
 
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::jsonx::{self, Val};
+
 /// Streaming accuracy/loss meter over batches.
 #[derive(Default, Clone, Debug)]
 pub struct Meter {
@@ -71,6 +77,56 @@ impl WorkingPoint {
             self.size_bytes as f64 / 1000.0,
             self.compression_ratio
         )
+    }
+
+    /// JSON field fragment (`"method":...,"cr":...`, no braces) for the
+    /// durable results store. Floats use exact round-trip formatting
+    /// ([`jsonx::num_f32`]/[`jsonx::num_f64`]), so a row re-read from disk
+    /// reconstructs this working point bit for bit — the property the
+    /// resume/shard bitwise-identity gate rests on. The inverse is
+    /// [`WorkingPoint::from_json`].
+    pub fn json_fields(&self) -> String {
+        format!(
+            "\"method\":{},\"bits\":{},\"lambda\":{},\"p\":{},\"accuracy\":{},\
+             \"acc_drop\":{},\"sparsity\":{},\"size_bytes\":{},\"cr\":{}",
+            jsonx::quote(&self.method),
+            self.bits,
+            jsonx::num_f32(self.lambda),
+            jsonx::num_f64(self.p),
+            jsonx::num_f64(self.accuracy),
+            jsonx::num_f64(self.acc_drop),
+            jsonx::num_f64(self.sparsity),
+            self.size_bytes,
+            jsonx::num_f64(self.compression_ratio)
+        )
+    }
+
+    /// Rebuild a working point from a parsed store row (exact inverse of
+    /// [`WorkingPoint::json_fields`]); missing or non-numeric fields are
+    /// an error, never a default.
+    pub fn from_json(obj: &BTreeMap<String, Val>) -> Result<WorkingPoint> {
+        fn req<'a>(obj: &'a BTreeMap<String, Val>, k: &str) -> Result<&'a Val> {
+            obj.get(k).ok_or_else(|| anyhow!("missing field {k:?}"))
+        }
+        fn num<T: std::str::FromStr>(obj: &BTreeMap<String, Val>, k: &str) -> Result<T> {
+            req(obj, k)?
+                .num()
+                .ok_or_else(|| anyhow!("field {k:?} is not a valid number"))
+        }
+        Ok(WorkingPoint {
+            method: req(obj, "method")?
+                .as_str()
+                .ok_or_else(|| anyhow!("field \"method\" must be a string"))?
+                .to_string(),
+            bits: num(obj, "bits")?,
+            lambda: num(obj, "lambda")?,
+            p: num(obj, "p")?,
+            accuracy: num(obj, "accuracy")?,
+            acc_drop: num(obj, "acc_drop")?,
+            sparsity: num(obj, "sparsity")?,
+            size_bytes: num(obj, "size_bytes")?,
+            compression_ratio: num(obj, "cr")?,
+        })
     }
 }
 
@@ -167,5 +223,46 @@ mod tests {
             WorkingPoint::csv_header().split(',').count(),
             csv.split(',').count()
         );
+    }
+
+    #[test]
+    fn working_point_json_roundtrips_bitwise() {
+        let wp = WorkingPoint {
+            method: "ECQx".into(),
+            bits: 4,
+            lambda: 0.02,
+            p: 0.3,
+            accuracy: 1.0 / 3.0,
+            acc_drop: -1e-7,
+            sparsity: 0.876543219,
+            size_bytes: 123_456,
+            compression_ratio: 25.000001,
+        };
+        let line = format!("{{{}}}", wp.json_fields());
+        let obj = jsonx::parse_object(&line).unwrap();
+        let back = WorkingPoint::from_json(&obj).unwrap();
+        assert_eq!(back.method, wp.method);
+        assert_eq!(back.bits, wp.bits);
+        assert_eq!(back.lambda.to_bits(), wp.lambda.to_bits());
+        assert_eq!(back.p.to_bits(), wp.p.to_bits());
+        assert_eq!(back.accuracy.to_bits(), wp.accuracy.to_bits());
+        assert_eq!(back.acc_drop.to_bits(), wp.acc_drop.to_bits());
+        assert_eq!(back.sparsity.to_bits(), wp.sparsity.to_bits());
+        assert_eq!(back.size_bytes, wp.size_bytes);
+        assert_eq!(
+            back.compression_ratio.to_bits(),
+            wp.compression_ratio.to_bits()
+        );
+        // and serialization itself is deterministic
+        assert_eq!(back.json_fields(), wp.json_fields());
+    }
+
+    #[test]
+    fn working_point_json_rejects_missing_fields() {
+        let obj = jsonx::parse_object("{\"method\":\"ECQx\",\"bits\":4}").unwrap();
+        let err = WorkingPoint::from_json(&obj).unwrap_err();
+        assert!(format!("{err:?}").contains("lambda"), "{err:?}");
+        let obj = jsonx::parse_object("{\"method\":7}").unwrap();
+        assert!(WorkingPoint::from_json(&obj).is_err());
     }
 }

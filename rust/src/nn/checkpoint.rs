@@ -90,21 +90,24 @@ fn read_f32_vec(r: &mut impl Read, numel: usize) -> Result<Vec<f32>> {
 }
 
 /// Save the FP parameter store (pre-trained baseline snapshot).
+/// Written atomically (tmp + rename): a crash mid-save leaves any
+/// previous snapshot intact, never a truncated one.
 pub fn save_fp(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
-    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
-    w.write_all(FP_MAGIC)?;
-    write_u32(&mut w, params.len() as u32)?;
-    for (name, t) in params {
-        write_str(&mut w, name)?;
-        write_u32(&mut w, t.shape.len() as u32)?;
-        for &d in &t.shape {
-            write_u32(&mut w, d as u32)?;
+    crate::util::fsx::atomic_write_with(path, |w| {
+        w.write_all(FP_MAGIC)?;
+        write_u32(w, params.len() as u32)?;
+        for (name, t) in params {
+            write_str(w, name)?;
+            write_u32(w, t.shape.len() as u32)?;
+            for &d in &t.shape {
+                write_u32(w, d as u32)?;
+            }
+            for &v in &t.data {
+                write_f32(w, v)?;
+            }
         }
-        for &v in &t.data {
-            write_f32(&mut w, v)?;
-        }
-    }
-    Ok(())
+        Ok(())
+    })
 }
 
 /// Load an FP snapshot.
@@ -145,54 +148,56 @@ pub fn save_quantized(path: &Path, state: &ModelState) -> Result<usize> {
 /// [`save_quantized`] with the per-layer entropy coding fanned out over
 /// `jobs` workers (flat (layer, chunk) work units via
 /// [`codec::encode_tensors_jobs`]). The written container is bitwise
-/// identical at any job count.
+/// identical at any job count, and lands atomically (tmp + rename): the
+/// destination path never holds a truncated container.
 pub fn save_quantized_jobs(path: &Path, state: &ModelState, jobs: usize) -> Result<usize> {
-    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
-    w.write_all(Q_MAGIC)?;
-    write_str(&mut w, &state.spec.name)?;
-    let qnames = state.qnames();
-    write_u32(&mut w, qnames.len() as u32)?;
-    let inputs = qnames
-        .iter()
-        .map(|name| {
-            let ql = state
-                .qlayers
-                .get(name)
-                .with_context(|| format!("layer {name} not quantized"))?;
-            Ok((&ql.idx, &ql.codebook))
-        })
-        .collect::<Result<Vec<_>>>()?;
-    let encs = codec::encode_tensors_jobs(&inputs, jobs);
-    for (name, enc) in qnames.iter().zip(&encs) {
-        write_str(&mut w, name)?;
-        write_u32(&mut w, enc.bits)?;
-        write_f32(&mut w, enc.step)?;
-        write_u32(&mut w, enc.shape.len() as u32)?;
-        for &d in &enc.shape {
-            write_u32(&mut w, d as u32)?;
+    crate::util::fsx::atomic_write_with(path, |w| {
+        w.write_all(Q_MAGIC)?;
+        write_str(w, &state.spec.name)?;
+        let qnames = state.qnames();
+        write_u32(w, qnames.len() as u32)?;
+        let inputs = qnames
+            .iter()
+            .map(|name| {
+                let ql = state
+                    .qlayers
+                    .get(name)
+                    .with_context(|| format!("layer {name} not quantized"))?;
+                Ok((&ql.idx, &ql.codebook))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let encs = codec::encode_tensors_jobs(&inputs, jobs);
+        for (name, enc) in qnames.iter().zip(&encs) {
+            write_str(w, name)?;
+            write_u32(w, enc.bits)?;
+            write_f32(w, enc.step)?;
+            write_u32(w, enc.shape.len() as u32)?;
+            for &d in &enc.shape {
+                write_u32(w, d as u32)?;
+            }
+            write_u32(w, enc.payload.len() as u32)?;
+            w.write_all(&enc.payload)?;
         }
-        write_u32(&mut w, enc.payload.len() as u32)?;
-        w.write_all(&enc.payload)?;
-    }
-    // unquantized params raw fp32
-    let other: Vec<&String> = state
-        .params
-        .keys()
-        .filter(|k| !qnames.contains(k))
-        .collect();
-    write_u32(&mut w, other.len() as u32)?;
-    for name in other {
-        let t = &state.params[name];
-        write_str(&mut w, name)?;
-        write_u32(&mut w, t.shape.len() as u32)?;
-        for &d in &t.shape {
-            write_u32(&mut w, d as u32)?;
+        // unquantized params raw fp32
+        let other: Vec<&String> = state
+            .params
+            .keys()
+            .filter(|k| !qnames.contains(k))
+            .collect();
+        write_u32(w, other.len() as u32)?;
+        for name in other {
+            let t = &state.params[name];
+            write_str(w, name)?;
+            write_u32(w, t.shape.len() as u32)?;
+            for &d in &t.shape {
+                write_u32(w, d as u32)?;
+            }
+            for &v in &t.data {
+                write_f32(w, v)?;
+            }
         }
-        for &v in &t.data {
-            write_f32(&mut w, v)?;
-        }
-    }
-    w.flush()?;
+        Ok(())
+    })?;
     Ok(std::fs::metadata(path)?.len() as usize)
 }
 

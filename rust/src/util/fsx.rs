@@ -1,0 +1,91 @@
+//! Crash-safe filesystem writes: every durable artifact (results store,
+//! `.ecqx` containers, FP baselines, CSV exports) goes through
+//! tmp-file + atomic-rename, so an interrupted process never leaves a
+//! truncated file at the destination path — a reader sees either the old
+//! complete contents or the new complete contents, nothing in between.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Sibling temp path for `path`: same directory (rename must not cross a
+/// filesystem boundary), suffixed with the pid so concurrent processes
+/// writing the same destination don't stomp each other's temp file.
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(format!(".{}.tmp", std::process::id()));
+    PathBuf::from(os)
+}
+
+/// Stream contents to `path` atomically: write to a sibling temp file,
+/// flush + fsync, then rename over the destination. On any error the
+/// temp file is removed and the destination is left untouched.
+pub fn atomic_write_with<F>(path: &Path, write: F) -> Result<()>
+where
+    F: FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
+{
+    let tmp = tmp_sibling(path);
+    let result = (|| {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("create temp file {}", tmp.display()))?;
+        let mut w = std::io::BufWriter::new(file);
+        write(&mut w)?;
+        w.flush()?;
+        // fsync so a post-rename power loss cannot surface an empty file
+        // where a complete one was promised (kill -9 alone would not need
+        // this, but the store's durability claim includes the page cache)
+        w.get_ref().sync_all()?;
+        Ok(())
+    })();
+    match result {
+        Ok(()) => std::fs::rename(&tmp, path).with_context(|| {
+            format!("rename {} -> {}", tmp.display(), path.display())
+        }),
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            Err(e)
+        }
+    }
+}
+
+/// [`atomic_write_with`] for a ready-made byte buffer.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    atomic_write_with(path, |w| {
+        w.write_all(bytes)?;
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ecqx-fsx-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let p = tmp("basic.txt");
+        atomic_write(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        atomic_write(&p, b"second, longer contents").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer contents");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn failed_write_leaves_destination_and_no_temp() {
+        let p = tmp("failed.txt");
+        atomic_write(&p, b"intact").unwrap();
+        let err = atomic_write_with(&p, |w| {
+            w.write_all(b"partial")?;
+            anyhow::bail!("mid-write failure")
+        });
+        assert!(err.is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"intact", "destination untouched");
+        assert!(!tmp_sibling(&p).exists(), "temp file cleaned up");
+        std::fs::remove_file(&p).ok();
+    }
+}

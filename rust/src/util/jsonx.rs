@@ -1,0 +1,278 @@
+//! Minimal flat-JSON helpers for the durable results store: exact
+//! round-trip number formatting, string escaping, and a parser for
+//! single-level objects (string / numeric-token values only).
+//!
+//! The offline build has no `serde_json`; the store's rows are flat
+//! key→scalar objects, so a full JSON tree is deliberately out of scope.
+//! Two properties matter here and are tested below:
+//!
+//! 1. **bitwise float round-trips** — finite `f32`/`f64` are written via
+//!    Rust's shortest-round-trip `Display` and parsed back with
+//!    `FromStr`, which recovers the exact bit pattern; non-finite values
+//!    are written as the quoted tokens `"inf"`/`"-inf"`/`"NaN"`, which
+//!    `FromStr` also parses exactly — so store rows never lose precision
+//!    and the resume/shard bitwise-identity gate can compare serialized
+//!    lines directly;
+//! 2. **totality** — `parse_object` returns `Err(String)` on any
+//!    malformed input (the store loader maps that to drop-the-torn-tail
+//!    or fail-the-file), never panics.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar: a decoded JSON string or a raw (unquoted) token such
+/// as `17`, `-0.5`, `1e-7`, `true`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Val {
+    /// decoded string value
+    Str(String),
+    /// raw unquoted token, trimmed
+    Raw(String),
+}
+
+impl Val {
+    /// The string content if this is a JSON string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Val::Str(s) => Some(s),
+            Val::Raw(_) => None,
+        }
+    }
+
+    /// The token to parse scalars from: raw tokens as-is, strings by
+    /// content (so `"inf"`/`"NaN"` parse as floats, `"17"` as u64).
+    pub fn token(&self) -> &str {
+        match self {
+            Val::Str(s) => s,
+            Val::Raw(r) => r,
+        }
+    }
+
+    /// Parse the token as `T` (numbers, bools, ...).
+    pub fn num<T: std::str::FromStr>(&self) -> Option<T> {
+        self.token().parse().ok()
+    }
+}
+
+/// Escape + quote a string for embedding in a JSON object. Control
+/// characters become `\u00XX`, so any `error:` payload stays one line.
+pub fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format an `f32` as a JSON value with an exact round-trip: shortest
+/// `Display` for finite values, quoted `"inf"`/`"-inf"`/`"NaN"` otherwise.
+pub fn num_f32(v: f32) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        format!("\"{v}\"")
+    }
+}
+
+/// [`num_f32`] for `f64`.
+pub fn num_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        format!("\"{v}\"")
+    }
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> Result<String, String> {
+    if b.get(*i) != Some(&b'"') {
+        return Err(format!("expected string at byte {i}", i = *i));
+    }
+    *i += 1;
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        let c = *b.get(*i).ok_or("unterminated string")?;
+        *i += 1;
+        match c {
+            b'"' => {
+                return String::from_utf8(out).map_err(|_| "invalid utf-8 in string".into())
+            }
+            b'\\' => {
+                let e = *b.get(*i).ok_or("unterminated escape")?;
+                *i += 1;
+                match e {
+                    b'"' => out.push(b'"'),
+                    b'\\' => out.push(b'\\'),
+                    b'/' => out.push(b'/'),
+                    b'n' => out.push(b'\n'),
+                    b'r' => out.push(b'\r'),
+                    b't' => out.push(b'\t'),
+                    b'b' => out.push(0x08),
+                    b'f' => out.push(0x0c),
+                    b'u' => {
+                        let hex = b
+                            .get(*i..*i + 4)
+                            .ok_or("truncated \\u escape")?;
+                        *i += 4;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
+                            16,
+                        )
+                        .map_err(|_| "bad \\u escape")?;
+                        let ch = char::from_u32(code)
+                            .ok_or("\\u escape is not a scalar value")?;
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                    }
+                    other => return Err(format!("unknown escape \\{}", other as char)),
+                }
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Parse a single flat JSON object (`{"k":"v","n":1,...}`) into an
+/// ordered map. Nested objects/arrays are rejected; trailing bytes after
+/// the closing brace are an error.
+pub fn parse_object(s: &str) -> Result<BTreeMap<String, Val>, String> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    skip_ws(b, &mut i);
+    if b.get(i) != Some(&b'{') {
+        return Err("expected '{'".into());
+    }
+    i += 1;
+    let mut out = BTreeMap::new();
+    skip_ws(b, &mut i);
+    if b.get(i) == Some(&b'}') {
+        i += 1;
+    } else {
+        loop {
+            skip_ws(b, &mut i);
+            let key = parse_string(b, &mut i)?;
+            skip_ws(b, &mut i);
+            if b.get(i) != Some(&b':') {
+                return Err(format!("expected ':' after key {key:?}"));
+            }
+            i += 1;
+            skip_ws(b, &mut i);
+            let val = match b.get(i) {
+                Some(b'"') => Val::Str(parse_string(b, &mut i)?),
+                Some(b'{') | Some(b'[') => {
+                    return Err("nested values are not supported".into())
+                }
+                Some(_) => {
+                    let start = i;
+                    while i < b.len() && !matches!(b[i], b',' | b'}') {
+                        i += 1;
+                    }
+                    let tok = std::str::from_utf8(&b[start..i])
+                        .map_err(|_| "invalid utf-8 token")?
+                        .trim();
+                    if tok.is_empty() {
+                        return Err(format!("empty value for key {key:?}"));
+                    }
+                    Val::Raw(tok.to_string())
+                }
+                None => return Err("unterminated object".into()),
+            };
+            out.insert(key, val);
+            skip_ws(b, &mut i);
+            match b.get(i) {
+                Some(b',') => i += 1,
+                Some(b'}') => {
+                    i += 1;
+                    break;
+                }
+                _ => return Err("expected ',' or '}'".into()),
+            }
+        }
+    }
+    skip_ws(b, &mut i);
+    if i != b.len() {
+        return Err("trailing bytes after object".into());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floats_roundtrip_bitwise() {
+        for v in [0.0f32, -0.0, 0.02, 1e-7, f32::MAX, f32::MIN_POSITIVE, 1.0 / 3.0] {
+            let s = num_f32(v);
+            let back: f32 = s.parse().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{s}");
+        }
+        for v in [0.3f64, -1.0 / 3.0, 1e-300, f64::MAX] {
+            let s = num_f64(v);
+            let back: f64 = s.parse().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{s}");
+        }
+        // non-finite values go through the quoted-token path
+        assert_eq!(num_f64(f64::INFINITY), "\"inf\"");
+        assert_eq!(num_f32(f32::NEG_INFINITY), "\"-inf\"");
+        let obj = parse_object("{\"a\":\"NaN\",\"b\":\"inf\"}").unwrap();
+        assert!(obj["a"].num::<f64>().unwrap().is_nan());
+        assert_eq!(obj["b"].num::<f32>(), Some(f32::INFINITY));
+    }
+
+    #[test]
+    fn quote_escapes_and_parses_back() {
+        let hostile = "a \"quoted\" \\ back\nslash\tand \u{1} ctrl";
+        let q = quote(hostile);
+        assert!(!q[1..q.len() - 1].contains('\n'), "must stay one line");
+        let obj = parse_object(&format!("{{\"e\":{q}}}")).unwrap();
+        assert_eq!(obj["e"].as_str(), Some(hostile));
+    }
+
+    #[test]
+    fn object_parses_mixed_fields() {
+        let obj =
+            parse_object("{\"kind\":\"row\",\"id\":7,\"lambda\":0.02,\"neg\":-1e-5}")
+                .unwrap();
+        assert_eq!(obj["kind"].as_str(), Some("row"));
+        assert_eq!(obj["id"].num::<usize>(), Some(7));
+        assert_eq!(obj["lambda"].num::<f32>(), Some(0.02));
+        assert_eq!(obj["neg"].num::<f64>(), Some(-1e-5));
+        // strings are not numbers and vice versa
+        assert_eq!(obj["id"].as_str(), None);
+        assert_eq!(parse_object("{}").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn malformed_objects_error_not_panic() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\"}",
+            "{\"a\":}",
+            "{\"a\":1",
+            "{\"a\":1}x",
+            "{\"a\":{\"n\":1}}",
+            "{\"a\":[1]}",
+            "{\"a\":\"unterminated}",
+            "{\"a\":\"bad\\q\"}",
+            "{\"a\":\"\\ud800\"}",
+        ] {
+            assert!(parse_object(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+}

@@ -5,6 +5,8 @@
 //! module provides behaviour-equivalent replacements (see DESIGN.md
 //! substitution table).
 
+pub mod fsx;
+pub mod jsonx;
 pub mod pool;
 pub mod prop;
 pub mod rng;
@@ -13,6 +15,19 @@ pub mod timer;
 
 pub use rng::Rng;
 pub use timer::Timer;
+
+/// FNV-1a 64-bit hash: the stable, dependency-free digest behind the
+/// results store's working-point keys, grid fingerprints, and per-row
+/// checksums. Stability across processes and platforms is load-bearing —
+/// resume/shard matching compares these values between runs.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
 
 /// Parallel map over a slice using scoped threads (no external deps).
 ///
@@ -44,6 +59,15 @@ mod tests {
         let par = par_map(&items, 8, |x| x * x);
         let ser: Vec<u64> = items.iter().map(|x| x * x).collect();
         assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // pinned reference values: the store's on-disk checksums and keys
+        // must never drift between releases
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
     }
 
     #[test]

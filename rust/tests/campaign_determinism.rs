@@ -8,13 +8,21 @@
 //! invariants in isolation, and real QAT trials executed on the host
 //! reference backend pin the whole engine-backed path end to end. The
 //! engine-level concurrency smoke tests live in `src/runtime/mod.rs`.
+//!
+//! The robustness layer is pinned here too: panic quarantine, seeded
+//! retries, cooperative cancellation, heartbeats, and the durable-store
+//! gate — interrupt+resume and shard-union campaigns must reproduce the
+//! exact row bytes of one uninterrupted serial run.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use ecqx::coordinator::binder::ParamSource;
-use ecqx::coordinator::campaign::{self, CampaignOptions, Event, Grid, TrialSpec};
-use ecqx::coordinator::sweep::{SweepConfig, SweepRunner};
+use ecqx::coordinator::campaign::{
+    self, CampaignOptions, Event, Grid, RetryPolicy, TrialResult, TrialSpec,
+};
+use ecqx::coordinator::store::{self, ResultStore};
+use ecqx::coordinator::sweep::{StoreSweepOptions, SweepConfig, SweepRunner};
 use ecqx::coordinator::trainer::{evaluate, Pretrainer};
 use ecqx::coordinator::{AssignConfig, Method, QatConfig};
 use ecqx::data::gsc::GscDataset;
@@ -371,6 +379,336 @@ fn quantized_container_matches_serial_bitwise() {
     assert_eq!(qm.layers["w0"].0.data, state.qlayers["w0"].idx.data);
     assert_eq!(qm.layers["w1"].0.data, state.qlayers["w1"].idx.data);
     std::fs::remove_file(&p1).ok();
+}
+
+/// A deliberately panicking trial must become a quarantined outcome —
+/// its siblings keep running to completion, nothing tears down.
+#[test]
+fn panicking_trial_is_quarantined_without_aborting_siblings() {
+    let trials = test_grid();
+    for jobs in [1, 4] {
+        let events = Mutex::new(Vec::new());
+        let run = campaign::run_with(
+            &trials,
+            &CampaignOptions { jobs, quarantine: true, ..Default::default() },
+            |t, seed| {
+                if t.id == 7 {
+                    panic!("synthetic panic in trial {}", t.id);
+                }
+                synthetic_trial(t, seed)
+            },
+            |ev| events.lock().unwrap().push(ev.clone()),
+            None,
+        )
+        .unwrap();
+        assert!(!run.cancelled);
+        assert_eq!(run.outcomes.len(), trials.len(), "jobs={jobs}: no trial lost");
+        for o in &run.outcomes {
+            match (&o.result, o.id) {
+                (TrialResult::Failed { error, attempts }, 7) => {
+                    assert!(error.contains("panicked"), "jobs={jobs}: {error}");
+                    assert!(error.contains("synthetic panic in trial 7"));
+                    assert_eq!(*attempts, 1);
+                }
+                (TrialResult::Done(_), id) => assert_ne!(id, 7),
+                (r, id) => panic!("jobs={jobs}: unexpected outcome {r:?} for {id}"),
+            }
+        }
+        let failed: Vec<usize> = events
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|e| match e {
+                Event::TrialFailed { id, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(failed, vec![7], "jobs={jobs}");
+    }
+    // without quarantine, the same panic surfaces as a campaign error —
+    // caught, never a process abort
+    let err = campaign::run(
+        &trials,
+        &CampaignOptions::default(),
+        |t, seed| {
+            if t.id == 2 {
+                panic!("boom");
+            }
+            synthetic_trial(t, seed)
+        },
+        |_| {},
+    )
+    .unwrap_err();
+    assert!(format!("{err:?}").contains("campaign trial 2"));
+}
+
+/// A trial that fails its first attempt and succeeds on the re-derived
+/// retry seed completes the campaign; the retry is visible in the event
+/// stream and results stay deterministic across job counts.
+#[test]
+fn flaky_trial_recovers_via_retry_with_fresh_seed() {
+    let trials = test_grid();
+    let opts = CampaignOptions {
+        retry: RetryPolicy { retries: 2, backoff_ms: 0 },
+        ..Default::default()
+    };
+    // trial 5 fails whenever it sees its attempt-0 seed: attempt 1's
+    // re-derived seed differs, so the retry succeeds
+    let flaky = |t: &TrialSpec, seed: u64| {
+        if t.id == 5 && seed == campaign::trial_seed_attempt(opts.seed, 5, 0) {
+            anyhow::bail!("transient failure");
+        }
+        synthetic_trial(t, seed)
+    };
+    let mut baseline: Option<Vec<String>> = None;
+    for jobs in [1, 4] {
+        let retried = AtomicUsize::new(0);
+        let points = campaign::run(
+            &trials,
+            &CampaignOptions { jobs, ..opts },
+            flaky,
+            |ev| {
+                if let Event::TrialRetried { id, error, attempt } = ev {
+                    assert_eq!((*id, *attempt), (5, 1));
+                    assert!(error.contains("transient failure"));
+                    retried.fetch_add(1, Ordering::SeqCst);
+                }
+            },
+        )
+        .unwrap();
+        assert_eq!(retried.load(Ordering::SeqCst), 1, "jobs={jobs}");
+        assert_eq!(points.len(), trials.len());
+        let rows: Vec<String> = points.iter().map(|p| p.to_csv()).collect();
+        match &baseline {
+            None => baseline = Some(rows),
+            Some(b) => assert_eq!(b, &rows, "retry results deterministic at jobs={jobs}"),
+        }
+    }
+    // without retries the same flake is fatal
+    assert!(campaign::run(&trials, &CampaignOptions::default(), flaky, |_| {}).is_err());
+}
+
+/// Heartbeats fire every N outcomes with monotonic counters.
+#[test]
+fn heartbeats_track_progress() {
+    let trials = test_grid();
+    let beats = Mutex::new(Vec::new());
+    campaign::run_with(
+        &trials,
+        &CampaignOptions { heartbeat_every: 5, ..Default::default() },
+        synthetic_trial,
+        |ev| {
+            if let Event::Heartbeat { done, failed, total } = ev {
+                beats.lock().unwrap().push((*done, *failed, *total));
+            }
+        },
+        None,
+    )
+    .unwrap();
+    let beats = beats.into_inner().unwrap();
+    assert_eq!(beats.len(), 24 / 5);
+    for (i, (done, failed, total)) in beats.iter().enumerate() {
+        assert_eq!(done + failed, (i + 1) * 5);
+        assert_eq!(*failed, 0);
+        assert_eq!(*total, 24);
+    }
+}
+
+/// Cooperative cancellation: once the flag is set, no new trials are
+/// claimed; everything already produced is reported.
+#[test]
+fn cancellation_stops_new_claims() {
+    let trials = test_grid();
+    let cancel = AtomicBool::new(false);
+    let seen = AtomicUsize::new(0);
+    let run = campaign::run_with(
+        &trials,
+        &CampaignOptions::default(),
+        synthetic_trial,
+        |ev| {
+            if matches!(ev, Event::Finished { .. })
+                && seen.fetch_add(1, Ordering::SeqCst) + 1 == 5
+            {
+                cancel.store(true, Ordering::SeqCst);
+            }
+        },
+        Some(&cancel),
+    )
+    .unwrap();
+    assert!(run.cancelled);
+    assert_eq!(run.outcomes.len(), 5, "serial run stops exactly at the flag");
+    let ids: Vec<usize> = run.outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+}
+
+/// End-to-end crash-safety gate on real (host-executed) QAT trials: a
+/// campaign interrupted mid-run and resumed from its store, and a
+/// campaign split across two shards, must each reproduce the exact row
+/// bytes of one uninterrupted serial campaign — including at `jobs > 1`.
+#[test]
+fn durable_store_resume_and_shard_union_match_serial_bitwise() {
+    let engine = Engine::host_with(Manifest::synthetic_mlp("mlp_tiny", &[360, 32, 12], 32));
+    let spec = engine.manifest.model("mlp_tiny").unwrap().clone();
+    let train = GscDataset::new(256, 5, true);
+    let val = GscDataset::new(128, 5, false);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 5);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 5);
+    let mut state = ModelState::init(&spec, 5);
+    let pre = Pretrainer { lr: 1e-3, verbose: false, ..Default::default() };
+    pre.run(&engine, &mut state, &train_dl, 2).unwrap();
+    let baseline = evaluate(&engine, &state, &val_dl, ParamSource::Fp).unwrap();
+    let runner = SweepRunner::new(&engine, state);
+    let cfg = SweepConfig {
+        model: "mlp_tiny".into(),
+        method: Method::Ecqx,
+        bits: 4,
+        lambdas: vec![0.0, 0.5, 4.0],
+        p: 0.3,
+        qat: QatConfig {
+            assign: AssignConfig::default(),
+            epochs: 1,
+            lr: 4e-4,
+            lrp_warmup: 4,
+            verbose: false,
+            ..Default::default()
+        },
+        baseline_acc: baseline.accuracy,
+        seed: 17,
+    };
+    let grid = Grid::lambda_sweep(cfg.method, cfg.bits, &cfg.lambdas, cfg.p);
+    let tmp = |name: &str| {
+        std::env::temp_dir().join(format!("ecqx-durable-{}-{name}", std::process::id()))
+    };
+
+    // 1) uninterrupted serial campaign: the reference row bytes
+    let p_clean = tmp("clean.jsonl");
+    std::fs::remove_file(&p_clean).ok();
+    let mut clean = ResultStore::open_or_create(&p_clean).unwrap();
+    let out = runner
+        .run_store(
+            &cfg,
+            &grid,
+            &train_dl,
+            &val_dl,
+            &mut clean,
+            &StoreSweepOptions { jobs: 1, ..Default::default() },
+            None,
+        )
+        .unwrap();
+    assert_eq!((out.ran, out.skipped, out.quarantined), (3, 0, 0));
+    assert!(!out.cancelled);
+    let reference = clean.canonical_lines();
+    assert_eq!(reference.len(), 3);
+
+    // 2) interrupted after 2 trials, then resumed by a "fresh process"
+    let p_resume = tmp("resume.jsonl");
+    std::fs::remove_file(&p_resume).ok();
+    let mut interrupted = ResultStore::open_or_create(&p_resume).unwrap();
+    let out = runner
+        .run_store(
+            &cfg,
+            &grid,
+            &train_dl,
+            &val_dl,
+            &mut interrupted,
+            &StoreSweepOptions { jobs: 1, max_trials: 2, ..Default::default() },
+            None,
+        )
+        .unwrap();
+    assert!(out.cancelled, "max-trials must interrupt the campaign");
+    assert_eq!(out.ran, 2);
+    drop(interrupted);
+    let mut resumed = ResultStore::open_existing(&p_resume).unwrap();
+    assert_eq!(resumed.rows().len(), 2, "both finished trials survived");
+    let out = runner
+        .run_store(
+            &cfg,
+            &grid,
+            &train_dl,
+            &val_dl,
+            &mut resumed,
+            &StoreSweepOptions { jobs: 1, ..Default::default() },
+            None,
+        )
+        .unwrap();
+    assert_eq!((out.ran, out.skipped), (1, 2), "resume runs only the missing trial");
+    assert!(!out.cancelled);
+    assert_eq!(
+        resumed.canonical_lines(),
+        reference,
+        "interrupt + resume must be row-for-row bitwise identical to serial"
+    );
+
+    // 3) two shards (one of them parallel), merged
+    let p_s0 = tmp("shard0.jsonl");
+    let p_s1 = tmp("shard1.jsonl");
+    std::fs::remove_file(&p_s0).ok();
+    std::fs::remove_file(&p_s1).ok();
+    let mut s0 = ResultStore::open_or_create(&p_s0).unwrap();
+    let mut s1 = ResultStore::open_or_create(&p_s1).unwrap();
+    let out0 = runner
+        .run_store(
+            &cfg,
+            &grid,
+            &train_dl,
+            &val_dl,
+            &mut s0,
+            &StoreSweepOptions { jobs: 2, shard: Some((0, 2)), ..Default::default() },
+            None,
+        )
+        .unwrap();
+    let out1 = runner
+        .run_store(
+            &cfg,
+            &grid,
+            &train_dl,
+            &val_dl,
+            &mut s1,
+            &StoreSweepOptions { jobs: 1, shard: Some((1, 2)), ..Default::default() },
+            None,
+        )
+        .unwrap();
+    assert_eq!(out0.ran + out1.ran, 3, "shards partition the grid exactly");
+    let (meta, rows) = store::merge(&[s0, s1]).unwrap();
+    assert_eq!(meta.n_trials, 3);
+    let merged: Vec<String> = rows.iter().map(|r| r.to_line()).collect();
+    assert_eq!(
+        merged, reference,
+        "shard union must be row-for-row bitwise identical to serial"
+    );
+
+    // resuming a complete store with the same cfg is a no-op...
+    let out = runner
+        .run_store(
+            &cfg,
+            &grid,
+            &train_dl,
+            &val_dl,
+            &mut ResultStore::open_existing(&p_resume).unwrap(),
+            &StoreSweepOptions { jobs: 1, ..Default::default() },
+            None,
+        )
+        .unwrap();
+    assert_eq!((out.ran, out.skipped), (0, 3));
+    // ...but a wrong-seed resume is refused up front
+    let mut wrong = cfg.clone();
+    wrong.seed = 18;
+    let err = runner
+        .run_store(
+            &wrong,
+            &grid,
+            &train_dl,
+            &val_dl,
+            &mut ResultStore::open_existing(&p_resume).unwrap(),
+            &StoreSweepOptions { jobs: 1, ..Default::default() },
+            None,
+        )
+        .unwrap_err();
+    assert!(format!("{err:?}").contains("different campaign"));
+
+    for p in [p_clean, p_resume, p_s0, p_s1] {
+        std::fs::remove_file(&p).ok();
+    }
 }
 
 #[test]
