@@ -19,7 +19,9 @@ use ecqx::codec::{deepcabac, huffman};
 use ecqx::coordinator::binder::{bind_inputs, ParamSource, Scalars};
 use ecqx::data::DataLoader;
 use ecqx::exp;
-use ecqx::linalg::{self, conv2d_flops, gemm_flops, reference, Conv2d, Epilogue, Pad, Workspace};
+use ecqx::linalg::{
+    self, conv2d_flops, gemm_flops, reference, Conv2d, Epilogue, GemmOpts, Kernel, Pad, Workspace,
+};
 use ecqx::quant::{assign_ref, Codebook};
 use ecqx::tensor::{Tensor, Value};
 use ecqx::util::Rng;
@@ -124,6 +126,37 @@ fn main() -> anyhow::Result<()> {
         });
         log.push("qdense_gather_materialized", &[m, k, n], &r, flops);
     }
+    // ---- simd_kernels: every available micro-kernel on one shape ----
+    // One row per Kernel variant this host can run (scalar always;
+    // avx2/neon when detected), each tagged with the variant being timed
+    // and what runtime dispatch would pick — scripts/perf_compare and
+    // CI's bench-smoke key on these rows, so the section must emit even
+    // in smoke mode.
+    {
+        let (m, k, n) = if smoke { (64, 64, 64) } else { (256, 256, 256) };
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let flops = Some(gemm_flops(m, k, n));
+        let dispatch = GemmOpts::dispatch().kernel.name();
+        let mut out = vec![0.0f32; m * n];
+        for kernel in Kernel::available() {
+            let opts = GemmOpts::with_kernel(kernel);
+            let r = bench(
+                &format!("gemm_nn {} kernel {m}x{k}x{n}", kernel.name()),
+                it(1),
+                it(10),
+                || linalg::gemm_nn_with(opts, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut out),
+            );
+            log.push_kv(
+                "simd_gemm_nn",
+                &[m, k, n],
+                &r,
+                flops,
+                &[("kernel", kernel.name()), ("dispatch", dispatch)],
+            );
+        }
+    }
+
     // ---- conv kernels: the im2col-GEMM lowering vs naive direct conv ----
     // CIFAR-shaped sizes: the cnn_cifar stem (32×32×3 -> 16) and a mid
     // stack layer (16×16×32 -> 64, stride 2); shape column is the full

@@ -48,7 +48,14 @@ impl BenchResult {
 }
 
 /// Run `f` with `warmup` unmeasured + `iters` measured iterations.
+///
+/// Degenerate parameters are clamped rather than propagated: `iters == 0`
+/// used to produce an empty sample vector, whose mean divided into the
+/// ns-per-iter rows as NaN — now at least one iteration is always
+/// measured (`warmup == 0` is fine as-is; the warmup loop simply doesn't
+/// run). The clamp is pinned by `bench_clamps_zero_iters`.
 pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    let iters = iters.max(1);
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
@@ -112,6 +119,22 @@ impl PerfLog {
     /// (e.g. `[m, k, n]` for a GEMM, `[n]` for a 1-D kernel); `flops`
     /// (per iteration) enables the GFLOP/s column.
     pub fn push(&mut self, op: &str, shape: &[usize], r: &BenchResult, flops: Option<f64>) {
+        self.push_kv(op, shape, r, flops, &[]);
+    }
+
+    /// [`PerfLog::push`] with extra string fields appended to the row —
+    /// the `simd_kernels` section uses this for `"kernel"` (the variant
+    /// being timed) and `"dispatch"` (what `GemmOpts::dispatch` would
+    /// pick on this host). Keys and values must be plain identifiers
+    /// (they are embedded in hand-rolled JSON unescaped).
+    pub fn push_kv(
+        &mut self,
+        op: &str,
+        shape: &[usize],
+        r: &BenchResult,
+        flops: Option<f64>,
+        extras: &[(&str, &str)],
+    ) {
         let shape_s = shape
             .iter()
             .map(|d| d.to_string())
@@ -121,8 +144,12 @@ impl PerfLog {
             Some(f) if r.mean_s > 0.0 => format!("{:.3}", f / r.mean_s / 1e9),
             _ => "null".to_string(),
         };
+        let extra_s: String = extras
+            .iter()
+            .map(|(k, v)| format!(", \"{k}\": \"{v}\""))
+            .collect();
         self.rows.push(format!(
-            "{{\"op\": \"{op}\", \"shape\": \"{shape_s}\", \"ns_per_iter\": {:.1}, \"gflops\": {gflops}}}",
+            "{{\"op\": \"{op}\", \"shape\": \"{shape_s}\", \"ns_per_iter\": {:.1}, \"gflops\": {gflops}{extra_s}}}",
             r.mean_s * 1e9
         ));
     }
@@ -195,6 +222,20 @@ mod tests {
     }
 
     #[test]
+    fn bench_clamps_zero_iters() {
+        // regression: iters == 0 produced an empty sample vector and NaN
+        // ns-per-iter; the harness must always measure at least once
+        let mut calls = 0usize;
+        let r = bench("degenerate", 0, 0, || calls += 1);
+        assert_eq!(r.iters, 1, "iters clamp to 1");
+        assert_eq!(calls, 1, "exactly one measured call, no warmup");
+        assert!(r.mean_s.is_finite() && r.mean_s >= 0.0);
+        assert!(r.median_s.is_finite());
+        // the ns-per-iter a PerfLog row would serialize is finite too
+        assert!((r.mean_s * 1e9).is_finite());
+    }
+
+    #[test]
     fn perflog_renders_valid_flat_json() {
         let r = BenchResult {
             name: "x".into(),
@@ -217,6 +258,30 @@ mod tests {
         assert!(js.contains("\"gflops\": null"), "no-flop rows serialize null");
         // 2*256^3 flops in 1ms -> ~33.6 GFLOP/s
         assert!(js.contains("\"gflops\": 33.554"));
+    }
+
+    #[test]
+    fn perflog_push_kv_appends_string_fields() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            mean_s: 1e-3,
+            median_s: 1e-3,
+            std_s: 0.0,
+            min_s: 1e-3,
+        };
+        let mut log = PerfLog::new("host");
+        log.push_kv(
+            "simd_gemm_nn",
+            &[256, 256, 256],
+            &r,
+            None,
+            &[("kernel", "scalar"), ("dispatch", "avx2")],
+        );
+        let js = log.to_json();
+        assert_eq!(js.matches('{').count(), js.matches('}').count());
+        assert!(js.contains("\"kernel\": \"scalar\""));
+        assert!(js.contains("\"dispatch\": \"avx2\""));
     }
 
     #[test]

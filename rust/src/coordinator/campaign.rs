@@ -132,6 +132,12 @@ pub struct CampaignOptions {
     pub quarantine: bool,
     /// emit [`Event::Heartbeat`] every this many trial outcomes (0 = off)
     pub heartbeat_every: usize,
+    /// run trials on the deterministic linalg tier (scalar GEMM kernel,
+    /// serial blocks — `--deterministic`): rows become bit-stable across
+    /// machines, not just across `--jobs` counts. Selects the
+    /// process-wide mode via [`crate::linalg::set_deterministic`]
+    /// (set-once, so one process cannot mix tiers inside a store)
+    pub deterministic: bool,
 }
 
 impl Default for CampaignOptions {
@@ -143,6 +149,36 @@ impl Default for CampaignOptions {
             retry: RetryPolicy::default(),
             quarantine: false,
             heartbeat_every: 0,
+            deterministic: false,
+        }
+    }
+}
+
+/// Done/failed accounting plus the heartbeat cadence, shared by the two
+/// run paths of [`run_with`] (serial and collector) so they cannot drift
+/// on when a [`Event::Heartbeat`] fires or what counts it carries.
+struct HeartbeatCounter {
+    done: usize,
+    failed: usize,
+    total: usize,
+    every: usize,
+}
+
+impl HeartbeatCounter {
+    fn new(total: usize, every: usize) -> HeartbeatCounter {
+        HeartbeatCounter { done: 0, failed: 0, total, every }
+    }
+
+    /// Record one trial outcome; emits the heartbeat event when the
+    /// cadence lands on this outcome (`every == 0` disables).
+    fn record(&mut self, failed: bool, mut emit: impl FnMut(Event)) {
+        if failed {
+            self.failed += 1;
+        } else {
+            self.done += 1;
+        }
+        if self.every > 0 && (self.done + self.failed) % self.every == 0 {
+            emit(Event::Heartbeat { done: self.done, failed: self.failed, total: self.total });
         }
     }
 }
@@ -362,15 +398,17 @@ where
     if opts.max_in_flight != 0 {
         jobs = jobs.min(opts.max_in_flight.max(1));
     }
+    if opts.deterministic {
+        crate::linalg::set_deterministic(true);
+    }
     let seed = opts.seed;
     let retry = opts.retry;
-    let hb = opts.heartbeat_every;
     let is_cancelled = || cancel.map_or(false, |c| c.load(Ordering::Relaxed));
     if jobs == 1 {
         // strictly serial: run on the caller's thread (no worker, so
         // trial output and streamed events stay in order)
         let mut outcomes = Vec::with_capacity(n);
-        let (mut done, mut failed) = (0usize, 0usize);
+        let mut hb = HeartbeatCounter::new(n, opts.heartbeat_every);
         let mut cancelled = false;
         for t in trials {
             if is_cancelled() {
@@ -382,7 +420,6 @@ where
             let result = attempt_trial(t, seed, retry, &run_trial, |ev| on_event(&ev));
             let is_failed = match &result {
                 TrialResult::Done(point) => {
-                    done += 1;
                     on_event(&Event::Finished {
                         id: t.id,
                         point: point.clone(),
@@ -391,7 +428,6 @@ where
                     false
                 }
                 TrialResult::Failed { error, attempts } => {
-                    failed += 1;
                     on_event(&Event::TrialFailed {
                         id: t.id,
                         error: error.clone(),
@@ -401,9 +437,7 @@ where
                 }
             };
             outcomes.push(TrialOutcome { id: t.id, result });
-            if hb > 0 && (done + failed) % hb == 0 {
-                on_event(&Event::Heartbeat { done, failed, total: n });
-            }
+            hb.record(is_failed, |ev| on_event(&ev));
             if is_failed && !opts.quarantine {
                 break; // fail fast: stop claiming further trials
             }
@@ -463,27 +497,25 @@ where
         }
         drop(tx);
         // collector: stream events to the caller, file results by position
-        let (mut done, mut failed) = (0usize, 0usize);
+        let mut hb = HeartbeatCounter::new(n, opts.heartbeat_every);
         for ev in rx {
             let outcome = match &ev {
                 Event::Finished { id, point, .. } => {
                     slots[pos_of[id]] = Some(TrialResult::Done(point.clone()));
-                    done += 1;
-                    true
+                    Some(false)
                 }
                 Event::TrialFailed { id, error, attempts } => {
                     slots[pos_of[id]] = Some(TrialResult::Failed {
                         error: error.clone(),
                         attempts: *attempts,
                     });
-                    failed += 1;
-                    true
+                    Some(true)
                 }
-                _ => false,
+                _ => None,
             };
             on_event(&ev);
-            if outcome && hb > 0 && (done + failed) % hb == 0 {
-                on_event(&Event::Heartbeat { done, failed, total: n });
+            if let Some(is_failed) = outcome {
+                hb.record(is_failed, |ev| on_event(&ev));
             }
         }
     });
@@ -598,6 +630,27 @@ mod tests {
         )
         .unwrap();
         assert!(points.is_empty());
+    }
+
+    #[test]
+    fn heartbeat_counter_cadence_and_accounting() {
+        // the single source of truth both run paths share: fires every
+        // `every` outcomes, carrying cumulative done/failed
+        let mut hb = HeartbeatCounter::new(5, 2);
+        let mut beats: Vec<(usize, usize, usize)> = Vec::new();
+        for failed in [false, true, false, false, true] {
+            hb.record(failed, |ev| {
+                if let Event::Heartbeat { done, failed, total } = ev {
+                    beats.push((done, failed, total));
+                }
+            });
+        }
+        assert_eq!(beats, vec![(1, 1, 5), (3, 1, 5)]);
+        // every == 0 disables emission but still counts
+        let mut off = HeartbeatCounter::new(3, 0);
+        off.record(false, |_| panic!("heartbeat_every=0 must not emit"));
+        off.record(true, |_| panic!("heartbeat_every=0 must not emit"));
+        assert_eq!((off.done, off.failed), (1, 1));
     }
 
     #[test]

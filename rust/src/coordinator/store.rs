@@ -50,6 +50,14 @@ pub struct StoreMeta {
     pub grid_hash: u64,
     /// number of trials in the full (unsharded) grid
     pub n_trials: usize,
+    /// whether the campaign ran on the deterministic linalg tier
+    /// (`--deterministic`). Part of the identity: fast-tier rows are only
+    /// bit-stable within one machine/kernel, so resuming a deterministic
+    /// store in fast mode (or vice versa) would silently mix tiers —
+    /// [`ResultStore::ensure_meta`] refuses instead. Stores written
+    /// before this field existed parse as `det: false` (the fast tier,
+    /// which was the only tier then)
+    pub det: bool,
 }
 
 /// One persisted trial outcome.
@@ -96,12 +104,13 @@ impl StoreMeta {
         // store must not depend on any reader's float-free integer range
         let body = format!(
             "{{\"kind\":\"meta\",\"v\":1,\"model\":{},\"backend\":{},\"seed\":\"{}\",\
-             \"grid\":\"{:016x}\",\"trials\":{}",
+             \"grid\":\"{:016x}\",\"trials\":{},\"det\":{}",
             jsonx::quote(&self.model),
             jsonx::quote(&self.backend),
             self.seed,
             self.grid_hash,
-            self.n_trials
+            self.n_trials,
+            self.det
         );
         seal(&body)
     }
@@ -117,6 +126,14 @@ impl StoreMeta {
             seed: field_num(obj, "seed")?,
             grid_hash: field_hex(obj, "grid")?,
             n_trials: field_num(obj, "trials")?,
+            // absent in stores written before the two-tier contract:
+            // those campaigns ran what is now the fast tier
+            det: match obj.get("det") {
+                Some(v) => v
+                    .num::<bool>()
+                    .ok_or_else(|| anyhow!("field \"det\" must be a boolean"))?,
+                None => false,
+            },
         })
     }
 }
@@ -280,19 +297,21 @@ impl ResultStore {
             Some(have) if have == meta => Ok(()),
             Some(have) => bail!(
                 "store {} belongs to a different campaign: \
-                 store has model={} backend={} seed={} grid={:016x} trials={}, \
-                 this run has model={} backend={} seed={} grid={:016x} trials={}",
+                 store has model={} backend={} seed={} grid={:016x} trials={} det={}, \
+                 this run has model={} backend={} seed={} grid={:016x} trials={} det={}",
                 self.path.display(),
                 have.model,
                 have.backend,
                 have.seed,
                 have.grid_hash,
                 have.n_trials,
+                have.det,
                 meta.model,
                 meta.backend,
                 meta.seed,
                 meta.grid_hash,
-                meta.n_trials
+                meta.n_trials,
+                meta.det
             ),
             None => {
                 self.meta = Some(meta.clone());
@@ -564,6 +583,7 @@ mod tests {
             seed: u64::MAX - 3, // above 2^53: exercises string-seed storage
             grid_hash: 0xdead_beef_cafe_f00d,
             n_trials: 4,
+            det: false,
         }
     }
 
@@ -601,6 +621,45 @@ mod tests {
         assert_eq!(q[0].0, 1);
         assert!(q[0].1.contains("boom"));
         assert_eq!(q[0].2, 3);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn det_mode_roundtrips_and_gates_resume() {
+        let p = tmp("det.jsonl");
+        std::fs::remove_file(&p).ok();
+        let det_meta = StoreMeta { det: true, ..meta() };
+        let mut s = ResultStore::open_or_create(&p).unwrap();
+        s.ensure_meta(&det_meta).unwrap();
+        drop(s);
+        let mut back = ResultStore::open_existing(&p).unwrap();
+        assert_eq!(back.meta(), Some(&det_meta), "det: true survives the roundtrip");
+        // resuming in the other tier would silently mix bitwise-stable
+        // and fast-tier rows in one store — it must be refused
+        let err = back.ensure_meta(&meta()).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("det=true"), "{msg}");
+        assert!(msg.contains("det=false"), "{msg}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn pre_det_meta_lines_parse_as_fast_tier() {
+        // a meta line written before the `det` field existed (those
+        // campaigns ran what is now the fast tier) must still open, as
+        // det: false — and so resume cleanly from a fast-tier run
+        let p = tmp("predet.jsonl");
+        std::fs::remove_file(&p).ok();
+        let body = format!(
+            "{{\"kind\":\"meta\",\"v\":1,\"model\":\"mlp_gsc\",\"backend\":\"host\",\
+             \"seed\":\"{}\",\"grid\":\"{:016x}\",\"trials\":4",
+            u64::MAX - 3,
+            0xdead_beef_cafe_f00du64,
+        );
+        std::fs::write(&p, format!("{}\n", seal(&body))).unwrap();
+        let mut back = ResultStore::open_existing(&p).unwrap();
+        assert_eq!(back.meta(), Some(&meta()), "absent det parses as false");
+        back.ensure_meta(&meta()).unwrap();
         std::fs::remove_file(&p).ok();
     }
 

@@ -198,6 +198,11 @@ pub struct StoreSweepOptions {
     /// With `jobs == 1` exactly this many trials run — the deterministic
     /// interruption hook behind the resume tests and CI smoke job
     pub max_trials: usize,
+    /// run trials on the deterministic linalg tier (`--deterministic`):
+    /// scalar GEMM kernel, serial blocks — rows become bit-stable across
+    /// machines. Recorded in the store meta line, so a store written in
+    /// one mode refuses to resume in the other
+    pub deterministic: bool,
 }
 
 /// What a durable sweep run did (this invocation).
@@ -238,6 +243,13 @@ impl<'e> SweepRunner<'e> {
         opts: &StoreSweepOptions,
         cancel: Option<&AtomicBool>,
     ) -> Result<StoreSweepOutcome> {
+        // select the mode BEFORE querying it: the query latches the env
+        // default into the set-once global, and the meta line must record
+        // the mode the trials actually run under (either the flag or a
+        // pre-set `$ECQX_DETERMINISTIC`)
+        if opts.deterministic {
+            crate::linalg::set_deterministic(true);
+        }
         let full = grid.trials();
         let meta = StoreMeta {
             model: cfg.model.clone(),
@@ -245,6 +257,7 @@ impl<'e> SweepRunner<'e> {
             seed: cfg.seed,
             grid_hash: store::grid_hash(&full),
             n_trials: full.len(),
+            det: crate::linalg::deterministic_mode(),
         };
         result_store.ensure_meta(&meta)?;
         let owned = match opts.shard {
@@ -277,6 +290,7 @@ impl<'e> SweepRunner<'e> {
             retry: opts.retry,
             quarantine: true,
             heartbeat_every: opts.heartbeat_every,
+            deterministic: opts.deterministic,
             ..Default::default()
         };
         let run = campaign::run_with(

@@ -1,0 +1,135 @@
+//! The fast-tier error envelope: what "close enough" means, precisely.
+//!
+//! The deterministic tier is held to bitwise equality against the naive
+//! [`crate::linalg::reference`] loops — no envelope needed. The fast tier
+//! (FMA vector kernels, optional intra-op split) computes each output
+//! element as the same ascending-`k` chain of `k` products, but with FMA
+//! contraction (one rounding per multiply-add instead of two). Standard
+//! forward error analysis for such a chain bounds the deviation from the
+//! exact sum by `γ_k · Σ_p |a_p·b_p|` with `γ_k = k·ε/(1−k·ε)` for f32
+//! `ε = 2⁻²⁴`; the scalar/naive result obeys the same bound, so the
+//! *difference* between any two tiers is at most twice it.
+//!
+//! [`envelope`] therefore allows `2·(k+4)·ε_f32 · Σ_p |a_p·b_p|` per
+//! element, checked against a float64 oracle ([`matmul_f64`]) whose own
+//! error is negligible at these depths. The `+4` slack headroom-covers
+//! the epilogue rounding and future kernels that reassociate the `k` loop
+//! into independent partial sums (pairwise/strip-mined reductions stay
+//! well inside `γ_k`). The bound scales with the **magnitude sum**
+//! `Σ|a||b|`, not the result — that is what makes it honest under
+//! cancellation, where a relative-to-result bound would be vacuous or
+//! impossibly tight; in ULP terms it is a bounded ULP count at the scale
+//! of the summand magnitudes.
+//!
+//! Used by `tests/linalg_simd_conformance.rs` and documented as the
+//! fast-tier acceptance gate in DESIGN.md §2.6.
+
+/// Float64 matmul oracle: `(a[m,k] @ b[k,n])` accumulated in f64, plus
+/// the per-element magnitude sums `Σ_p |a[i,p]·b[p,j]|` that scale the
+/// envelope. Returns `(product, magnitude)`.
+pub fn matmul_f64(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), m * k, "matmul_f64 lhs shape");
+    assert_eq!(b.len(), k * n, "matmul_f64 rhs shape");
+    let mut out = vec![0.0f64; m * n];
+    let mut mag = vec![0.0f64; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p] as f64;
+            for j in 0..n {
+                let t = av * b[p * n + j] as f64;
+                out[i * n + j] += t;
+                mag[i * n + j] += t.abs();
+            }
+        }
+    }
+    (out, mag)
+}
+
+/// Maximum allowed deviation of a fast-tier f32 result from the f64
+/// oracle for one output element of contraction depth `k` with magnitude
+/// sum `mag`: `2·(k+4)·ε_f32·mag`. A zero magnitude sum means every
+/// product is exactly zero, so any tier must produce (signed) zero —
+/// the bound is exactly 0.0 there.
+pub fn envelope(k: usize, mag: f64) -> f64 {
+    2.0 * (k as f64 + 4.0) * (f32::EPSILON as f64) * mag
+}
+
+/// Assert `got` (a fast-tier `[m,n]` GEMM result) is inside the envelope
+/// of the f64 oracle for `a @ b`. `ctx` labels the failing op/shape.
+pub fn assert_matmul_within_envelope(
+    got: &[f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ctx: &str,
+) {
+    assert_eq!(got.len(), m * n, "{ctx}: output shape");
+    let (want, mag) = matmul_f64(a, b, m, k, n);
+    for (i, (&g, (&w, &mg))) in got.iter().zip(want.iter().zip(mag.iter())).enumerate() {
+        let err = (g as f64 - w).abs();
+        let bound = envelope(k, mg);
+        assert!(
+            err <= bound,
+            "{ctx}: element {i} out of envelope: got {g}, oracle {w}, \
+             |err| {err:.3e} > bound {bound:.3e} (k={k}, mag={mg:.3e})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_matches_hand_computed_product() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let (out, mag) = matmul_f64(&a, &b, 2, 2, 2);
+        assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0]);
+        // all products positive here, so magnitude sums equal the product
+        assert_eq!(mag, out);
+    }
+
+    #[test]
+    fn magnitude_sum_survives_cancellation() {
+        // 1·1 + (−1)·1 = 0 exactly, but the magnitude sum is 2 — the
+        // envelope stays finite and meaningful where a relative bound
+        // on the result would collapse to zero
+        let a = [1.0, -1.0];
+        let b = [1.0, 1.0];
+        let (out, mag) = matmul_f64(&a, &b, 1, 2, 1);
+        assert_eq!(out, vec![0.0]);
+        assert_eq!(mag, vec![2.0]);
+        assert!(envelope(2, mag[0]) > 0.0);
+    }
+
+    #[test]
+    fn envelope_is_zero_only_for_zero_magnitude() {
+        assert_eq!(envelope(1000, 0.0), 0.0);
+        assert!(envelope(1, 1.0) > 0.0);
+        // monotone in both k and magnitude
+        assert!(envelope(100, 1.0) > envelope(10, 1.0));
+        assert!(envelope(10, 2.0) > envelope(10, 1.0));
+    }
+
+    #[test]
+    fn exact_result_passes_the_assertion() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [2,3]
+        let b = [1.0, 0.5, -1.0, 2.0, 0.25, -0.5]; // [3,2]
+        let (want, _) = matmul_f64(&a, &b, 2, 3, 2);
+        let got: Vec<f32> = want.iter().map(|&v| v as f32).collect();
+        assert_matmul_within_envelope(&got, &a, &b, 2, 3, 2, "exact");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of envelope")]
+    fn grossly_wrong_result_fails_the_assertion() {
+        let a = [1.0, 2.0];
+        let b = [3.0, 4.0];
+        // true value is 11; 12 is far outside any k=2 envelope
+        assert_matmul_within_envelope(&[12.0], &a, &b, 1, 2, 1, "wrong");
+    }
+}

@@ -1,4 +1,5 @@
-//! Cache-blocked, SIMD-friendly GEMM with fused epilogues.
+//! Cache-blocked GEMM with fused epilogues and runtime-dispatched
+//! micro-kernels.
 //!
 //! One core loop nest serves all three contraction forms of the host
 //! backend (NN for the forward pass, TN for dW and LRP weight relevance,
@@ -15,27 +16,30 @@
 //!         out tile = epilogue(acc)     (bias / bias+relu / scale / mask)
 //! ```
 //!
-//! The micro-kernel keeps an `MR×NR` accumulator tile in registers and
-//! vectorizes over the `NR` (column) axis — a broadcast-multiply-add per
-//! `k` step with **no reduction reassociation**, so no `unsafe` and no
-//! `-ffast-math` analogue is needed for the compiler to emit SIMD.
-//!
-//! Determinism: each output element accumulates its `k` products in
-//! ascending-`k` order — the same order as the retained naive kernels
-//! ([`crate::linalg::reference`]) — and the blocking constants are
-//! compile-time fixed, so results are a pure function of the operand
-//! values and shapes: identical run-to-run, identical for any `--jobs`
-//! count, and (on finite inputs) bitwise-equal to the naive loops. The
-//! fused epilogues apply exactly the arithmetic the previously separate
-//! full-tensor passes applied, in the same per-element order.
+//! The register-tile inner loop is one of the micro-kernels of
+//! [`super::simd`], selected per call by [`GemmOpts`]: the portable
+//! scalar kernel (the *deterministic tier* — bitwise-equal to the naive
+//! [`super::reference`] loops, since both accumulate each element's `k`
+//! products in ascending order with separate mul/add roundings), or a
+//! hand-vectorized AVX2/NEON FMA kernel (the *fast tier* — same ascending
+//! order, but FMA's single rounding per step breaks bitwise equality; it
+//! is instead held to the error envelope of [`super::conformance`]).
+//! Large dense-A GEMMs may additionally split their MC row blocks across
+//! scoped threads ([`GemmOpts::threads`]); the split lands exactly on MC
+//! block boundaries and re-bases row-indexed epilogues, so it changes no
+//! summation order and is bitwise-identical to the same kernel run
+//! serially. Plain [`gemm()`] and the wrappers resolve the process-wide
+//! mode ([`GemmOpts::dispatch`]); `*_with` variants pin it per call.
 
 use super::im2col::{pack_patches, pack_patches_t, Conv2d};
 use super::pack::{pack_a, pack_b, pack_b_gather, View};
-use super::workspace::Workspace;
+use super::simd::{self, GemmOpts, Kernel};
+use super::workspace::{with_thread_workspace, Workspace};
 
 /// Micro-kernel rows (broadcast axis).
 pub const MR: usize = 4;
-/// Micro-kernel columns (vector axis; two 8-lane f32 vectors on AVX2).
+/// Micro-kernel columns (vector axis; two 8-lane f32 vectors on AVX2,
+/// four 4-lane vectors on NEON).
 pub const NR: usize = 16;
 /// Rows of A packed per block (A panel = MC·k floats, L2-resident for the
 /// layer sizes of the paper's models).
@@ -66,13 +70,28 @@ pub enum Epilogue<'a> {
     ReluMask(&'a [f32]),
 }
 
+impl<'a> Epilogue<'a> {
+    /// The same epilogue as seen from output row `i0` of a row-split
+    /// chunk: row-indexed buffers (`Scale`, `ReluMask`) are re-based so
+    /// the chunk's local row `i` reads global row `i0 + i`; column-indexed
+    /// (`Bias`, `BiasRelu`) and empty epilogues pass through unchanged.
+    pub(crate) fn offset_rows(self, i0: usize, n: usize) -> Epilogue<'a> {
+        match self {
+            Epilogue::Scale(s) => Epilogue::Scale(&s[i0 * n..]),
+            Epilogue::ReluMask(m) => Epilogue::ReluMask(&m[i0 * n..]),
+            other => other,
+        }
+    }
+}
+
 /// Right-hand operand: a strided dense view, or centroid indices
 /// dequantized through a codebook at pack time (`qdense_gather`).
 #[derive(Clone, Copy, Debug)]
 pub enum BOperand<'a> {
     Dense(View<'a>),
     /// row-major `[k, n]` int32 centroid indices + codebook; out-of-range
-    /// indices clamp. Must be non-empty (callers pre-validate).
+    /// indices clamp, and an empty codebook packs as an all-zero weight
+    /// matrix (`pack_b_gather` handles both — no caller pre-validation).
     Gather { idx: &'a [i32], codebook: &'a [f32] },
 }
 
@@ -114,25 +133,6 @@ fn finish(acc: f32, i: usize, j: usize, n: usize, epi: &Epilogue) -> f32 {
     }
 }
 
-/// The register-tile inner loop: `acc[r][c] += A[r,p] · B[p,c]` for
-/// `p = 0..k` ascending. `apanel`/`bpanel` are packed strips of exactly
-/// `k*MR` / `k*NR` floats; the `NR`-wide inner loop has constant bounds
-/// and no reductions, which is what lets the autovectorizer emit fused
-/// broadcast-FMA tiles without reassociating any sum.
-#[inline(always)]
-fn microkernel(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
-    debug_assert_eq!(apanel.len(), k * MR);
-    debug_assert_eq!(bpanel.len(), k * NR);
-    for (arow, brow) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
-        for (r, &av) in arow.iter().enumerate() {
-            let accr = &mut acc[r];
-            for (a, &bv) in accr.iter_mut().zip(brow.iter()) {
-                *a += av * bv;
-            }
-        }
-    }
-}
-
 /// `out = epilogue(0)` — shared early-out for an empty contraction
 /// (`k == 0`) and an empty gather codebook (all-zero weights).
 pub(crate) fn epilogue_of_zero(out: &mut [f32], m: usize, n: usize, epi: &Epilogue) {
@@ -167,9 +167,27 @@ fn store_tile(
 /// Blocked GEMM core: `out[m,n] = epilogue(A[m,k] · B[k,n])`, where A and
 /// B are arbitrary strided views or virtual operands (so TN/NT and the
 /// im2col conv forms are the same code path) and `out` is fully
-/// overwritten. Single-threaded and deterministic; callers parallelize
-/// across independent GEMMs, never inside one.
+/// overwritten. Runs under the process-wide mode ([`GemmOpts::dispatch`]);
+/// see [`gemm_with`] to pin the kernel/threads per call.
 pub fn gemm(
+    ws: &mut Workspace,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: AOperand,
+    b: BOperand,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    gemm_with(GemmOpts::dispatch(), ws, m, n, k, a, b, epi, out);
+}
+
+/// [`gemm()`] with explicit execution options. The intra-op row split
+/// engages only for dense-A GEMMs spanning at least two MC blocks with
+/// `opts.threads > 1` (virtual patch operands address rows globally, so
+/// conv forms always run their blocks serially).
+pub fn gemm_with(
+    opts: GemmOpts,
     ws: &mut Workspace,
     m: usize,
     n: usize,
@@ -189,8 +207,61 @@ pub fn gemm(
         epilogue_of_zero(out, m, n, &epi);
         return;
     }
+    if opts.threads > 1 && m >= 2 * MC {
+        if let AOperand::Dense(av) = a {
+            gemm_split_rows(opts.kernel, opts.threads, m, n, k, av, b, epi, out);
+            return;
+        }
+    }
     let (apack, bpack) = ws.panels(panel_rows(m, MC, MR) * k, panel_rows(n, NC, NR) * k);
-    gemm_core(apack, bpack, m, n, k, a, b, epi, out);
+    gemm_core(opts.kernel, apack, bpack, m, n, k, a, b, epi, out);
+}
+
+/// Split one dense-A GEMM's rows across scoped threads, each chunk a
+/// whole number of MC blocks. Because the serial core already restarts
+/// its A-block loop at every MC boundary (re-packing B per NC block
+/// either way), a chunk computes exactly the tiles the serial run would,
+/// in the same per-element order — the split is bitwise-identical to
+/// `threads = 1` with the same kernel, it only reassigns blocks to
+/// threads. Each thread packs into its own thread-local workspace; the
+/// output is partitioned disjointly via `chunks_mut`.
+fn gemm_split_rows(
+    kernel: Kernel,
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    av: View,
+    b: BOperand,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    let chunks = threads.min(m.div_ceil(MC));
+    let chunk_rows = m.div_ceil(chunks).div_ceil(MC) * MC;
+    std::thread::scope(|scope| {
+        for (ci, ochunk) in out.chunks_mut(chunk_rows * n).enumerate() {
+            let i0 = ci * chunk_rows;
+            scope.spawn(move || {
+                let rows = ochunk.len() / n;
+                with_thread_workspace(|ws| {
+                    let (apack, bpack) =
+                        ws.panels(panel_rows(rows, MC, MR) * k, panel_rows(n, NC, NR) * k);
+                    gemm_core(
+                        kernel,
+                        apack,
+                        bpack,
+                        rows,
+                        n,
+                        k,
+                        AOperand::Dense(av.at(i0, 0)),
+                        b,
+                        epi.offset_rows(i0, n),
+                        ochunk,
+                    );
+                });
+            });
+        }
+    });
 }
 
 /// Strip-rounded panel extent for a matrix dimension: the largest block
@@ -203,11 +274,13 @@ pub(crate) fn panel_rows(dim: usize, block: usize, strip: usize) -> usize {
     block.min(dim.div_ceil(strip) * strip)
 }
 
-/// [`gemm()`] over caller-held packing panels, sized at least
+/// [`gemm_with`] over caller-held packing panels, sized at least
 /// `panel_rows(m, MC, MR)·k` / `panel_rows(n, NC, NR)·k` floats.
 /// [`crate::linalg::conv2d_bwd_input`] uses this to run its per-tile
-/// GEMM while also holding the workspace's dCol tile.
+/// GEMM while also holding the workspace's dCol tile. Always serial
+/// (one thread's worth of blocks); `kernel` picks the micro-kernel.
 pub(crate) fn gemm_core(
+    kernel: Kernel,
     apack: &mut [f32],
     bpack: &mut [f32],
     m: usize,
@@ -254,7 +327,7 @@ pub(crate) fn gemm_core(
                     let mr = MR.min(mc - ir);
                     let apanel = &apack[(ir / MR) * MR * k..(ir / MR) * MR * k + MR * k];
                     let mut acc = [[0.0f32; NR]; MR];
-                    microkernel(k, apanel, bpanel, &mut acc);
+                    simd::microkernel(kernel, k, apanel, bpanel, &mut acc);
                     store_tile(&acc, out, n, ic + ir, jc + jr, mr, nr, &epi);
                     ir += MR;
                 }
@@ -277,9 +350,35 @@ pub fn gemm_nn(
     epi: Epilogue,
     out: &mut [f32],
 ) {
+    gemm_nn_with(GemmOpts::dispatch(), ws, a, b, m, k, n, epi, out);
+}
+
+/// [`gemm_nn`] with explicit execution options.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_with(
+    opts: GemmOpts,
+    ws: &mut Workspace,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
     assert_eq!(a.len(), m * k, "gemm_nn lhs shape");
     assert_eq!(b.len(), k * n, "gemm_nn rhs shape");
-    gemm(ws, m, n, k, AOperand::Dense(View::nn(a, k)), BOperand::Dense(View::nn(b, n)), epi, out);
+    gemm_with(
+        opts,
+        ws,
+        m,
+        n,
+        k,
+        AOperand::Dense(View::nn(a, k)),
+        BOperand::Dense(View::nn(b, n)),
+        epi,
+        out,
+    );
 }
 
 /// `out[k,n] = epilogue(a[m,k]ᵀ @ b[m,n])` — the dW / LRP contraction.
@@ -293,9 +392,35 @@ pub fn gemm_tn(
     epi: Epilogue,
     out: &mut [f32],
 ) {
+    gemm_tn_with(GemmOpts::dispatch(), ws, a, b, m, k, n, epi, out);
+}
+
+/// [`gemm_tn`] with explicit execution options.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_with(
+    opts: GemmOpts,
+    ws: &mut Workspace,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
     assert_eq!(a.len(), m * k, "gemm_tn lhs shape");
     assert_eq!(b.len(), m * n, "gemm_tn rhs shape");
-    gemm(ws, k, n, m, AOperand::Dense(View::t(a, k)), BOperand::Dense(View::nn(b, n)), epi, out);
+    gemm_with(
+        opts,
+        ws,
+        k,
+        n,
+        m,
+        AOperand::Dense(View::t(a, k)),
+        BOperand::Dense(View::nn(b, n)),
+        epi,
+        out,
+    );
 }
 
 /// `out[m,k] = epilogue(g[m,n] @ w[k,n]ᵀ)` — the input-gradient / R_in
@@ -310,18 +435,63 @@ pub fn gemm_nt(
     epi: Epilogue,
     out: &mut [f32],
 ) {
+    gemm_nt_with(GemmOpts::dispatch(), ws, g, w, m, n, k, epi, out);
+}
+
+/// [`gemm_nt`] with explicit execution options.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_with(
+    opts: GemmOpts,
+    ws: &mut Workspace,
+    g: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
     assert_eq!(g.len(), m * n, "gemm_nt lhs shape");
     assert_eq!(w.len(), k * n, "gemm_nt rhs shape");
-    gemm(ws, m, k, n, AOperand::Dense(View::nn(g, n)), BOperand::Dense(View::t(w, n)), epi, out);
+    gemm_with(
+        opts,
+        ws,
+        m,
+        k,
+        n,
+        AOperand::Dense(View::nn(g, n)),
+        BOperand::Dense(View::t(w, n)),
+        epi,
+        out,
+    );
 }
 
 /// `out[m,n] = epilogue(a[m,k] @ dequant(idx)[k,n])` — the deployment-form
 /// dense layer. Centroid indices are dequantized panel-by-panel at pack
 /// time (never materializing the dense weight matrix) with the zero
 /// centroid skipped. An empty codebook yields an all-zero weight matrix
-/// (`out = epilogue(0)`); the host backend rejects that case with an
-/// error before calling in (see `runtime::host::qdense_gather`).
+/// (`out = epilogue(0)`) at every layer — here via the early-out, and in
+/// the pack layer itself (`pack_b_gather` zero-fills); the host backend
+/// additionally reports it as a corrupt-container error up front (see
+/// `runtime::host::qdense_gather`).
 pub fn gemm_gather_nn(
+    ws: &mut Workspace,
+    a: &[f32],
+    idx: &[i32],
+    codebook: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    gemm_gather_nn_with(GemmOpts::dispatch(), ws, a, idx, codebook, m, k, n, epi, out);
+}
+
+/// [`gemm_gather_nn`] with explicit execution options.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_gather_nn_with(
+    opts: GemmOpts,
     ws: &mut Workspace,
     a: &[f32],
     idx: &[i32],
@@ -339,7 +509,7 @@ pub fn gemm_gather_nn(
         return;
     }
     let av = AOperand::Dense(View::nn(a, k));
-    gemm(ws, m, n, k, av, BOperand::Gather { idx, codebook }, epi, out);
+    gemm_with(opts, ws, m, n, k, av, BOperand::Gather { idx, codebook }, epi, out);
 }
 
 /// FLOP count of one `m×k×n` GEMM (multiply + add), for GFLOP/s rows in
@@ -353,6 +523,13 @@ mod tests {
     use super::super::reference;
     use super::*;
 
+    // The unit tests assert exact equality against the naive reference,
+    // which is the *deterministic-tier* contract — so they pin the scalar
+    // kernel explicitly instead of inheriting the process dispatch (which
+    // would pick an FMA kernel on most CI hosts and break `==`). The fast
+    // tier is covered by tests/linalg_simd_conformance.rs.
+    const DET: GemmOpts = GemmOpts { kernel: Kernel::Scalar, threads: 1 };
+
     fn seq(n: usize, scale: f32) -> Vec<f32> {
         (0..n).map(|i| ((i % 13) as f32 - 6.0) * scale).collect()
     }
@@ -364,7 +541,7 @@ mod tests {
         let b = seq(k * n, 0.5);
         let mut ws = Workspace::new();
         let mut out = vec![0.0; m * n];
-        gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
+        gemm_nn_with(DET, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
         assert_eq!(out, reference::matmul(&a, &b, m, k, n));
     }
 
@@ -377,10 +554,10 @@ mod tests {
         let g = seq(m * n, 0.7);
         let mut ws = Workspace::new();
         let mut tn = vec![0.0; k * n];
-        gemm_tn(&mut ws, &a, &b, m, k, n, Epilogue::None, &mut tn);
+        gemm_tn_with(DET, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut tn);
         assert_eq!(tn, reference::matmul_tn(&a, &b, m, k, n));
         let mut nt = vec![0.0; m * k];
-        gemm_nt(&mut ws, &g, &w, m, n, k, Epilogue::None, &mut nt);
+        gemm_nt_with(DET, &mut ws, &g, &w, m, n, k, Epilogue::None, &mut nt);
         assert_eq!(nt, reference::matmul_nt(&g, &w, m, n, k));
     }
 
@@ -393,7 +570,7 @@ mod tests {
             let b = seq(k * n, 0.02);
             let mut ws = Workspace::new();
             let mut out = vec![0.0; m * n];
-            gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
+            gemm_nn_with(DET, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
             assert_eq!(out, reference::matmul(&a, &b, m, k, n), "shape {m}x{k}x{n}");
         }
     }
@@ -414,7 +591,7 @@ mod tests {
         let bias = [1.0, -2.0, 3.0];
         let mut ws = Workspace::new();
         let mut out = vec![f32::NAN; 2 * 3];
-        gemm_nn(&mut ws, &[], &[], 2, 0, 3, Epilogue::BiasRelu(&bias), &mut out);
+        gemm_nn_with(DET, &mut ws, &[], &[], 2, 0, 3, Epilogue::BiasRelu(&bias), &mut out);
         assert_eq!(out, vec![1.0, 0.0, 3.0, 1.0, 0.0, 3.0]);
     }
 
@@ -426,7 +603,7 @@ mod tests {
         let bias = seq(n, 0.9);
         let mut ws = Workspace::new();
         let mut fused = vec![0.0; m * n];
-        gemm_nn(&mut ws, &a, &b, m, k, n, Epilogue::BiasRelu(&bias), &mut fused);
+        gemm_nn_with(DET, &mut ws, &a, &b, m, k, n, Epilogue::BiasRelu(&bias), &mut fused);
         let mut unfused = reference::matmul(&a, &b, m, k, n);
         for row in unfused.chunks_exact_mut(n) {
             for (z, &bv) in row.iter_mut().zip(&bias) {
@@ -446,9 +623,9 @@ mod tests {
         let bias = seq(n, 0.4);
         let mut ws = Workspace::new();
         let mut out = vec![0.0; m * n];
-        gemm_gather_nn(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::Bias(&bias), &mut out);
+        gemm_gather_nn_with(DET, &mut ws, &a, &idx, &cb, m, k, n, Epilogue::Bias(&bias), &mut out);
         let mut want = vec![0.0; m * n];
-        gemm_nn(&mut ws, &a, &dense, m, k, n, Epilogue::Bias(&bias), &mut want);
+        gemm_nn_with(DET, &mut ws, &a, &dense, m, k, n, Epilogue::Bias(&bias), &mut want);
         assert_eq!(out, want);
     }
 
@@ -460,7 +637,32 @@ mod tests {
         let bias = [0.5, -0.5];
         let mut ws = Workspace::new();
         let mut out = vec![f32::NAN; m * n];
-        gemm_gather_nn(&mut ws, &a, &idx, &[], m, k, n, Epilogue::Bias(&bias), &mut out);
+        gemm_gather_nn_with(DET, &mut ws, &a, &idx, &[], m, k, n, Epilogue::Bias(&bias), &mut out);
+        assert_eq!(out, vec![0.5, -0.5, 0.5, -0.5]);
+    }
+
+    #[test]
+    fn empty_codebook_through_the_pack_layer_is_zero_weights() {
+        // bypass gemm_gather_nn's early-out: hand the core a Gather
+        // operand with an empty codebook directly — the pack layer must
+        // zero-fill, not underflow-panic (the PR 8 bugfix)
+        let (m, k, n) = (2, 3, 2);
+        let a = seq(m * k, 1.0);
+        let idx = vec![1i32; k * n];
+        let bias = [0.5, -0.5];
+        let mut ws = Workspace::new();
+        let mut out = vec![f32::NAN; m * n];
+        gemm_with(
+            DET,
+            &mut ws,
+            m,
+            n,
+            k,
+            AOperand::Dense(View::nn(&a, k)),
+            BOperand::Gather { idx: &idx, codebook: &[] },
+            Epilogue::Bias(&bias),
+            &mut out,
+        );
         assert_eq!(out, vec![0.5, -0.5, 0.5, -0.5]);
     }
 
@@ -471,14 +673,34 @@ mod tests {
         let b = seq(k * n, 0.07);
         let mut fresh = Workspace::new();
         let mut clean = vec![0.0; m * n];
-        gemm_nn(&mut fresh, &a, &b, m, k, n, Epilogue::None, &mut clean);
+        gemm_nn_with(DET, &mut fresh, &a, &b, m, k, n, Epilogue::None, &mut clean);
         // pollute a workspace with a larger, unrelated GEMM first
         let mut dirty = Workspace::new();
         let big = seq(64 * 64, 3.3);
         let mut sink = vec![0.0; 64 * 64];
-        gemm_nn(&mut dirty, &big, &big, 64, 64, 64, Epilogue::None, &mut sink);
+        gemm_nn_with(DET, &mut dirty, &big, &big, 64, 64, 64, Epilogue::None, &mut sink);
         let mut out = vec![0.0; m * n];
-        gemm_nn(&mut dirty, &a, &b, m, k, n, Epilogue::None, &mut out);
+        gemm_nn_with(DET, &mut dirty, &a, &b, m, k, n, Epilogue::None, &mut out);
         assert_eq!(out, clean);
+    }
+
+    #[test]
+    fn row_split_is_bitwise_identical_to_serial_per_kernel() {
+        // enough rows for several MC blocks, ragged on every axis; Scale
+        // epilogue exercises the row re-basing
+        let (m, k, n) = (3 * MC + 5, 19, NR + 3);
+        let a = seq(m * k, 0.13);
+        let b = seq(k * n, 0.21);
+        let scale = seq(m * n, 0.33);
+        for kern in Kernel::available() {
+            let mut ws = Workspace::new();
+            let mut serial = vec![0.0; m * n];
+            let one = GemmOpts { kernel: kern, threads: 1 };
+            gemm_nn_with(one, &mut ws, &a, &b, m, k, n, Epilogue::Scale(&scale), &mut serial);
+            let mut split = vec![0.0; m * n];
+            let four = GemmOpts { kernel: kern, threads: 4 };
+            gemm_nn_with(four, &mut ws, &a, &b, m, k, n, Epilogue::Scale(&scale), &mut split);
+            assert_eq!(split, serial, "kernel {}", kern.name());
+        }
     }
 }

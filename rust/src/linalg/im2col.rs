@@ -25,16 +25,23 @@
 //!   then a col2im scatter-add ([`conv2d_bwd_input`]); the full
 //!   `[n·oh·ow, kh·kw·c]` dCol matrix is never materialized
 //!
-//! Determinism: every GEMM accumulates in ascending contraction order
-//! (gemm.rs invariant) and the col2im scatter adds tile rows in
-//! ascending `(m, tap)` order with a compile-time-fixed tile height, so
-//! conv results — like the dense kernels — are pure functions of the
-//! operand values, bitwise-equal to the retained naive direct kernels
-//! ([`crate::linalg::reference`]) on finite inputs, and identical for
-//! any `--jobs` count or workspace reuse pattern (DESIGN.md §2.3).
+//! Two-tier determinism (see [`super::simd`] and DESIGN.md §2.6): every
+//! GEMM accumulates in ascending contraction order (gemm.rs invariant)
+//! and the col2im scatter adds tile rows in ascending `(m, tap)` order
+//! with a compile-time-fixed tile height, so conv results are pure
+//! functions of the operand values and the selected micro-kernel —
+//! identical for any `--jobs` count or workspace reuse pattern. Under
+//! the deterministic tier (scalar kernel) they are additionally
+//! bitwise-equal to the retained naive direct kernels
+//! ([`crate::linalg::reference`]) on finite inputs; the fast tier's FMA
+//! kernels are held to the [`super::conformance`] envelope instead.
+//! Conv GEMMs always run their blocks serially (the virtual patch
+//! operands address rows globally, so the intra-op row split of dense
+//! GEMMs does not apply).
 
-use super::gemm::{gemm, gemm_core, AOperand, BOperand, Epilogue, MC, MR};
+use super::gemm::{gemm_core, gemm_with, AOperand, BOperand, Epilogue, MC, MR};
 use super::pack::View;
+use super::simd::GemmOpts;
 use super::workspace::Workspace;
 
 /// Spatial padding mode (XLA conventions).
@@ -257,10 +264,25 @@ pub fn conv2d(
     epi: Epilogue,
     out: &mut [f32],
 ) {
+    conv2d_with(GemmOpts::dispatch(), ws, x, w, g, epi, out);
+}
+
+/// [`conv2d`] with explicit execution options (micro-kernel selection;
+/// conv blocks always run serially).
+pub fn conv2d_with(
+    opts: GemmOpts,
+    ws: &mut Workspace,
+    x: &[f32],
+    w: &[f32],
+    g: &Conv2d,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
     assert_eq!(x.len(), g.in_len(), "conv2d input shape");
     assert_eq!(w.len(), g.filter_len(), "conv2d filter shape");
     assert_eq!(out.len(), g.out_len(), "conv2d output shape");
-    gemm(
+    gemm_with(
+        opts,
         ws,
         g.rows(),
         g.co,
@@ -275,9 +297,25 @@ pub fn conv2d(
 /// Deployment-form conv: int32 centroid indices (flattened HWIO
 /// `[taps, co]`) dequantized through `codebook` at pack time, zero
 /// centroid skipped — the conv twin of `gemm_gather_nn`. An empty
-/// codebook yields `out = epilogue(0)`; the host backend rejects that
-/// case with an error before calling in.
+/// codebook yields `out = epilogue(0)` — here via the early-out and in
+/// the pack layer itself (`pack_b_gather` zero-fills); the host backend
+/// additionally reports it as a corrupt-container error up front.
 pub fn conv2d_gather(
+    ws: &mut Workspace,
+    x: &[f32],
+    idx: &[i32],
+    codebook: &[f32],
+    g: &Conv2d,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    conv2d_gather_with(GemmOpts::dispatch(), ws, x, idx, codebook, g, epi, out);
+}
+
+/// [`conv2d_gather`] with explicit execution options.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_gather_with(
+    opts: GemmOpts,
     ws: &mut Workspace,
     x: &[f32],
     idx: &[i32],
@@ -293,7 +331,8 @@ pub fn conv2d_gather(
         super::gemm::epilogue_of_zero(out, g.rows(), g.co, &epi);
         return;
     }
-    gemm(
+    gemm_with(
+        opts,
         ws,
         g.rows(),
         g.co,
@@ -317,10 +356,24 @@ pub fn conv2d_bwd_filter(
     epi: Epilogue,
     out: &mut [f32],
 ) {
+    conv2d_bwd_filter_with(GemmOpts::dispatch(), ws, x, gout, g, epi, out);
+}
+
+/// [`conv2d_bwd_filter`] with explicit execution options.
+pub fn conv2d_bwd_filter_with(
+    opts: GemmOpts,
+    ws: &mut Workspace,
+    x: &[f32],
+    gout: &[f32],
+    g: &Conv2d,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
     assert_eq!(x.len(), g.in_len(), "conv2d_bwd_filter input shape");
     assert_eq!(gout.len(), g.out_len(), "conv2d_bwd_filter gout shape");
     assert_eq!(out.len(), g.filter_len(), "conv2d_bwd_filter output shape");
-    gemm(
+    gemm_with(
+        opts,
         ws,
         g.taps(),
         g.co,
@@ -343,16 +396,42 @@ pub fn lrp_conv_rw(
     g: &Conv2d,
     out: &mut [f32],
 ) {
+    lrp_conv_rw_with(GemmOpts::dispatch(), ws, a, s, w, g, out);
+}
+
+/// [`lrp_conv_rw`] with explicit execution options.
+pub fn lrp_conv_rw_with(
+    opts: GemmOpts,
+    ws: &mut Workspace,
+    a: &[f32],
+    s: &[f32],
+    w: &[f32],
+    g: &Conv2d,
+    out: &mut [f32],
+) {
     assert_eq!(w.len(), g.filter_len(), "lrp_conv_rw filter shape");
-    conv2d_bwd_filter(ws, a, s, g, Epilogue::Scale(w), out);
+    conv2d_bwd_filter_with(opts, ws, a, s, g, Epilogue::Scale(w), out);
 }
 
 /// Input gradient: `dx[n,h,w,c] = col2im(gout @ wᵀ)`. The dCol matrix is
 /// produced `MC` rows at a time into the workspace's tile buffer (one
 /// blocked GEMM per tile), then scatter-added into `dx` in ascending
 /// `(m, tap)` order — fixed tiling, fixed order, so the result is
-/// deterministic and bitwise-equal to the naive reference.
+/// deterministic per kernel (and bitwise-equal to the naive reference
+/// under the scalar kernel).
 pub fn conv2d_bwd_input(ws: &mut Workspace, gout: &[f32], w: &[f32], g: &Conv2d, dx: &mut [f32]) {
+    conv2d_bwd_input_with(GemmOpts::dispatch(), ws, gout, w, g, dx);
+}
+
+/// [`conv2d_bwd_input`] with explicit execution options.
+pub fn conv2d_bwd_input_with(
+    opts: GemmOpts,
+    ws: &mut Workspace,
+    gout: &[f32],
+    w: &[f32],
+    g: &Conv2d,
+    dx: &mut [f32],
+) {
     assert_eq!(gout.len(), g.out_len(), "conv2d_bwd_input gout shape");
     assert_eq!(w.len(), g.filter_len(), "conv2d_bwd_input filter shape");
     assert_eq!(dx.len(), g.in_len(), "conv2d_bwd_input dx shape");
@@ -375,6 +454,7 @@ pub fn conv2d_bwd_input(ws: &mut Workspace, gout: &[f32], w: &[f32], g: &Conv2d,
         let t = &mut tile[..rows * k];
         // dCol tile: t[r, tap] = Σ_co gout[m0+r, co] · w[tap, co]
         gemm_core(
+            opts.kernel,
             apack,
             bpack,
             rows,
@@ -421,7 +501,15 @@ pub fn conv2d_bwd_input(ws: &mut Workspace, gout: &[f32], w: &[f32], g: &Conv2d,
 #[cfg(test)]
 mod tests {
     use super::super::reference;
+    use super::super::simd::Kernel;
     use super::*;
+
+    // Exact-equality comparisons against the naive reference pin the
+    // deterministic tier (scalar kernel); gather-vs-dense comparisons run
+    // under the process dispatch on purpose — packed panels are identical
+    // either way, so they must agree bitwise under *any* kernel. The fast
+    // tier's envelope is covered by tests/linalg_simd_conformance.rs.
+    const DET: GemmOpts = GemmOpts { kernel: Kernel::Scalar, threads: 1 };
 
     fn geom() -> Conv2d {
         Conv2d { n: 2, h: 5, w: 6, c: 3, kh: 3, kw: 3, co: 4, stride: 1, pad: Pad::Same }
@@ -453,7 +541,7 @@ mod tests {
                 let w = seq(g.filter_len(), 0.125);
                 let mut ws = Workspace::new();
                 let mut out = vec![0.0f32; g.out_len()];
-                conv2d(&mut ws, &x, &w, &g, Epilogue::None, &mut out);
+                conv2d_with(DET, &mut ws, &x, &w, &g, Epilogue::None, &mut out);
                 assert_eq!(out, reference::conv2d_naive(&x, &w, &g), "s={stride} {pad:?}");
             }
         }
@@ -467,10 +555,10 @@ mod tests {
         let gout = seq(g.out_len(), 0.3);
         let mut ws = Workspace::new();
         let mut dw = vec![0.0f32; g.filter_len()];
-        conv2d_bwd_filter(&mut ws, &x, &gout, &g, Epilogue::None, &mut dw);
+        conv2d_bwd_filter_with(DET, &mut ws, &x, &gout, &g, Epilogue::None, &mut dw);
         assert_eq!(dw, reference::conv2d_bwd_filter_naive(&x, &gout, &g));
         let mut dx = vec![f32::NAN; g.in_len()];
-        conv2d_bwd_input(&mut ws, &gout, &w, &g, &mut dx);
+        conv2d_bwd_input_with(DET, &mut ws, &gout, &w, &g, &mut dx);
         assert_eq!(dx, reference::conv2d_bwd_input_naive(&gout, &w, &g));
     }
 

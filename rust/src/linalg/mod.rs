@@ -1,6 +1,6 @@
-//! Dense linear-algebra core of the host backend: a cache-blocked,
-//! SIMD-friendly GEMM with fused epilogues and reusable per-worker
-//! workspaces.
+//! Dense linear-algebra core of the host backend: a cache-blocked GEMM
+//! with runtime-dispatched vector micro-kernels, fused epilogues and
+//! reusable per-worker workspaces.
 //!
 //! Every sweep trial on the host backend is dominated by three dense
 //! contraction forms — NN (forward `a@w`), TN (`aᵀ@g` for dW and the LRP
@@ -16,9 +16,15 @@
 //!
 //! Module map:
 //! * [`mod@gemm`] (+ the `gemm_nn`/`gemm_tn`/`gemm_nt`/`gemm_gather_nn`
-//!   wrappers) — the blocked core and its fixed blocking constants
+//!   wrappers and their `*_with` variants) — the blocked core, its fixed
+//!   blocking constants, and the intra-op MC-row split
+//! * [`simd`] — the micro-kernels ([`Kernel`]: portable scalar, AVX2,
+//!   NEON), runtime feature dispatch, and the process-wide execution
+//!   mode ([`GemmOpts`], [`set_deterministic`], `$ECQX_DETERMINISTIC`,
+//!   `$ECQX_KERNEL`, `$ECQX_GEMM_THREADS`)
 //! * [`pack`] — strided [`pack::View`]s and panel packing (incl. the
-//!   codebook gather)
+//!   codebook gather, which zero-fills on an empty codebook instead of
+//!   trusting callers to pre-validate)
 //! * [`im2col`] — NHWC conv2d lowered onto the same core: virtual patch
 //!   operands packed straight into A panels (forward / dW / LRP), the
 //!   tiled col2im backward, and the codebook-gather conv
@@ -27,29 +33,41 @@
 //! * [`reference`] — the retained naive kernels (GEMM *and* direct
 //!   conv), kept as the oracle for `tests/linalg_gemm_props.rs` /
 //!   `tests/conv_props.rs` and the baseline rows of `BENCH_host.json`
+//! * [`conformance`] — the fast-tier error envelope and its f64 oracle
+//!   (`tests/linalg_simd_conformance.rs`)
 //!
-//! Determinism contract (relied on by the campaign serial-vs-parallel
-//! tests): a GEMM or conv result is a pure function of operand values and
-//! shapes. Blocking is compile-time fixed, each call is single-threaded,
-//! each output element accumulates in ascending contraction order (the
-//! col2im scatter adds in ascending `(m, tap)` order), and workspace
-//! contents cannot leak into results — so outputs are identical for any
-//! `--jobs` count and any workspace reuse pattern. See `DESIGN.md`
-//! §2.2–2.3.
+//! Two-tier determinism contract (DESIGN.md §2.6). Results are always a
+//! pure function of operand values, shapes, and the selected
+//! micro-kernel: blocking is compile-time fixed, each output element
+//! accumulates in ascending contraction order, the intra-op row split
+//! lands on MC block boundaries (changing no summation order), and
+//! workspace contents cannot leak into results — so within one process,
+//! outputs are identical run-to-run and for any `--jobs` count. The
+//! *deterministic tier* ([`GemmOpts::deterministic`], selected
+//! process-wide by `--deterministic` / `$ECQX_DETERMINISTIC`) pins the
+//! scalar kernel and is additionally **bitwise-equal** to the naive
+//! reference on finite inputs — and therefore bit-stable across machines.
+//! The *fast tier* uses the best available FMA vector kernel (bitwise
+//! inequality with scalar is inherent to FMA's single rounding) and is
+//! held to the [`conformance`] envelope instead.
 
+pub mod conformance;
 pub mod gemm;
 pub mod im2col;
 pub mod pack;
 pub mod reference;
+pub mod simd;
 pub mod workspace;
 
 pub use gemm::{
-    gemm, gemm_flops, gemm_gather_nn, gemm_nn, gemm_nt, gemm_tn, AOperand, BOperand, Epilogue, MC,
-    MR, NC, NR,
+    gemm, gemm_flops, gemm_gather_nn, gemm_gather_nn_with, gemm_nn, gemm_nn_with, gemm_nt,
+    gemm_nt_with, gemm_tn, gemm_tn_with, gemm_with, AOperand, BOperand, Epilogue, MC, MR, NC, NR,
 };
 pub use im2col::{
-    conv2d, conv2d_bwd_filter, conv2d_bwd_input, conv2d_flops, conv2d_gather, lrp_conv_rw, Conv2d,
-    Pad,
+    conv2d, conv2d_bwd_filter, conv2d_bwd_filter_with, conv2d_bwd_input, conv2d_bwd_input_with,
+    conv2d_flops, conv2d_gather, conv2d_gather_with, conv2d_with, lrp_conv_rw, lrp_conv_rw_with,
+    Conv2d, Pad,
 };
 pub use pack::View;
+pub use simd::{deterministic_mode, set_deterministic, GemmOpts, Kernel};
 pub use workspace::{with_thread_workspace, Workspace};

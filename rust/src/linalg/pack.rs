@@ -106,9 +106,15 @@ pub(crate) fn pack_b(b: View, k: usize, cols: usize, out: &mut [f32]) {
 /// centroid dominant) is one load + one branch, and the full dense
 /// `[k, n]` dequantized weight matrix is never materialized.
 ///
-/// `codebook` must be non-empty — the dense-layer entry points reject an
-/// empty codebook with an error before packing (see
-/// `runtime::host::qdense_gather`).
+/// An empty codebook dequantizes every index to `0.0` — the pack layer
+/// zero-fills the strips and returns, mirroring the "all weights are the
+/// zero centroid" reading of the container. This is handled *here*, not
+/// by caller pre-validation: the old `codebook.len() - 1` underflow meant
+/// any entry point that skipped its own check panicked in debug builds
+/// and indexed with a wrapped clamp bound in release builds. (The host
+/// backend still reports an empty codebook as a corrupt-container error
+/// up front — see `runtime::host::qdense_gather` — but that is policy,
+/// not a soundness precondition of this layer.)
 pub(crate) fn pack_b_gather(
     idx: &[i32],
     codebook: &[f32],
@@ -118,9 +124,12 @@ pub(crate) fn pack_b_gather(
     cols: usize,
     out: &mut [f32],
 ) {
-    assert!(!codebook.is_empty(), "pack_b_gather: empty codebook");
-    let top = (codebook.len() - 1) as i32;
     let strips = (cols + NR - 1) / NR;
+    if codebook.is_empty() {
+        out[..strips * NR * k].fill(0.0);
+        return;
+    }
+    let top = (codebook.len() - 1) as i32;
     for s in 0..strips {
         let strip = &mut out[s * NR * k..(s + 1) * NR * k];
         strip.fill(0.0);
@@ -195,5 +204,18 @@ mod tests {
         assert_eq!(out[NR], -1.5); // (p=1, c=0) -> clamp(99) -> cb[2]
         assert_eq!(out[NR + 1], 0.0); // cb[0]
         assert!(out.iter().all(|v| v.is_finite()), "stale NaN survived fill");
+    }
+
+    #[test]
+    fn pack_b_gather_empty_codebook_zero_fills_instead_of_panicking() {
+        // regression: `(codebook.len() - 1)` underflowed on an empty
+        // codebook when a caller skipped its pre-validation
+        let idx = [3, -1, 0, 7]; // [k=2, n=2]; values are irrelevant
+        let k = 2;
+        let cols = 2;
+        let strips = (cols + NR - 1) / NR;
+        let mut out = vec![f32::NAN; strips * NR * k];
+        pack_b_gather(&idx, &[], 2, 0, k, cols, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0), "empty codebook packs all-zero strips");
     }
 }

@@ -1,0 +1,408 @@
+//! Vectorized micro-kernels and the two-tier execution mode behind them.
+//!
+//! The blocked core of [`crate::linalg::gemm`] consumes packed `MR`/`NR`
+//! strips through exactly one inner loop — the micro-kernel. This module
+//! holds every implementation of that loop plus the runtime dispatch that
+//! picks one:
+//!
+//! * [`Kernel::Scalar`] — the portable loop the autovectorizer already
+//!   handles well. Each output element accumulates its `k` products in
+//!   ascending order with a separate multiply and add per step, which is
+//!   the same arithmetic the naive [`crate::linalg::reference`] loops
+//!   perform — so its results are **bitwise-equal** to the oracle.
+//! * [`Kernel::Avx2`] (x86_64) — hand-written `core::arch` kernel holding
+//!   the full `MR×NR` accumulator tile in eight 8-lane `ymm` registers
+//!   and issuing one broadcast + two FMAs per `k` step. The `k` order is
+//!   still ascending per lane, but FMA contracts each multiply-add into a
+//!   single rounding, so results are *not* bitwise-equal to scalar — they
+//!   are (weakly) more accurate, and held to the envelope of
+//!   [`crate::linalg::conformance`].
+//! * [`Kernel::Neon`] (aarch64) — the same tile in sixteen 4-lane `q`
+//!   registers via `vfmaq_f32`, with the same contract as AVX2.
+//!
+//! **Two-tier contract.** The *deterministic tier* (scalar kernel, serial
+//! blocks — [`GemmOpts::deterministic`]) stays bitwise-equal to the naive
+//! reference, preserving the campaign serial≡parallel row identity and
+//! the durable-store byte-equality gates. The *fast tier* (best available
+//! vector kernel, optional intra-op row split) is held to a bounded error
+//! envelope asserted per-op in `tests/linalg_simd_conformance.rs`. Within
+//! one process the fast tier is still run-to-run and `--jobs`-invariant
+//! deterministic — the kernel is fixed per process and the row split does
+//! not change any summation order — but it is *not* bit-stable across
+//! machines with different vector units, which is exactly what
+//! `--deterministic` / `$ECQX_DETERMINISTIC` is for. See DESIGN.md §2.6.
+//!
+//! Mode resolution is process-global and set-once (a mid-run flip would
+//! silently mix tiers inside one store): the first of
+//! [`set_deterministic`] (CLI `--deterministic`, campaign options) or the
+//! `$ECQX_DETERMINISTIC` env var wins. `$ECQX_KERNEL`
+//! (`scalar`/`avx2`/`neon`) forces a specific kernel in the fast tier and
+//! `$ECQX_GEMM_THREADS` enables the intra-op row split; both are perf
+//! knobs, never correctness knobs — an unavailable forced kernel falls
+//! back to the best available one.
+
+use super::gemm::{MR, NR};
+use std::sync::OnceLock;
+
+/// Micro-kernel implementation selector. Constructing a variant is always
+/// safe: the dispatcher re-checks availability and falls back to
+/// [`Kernel::Scalar`] rather than executing an illegal instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar loop; the deterministic tier (bitwise-equal to the
+    /// naive reference).
+    Scalar,
+    /// 8-lane f32 FMA kernel (x86_64 with AVX2+FMA).
+    Avx2,
+    /// 4-lane f32 FMA kernel (aarch64 with NEON).
+    Neon,
+}
+
+impl Kernel {
+    /// Stable lowercase name (used by `$ECQX_KERNEL` and the
+    /// `BENCH_host.json` `kernel`/`dispatch` fields).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Parse a `$ECQX_KERNEL` value; `None` for unknown names.
+    pub fn from_name(name: &str) -> Option<Kernel> {
+        match name {
+            "scalar" => Some(Kernel::Scalar),
+            "avx2" => Some(Kernel::Avx2),
+            "neon" => Some(Kernel::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this kernel can execute on the current host (runtime CPU
+    /// feature detection; `std` caches the CPUID/auxval probe, so this is
+    /// an atomic load per call).
+    pub fn is_available(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Best kernel available on this host (the fast-tier default).
+    pub fn detect() -> Kernel {
+        if Kernel::Avx2.is_available() {
+            Kernel::Avx2
+        } else if Kernel::Neon.is_available() {
+            Kernel::Neon
+        } else {
+            Kernel::Scalar
+        }
+    }
+
+    /// Every kernel the current host can execute, scalar first. This is
+    /// what the conformance suite and the `simd_kernels` bench section
+    /// iterate over.
+    pub fn available() -> Vec<Kernel> {
+        [Kernel::Scalar, Kernel::Avx2, Kernel::Neon]
+            .into_iter()
+            .filter(|k| k.is_available())
+            .collect()
+    }
+}
+
+/// Dispatch one micro-kernel invocation: `acc[r][c] += Σ_p A[r,p]·B[p,c]`
+/// over packed strips of exactly `k·MR` / `k·NR` floats. Falls back to
+/// the scalar kernel when `kernel` cannot run on this host, so a
+/// hand-constructed [`Kernel`] value is never undefined behavior.
+#[inline]
+pub(crate) fn microkernel(
+    kernel: Kernel,
+    k: usize,
+    apanel: &[f32],
+    bpanel: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    debug_assert_eq!(apanel.len(), k * MR);
+    debug_assert_eq!(bpanel.len(), k * NR);
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability re-checked here, immediately before the call
+        Kernel::Avx2 if Kernel::Avx2.is_available() => unsafe {
+            microkernel_avx2(k, apanel, bpanel, acc)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: availability re-checked here, immediately before the call
+        Kernel::Neon if Kernel::Neon.is_available() => unsafe {
+            microkernel_neon(k, apanel, bpanel, acc)
+        },
+        _ => microkernel_scalar(k, apanel, bpanel, acc),
+    }
+}
+
+/// The portable register-tile loop: a broadcast-multiply-add per `k` step
+/// with constant `NR` bounds and **no reduction reassociation**, so the
+/// autovectorizer emits SIMD without `unsafe` and results stay
+/// bitwise-equal to the naive reference (separate mul + add roundings in
+/// ascending-`k` order, exactly like the oracle).
+#[inline(always)]
+pub(crate) fn microkernel_scalar(
+    k: usize,
+    apanel: &[f32],
+    bpanel: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    debug_assert_eq!(apanel.len(), k * MR);
+    debug_assert_eq!(bpanel.len(), k * NR);
+    for (arow, brow) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for (r, &av) in arow.iter().enumerate() {
+            let accr = &mut acc[r];
+            for (a, &bv) in accr.iter_mut().zip(brow.iter()) {
+                *a += av * bv;
+            }
+        }
+    }
+}
+
+/// AVX2+FMA kernel: the `MR×NR = 4×16` accumulator tile lives in eight
+/// `ymm` registers (4 rows × two 8-lane vectors); each `k` step is two
+/// contiguous B loads, `MR` scalar broadcasts from the A strip, and eight
+/// `vfmadd231ps`. Ascending-`k` order per lane is preserved — the only
+/// deviation from scalar is the FMA's single rounding per step.
+///
+/// # Safety
+/// Requires AVX2 and FMA at runtime (checked by the dispatcher).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn microkernel_avx2(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    let mut c: [[__m256; 2]; MR] = [[_mm256_setzero_ps(); 2]; MR];
+    for (r, row) in acc.iter().enumerate() {
+        c[r][0] = _mm256_loadu_ps(row.as_ptr());
+        c[r][1] = _mm256_loadu_ps(row.as_ptr().add(8));
+    }
+    for p in 0..k {
+        let bp = bpanel.as_ptr().add(p * NR);
+        let b0 = _mm256_loadu_ps(bp);
+        let b1 = _mm256_loadu_ps(bp.add(8));
+        let ap = apanel.as_ptr().add(p * MR);
+        for (r, cr) in c.iter_mut().enumerate() {
+            let a = _mm256_set1_ps(*ap.add(r));
+            cr[0] = _mm256_fmadd_ps(a, b0, cr[0]);
+            cr[1] = _mm256_fmadd_ps(a, b1, cr[1]);
+        }
+    }
+    for (r, row) in acc.iter_mut().enumerate() {
+        _mm256_storeu_ps(row.as_mut_ptr(), c[r][0]);
+        _mm256_storeu_ps(row.as_mut_ptr().add(8), c[r][1]);
+    }
+}
+
+/// NEON kernel: the `4×16` tile in sixteen `q` registers (4 rows × four
+/// 4-lane vectors — aarch64 has 32, so B's four vectors and the broadcast
+/// still fit); `vfmaq_f32` per step with the same contract as AVX2.
+///
+/// # Safety
+/// Requires NEON at runtime (checked by the dispatcher).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_neon(k: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::aarch64::*;
+    let mut c: [[float32x4_t; 4]; MR] = [[vdupq_n_f32(0.0); 4]; MR];
+    for (r, row) in acc.iter().enumerate() {
+        for v in 0..4 {
+            c[r][v] = vld1q_f32(row.as_ptr().add(4 * v));
+        }
+    }
+    for p in 0..k {
+        let bp = bpanel.as_ptr().add(p * NR);
+        let b = [
+            vld1q_f32(bp),
+            vld1q_f32(bp.add(4)),
+            vld1q_f32(bp.add(8)),
+            vld1q_f32(bp.add(12)),
+        ];
+        let ap = apanel.as_ptr().add(p * MR);
+        for (r, cr) in c.iter_mut().enumerate() {
+            let a = vdupq_n_f32(*ap.add(r));
+            for (v, cv) in cr.iter_mut().enumerate() {
+                *cv = vfmaq_f32(*cv, a, b[v]);
+            }
+        }
+    }
+    for (r, row) in acc.iter_mut().enumerate() {
+        for v in 0..4 {
+            vst1q_f32(row.as_mut_ptr().add(4 * v), c[r][v]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global execution mode
+// ---------------------------------------------------------------------------
+
+static DETERMINISTIC: OnceLock<bool> = OnceLock::new();
+static FORCED_KERNEL: OnceLock<Option<Kernel>> = OnceLock::new();
+static GEMM_THREADS: OnceLock<usize> = OnceLock::new();
+
+/// Select the deterministic tier for the rest of the process (CLI
+/// `--deterministic`, `CampaignOptions::deterministic`). Set-once: the
+/// first call (or the first mode query, which reads
+/// `$ECQX_DETERMINISTIC`) wins, so one process can never mix tiers —
+/// a later call with a different value is ignored.
+pub fn set_deterministic(on: bool) {
+    let _ = DETERMINISTIC.set(on);
+}
+
+/// Whether the process runs the deterministic tier (scalar kernel, serial
+/// blocks, bitwise-equal to the naive reference). Defaults to the
+/// `$ECQX_DETERMINISTIC` env var (unset/empty/`0` = fast tier) unless
+/// [`set_deterministic`] ran first.
+pub fn deterministic_mode() -> bool {
+    *DETERMINISTIC.get_or_init(|| {
+        std::env::var("ECQX_DETERMINISTIC")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// `$ECQX_KERNEL` as a kernel, if set to a known name. Unknown names are
+/// ignored here (the library must not panic on env noise); the CLI
+/// validates the value up front and errors politely.
+fn forced_kernel() -> Option<Kernel> {
+    *FORCED_KERNEL
+        .get_or_init(|| std::env::var("ECQX_KERNEL").ok().and_then(|v| Kernel::from_name(&v)))
+}
+
+/// `$ECQX_GEMM_THREADS`, clamped to at least 1. The default of 1 keeps
+/// single GEMMs serial — campaign parallelism across trials is the
+/// first-choice use of cores, and the warm hot loop stays allocation-free
+/// (`tests/alloc_steady_state.rs`); the intra-op split is for wide
+/// machines running few concurrent trials.
+fn env_threads() -> usize {
+    *GEMM_THREADS.get_or_init(|| {
+        std::env::var("ECQX_GEMM_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(1)
+    })
+}
+
+/// Per-call GEMM execution options: which micro-kernel runs the register
+/// tiles and how many threads may split one GEMM's MC row blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmOpts {
+    /// Micro-kernel (falls back to scalar if unavailable on this host).
+    pub kernel: Kernel,
+    /// Max threads for the intra-op row split (1 = serial; only dense-A
+    /// GEMMs with at least two MC blocks ever split).
+    pub threads: usize,
+}
+
+impl GemmOpts {
+    /// The process-wide mode: deterministic tier if selected, otherwise
+    /// the best available (or `$ECQX_KERNEL`-forced) kernel with
+    /// `$ECQX_GEMM_THREADS` intra-op threads. This is what the plain
+    /// `gemm()` / conv entry points use.
+    pub fn dispatch() -> GemmOpts {
+        GemmOpts::resolve(deterministic_mode(), forced_kernel(), env_threads())
+    }
+
+    /// The deterministic tier: scalar kernel, serial blocks —
+    /// bitwise-equal to the naive reference.
+    pub fn deterministic() -> GemmOpts {
+        GemmOpts { kernel: Kernel::Scalar, threads: 1 }
+    }
+
+    /// A specific kernel, serial blocks (conformance tests, benches).
+    pub fn with_kernel(kernel: Kernel) -> GemmOpts {
+        GemmOpts { kernel, threads: 1 }
+    }
+
+    /// Pure mode-resolution logic (unit-testable without touching the
+    /// process globals): deterministic wins outright; otherwise a forced
+    /// kernel is honored only if the host can run it.
+    pub fn resolve(deterministic: bool, forced: Option<Kernel>, threads: usize) -> GemmOpts {
+        if deterministic {
+            return GemmOpts::deterministic();
+        }
+        let kernel = match forced {
+            Some(k) if k.is_available() => k,
+            _ => Kernel::detect(),
+        };
+        GemmOpts { kernel, threads: threads.max(1) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_names_roundtrip() {
+        for k in [Kernel::Scalar, Kernel::Avx2, Kernel::Neon] {
+            assert_eq!(Kernel::from_name(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::from_name("avx512"), None);
+        assert_eq!(Kernel::from_name(""), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_listed_first() {
+        assert!(Kernel::Scalar.is_available());
+        let ks = Kernel::available();
+        assert_eq!(ks[0], Kernel::Scalar);
+        assert!(ks.contains(&Kernel::detect()));
+    }
+
+    #[test]
+    fn resolve_deterministic_wins_over_everything() {
+        let opts = GemmOpts::resolve(true, Some(Kernel::Avx2), 8);
+        assert_eq!(opts, GemmOpts::deterministic());
+        assert_eq!(opts.kernel, Kernel::Scalar);
+        assert_eq!(opts.threads, 1);
+    }
+
+    #[test]
+    fn resolve_honors_available_forced_kernel_and_clamps_threads() {
+        let opts = GemmOpts::resolve(false, Some(Kernel::Scalar), 0);
+        assert_eq!(opts.kernel, Kernel::Scalar);
+        assert_eq!(opts.threads, 1, "threads clamp to >= 1");
+        let opts = GemmOpts::resolve(false, None, 4);
+        assert_eq!(opts.kernel, Kernel::detect());
+        assert_eq!(opts.threads, 4);
+    }
+
+    #[test]
+    fn resolve_ignores_unavailable_forced_kernel() {
+        // at most one of AVX2/NEON can be available on any given host, so
+        // the other must fall back to detect()
+        for k in [Kernel::Avx2, Kernel::Neon] {
+            if !k.is_available() {
+                assert_eq!(GemmOpts::resolve(false, Some(k), 1).kernel, Kernel::detect());
+            }
+        }
+    }
+
+    #[test]
+    fn unavailable_kernel_dispatch_falls_back_to_scalar() {
+        let k = 7;
+        let apanel: Vec<f32> = (0..k * MR).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let bpanel: Vec<f32> = (0..k * NR).map(|i| 2.0 - i as f32 * 0.125).collect();
+        let mut want = [[0.0f32; NR]; MR];
+        microkernel_scalar(k, &apanel, &bpanel, &mut want);
+        for kern in [Kernel::Avx2, Kernel::Neon] {
+            if !kern.is_available() {
+                let mut got = [[0.0f32; NR]; MR];
+                microkernel(kern, k, &apanel, &bpanel, &mut got);
+                assert_eq!(got, want, "{} must fall back to scalar bitwise", kern.name());
+            }
+        }
+    }
+}

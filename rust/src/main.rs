@@ -17,9 +17,15 @@
 //!
 //! Options: --backend auto|host|pjrt --model mlp|cnn --method ecq|ecqx
 //!          --bits N --lambda F --p F --epochs N --lr F --seed N
-//!          --jobs N --paper-scale --out PATH
+//!          --jobs N --paper-scale --out PATH --deterministic
 //! Durable sweeps: --store PATH --resume PATH --shard i/n --retries N
 //!          --backoff-ms N --heartbeat N --max-trials N
+//!
+//! `--deterministic` pins the scalar GEMM micro-kernel and serial block
+//! schedule (DESIGN.md §2.6): results become bitwise-reproducible across
+//! machines, at the cost of the vectorized fast path. The mode is also
+//! recorded in durable store metadata, so a store written in one tier
+//! refuses to resume in the other.
 //!
 //! Flag values are validated strictly: an unparseable value
 //! (`--bits four`) or an unknown/typo'd flag (`--resme`) is an error
@@ -55,7 +61,8 @@ use ecqx::util::fsx;
 /// Flags that never take a value. Everything else consumes the next
 /// token — and *requires* one, so `--seed` at the end of the line is an
 /// error rather than a silently-adopted `"true"`.
-const BOOL_FLAGS: &[&str] = &["paper-scale", "no-grad-scale", "lrp-equal-weight", "help"];
+const BOOL_FLAGS: &[&str] =
+    &["paper-scale", "no-grad-scale", "lrp-equal-weight", "deterministic", "help"];
 
 /// QAT hyperparameter flags shared by quantize / sweep / compress.
 const QAT_FLAGS: &[&str] = &[
@@ -75,7 +82,7 @@ const QAT_FLAGS: &[&str] = &[
     "lrp-equal-weight",
 ];
 
-const COMMON_FLAGS: &[&str] = &["backend", "model", "seed", "help"];
+const COMMON_FLAGS: &[&str] = &["backend", "model", "seed", "deterministic", "help"];
 
 /// Durable-campaign flags of `ecqx sweep`.
 const STORE_FLAGS: &[&str] = &[
@@ -259,6 +266,20 @@ fn main() -> Result<()> {
         return Ok(());
     }
     validate_flags(&args, cmd)?;
+    // select the linalg tier before any GEMM runs: the mode is set-once
+    // process-wide (DESIGN.md §2.6), so it must be pinned here, not
+    // lazily inside whichever subsystem queries it first
+    if args.has("deterministic") {
+        ecqx::linalg::set_deterministic(true);
+    }
+    if let Ok(k) = std::env::var("ECQX_KERNEL") {
+        if ecqx::linalg::Kernel::from_name(&k).is_none() {
+            eprintln!(
+                "warning: $ECQX_KERNEL={k:?} is not a known kernel \
+                 (scalar|avx2|neon) — using runtime dispatch instead"
+            );
+        }
+    }
     match cmd {
         "smoke" => cmd_smoke(&args),
         "pretrain" => cmd_pretrain(&args),
@@ -447,6 +468,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         },
         heartbeat_every: args.get("heartbeat", 10usize)?,
         max_trials: args.get("max-trials", 0usize)?,
+        deterministic: args.has("deterministic"),
     };
     let grid = Grid::lambda_sweep(cfg.method, cfg.bits, &cfg.lambdas, cfg.p);
     println!(

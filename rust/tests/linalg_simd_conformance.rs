@@ -1,0 +1,322 @@
+//! Two-tier conformance suite for the vectorized GEMM micro-kernels
+//! (DESIGN.md §2.6).
+//!
+//! Tier 1 (deterministic): the scalar kernel with serial blocks must be
+//! **bitwise-equal** to the naive reference loops on every shape — this
+//! is what `--deterministic` promises, and what keeps durable-store
+//! byte-equality gates meaningful across machines.
+//!
+//! Tier 2 (fast): every vector kernel this host can run (AVX2/NEON FMA)
+//! must land inside the [`conformance`] error envelope of a float64
+//! oracle — `2·(k+4)·ε_f32 · Σ|a·b|` per element, a bound that stays
+//! honest under heavy cancellation because it scales with summand
+//! magnitudes, not the result.
+//!
+//! Plus the dispatch contract: requesting a kernel the host does not
+//! support must fall back to scalar (bitwise — never UB, never a panic),
+//! and the intra-op row split must be bitwise-identical to the serial
+//! schedule under every kernel.
+//!
+//! All tier selection here is pinned per call via [`GemmOpts`]; the
+//! process-global mode (`set_deterministic`) is set-once and shared by
+//! every test thread in this binary, so no test touches it.
+
+use ecqx::linalg::conformance::{assert_matmul_within_envelope, envelope, matmul_f64};
+use ecqx::linalg::{
+    self, reference, Conv2d, Epilogue, GemmOpts, Kernel, Pad, Workspace, MC, MR, NR,
+};
+use ecqx::util::prop::{check, normal_vec};
+use ecqx::util::Rng;
+
+const DET: GemmOpts = GemmOpts { kernel: Kernel::Scalar, threads: 1 };
+
+/// Ragged-heavy dimension pool: degenerate sizes, off-by-one around the
+/// blocking constants, and a deep-`k` value to grow the error bound's
+/// lever arm.
+fn dim(rng: &mut Rng) -> usize {
+    const POOL: [usize; 12] =
+        [1, 2, MR - 1, MR + 1, NR - 1, NR + 1, 33, MC - 1, MC + 1, 70, 100, 257];
+    POOL[rng.below(POOL.len())]
+}
+
+fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut t = vec![0.0f32; a.len()];
+    for i in 0..rows {
+        for j in 0..cols {
+            t[j * rows + i] = a[i * cols + j];
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------- tier 1
+
+#[test]
+fn deterministic_tier_is_bitwise_equal_to_naive_on_ragged_shapes() {
+    let mut ws = Workspace::new();
+    check("deterministic tier ≡ naive (bitwise)", 40, |rng| {
+        let (m, k, n) = (dim(rng), dim(rng), dim(rng));
+        let a = normal_vec(rng, m * k, 1.0);
+        let b = normal_vec(rng, k * n, 1.0);
+        let mut out = vec![0.0f32; m * n];
+        linalg::gemm_nn_with(DET, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
+        let want = reference::matmul(&a, &b, m, k, n);
+        if out != want {
+            return Err(format!("scalar tier diverged from naive on {m}x{k}x{n}"));
+        }
+        Ok(())
+    });
+    // degenerate shapes too: empty m/n/k must stay bitwise (trivially)
+    for &(m, k, n) in &[(0usize, 5, 5), (5, 0, 5), (5, 5, 0), (1, 1, 1)] {
+        let a = vec![1.0f32; m * k];
+        let b = vec![1.0f32; k * n];
+        let mut out = vec![f32::NAN; m * n];
+        linalg::gemm_nn_with(DET, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
+        assert_eq!(out, reference::matmul(&a, &b, m, k, n), "shape {m}x{k}x{n}");
+    }
+}
+
+// ---------------------------------------------------------------- tier 2
+
+#[test]
+fn every_available_kernel_is_within_the_envelope_on_ragged_shapes() {
+    let mut ws = Workspace::new();
+    check("fast tier inside the f64-oracle envelope", 25, |rng| {
+        let (m, k, n) = (dim(rng), dim(rng), dim(rng));
+        let a = normal_vec(rng, m * k, 1.0);
+        let b = normal_vec(rng, k * n, 1.0);
+        let mut out = vec![0.0f32; m * n];
+        for kern in Kernel::available() {
+            let opts = GemmOpts::with_kernel(kern);
+            linalg::gemm_nn_with(opts, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
+            assert_matmul_within_envelope(
+                &out,
+                &a,
+                &b,
+                m,
+                k,
+                n,
+                &format!("gemm_nn[{}] {m}x{k}x{n}", kern.name()),
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tn_and_nt_forms_are_within_the_envelope_for_every_kernel() {
+    // the envelope oracle speaks row-major NN, so hand it explicitly
+    // transposed operands: TN computes aᵀ@b (depth m), NT computes g@wᵀ
+    // (depth n)
+    let (m, k, n) = (37, MR + 1, NR + 5);
+    let mut rng = Rng::new(0x51D);
+    let a = normal_vec(&mut rng, m * k, 1.0);
+    let b = normal_vec(&mut rng, m * n, 1.0);
+    let g = normal_vec(&mut rng, m * n, 1.0);
+    let w = normal_vec(&mut rng, k * n, 1.0);
+    let mut ws = Workspace::new();
+    for kern in Kernel::available() {
+        let opts = GemmOpts::with_kernel(kern);
+        let mut tn = vec![0.0f32; k * n];
+        linalg::gemm_tn_with(opts, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut tn);
+        let at = transpose(&a, m, k);
+        assert_matmul_within_envelope(&tn, &at, &b, k, m, n, &format!("gemm_tn[{}]", kern.name()));
+
+        let mut nt = vec![0.0f32; m * k];
+        linalg::gemm_nt_with(opts, &mut ws, &g, &w, m, n, k, Epilogue::None, &mut nt);
+        let wt = transpose(&w, k, n);
+        assert_matmul_within_envelope(&nt, &g, &wt, m, n, k, &format!("gemm_nt[{}]", kern.name()));
+    }
+}
+
+#[test]
+fn cancellation_heavy_inputs_stay_within_the_envelope() {
+    // every row of A is [v, -v, v, -v, ...] against an all-ones B: the
+    // true result is exactly 0 while the magnitude sum is k·|v| — a
+    // relative-to-result bound would be vacuous here, the magnitude-sum
+    // envelope is not
+    let (m, k, n) = (8, 256, NR + 1);
+    let mut rng = Rng::new(0xCA7);
+    let a: Vec<f32> = (0..m * k)
+        .map(|i| {
+            let v = rng.normal_f32(0.0, 1.0).abs() + 0.5;
+            if i % 2 == 0 {
+                v
+            } else {
+                -v
+            }
+        })
+        .collect();
+    // pair up so each row sums to exactly zero in exact arithmetic
+    let a: Vec<f32> = a
+        .chunks_exact(2)
+        .flat_map(|p| [p[0], -p[0]])
+        .collect::<Vec<_>>();
+    let b = vec![1.0f32; k * n];
+    let (oracle, mag) = matmul_f64(&a, &b, m, k, n);
+    assert!(oracle.iter().all(|&v| v == 0.0), "construction yields exact zeros");
+    assert!(mag.iter().all(|&v| v > 0.0), "…with nonzero magnitude sums");
+    let mut ws = Workspace::new();
+    let mut out = vec![0.0f32; m * n];
+    for kern in Kernel::available() {
+        let opts = GemmOpts::with_kernel(kern);
+        linalg::gemm_nn_with(opts, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
+        assert_matmul_within_envelope(
+            &out,
+            &a,
+            &b,
+            m,
+            k,
+            n,
+            &format!("cancellation[{}]", kern.name()),
+        );
+        // and the bound is genuinely tight-ish: the absolute deviation
+        // must be tiny relative to the magnitude scale
+        for (&got, &mg) in out.iter().zip(&mag) {
+            assert!((got as f64).abs() <= envelope(k, mg));
+        }
+    }
+}
+
+#[test]
+fn conv_fast_tier_is_within_the_envelope() {
+    // materialize the im2col patch matrix and reuse the GEMM oracle: the
+    // conv forward is exactly P[rows, taps] @ W[taps, co]
+    fn im2col(x: &[f32], g: &Conv2d) -> Vec<f32> {
+        let (oh, ow) = g.out_hw();
+        let (ph, pw) = g.pad_before();
+        let mut p = vec![0.0f32; g.rows() * g.taps()];
+        let mut row = 0;
+        for b in 0..g.n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ky in 0..g.kh {
+                        for kx in 0..g.kw {
+                            for ci in 0..g.c {
+                                let iy = (oy * g.stride + ky) as isize - ph as isize;
+                                let ix = (ox * g.stride + kx) as isize - pw as isize;
+                                if iy >= 0 && (iy as usize) < g.h && ix >= 0 && (ix as usize) < g.w
+                                {
+                                    p[row * g.taps() + (ky * g.kw + kx) * g.c + ci] = x
+                                        [((b * g.h + iy as usize) * g.w + ix as usize) * g.c + ci];
+                                }
+                            }
+                        }
+                    }
+                    row += 1;
+                }
+            }
+        }
+        p
+    }
+    let mut rng = Rng::new(0xC02F);
+    let mut ws = Workspace::new();
+    for g in [
+        Conv2d { n: 2, h: 7, w: 5, c: 3, kh: 3, kw: 3, co: NR + 2, stride: 1, pad: Pad::Same },
+        Conv2d { n: 1, h: 9, w: 9, c: 4, kh: 2, kw: 3, co: 5, stride: 2, pad: Pad::Valid },
+    ] {
+        let x = normal_vec(&mut rng, g.in_len(), 1.0);
+        let w = normal_vec(&mut rng, g.filter_len(), 0.5);
+        let p = im2col(&x, &g);
+        let mut out = vec![0.0f32; g.out_len()];
+        for kern in Kernel::available() {
+            let opts = GemmOpts::with_kernel(kern);
+            linalg::conv2d_with(opts, &mut ws, &x, &w, &g, Epilogue::None, &mut out);
+            assert_matmul_within_envelope(
+                &out,
+                &p,
+                &w,
+                g.rows(),
+                g.taps(),
+                g.co,
+                &format!("conv2d[{}] {g:?}", kern.name()),
+            );
+        }
+        // and the deterministic tier stays bitwise against naive direct
+        linalg::conv2d_with(DET, &mut ws, &x, &w, &g, Epilogue::None, &mut out);
+        assert_eq!(out, reference::conv2d_naive(&x, &w, &g), "{g:?}");
+    }
+}
+
+// ------------------------------------------------------------- dispatch
+
+#[test]
+fn unavailable_kernel_falls_back_to_scalar_bitwise() {
+    // at most one vector ISA exists per host, so at least one of these is
+    // always unavailable — requesting it must silently run scalar
+    let unavailable: Vec<Kernel> = [Kernel::Avx2, Kernel::Neon]
+        .into_iter()
+        .filter(|k| !k.is_available())
+        .collect();
+    assert!(!unavailable.is_empty(), "no host supports both AVX2 and NEON");
+    let (m, k, n) = (MC + 3, 29, NR + 7);
+    let mut rng = Rng::new(0xFA11);
+    let a = normal_vec(&mut rng, m * k, 1.0);
+    let b = normal_vec(&mut rng, k * n, 1.0);
+    let mut ws = Workspace::new();
+    let mut want = vec![0.0f32; m * n];
+    linalg::gemm_nn_with(DET, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut want);
+    for kern in unavailable {
+        let mut out = vec![0.0f32; m * n];
+        let opts = GemmOpts::with_kernel(kern);
+        linalg::gemm_nn_with(opts, &mut ws, &a, &b, m, k, n, Epilogue::None, &mut out);
+        assert_eq!(out, want, "{} must fall back to scalar", kern.name());
+    }
+}
+
+#[test]
+fn resolve_is_deterministic_first_then_forced_then_detect() {
+    // pure mode logic (the process-global wiring is set-once, so it is
+    // exercised end-to-end by CI's --deterministic sweep, not here)
+    let r = GemmOpts::resolve(true, Some(Kernel::detect()), 8);
+    assert_eq!(r, GemmOpts::deterministic());
+    let r = GemmOpts::resolve(false, Some(Kernel::Scalar), 3);
+    assert_eq!(r, GemmOpts { kernel: Kernel::Scalar, threads: 3 });
+    let r = GemmOpts::resolve(false, None, 0);
+    assert_eq!(r.kernel, Kernel::detect());
+    assert_eq!(r.threads, 1, "threads clamp to >= 1");
+}
+
+#[test]
+fn row_split_is_bitwise_identical_to_serial_for_every_kernel() {
+    // dense A spanning several MC blocks, gather B, and a row-indexed
+    // epilogue — the split must re-base rows and change nothing
+    let (m, k, n) = (2 * MC + 9, 23, NR + 3);
+    let mut rng = Rng::new(0x5917);
+    let a = normal_vec(&mut rng, m * k, 1.0);
+    let cb = [0.0f32, 0.5, -0.25, 1.0];
+    let idx: Vec<i32> = (0..k * n).map(|i| (i % 4) as i32).collect();
+    let mask = normal_vec(&mut rng, m * n, 1.0);
+    let mut ws = Workspace::new();
+    for kern in Kernel::available() {
+        let mut serial = vec![0.0f32; m * n];
+        let one = GemmOpts { kernel: kern, threads: 1 };
+        linalg::gemm_gather_nn_with(
+            one,
+            &mut ws,
+            &a,
+            &idx,
+            &cb,
+            m,
+            k,
+            n,
+            Epilogue::ReluMask(&mask),
+            &mut serial,
+        );
+        let mut split = vec![0.0f32; m * n];
+        let four = GemmOpts { kernel: kern, threads: 4 };
+        linalg::gemm_gather_nn_with(
+            four,
+            &mut ws,
+            &a,
+            &idx,
+            &cb,
+            m,
+            k,
+            n,
+            Epilogue::ReluMask(&mask),
+            &mut split,
+        );
+        assert_eq!(split, serial, "kernel {}", kern.name());
+    }
+}

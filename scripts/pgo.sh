@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization build recipe for the host backend.
+#
+# PGO lets rustc/LLVM lay out the blocked GEMM's hot loops (micro-kernel
+# dispatch, pack routines, epilogue stores) from a real profile instead of
+# static heuristics. The profile workload is `perf_micro` — it exercises
+# every hot path the sweeps do, in minutes not hours. Typical gain on the
+# host backend is a few percent on the GEMM-bound sections; measure with
+# scripts/perf_compare before adopting a PGO binary anywhere.
+#
+# Requires llvm-profdata matching the rustc LLVM version (shipped in the
+# `llvm-tools` rustup component: `rustup component add llvm-tools` — the
+# script locates it in the toolchain dir, or set $LLVM_PROFDATA).
+#
+# Usage: scripts/pgo.sh [cargo-args...]
+#   e.g. scripts/pgo.sh --bench perf_micro
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+PROF_DIR="$(pwd)/target/pgo-profiles"
+rm -rf "$PROF_DIR"
+mkdir -p "$PROF_DIR"
+
+# locate llvm-profdata: explicit override, PATH, or the rustup llvm-tools
+# component of the active toolchain
+if [[ -z "${LLVM_PROFDATA:-}" ]]; then
+    if command -v llvm-profdata >/dev/null 2>&1; then
+        LLVM_PROFDATA=llvm-profdata
+    else
+        sysroot="$(rustc --print sysroot)"
+        LLVM_PROFDATA="$(find "$sysroot" -name llvm-profdata -type f 2>/dev/null | head -n1 || true)"
+    fi
+fi
+if [[ -z "${LLVM_PROFDATA:-}" ]]; then
+    echo "pgo.sh: llvm-profdata not found (rustup component add llvm-tools," >&2
+    echo "        or set \$LLVM_PROFDATA)" >&2
+    exit 1
+fi
+
+echo "== 1/3: instrumented build + profile run (perf_micro) =="
+RUSTFLAGS="-Cprofile-generate=$PROF_DIR" \
+    ECQX_BENCH_JSON="$PROF_DIR/bench-instrumented.json" \
+    cargo bench --bench perf_micro >/dev/null
+
+echo "== 2/3: merging profiles =="
+"$LLVM_PROFDATA" merge -o "$PROF_DIR/merged.profdata" "$PROF_DIR"
+
+echo "== 3/3: optimized build =="
+RUSTFLAGS="-Cprofile-use=$PROF_DIR/merged.profdata" \
+    cargo build --release "$@"
+
+echo "pgo.sh: done — compare against a plain release build with:"
+echo "  ECQX_BENCH_JSON=BENCH_pgo.json cargo bench --bench perf_micro"
+echo "  scripts/perf_compare BENCH_host.json BENCH_pgo.json"
