@@ -157,6 +157,70 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- lut_kernels: sparse LUT matmul vs the gather-GEMM oracle ----
+    // The deployment-form dense layer at the paper's working points:
+    // bit-width in {2, 4} × zero-centroid sparsity p in {0.5, 0.9}. The
+    // LUT kernel's op count (`lut_ops`: nnz adds + 2 per active centroid)
+    // shrinks with p and bits while gather-GEMM stays at 2·m·k·n; both
+    // the timing and the op count land in the JSON ("ops" key), and CI's
+    // bench-smoke asserts lut ops < gather flops at p ≥ 0.5. Emits in
+    // smoke mode — the rows are part of the JSON contract.
+    {
+        let (m, k, n) = if smoke { (16, 64, 64) } else { (128, 256, 256) };
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut out = vec![0.0f32; m * n];
+        for &bits in &[2u32, 4] {
+            let side = (1usize << (bits - 1)) - 1;
+            let mut cbv = vec![0.0f32];
+            for s in 1..=side {
+                cbv.push(s as f32 * 0.25);
+                cbv.push(-(s as f32) * 0.25);
+            }
+            for &p in &[0.5f64, 0.9] {
+                let idx: Vec<i32> = (0..k * n)
+                    .map(|_| {
+                        if rng.chance(p) { 0 } else { 1 + rng.below(cbv.len() - 1) as i32 }
+                    })
+                    .collect();
+                let variant = format!("b{bits}_p{p}");
+                let lut_work = linalg::lut_ops(&idx, &cbv, m, k, n);
+                let ops = format!("{lut_work:.0}");
+                let r = bench(&format!("lut_qdense {variant} {m}x{k}x{n}"), it(1), it(10), || {
+                    linalg::lut_matmul(&mut ws, &a, &idx, &cbv, m, k, n, Epilogue::None, &mut out)
+                });
+                log.push_kv(
+                    "lut_qdense",
+                    &[m, k, n],
+                    &r,
+                    Some(lut_work),
+                    &[("variant", &variant), ("ops", &ops)],
+                );
+                let ops = format!("{:.0}", gemm_flops(m, k, n));
+                let r =
+                    bench(&format!("gather_qdense {variant} {m}x{k}x{n}"), it(1), it(10), || {
+                        linalg::gemm_gather_nn(
+                            &mut ws,
+                            &a,
+                            &idx,
+                            &cbv,
+                            m,
+                            k,
+                            n,
+                            Epilogue::None,
+                            &mut out,
+                        )
+                    });
+                log.push_kv(
+                    "gather_qdense",
+                    &[m, k, n],
+                    &r,
+                    Some(gemm_flops(m, k, n)),
+                    &[("variant", &variant), ("ops", &ops)],
+                );
+            }
+        }
+    }
+
     // ---- conv kernels: the im2col-GEMM lowering vs naive direct conv ----
     // CIFAR-shaped sizes: the cnn_cifar stem (32×32×3 -> 16) and a mid
     // stack layer (16×16×32 -> 64, stride 2); shape column is the full

@@ -1,16 +1,19 @@
 //! The L3 coordinator: quantization-aware training (the ECQ^x loop of
 //! Fig. 5), parallel hyperparameter sweep campaigns, candidate selection
-//! and reporting — the system that actually runs the paper's experiments.
+//! and reporting, plus the `ecqx serve` inference front end — the system
+//! that actually runs (and serves) the paper's experiments.
 
 pub mod assign;
 pub mod binder;
 pub mod campaign;
+pub mod serve;
 pub mod store;
 pub mod sweep;
 pub mod trainer;
 
 pub use assign::{AssignConfig, Assigner, Method};
 pub use campaign::{CampaignOptions, Grid, RetryPolicy, TrialSpec};
+pub use serve::{ServeOptions, Server};
 pub use store::ResultStore;
 pub use sweep::{SweepConfig, SweepRunner, StoreSweepOptions, StoreSweepOutcome};
 pub use trainer::{EvalResult, Pretrainer, QatConfig, QatTrainer};

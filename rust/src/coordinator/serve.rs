@@ -1,0 +1,656 @@
+//! `ecqx serve` — a dependency-free HTTP loopback server that turns the
+//! worker-pool / `call_batch` machinery into measured requests-per-second:
+//! the deployment half of the paper's claim that 2–5-bit sparse networks
+//! are cheap to run (Sec. 5.2.3), sitting directly on the sparse LUT
+//! inference path ([`crate::linalg::lut`]).
+//!
+//! Architecture (DESIGN.md §2.7):
+//!
+//! * **Protocol** — plain HTTP/1.1 over `std::net`, GET only,
+//!   `Connection: close` per request (no keep-alive state machine, no
+//!   external deps). Endpoints: `/healthz`, `/shutdown`, and
+//!   `/eval?method=&bits=&lambda=&p=` — query parameters default to the
+//!   server's [`SweepConfig`], so `/eval?lambda=0.08` addresses the same
+//!   working point as the corresponding `ecqx sweep` row.
+//! * **Model cache** — working points are built on demand through
+//!   [`SweepRunner::run_trial_spec`] (the *same* pure function sweep
+//!   trials run, so a served row is byte-identical to the sweep CSV row;
+//!   the JSON response carries that CSV line verbatim for CI to diff) and
+//!   cached keyed by `(method, bits, lambda, p)`. A per-key build lock
+//!   means concurrent first requests for one point build it once, while
+//!   distinct points build concurrently.
+//! * **Microbatching** — handlers never touch the engine directly; they
+//!   enqueue an eval job and block on its reply channel. A single batcher
+//!   thread drains up to `max_batch` jobs at a time and fans each
+//!   validation batch across the drained states via
+//!   [`Engine::call_batch`] — cross-request batching with per-worker
+//!   workspaces for free. Because kernels are pure functions of their
+//!   operands (workspace- and thread-count-independent, §2.6), the reply
+//!   is identical whatever mix of concurrent requests shared the batch;
+//!   the server *asserts* this per request by comparing the batched
+//!   accuracy against the working point's build-time accuracy (a
+//!   divergence is a 500, never silent).
+//! * **Shutdown** — `/shutdown` flips a flag held *inside* the queue
+//!   mutex and wakes everyone: new submissions are refused (503) under
+//!   the same lock, the batcher drains already-accepted jobs before
+//!   exiting (no handler left waiting on a dead channel), and a loopback
+//!   self-connect unblocks the accept loop. `run` returns only after
+//!   every handler thread joined.
+//!
+//! `--deterministic` needs no plumbing here: `main` pins the process-wide
+//! linalg tier before dispatch, exactly as for `sweep`, and everything
+//! below the serve layer reads that global.
+
+use std::collections::HashMap;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::binder::{bind_inputs, ParamSource, Scalars};
+use super::campaign::TrialSpec;
+use super::sweep::{SweepConfig, SweepRunner};
+use super::Method;
+use crate::data::{DataLoader, Dataset};
+use crate::metrics::{Meter, WorkingPoint};
+use crate::nn::ModelState;
+use crate::runtime::ArtifactSpec;
+use crate::tensor::Value;
+use crate::util::{jsonx, Timer};
+
+/// Server knobs (CLI flags of `ecqx serve`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// TCP port on 127.0.0.1; `0` binds an ephemeral port (tests, bench)
+    pub port: u16,
+    /// worker threads for the batched eval fan-out (`Engine::call_batch`)
+    pub jobs: usize,
+    /// max eval jobs drained into one microbatch
+    pub max_batch: usize,
+    /// per-request log lines on stdout
+    pub verbose: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { port: 8737, jobs: 1, max_batch: 8, verbose: false }
+    }
+}
+
+/// A built working point: the sweep row and the quantized state it came
+/// from, shared between the cache, in-flight eval jobs, and handlers.
+struct Built {
+    wp: WorkingPoint,
+    state: ModelState,
+}
+
+/// One queued eval request: score `built.state` over the validation set,
+/// reply with `(loss, accuracy)` or a formatted error.
+struct EvalJob {
+    built: Arc<Built>,
+    reply: mpsc::Sender<std::result::Result<(f64, f64), String>>,
+}
+
+/// Queue state guarded by one mutex: the shutdown flag lives *with* the
+/// jobs so "refuse new work" and "drain accepted work, then exit" are
+/// decided under the same lock — a submission can never slip in after the
+/// batcher decided the queue is dry and gone.
+#[derive(Default)]
+struct QueueState {
+    jobs: std::collections::VecDeque<EvalJob>,
+    shutdown: bool,
+}
+
+struct EvalQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl EvalQueue {
+    fn new() -> Self {
+        EvalQueue { state: Mutex::new(QueueState::default()), cv: Condvar::new() }
+    }
+
+    /// Enqueue unless shutting down (refusal becomes a 503 upstream).
+    fn push(&self, job: EvalJob) -> std::result::Result<(), ()> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Err(());
+        }
+        st.jobs.push_back(job);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Drain up to `max` jobs; `None` means shutdown + queue fully dry.
+    fn pop_batch(&self, max: usize) -> Option<Vec<EvalJob>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.jobs.is_empty() {
+                let take = st.jobs.len().min(max.max(1));
+                return Some(st.jobs.drain(..take).collect());
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn begin_shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Cache key of a working point. Float grid values are keyed by their
+/// bits — `0.02` must hit the same entry every time, and no float lands
+/// in a `HashMap` key directly.
+type WpKey = (&'static str, u32, u32, u64);
+
+fn wp_key(method: Method, bits: u32, lambda: f32, p: f64) -> WpKey {
+    (method.as_str(), bits, lambda.to_bits(), p.to_bits())
+}
+
+type Cache = Mutex<HashMap<WpKey, Arc<Mutex<Option<Arc<Built>>>>>>;
+
+/// The loopback inference server. Construct with [`Server::bind`], drive
+/// with [`Server::run`] (blocks until `/shutdown`).
+pub struct Server<'e, D: Dataset> {
+    listener: TcpListener,
+    addr: SocketAddr,
+    runner: &'e SweepRunner<'e>,
+    cfg: SweepConfig,
+    train: &'e DataLoader<'e, D>,
+    val: &'e DataLoader<'e, D>,
+    opts: ServeOptions,
+    art: ArtifactSpec,
+    loss_i: usize,
+    corr_i: usize,
+    queue: EvalQueue,
+    cache: Cache,
+}
+
+impl<'e, D: Dataset> Server<'e, D> {
+    /// Bind 127.0.0.1:`opts.port` (`0` = ephemeral) and resolve the eval
+    /// artifact. No threads start until [`Server::run`].
+    pub fn bind(
+        runner: &'e SweepRunner<'e>,
+        cfg: SweepConfig,
+        train: &'e DataLoader<'e, D>,
+        val: &'e DataLoader<'e, D>,
+        opts: ServeOptions,
+    ) -> Result<Server<'e, D>> {
+        let art = runner
+            .engine
+            .manifest
+            .artifact(&format!("{}_eval", cfg.model))?
+            .clone();
+        let loss_i = art
+            .outputs
+            .iter()
+            .position(|s| s.name == "loss")
+            .with_context(|| format!("artifact {} has no loss output", art.name))?;
+        let corr_i = art
+            .outputs
+            .iter()
+            .position(|s| s.name == "correct")
+            .with_context(|| format!("artifact {} has no correct output", art.name))?;
+        let listener = TcpListener::bind(("127.0.0.1", opts.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", opts.port))?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            addr,
+            runner,
+            cfg,
+            train,
+            val,
+            opts,
+            art,
+            loss_i,
+            corr_i,
+            queue: EvalQueue::new(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The bound address (the real port when `--port=0` was requested).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accept-and-serve until `/shutdown`. One handler thread per
+    /// connection (loopback scale by design), one batcher thread; all
+    /// joined before returning.
+    pub fn run(&self) -> Result<()> {
+        println!("serving {} on {}", self.cfg.model, self.addr);
+        std::thread::scope(|scope| -> Result<()> {
+            let batcher = scope.spawn(|| self.batcher_loop());
+            loop {
+                let (stream, _) = self.listener.accept().context("accept")?;
+                if self.queue.state.lock().unwrap().shutdown {
+                    // the /shutdown handler's self-connect (or any
+                    // straggler) lands here; nothing more is served
+                    drop(stream);
+                    break;
+                }
+                scope.spawn(move || {
+                    if let Err(e) = self.handle(stream) {
+                        eprintln!("[serve] connection error: {e:#}");
+                    }
+                });
+            }
+            batcher.join().expect("batcher panicked");
+            Ok(())
+        })
+    }
+
+    /// Batcher: drain ≤ `max_batch` jobs, run one shared validation pass
+    /// with [`Engine::call_batch`], reply per job. Exits only when the
+    /// queue reports shutdown *and* dry, so every accepted job is
+    /// answered.
+    fn batcher_loop(&self) {
+        while let Some(jobs) = self.queue.pop_batch(self.opts.max_batch) {
+            let replies = self.eval_batch(&jobs);
+            match replies {
+                Ok(per_job) => {
+                    for (job, r) in jobs.iter().zip(per_job) {
+                        let _ = job.reply.send(Ok(r));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("batched eval failed: {e:#}");
+                    for job in &jobs {
+                        let _ = job.reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+    }
+
+    /// One microbatch: the `evaluate_many` loop over the drained states.
+    fn eval_batch(&self, jobs: &[EvalJob]) -> Result<Vec<(f64, f64)>> {
+        let mut meters = vec![Meter::new(); jobs.len()];
+        for batch in self.val.epoch(0) {
+            let inputs: Vec<Vec<Value>> = jobs
+                .iter()
+                .map(|j| {
+                    bind_inputs(
+                        &self.art,
+                        &j.built.state,
+                        ParamSource::Quantized,
+                        Some(&batch),
+                        &Scalars::default(),
+                    )
+                })
+                .collect::<Result<_>>()?;
+            let outs = self.runner.engine.call_batch(&self.art.name, &inputs, self.opts.jobs)?;
+            for (m, out) in meters.iter_mut().zip(outs) {
+                m.update(
+                    out[self.loss_i].as_f32().as_scalar(),
+                    out[self.corr_i].as_f32().as_scalar(),
+                    batch.batch,
+                );
+            }
+        }
+        Ok(meters.iter().map(|m| (m.loss(), m.accuracy())).collect())
+    }
+
+    /// Get-or-build the model at a working point. Distinct points build
+    /// concurrently; concurrent requests for one point build it once
+    /// (per-key mutex). Failed builds are not cached — the next request
+    /// retries.
+    fn model_at(&self, method: Method, bits: u32, lambda: f32, p: f64) -> Result<Arc<Built>> {
+        let slot = {
+            let mut cache = self.cache.lock().unwrap();
+            cache
+                .entry(wp_key(method, bits, lambda, p))
+                .or_insert_with(|| Arc::new(Mutex::new(None)))
+                .clone()
+        };
+        let mut slot = slot.lock().unwrap();
+        if let Some(built) = slot.as_ref() {
+            return Ok(built.clone());
+        }
+        let t = Timer::start();
+        let trial = TrialSpec { id: 0, method, bits, lambda, p };
+        let (wp, state) = self
+            .runner
+            .run_trial_spec(&self.cfg, &trial, self.train, self.val)?;
+        if self.opts.verbose {
+            println!(
+                "[serve] built {} bw={bits} λ={lambda:.4} p={p:.2}: acc={:.4} ({:.1}s)",
+                method.as_str(),
+                wp.accuracy,
+                t.elapsed_s()
+            );
+        }
+        let built = Arc::new(Built { wp, state });
+        *slot = Some(built.clone());
+        Ok(built)
+    }
+
+    /// `/eval` body: resolve the working point, score it through the
+    /// microbatch queue, self-check purity, render JSON.
+    fn eval_response(&self, query: &str) -> Result<String> {
+        let params = parse_query(query)?;
+        let mut method = self.cfg.method;
+        let mut bits = self.cfg.bits;
+        let mut lambda = self.cfg.lambdas.first().copied().unwrap_or(0.0);
+        let mut p = self.cfg.p;
+        for (k, v) in &params {
+            match k.as_str() {
+                "method" => {
+                    method = match v.as_str() {
+                        "ecq" => Method::Ecq,
+                        "ecqx" => Method::Ecqx,
+                        other => bail!("unknown method {other} (use ecq|ecqx)"),
+                    }
+                }
+                "bits" => bits = v.parse().with_context(|| format!("bits={v:?}"))?,
+                "lambda" => lambda = v.parse().with_context(|| format!("lambda={v:?}"))?,
+                "p" => p = v.parse().with_context(|| format!("p={v:?}"))?,
+                other => bail!("unknown query parameter {other:?} (use method|bits|lambda|p)"),
+            }
+        }
+        let built = self.model_at(method, bits, lambda, p)?;
+        let (rx_loss, rx_acc) = {
+            let (tx, rx) = mpsc::channel();
+            if self.queue.push(EvalJob { built: built.clone(), reply: tx }).is_err() {
+                bail!("server is shutting down");
+            }
+            rx.recv().context("batcher dropped the reply channel")?
+                .map_err(anyhow::Error::msg)?
+        };
+        // Purity self-check: the microbatched score must equal the score
+        // computed at build time (run_trial_spec's serial evaluate),
+        // whatever mix of concurrent requests shared the batch. This is
+        // the §2.6 batch-order-independence argument, asserted per
+        // request.
+        if rx_acc != built.wp.accuracy {
+            bail!(
+                "batched eval diverged from build-time eval: {} != {} \
+                 (batch-order independence violated)",
+                rx_acc,
+                built.wp.accuracy
+            );
+        }
+        let wp = &built.wp;
+        Ok(format!(
+            "{{\"method\": {}, \"bits\": {}, \"lambda\": {}, \"p\": {}, \
+             \"accuracy\": {}, \"acc_drop\": {}, \"sparsity\": {}, \
+             \"size_bytes\": {}, \"cr\": {}, \"loss\": {}, \"csv\": {}}}\n",
+            jsonx::quote(&wp.method),
+            wp.bits,
+            jsonx::num_f64(wp.lambda as f64),
+            jsonx::num_f64(wp.p),
+            jsonx::num_f64(wp.accuracy),
+            jsonx::num_f64(wp.acc_drop),
+            jsonx::num_f64(wp.sparsity),
+            wp.size_bytes,
+            jsonx::num_f64(wp.compression_ratio),
+            jsonx::num_f64(rx_loss),
+            jsonx::quote(&wp.to_csv()),
+        ))
+    }
+
+    /// One connection: parse the request line, route, write one response.
+    fn handle(&self, mut stream: TcpStream) -> Result<()> {
+        let (target, ok) = read_request(&mut stream)?;
+        if !ok {
+            return respond(&mut stream, 405, "text/plain", "only GET is served\n");
+        }
+        let (path, query) = match target.split_once('?') {
+            Some((p, q)) => (p, q),
+            None => (target.as_str(), ""),
+        };
+        match path {
+            "/healthz" => respond(&mut stream, 200, "text/plain", "ok\n"),
+            "/shutdown" => {
+                respond(&mut stream, 200, "text/plain", "shutting down\n")?;
+                self.queue.begin_shutdown();
+                // unblock the accept loop; the flag is already set, so
+                // this connection is dropped unserved
+                let _ = TcpStream::connect(self.addr);
+                Ok(())
+            }
+            "/eval" => match self.eval_response(query) {
+                Ok(body) => respond(&mut stream, 200, "application/json", &body),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let code = if msg.contains("shutting down") { 503 } else { 500 };
+                    respond(&mut stream, code, "text/plain", &format!("{msg}\n"))
+                }
+            },
+            other => respond(&mut stream, 404, "text/plain", &format!("no route {other}\n")),
+        }
+    }
+}
+
+/// `k=v&k=v` → pairs. No percent-decoding: every legal value is a number
+/// or a method name, so an escape is just an invalid value.
+fn parse_query(q: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for part in q.split('&').filter(|s| !s.is_empty()) {
+        let (k, v) = part
+            .split_once('=')
+            .with_context(|| format!("query parameter {part:?} has no value"))?;
+        out.push((k.to_string(), v.to_string()));
+    }
+    Ok(out)
+}
+
+/// Read one request head; returns `(target, is_get)`.
+fn read_request(stream: &mut TcpStream) -> Result<(String, bool)> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk).context("reading request")?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let line = head.lines().next().unwrap_or_default();
+    let mut it = line.split_whitespace();
+    let meth = it.next().unwrap_or_default();
+    let target = it.next().unwrap_or("/").to_string();
+    Ok((target, meth == "GET"))
+}
+
+/// Write one `Connection: close` response.
+fn respond(stream: &mut TcpStream, code: u16, ctype: &str, body: &str) -> Result<()> {
+    let reason = match code {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Minimal blocking HTTP GET against a loopback server; returns
+/// `(status, body)`. Shared by the CLI bench mode, the serve integration
+/// test, and CI's serve-smoke job (via `ecqx serve --bench`).
+pub fn http_get(addr: SocketAddr, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).context("reading response")?;
+    let code: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed response: {raw:.60?}"))?;
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((code, body))
+}
+
+/// Saturating-throughput bench summary (`ecqx serve --bench`).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchSummary {
+    /// concurrent client threads
+    pub clients: usize,
+    /// total requests completed (all of them 200s, or the bench errors)
+    pub requests: usize,
+    /// whole-bench wall clock
+    pub wall_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// requests per second at saturation (`requests / wall_s`)
+    pub req_s: f64,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[pos.min(sorted.len() - 1)]
+}
+
+/// Drive `clients` threads of back-to-back `GET path` requests,
+/// `per_client` each, against an already-warm server. Every response must
+/// be a 200 and byte-identical to the warmup response — the throughput
+/// number is only meaningful if the answers stay right under load.
+pub fn run_bench(
+    addr: SocketAddr,
+    path: &str,
+    clients: usize,
+    per_client: usize,
+) -> Result<BenchSummary> {
+    let (code, reference) = http_get(addr, path)?;
+    if code != 200 {
+        bail!("bench warmup GET {path} returned {code}: {reference}");
+    }
+    let wall = Timer::start();
+    let lat: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients.max(1))
+            .map(|_| {
+                let reference = reference.as_str();
+                scope.spawn(move || -> Result<Vec<f64>> {
+                    let mut times = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let t = Timer::start();
+                        let (code, body) = http_get(addr, path)?;
+                        times.push(t.elapsed_s());
+                        if code != 200 || body != reference {
+                            bail!("response diverged under load (status {code})");
+                        }
+                    }
+                    Ok(times)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("bench client panicked"))
+            .collect::<Result<_>>()
+    })?;
+    let wall_s = wall.elapsed_s();
+    let mut all: Vec<f64> = lat.into_iter().flatten().collect();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let requests = all.len();
+    Ok(BenchSummary {
+        clients: clients.max(1),
+        requests,
+        wall_s,
+        p50_s: percentile(&all, 0.50),
+        p99_s: percentile(&all, 0.99),
+        req_s: requests as f64 / wall_s.max(1e-9),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_parsing_and_rejection() {
+        let ps = parse_query("method=ecq&bits=2&lambda=0.08&p=0.5").unwrap();
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[0], ("method".into(), "ecq".into()));
+        assert!(parse_query("").unwrap().is_empty());
+        assert!(parse_query("bits").is_err(), "valueless parameter is an error");
+    }
+
+    #[test]
+    fn percentiles_of_sorted_latencies() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 51.0); // round(0.5*99)=50 -> v[50]
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn queue_refuses_after_shutdown_and_drains_before() {
+        let q = EvalQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        let built = Arc::new(Built {
+            wp: WorkingPoint {
+                method: "ECQx".into(),
+                bits: 4,
+                lambda: 0.0,
+                p: 0.3,
+                accuracy: 0.5,
+                acc_drop: 0.0,
+                sparsity: 0.5,
+                size_bytes: 1,
+                compression_ratio: 2.0,
+            },
+            state: ModelState::init(
+                crate::runtime::Manifest::synthetic_mlp("t", &[8, 4, 2], 4)
+                    .model("t")
+                    .unwrap(),
+                1,
+            ),
+        });
+        q.push(EvalJob { built: built.clone(), reply: tx.clone() }).unwrap();
+        q.begin_shutdown();
+        // accepted-before-shutdown job still drains...
+        let batch = q.pop_batch(8).expect("pre-shutdown job must drain");
+        assert_eq!(batch.len(), 1);
+        // ...then the queue reports dry, and new pushes are refused
+        assert!(q.pop_batch(8).is_none());
+        assert!(q.push(EvalJob { built, reply: tx }).is_err());
+    }
+
+    #[test]
+    fn wp_key_is_bit_exact() {
+        assert_eq!(
+            wp_key(Method::Ecqx, 4, 0.02, 0.3),
+            wp_key(Method::Ecqx, 4, 0.02, 0.3)
+        );
+        assert_ne!(
+            wp_key(Method::Ecqx, 4, 0.02, 0.3),
+            wp_key(Method::Ecq, 4, 0.02, 0.3)
+        );
+        assert_ne!(
+            wp_key(Method::Ecqx, 4, 0.02, 0.3),
+            wp_key(Method::Ecqx, 4, 0.02000001, 0.3)
+        );
+    }
+}

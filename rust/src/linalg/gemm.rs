@@ -109,8 +109,11 @@ pub enum AOperand<'a> {
     PatchesT { x: &'a [f32], geom: Conv2d },
 }
 
+/// Apply the fused epilogue to one accumulated output element. Shared
+/// with the LUT kernel ([`crate::linalg::lut`]) so both quantized eval
+/// paths finish an element with bit-identical epilogue arithmetic.
 #[inline(always)]
-fn finish(acc: f32, i: usize, j: usize, n: usize, epi: &Epilogue) -> f32 {
+pub(crate) fn finish(acc: f32, i: usize, j: usize, n: usize, epi: &Epilogue) -> f32 {
     match *epi {
         Epilogue::None => acc,
         Epilogue::Bias(b) => acc + b[j],

@@ -1,0 +1,367 @@
+//! Sparse low-bit LUT matmul: codebook-index matrices executed as
+//! per-centroid partial sums, structurally skipping the zero centroid.
+//!
+//! The deployment form of an ECQx dense layer is `a[m,k] @ dequant(idx)[k,n]`
+//! where `idx` holds ≤31-entry codebook indices and — by construction of
+//! entropy-constrained quantization — most entries are the zero centroid.
+//! The gather-GEMM path ([`crate::linalg::gemm_gather_nn`]) dequantizes
+//! indices into dense f32 panels and pays the full `2·m·k·n` FMA count
+//! regardless of sparsity or bit-width. This module exploits both:
+//!
+//! 1. **Pack** (`pack::pack_index_csr`, buffers from
+//!    [`Workspace::index_panels`][crate::linalg::Workspace]): per output
+//!    column `j`, group contraction positions by centroid into CSR-style
+//!    segments, omitting every position whose centroid value is exactly
+//!    `0.0`. Zero weights are *structurally absent* — not multiplied by
+//!    zero, simply never visited.
+//! 2. **Accumulate** ([`lut_matmul`]): for output `(i, j)`, sum the input
+//!    activations over each centroid's segment (`partial_s = Σ a[i, l]`,
+//!    pure adds, no multiplies), then apply the codebook once per active
+//!    centroid: `acc += codebook[s] · partial_s`.
+//!
+//! Per output element the arithmetic is `nnz_j` adds plus `2·actives_j`
+//! mul/adds ([`lut_ops`] counts exactly this), versus `2k` FMAs for the
+//! dense path — asymptotically less work whenever the layer is sparse
+//! and/or low-bit (`actives_j ≤ min(2^bits − 1, k)`).
+//!
+//! ## Determinism and conformance (DESIGN.md §2.6 / §2.7)
+//!
+//! The LUT path is a **fast-tier** kernel. Its accumulation order differs
+//! from both the naive reference and the gather-GEMM (it reassociates the
+//! k-term dot product into per-centroid groups), so it is *not* bitwise
+//! comparable to them — instead it is held to the same conformance
+//! envelope. The bound: each product `a[i,l]·codebook[s]` passes through
+//! at most `nnz_j` in-segment adds, one multiply, and `actives_j`
+//! combining adds — at most `nnz_j + 1 + actives_j ≤ 2k + 1` roundings,
+//! within the `2·(k+4)` depth the envelope
+//! ([`crate::linalg::conformance::envelope`]) already grants the FMA
+//! kernels (`actives_j ≤ nnz_j ≤ k`). Within one process the result is
+//! still a pure function of `(a, idx, codebook, shape)`: segment order is
+//! ascending centroid then ascending row, independent of workspace
+//! history and thread count.
+//!
+//! The **deterministic tier** keeps its bitwise-to-naive promise by not
+//! running the LUT kernel at all: [`lut_gather_nn_with`] routes
+//! [`GemmOpts::deterministic`] (and any codebook wider than
+//! [`MAX_LUT_CENTROIDS`]) to [`gemm_gather_nn_with`], exactly as
+//! `--deterministic` / `$ECQX_DETERMINISTIC` demand. The gather path is
+//! thereby retained as the LUT path's oracle.
+//!
+//! ## Non-finite inputs
+//!
+//! Because zero-centroid positions are structurally absent, a NaN/Inf
+//! activation paired with a zero weight does **not** propagate (the dense
+//! path would compute `NaN·0 = NaN`). This is the IEEE-754 cost of the
+//! sparsity claim and is contractual for the fast tier, which promises
+//! envelope conformance on finite inputs only; `tests/linalg_lut_props.rs`
+//! pins the behavior.
+
+use super::gemm::{epilogue_of_zero, finish, gemm_gather_nn_with, Epilogue};
+use super::pack;
+use super::simd::GemmOpts;
+use super::workspace::Workspace;
+
+/// Widest codebook the LUT kernel serves: 5-bit quantization (31 valid
+/// centroids) plus one slack slot. Wider codebooks — nothing the paper's
+/// 2–5-bit working points produce, but containers are untrusted — fall
+/// back to the gather-GEMM path in [`lut_gather_nn_with`].
+pub const MAX_LUT_CENTROIDS: usize = 32;
+
+/// `out[m,n] = epilogue(a[m,k] @ dequant(idx)[k,n])` via per-centroid LUT
+/// accumulation — always the LUT algorithm, no tier dispatch (the
+/// conformance tests need to exercise it under any [`GemmOpts`]).
+/// Production callers want [`lut_gather_nn`] / [`lut_gather_nn_with`].
+///
+/// An empty codebook (or `k == 0`) yields `out = epilogue(0)`, mirroring
+/// `pack_b_gather`'s hardening; out-of-range indices clamp. Panics if
+/// `codebook.len() > MAX_LUT_CENTROIDS` — the dispatching wrappers
+/// reroute that case instead of calling here.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_matmul(
+    ws: &mut Workspace,
+    a: &[f32],
+    idx: &[i32],
+    codebook: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "lut_matmul lhs shape");
+    assert_eq!(idx.len(), k * n, "lut_matmul idx shape");
+    assert_eq!(out.len(), m * n, "lut_matmul output shape");
+    if codebook.is_empty() || k == 0 {
+        epilogue_of_zero(out, m, n, &epi);
+        return;
+    }
+    assert!(
+        codebook.len() <= MAX_LUT_CENTROIDS,
+        "lut_matmul: codebook has {} entries (> {MAX_LUT_CENTROIDS}); use lut_gather_nn",
+        codebook.len()
+    );
+    let s_n = codebook.len();
+    let (ptr, pos) = ws.index_panels(n * (s_n + 1), k * n);
+    pack::pack_index_csr(idx, codebook, k, n, ptr, pos);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let pbase = j * (s_n + 1);
+            let mut acc = 0.0f32;
+            for (s, &cv) in codebook.iter().enumerate() {
+                let lo = ptr[pbase + s] as usize;
+                let hi = ptr[pbase + s + 1] as usize;
+                if lo == hi {
+                    continue;
+                }
+                let mut partial = 0.0f32;
+                for &p in &pos[lo..hi] {
+                    partial += arow[p as usize];
+                }
+                acc += cv * partial;
+            }
+            *o = finish(acc, i, j, n, &epi);
+        }
+    }
+}
+
+/// Tier-dispatching quantized dense layer: the LUT kernel in the fast
+/// tier, the gather-GEMM oracle in the deterministic tier (preserving the
+/// bitwise-to-naive contract of `--deterministic`) and for codebooks
+/// wider than [`MAX_LUT_CENTROIDS`]. This is the entry point
+/// `runtime::host::qdense_gather` evaluates quantized models through.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_gather_nn_with(
+    opts: GemmOpts,
+    ws: &mut Workspace,
+    a: &[f32],
+    idx: &[i32],
+    codebook: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    if opts == GemmOpts::deterministic() || codebook.len() > MAX_LUT_CENTROIDS {
+        gemm_gather_nn_with(opts, ws, a, idx, codebook, m, k, n, epi, out);
+    } else {
+        lut_matmul(ws, a, idx, codebook, m, k, n, epi, out);
+    }
+}
+
+/// [`lut_gather_nn_with`] under the process-wide execution mode
+/// (`--deterministic` / `$ECQX_DETERMINISTIC` / `$ECQX_KERNEL`).
+#[allow(clippy::too_many_arguments)]
+pub fn lut_gather_nn(
+    ws: &mut Workspace,
+    a: &[f32],
+    idx: &[i32],
+    codebook: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: Epilogue,
+    out: &mut [f32],
+) {
+    lut_gather_nn_with(GemmOpts::dispatch(), ws, a, idx, codebook, m, k, n, epi, out);
+}
+
+/// Exact arithmetic-op count of one LUT matmul: per output column `j`,
+/// `nnz_j` in-segment adds plus one multiply and one combining add per
+/// active (non-zero, non-empty) centroid, times `m` output rows. The
+/// dense-path counterpart is [`crate::linalg::gemm_flops`]` = 2·m·k·n`;
+/// the ratio is what `perf_micro`'s `lut_kernels` rows record and
+/// bench-smoke enforces.
+pub fn lut_ops(idx: &[i32], codebook: &[f32], m: usize, k: usize, n: usize) -> f64 {
+    assert_eq!(idx.len(), k * n, "lut_ops idx shape");
+    if codebook.is_empty() || k == 0 {
+        return 0.0;
+    }
+    let top = (codebook.len() - 1) as i32;
+    let mut col_ops: u64 = 0;
+    for j in 0..n {
+        let mut counts = vec![0u64; codebook.len()];
+        for l in 0..k {
+            let s = idx[l * n + j].clamp(0, top) as usize;
+            if codebook[s] != 0.0 {
+                counts[s] += 1;
+            }
+        }
+        let nnz: u64 = counts.iter().sum();
+        let actives = counts.iter().filter(|&&c| c > 0).count() as u64;
+        col_ops += nnz + 2 * actives;
+    }
+    m as u64 as f64 * col_ops as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::simd::Kernel;
+    use super::*;
+
+    const DET: GemmOpts = GemmOpts { kernel: Kernel::Scalar, threads: 1 };
+    const FAST1: GemmOpts = GemmOpts { kernel: Kernel::Scalar, threads: 2 };
+
+    fn seq(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i % 13) as f32 - 6.0) * scale).collect()
+    }
+
+    /// The LUT algorithm restated element-at-a-time in its documented
+    /// accumulation order (ascending centroid, ascending row within a
+    /// segment) — the bitwise oracle for `lut_matmul`'s packed kernel.
+    fn lut_reference(
+        a: &[f32],
+        idx: &[i32],
+        cb: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        let top = (cb.len() - 1) as i32;
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for (s, &cv) in cb.iter().enumerate() {
+                    if cv == 0.0 {
+                        continue;
+                    }
+                    let mut partial = 0.0f32;
+                    let mut any = false;
+                    for l in 0..k {
+                        if idx[l * n + j].clamp(0, top) as usize == s {
+                            partial += a[i * k + l];
+                            any = true;
+                        }
+                    }
+                    if any {
+                        acc += cv * partial;
+                    }
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_segment_order_reference_bitwise() {
+        let (m, k, n) = (5, 23, 9); // ragged on purpose
+        let a = seq(m * k, 0.25);
+        let cb = [0.0f32, 0.5, -0.75, 1.25];
+        let idx: Vec<i32> = (0..k * n).map(|i| ((i * 7 + 3) % 9) as i32 - 2).collect();
+        let mut ws = Workspace::new();
+        let mut out = vec![f32::NAN; m * n];
+        lut_matmul(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut out);
+        let want = lut_reference(&a, &idx, &cb, m, k, n);
+        assert_eq!(out, want, "packed kernel must realize the documented order exactly");
+    }
+
+    #[test]
+    fn zero_centroid_positions_are_never_read() {
+        // NaN activations under the zero centroid must not propagate:
+        // structural skip, not multiply-by-zero.
+        let (m, k, n) = (2, 4, 3);
+        let cb = [0.0f32, 2.0];
+        // column j: rows {0, 2} are zero-centroid everywhere
+        let idx = vec![0, 0, 0, 1, 1, 1, 0, 0, 0, 1, 1, 1];
+        let mut a = seq(m * k, 1.0);
+        for i in 0..m {
+            a[i * k] = f32::NAN;
+            a[i * k + 2] = f32::INFINITY;
+        }
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; m * n];
+        lut_matmul(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()), "zero-centroid NaN/Inf leaked: {out:?}");
+        for i in 0..m {
+            let want = 2.0 * (a[i * k + 1] + a[i * k + 3]);
+            for j in 0..n {
+                assert_eq!(out[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_codebook_and_empty_k_are_epilogue_of_zero() {
+        let bias = [1.5f32, -2.0];
+        let mut ws = Workspace::new();
+        let mut out = vec![f32::NAN; 3 * 2];
+        lut_matmul(&mut ws, &seq(3 * 4, 1.0), &[0; 8], &[], 3, 4, 2, Epilogue::Bias(&bias), &mut out);
+        assert_eq!(out, vec![1.5, -2.0, 1.5, -2.0, 1.5, -2.0]);
+        let mut out = vec![f32::NAN; 2 * 2];
+        lut_matmul(&mut ws, &[], &[], &[0.0, 1.0], 2, 0, 2, Epilogue::BiasRelu(&bias), &mut out);
+        assert_eq!(out, vec![1.5, 0.0, 1.5, 0.0]);
+    }
+
+    #[test]
+    fn all_zero_centroid_matrix_is_epilogue_of_zero() {
+        // p = 1 sparsity edge: every index hits the zero centroid
+        let (m, k, n) = (3, 8, 4);
+        let bias = seq(n, 0.5);
+        let mut ws = Workspace::new();
+        let mut out = vec![f32::NAN; m * n];
+        lut_matmul(&mut ws, &seq(m * k, 1.0), &vec![0; k * n], &[0.0, 0.5], m, k, n, Epilogue::Bias(&bias), &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(out[i * n + j], bias[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_indices_clamp_like_pack_b_gather() {
+        let (m, k, n) = (2, 3, 2);
+        let a = seq(m * k, 0.5);
+        let cb = [0.0f32, 1.0, -2.0];
+        let wild = vec![-9, 99, 1, 2, 0, 1]; // clamps to 0 and 2
+        let tame = vec![0, 2, 1, 2, 0, 1];
+        let mut ws = Workspace::new();
+        let (mut o1, mut o2) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        lut_matmul(&mut ws, &a, &wild, &cb, m, k, n, Epilogue::None, &mut o1);
+        lut_matmul(&mut ws, &a, &tame, &cb, m, k, n, Epilogue::None, &mut o2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn deterministic_tier_routes_to_gather_bitwise() {
+        let (m, k, n) = (4, 11, 6);
+        let a = seq(m * k, 0.25);
+        let cb = [0.0f32, 0.5, -0.5, 0.25];
+        let idx: Vec<i32> = (0..k * n).map(|i| (i % 4) as i32).collect();
+        let mut ws = Workspace::new();
+        let (mut lut, mut gather) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        lut_gather_nn_with(DET, &mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut lut);
+        gemm_gather_nn_with(DET, &mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut gather);
+        assert_eq!(lut, gather, "--deterministic must be the gather oracle, bit for bit");
+    }
+
+    #[test]
+    fn oversized_codebook_falls_back_to_gather() {
+        let (m, k, n) = (2, 5, 3);
+        let a = seq(m * k, 0.5);
+        let cb: Vec<f32> = (0..MAX_LUT_CENTROIDS + 1).map(|i| i as f32 * 0.125).collect();
+        let idx: Vec<i32> = (0..k * n).map(|i| (i % cb.len()) as i32).collect();
+        let mut ws = Workspace::new();
+        let (mut got, mut want) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        // scalar fast-tier opts: dispatch must reject the LUT kernel on
+        // width alone and produce gather's exact bits
+        lut_gather_nn_with(FAST1, &mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut got);
+        gemm_gather_nn_with(FAST1, &mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn lut_ops_counts_adds_and_centroid_applies() {
+        // col 0: centroids [1, 0, 1] -> nnz 2, actives 1 -> 2 + 2 = 4
+        // col 1: centroids [2, 1, 0] -> nnz 2, actives 2 -> 2 + 4 = 6
+        let idx = [1, 2, 0, 1, 1, 0];
+        let cb = [0.0f32, 0.5, -0.5];
+        assert_eq!(lut_ops(&idx, &cb, 7, 3, 2), 7.0 * (4.0 + 6.0));
+        assert_eq!(lut_ops(&idx, &[], 7, 3, 2), 0.0);
+        // dense comparison point: gemm does 2*m*k*n = 2*7*3*2 = 84 ops
+        assert!(lut_ops(&idx, &cb, 7, 3, 2) < 84.0);
+    }
+}

@@ -28,6 +28,10 @@
 //! * [`im2col`] — NHWC conv2d lowered onto the same core: virtual patch
 //!   operands packed straight into A panels (forward / dW / LRP), the
 //!   tiled col2im backward, and the codebook-gather conv
+//! * [`lut`] — the sparse low-bit LUT matmul: CSR index panels that
+//!   structurally skip the zero centroid, per-centroid partial-sum
+//!   accumulation, and the tier dispatch that keeps the gather-GEMM as
+//!   the deterministic oracle (DESIGN.md §2.7)
 //! * [`workspace`] — [`Workspace`] buffers + the thread-local instance
 //!   behind `Engine::call`
 //! * [`reference`] — the retained naive kernels (GEMM *and* direct
@@ -54,6 +58,7 @@
 pub mod conformance;
 pub mod gemm;
 pub mod im2col;
+pub mod lut;
 pub mod pack;
 pub mod reference;
 pub mod simd;
@@ -68,6 +73,7 @@ pub use im2col::{
     conv2d_flops, conv2d_gather, conv2d_gather_with, conv2d_with, lrp_conv_rw, lrp_conv_rw_with,
     Conv2d, Pad,
 };
+pub use lut::{lut_gather_nn, lut_gather_nn_with, lut_matmul, lut_ops, MAX_LUT_CENTROIDS};
 pub use pack::View;
 pub use simd::{deterministic_mode, set_deterministic, GemmOpts, Kernel};
 pub use workspace::{with_thread_workspace, Workspace};

@@ -25,6 +25,7 @@
 //! networks make the dominant one.
 
 use super::gemm::{MR, NR};
+use super::lut::MAX_LUT_CENTROIDS;
 
 /// Borrowed strided matrix view: element `(i, j)` lives at
 /// `data[i*rs + j*cs]`. `View::nn` wraps a row-major matrix;
@@ -148,6 +149,72 @@ pub(crate) fn pack_b_gather(
     }
 }
 
+/// Pack a row-major `[k, n]` int32 index matrix into the per-column CSR
+/// index panels of the LUT kernel ([`crate::linalg::lut`]): for each
+/// output column `j`, group the contraction positions `l` by centroid,
+/// **omitting every position whose centroid value is exactly `0.0`** —
+/// the structural zero-skip that makes LUT arithmetic scale with nnz.
+///
+/// Layout (`s_n = codebook.len()`, global `u32` offsets into `pos`):
+/// * `ptr[j*(s_n+1) + s] .. ptr[j*(s_n+1) + s + 1]` is column `j`'s
+///   segment for centroid `s` — a run of row positions `l` in ascending
+///   order (the fill pass walks `l` upward, so segment order is a pure
+///   function of `idx`/`codebook` and never of workspace history).
+/// * Zero-valued centroids get an empty segment (`lo == hi`), so the
+///   kernel never touches their positions — not even to multiply by zero.
+///
+/// Out-of-range indices clamp into the codebook, matching
+/// [`pack_b_gather`] (XLA gather semantics; corrupt containers must not
+/// panic). Every `ptr` slot in use and every `pos` slot below the
+/// returned nnz count is overwritten, so dirty workspace reuse cannot
+/// change results. Returns the total position count (Σ_j nnz_j).
+///
+/// Caller contract: `codebook` is non-empty and at most
+/// [`MAX_LUT_CENTROIDS`] entries (the LUT entry points early-out /
+/// fall back before packing), `ptr.len() >= n*(s_n+1)`,
+/// `pos.len() >= k*n`.
+pub(crate) fn pack_index_csr(
+    idx: &[i32],
+    codebook: &[f32],
+    k: usize,
+    n: usize,
+    ptr: &mut [u32],
+    pos: &mut [u32],
+) -> usize {
+    let s_n = codebook.len();
+    debug_assert!(s_n >= 1 && s_n <= MAX_LUT_CENTROIDS, "pack_index_csr codebook size");
+    debug_assert!(k * n <= u32::MAX as usize, "pack_index_csr: index panel offsets are u32");
+    let top = (s_n - 1) as i32;
+    let mut base: u32 = 0;
+    for j in 0..n {
+        let pbase = j * (s_n + 1);
+        // count pass: nnz per centroid in this column
+        let mut counts = [0u32; MAX_LUT_CENTROIDS];
+        for l in 0..k {
+            let s = idx[l * n + j].clamp(0, top) as usize;
+            if codebook[s] != 0.0 {
+                counts[s] += 1;
+            }
+        }
+        ptr[pbase] = base;
+        for s in 0..s_n {
+            ptr[pbase + s + 1] = ptr[pbase + s] + counts[s];
+        }
+        // fill pass: ascending l within each segment
+        let mut cur = [0u32; MAX_LUT_CENTROIDS];
+        cur[..s_n].copy_from_slice(&ptr[pbase..pbase + s_n]);
+        for l in 0..k {
+            let s = idx[l * n + j].clamp(0, top) as usize;
+            if codebook[s] != 0.0 {
+                pos[cur[s] as usize] = l as u32;
+                cur[s] += 1;
+            }
+        }
+        base = ptr[pbase + s_n];
+    }
+    base as usize
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,5 +284,27 @@ mod tests {
         let mut out = vec![f32::NAN; strips * NR * k];
         pack_b_gather(&idx, &[], 2, 0, k, cols, &mut out);
         assert!(out.iter().all(|&v| v == 0.0), "empty codebook packs all-zero strips");
+    }
+
+    #[test]
+    fn pack_index_csr_groups_skips_zero_and_clamps() {
+        let cb = [0.0, 0.5, -1.5];
+        // [k=4, n=2] column-wise:
+        //   col 0: centroids 1, 0, 2, 1  -> seg1 = {0, 3}, seg2 = {2}
+        //   col 1: centroids 0(-7 clamp), 2(99 clamp), 0, 0 -> seg2 = {1}
+        let idx = [1, -7, 0, 99, 2, 0, 1, 0];
+        let (k, n) = (4, 2);
+        let s_n = cb.len();
+        let mut ptr = vec![u32::MAX; n * (s_n + 1)];
+        let mut pos = vec![u32::MAX; k * n];
+        let nnz = pack_index_csr(&idx, &cb, k, n, &mut ptr, &mut pos);
+        assert_eq!(nnz, 4, "zero-centroid positions are structurally absent");
+        // column 0: ptr = [0, 0, 2, 3] (centroid 0 empty, 1 has two, 2 one)
+        assert_eq!(&ptr[0..4], &[0, 0, 2, 3]);
+        assert_eq!(&pos[0..2], &[0, 3], "segment positions ascend by row");
+        assert_eq!(pos[2], 2);
+        // column 1: ptr = [3, 3, 3, 4]
+        assert_eq!(&ptr[4..8], &[3, 3, 3, 4]);
+        assert_eq!(pos[3], 1);
     }
 }

@@ -31,18 +31,30 @@ pub struct Workspace {
     /// dCol tile scratch of the conv backward-input pass
     /// ([`crate::linalg::conv2d_bwd_input`]); unused by plain GEMMs
     tile: Vec<f32>,
+    /// CSR column pointers of the LUT index panels
+    /// ([`crate::linalg::lut`]); unused by dense GEMMs
+    iptr: Vec<u32>,
+    /// CSR row positions of the LUT index panels
+    ipos: Vec<u32>,
 }
 
 impl Workspace {
     /// Empty workspace (allocation-free; `const` so it can seed TLS).
     pub const fn new() -> Workspace {
-        Workspace { apack: Vec::new(), bpack: Vec::new(), tile: Vec::new() }
+        Workspace {
+            apack: Vec::new(),
+            bpack: Vec::new(),
+            tile: Vec::new(),
+            iptr: Vec::new(),
+            ipos: Vec::new(),
+        }
     }
 
     /// Bytes currently reserved across all scratch buffers.
     pub fn reserved_bytes(&self) -> usize {
         (self.apack.capacity() + self.bpack.capacity() + self.tile.capacity())
             * std::mem::size_of::<f32>()
+            + (self.iptr.capacity() + self.ipos.capacity()) * std::mem::size_of::<u32>()
     }
 
     /// Borrow the A/B panel buffers for [`crate::linalg::gemm()`], grown
@@ -84,6 +96,21 @@ impl Workspace {
             &mut self.tile[..t_len],
         )
     }
+
+    /// Borrow the CSR index-panel buffers for [`crate::linalg::lut`],
+    /// grown to at least the requested lengths. Same contract as
+    /// [`Workspace::panels`]: contents are unspecified, and the pack
+    /// routine (`pack_index_csr`) overwrites every slot it makes
+    /// reachable, so dirty reuse cannot change results.
+    pub(crate) fn index_panels(&mut self, ptr_len: usize, pos_len: usize) -> (&mut [u32], &mut [u32]) {
+        if self.iptr.len() < ptr_len {
+            self.iptr.resize(ptr_len, 0);
+        }
+        if self.ipos.len() < pos_len {
+            self.ipos.resize(pos_len, 0);
+        }
+        (&mut self.iptr[..ptr_len], &mut self.ipos[..pos_len])
+    }
 }
 
 thread_local! {
@@ -122,6 +149,15 @@ mod tests {
         // a smaller request reuses the same storage
         let _ = ws.panels(16, 16);
         assert_eq!(ws.reserved_bytes(), high);
+        // index panels grow the same way, accounted in u32 units
+        {
+            let (p, q) = ws.index_panels(33, 512);
+            assert_eq!((p.len(), q.len()), (33, 512));
+        }
+        let high2 = ws.reserved_bytes();
+        assert!(high2 >= high + (33 + 512) * 4);
+        let _ = ws.index_panels(4, 4);
+        assert_eq!(ws.reserved_bytes(), high2);
     }
 
     #[test]

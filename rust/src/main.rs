@@ -14,12 +14,20 @@
 //!                              (--jobs N fans the entropy coding over N
 //!                              workers; the file is identical for any N)
 //!   eval <model> <file.ecqx>   evaluate a compressed container
+//!   serve <model> [opts]       HTTP loopback inference server over the
+//!                              worker pool: GET /eval?lambda=... builds
+//!                              (and caches) the requested working point
+//!                              and scores it through the microbatched
+//!                              LUT eval path; --bench measures req/s at
+//!                              p50/p99 latency into BENCH JSON
 //!
 //! Options: --backend auto|host|pjrt --model mlp|cnn --method ecq|ecqx
 //!          --bits N --lambda F --p F --epochs N --lr F --seed N
 //!          --jobs N --paper-scale --out PATH --deterministic
 //! Durable sweeps: --store PATH --resume PATH --shard i/n --retries N
 //!          --backoff-ms N --heartbeat N --max-trials N
+//! Serving: --port N (0 = ephemeral) --max-batch N --bench
+//!          --clients N --requests N
 //!
 //! `--deterministic` pins the scalar GEMM micro-kernel and serial block
 //! schedule (DESIGN.md §2.6): results become bitwise-reproducible across
@@ -46,6 +54,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use ecqx::coordinator::binder::ParamSource;
+use ecqx::coordinator::serve;
 use ecqx::coordinator::store::{self, ResultStore};
 use ecqx::coordinator::sweep::{select, StoreSweepOptions, SweepConfig, SweepRunner};
 use ecqx::coordinator::trainer::{evaluate, QatConfig, QatTrainer};
@@ -62,7 +71,7 @@ use ecqx::util::fsx;
 /// token — and *requires* one, so `--seed` at the end of the line is an
 /// error rather than a silently-adopted `"true"`.
 const BOOL_FLAGS: &[&str] =
-    &["paper-scale", "no-grad-scale", "lrp-equal-weight", "deterministic", "help"];
+    &["paper-scale", "no-grad-scale", "lrp-equal-weight", "deterministic", "bench", "help"];
 
 /// QAT hyperparameter flags shared by quantize / sweep / compress.
 const QAT_FLAGS: &[&str] = &[
@@ -108,6 +117,10 @@ fn allowed_flags(cmd: &str) -> Vec<&'static str> {
         "compress" => {
             out.extend(QAT_FLAGS);
             out.extend(["jobs", "out"]);
+        }
+        "serve" => {
+            out.extend(QAT_FLAGS);
+            out.extend(["jobs", "port", "max-batch", "bench", "clients", "requests"]);
         }
         "report" => out.extend(["out"]),
         _ => {}
@@ -250,7 +263,9 @@ fn qat_config(args: &Args, exp_: &exp::ModelExp, method: Method) -> Result<QatCo
 
 fn usage() -> &'static str {
     "ecqx — Explainability-Driven Quantization (paper reproduction)\n\n\
-     usage: ecqx <smoke|pretrain|quantize|sweep|report|compress|eval> [args]\n\
+     usage: ecqx <smoke|pretrain|quantize|sweep|report|compress|eval|serve> [args]\n\
+     serving: ecqx serve mlp_gsc --backend host --port 8737\n\
+              ecqx serve mlp_gsc --bench --clients 4 --requests 64\n\
      durable sweeps: ecqx sweep ... --store run.jsonl [--shard i/n]\n\
                      ecqx sweep ... --resume run.jsonl\n\
                      ecqx report run.jsonl [more-shards.jsonl ...]\n\
@@ -288,6 +303,7 @@ fn main() -> Result<()> {
         "report" => cmd_report(&args),
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
         other => bail!("unknown command {other:?}\n{}", usage()),
     }
 }
@@ -624,6 +640,109 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let exp_ = model_arg(args)?;
+    let eng = engine_of(args)?;
+    let seed = args.get("seed", 17u64)?;
+    let method = method_of(args)?;
+    let pre = exp::pretrained(&eng, &exp_, seed)?;
+    let (train, val) = exp::datasets(&exp_, seed);
+    let spec = eng.manifest.model(exp_.name)?;
+    let train_dl = DataLoader::new(&train, spec.batch, true, seed);
+    let val_dl = DataLoader::new(&val, spec.batch, false, seed);
+    let runner = SweepRunner::new(&eng, pre.state);
+    // defaults mirror qat_config/sweep exactly, so `GET /eval` with no
+    // parameters serves the same working point `ecqx sweep` would produce
+    // for these flags — that identity is what serve-smoke diffs
+    let mut qat = qat_config(args, &exp_, method)?;
+    qat.verbose = false; // concurrent builds would interleave epoch logs
+    let cfg = SweepConfig {
+        model: exp_.name.to_string(),
+        method,
+        bits: args.get("bits", 4u32)?,
+        lambdas: vec![args.get("lambda", 0.02f32)?],
+        p: args.get("p", 0.3f64)?,
+        qat,
+        baseline_acc: pre.baseline_acc,
+        seed,
+    };
+    let opts = serve::ServeOptions {
+        port: args.get("port", 8737u16)?,
+        jobs: args.get("jobs", 1usize)?.max(1),
+        max_batch: args.get("max-batch", 8usize)?.max(1),
+        verbose: true,
+    };
+    let server = serve::Server::bind(&runner, cfg, &train_dl, &val_dl, opts)?;
+    if !args.has("bench") {
+        return server.run();
+    }
+    // --bench: saturating-throughput measurement against the real HTTP
+    // path, recorded into BENCH JSON so serve participates in the
+    // perf-regression job
+    let clients = args.get("clients", 4usize)?.max(1);
+    let per_client = args.get("requests", 16usize)?.max(1);
+    let addr = server.local_addr();
+    let mname = match method {
+        Method::Ecq => "ecq",
+        Method::Ecqx => "ecqx",
+    };
+    let query = format!(
+        "/eval?method={mname}&bits={}&lambda={}&p={}",
+        args.get("bits", 4u32)?,
+        args.get("lambda", 0.02f32)?,
+        args.get("p", 0.3f64)?
+    );
+    let summary = std::thread::scope(|scope| -> Result<serve::BenchSummary> {
+        let srv = scope.spawn(|| server.run());
+        let bench = serve::run_bench(addr, &query, clients, per_client);
+        // always attempt the shutdown and join before propagating any
+        // bench error — an early `?` would leave the scope blocked on
+        // the still-serving thread
+        let shutdown = serve::http_get(addr, "/shutdown");
+        let ran = srv.join().expect("server thread panicked");
+        let (code, _) = shutdown?;
+        if code != 200 {
+            bail!("shutdown returned {code}");
+        }
+        ran?;
+        bench
+    })?;
+    println!(
+        "serve bench: {} requests x {} clients: {:.1} req/s \
+         (p50 {:.1} ms, p99 {:.1} ms, wall {:.2}s)",
+        summary.requests,
+        summary.clients,
+        summary.req_s,
+        summary.p50_s * 1e3,
+        summary.p99_s * 1e3,
+        summary.wall_s
+    );
+    let mut log = ecqx::bench::PerfLog::new(eng.backend_name());
+    let shape = [summary.clients, summary.requests];
+    let mk = |mean_s: f64| ecqx::bench::BenchResult {
+        name: "serve_eval".into(),
+        iters: summary.requests,
+        mean_s,
+        median_s: summary.p50_s,
+        std_s: 0.0,
+        min_s: summary.p50_s,
+    };
+    let req_s = format!("{:.1}", summary.req_s);
+    let model_kv = ("model", exp_.name);
+    log.push_kv("serve_eval", &shape, &mk(summary.p50_s), None, &[("variant", "p50"), model_kv]);
+    log.push_kv("serve_eval", &shape, &mk(summary.p99_s), None, &[("variant", "p99"), model_kv]);
+    log.push_kv(
+        "serve_eval",
+        &shape,
+        &mk(summary.wall_s / summary.requests.max(1) as f64),
+        None,
+        &[("variant", "throughput"), ("req_s", &req_s), model_kv],
+    );
+    let path = log.write_default()?;
+    println!("wrote {} ({} serve rows)", path.display(), log.len());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -684,6 +803,38 @@ mod tests {
         assert!(validate_flags(&a, "pretrain").is_err());
         let a = parse_args(&argv(&["sweep", "mlp_gsc", "--shard", "0/2"])).unwrap();
         assert!(validate_flags(&a, "sweep").is_ok());
+    }
+
+    #[test]
+    fn serve_flags_validate_strictly() {
+        // the serve allow-list accepts its own flags plus QAT flags...
+        let a = parse_args(&argv(&[
+            "serve",
+            "mlp_gsc",
+            "--port=0",
+            "--max-batch",
+            "4",
+            "--bench",
+            "--clients",
+            "2",
+            "--requests",
+            "8",
+            "--lambda",
+            "0.08",
+            "--deterministic",
+        ]))
+        .unwrap();
+        validate_flags(&a, "serve").unwrap();
+        assert_eq!(a.get("port", 8737u16).unwrap(), 0); // ephemeral port
+        assert!(a.has("bench")); // --bench is a bool flag...
+        assert_eq!(a.positional, vec!["serve", "mlp_gsc"]); // ...and swallows nothing
+        // ...but rejects sweep-only campaign flags, with a suggestion
+        let a = parse_args(&argv(&["serve", "mlp_gsc", "--store", "x.jsonl"])).unwrap();
+        let msg = format!("{}", validate_flags(&a, "serve").unwrap_err());
+        assert!(msg.contains("--store"), "{msg}");
+        let a = parse_args(&argv(&["serve", "mlp_gsc", "--prot", "8080"])).unwrap();
+        let msg = format!("{}", validate_flags(&a, "serve").unwrap_err());
+        assert!(msg.contains("did you mean --port"), "{msg}");
     }
 
     #[test]

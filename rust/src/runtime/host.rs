@@ -82,11 +82,18 @@ pub fn qdense(a: &[f32], w: &[f32], bias: &[f32], m: usize, k: usize, n: usize) 
     with_thread_workspace(|ws| dense_fwd(ws, a, w, bias, m, k, n, false))
 }
 
-/// Workspace-threaded core of [`qdense_gather`]: the codebook is gathered
-/// panel-by-panel at pack time (zero centroid skipped), so the dense
-/// `[k,n]` dequantized weight matrix is never materialized. An empty
-/// codebook — possible with a corrupt container — is rejected with an
-/// error instead of panicking the host path.
+/// Workspace-threaded core of [`qdense_gather`]: in the fast tier the
+/// layer runs through the sparse LUT kernel
+/// ([`crate::linalg::lut_gather_nn`]) — codebook indices packed into CSR
+/// panels that structurally skip the zero centroid, per-centroid partial
+/// sums, one codebook multiply per active centroid — so arithmetic scales
+/// with nnz and centroid count instead of dense `k·n` FMAs. Under
+/// `--deterministic` (or a codebook wider than
+/// [`crate::linalg::MAX_LUT_CENTROIDS`]) the same call routes to the
+/// gather-GEMM oracle, preserving the bitwise tier contract; either way
+/// the dense `[k,n]` dequantized weight matrix is never materialized. An
+/// empty codebook — possible with a corrupt container — is rejected with
+/// an error instead of panicking the host path.
 pub(crate) fn qdense_gather_ws(
     scratch: &mut Workspace,
     a: &[f32],
@@ -103,11 +110,11 @@ pub(crate) fn qdense_gather_ws(
     if codebook.is_empty() {
         bail!("qdense_gather: empty codebook (corrupt container)");
     }
-    // out-of-range indices clamp inside the gather pack, matching XLA
+    // out-of-range indices clamp inside both index packs, matching XLA
     // gather semantics on the PJRT backend
     let mut z = vec![0.0f32; m * n];
     let epi = if relu { Epilogue::BiasRelu(bias) } else { Epilogue::Bias(bias) };
-    linalg::gemm_gather_nn(scratch, a, idx, codebook, m, k, n, epi, &mut z);
+    linalg::lut_gather_nn(scratch, a, idx, codebook, m, k, n, epi, &mut z);
     Ok(z)
 }
 

@@ -417,9 +417,12 @@ pub(crate) fn eval_step(
     emit(spec, out)
 }
 
-/// Deployment-form gather eval: conv and dense centroid indices
-/// dequantized through their per-layer codebooks at pack time — the conv
-/// twin of `host::eval_gather_step`.
+/// Deployment-form gather eval, the conv twin of
+/// `host::eval_gather_step`: conv layers dequantize centroid indices at
+/// im2col pack time ([`crate::linalg::conv2d_gather`] — patch extraction
+/// dominates, so the LUT form buys little there), while the dense head
+/// goes through `qdense_gather_ws` and thus takes the sparse LUT fast
+/// path (gather-GEMM oracle under `--deterministic`).
 pub(crate) fn eval_gather_step(
     spec: &ArtifactSpec,
     inputs: &[Value],

@@ -1,0 +1,264 @@
+//! Property tests for the sparse low-bit LUT matmul (DESIGN.md §2.7).
+//!
+//! Contract under test, from the outside:
+//!   * deterministic tier — `lut_gather_nn_with(deterministic)` is
+//!     *bitwise* the gather-GEMM, which is itself bitwise the naive
+//!     reference over the clamp-dequantized dense weight matrix;
+//!   * fast tier — the LUT kernel reassociates the k-sum into
+//!     per-centroid partials, so it is held to the §2.6 conformance
+//!     envelope (`2·(k+4)·ε_f32·Σ|a||b|`) against the f64 oracle instead;
+//!   * the epilogue is fused with the exact `gemm::finish` arithmetic,
+//!     so epilogues add no extra tolerance;
+//!   * hardening edges (empty codebook, all-zero-centroid columns,
+//!     p = 0 / p = 1 sparsity, out-of-range indices) degrade exactly
+//!     like the pack-time gather path.
+
+use ecqx::linalg::conformance::{assert_matmul_within_envelope, envelope, matmul_f64};
+use ecqx::linalg::{
+    gemm_gather_nn_with, lut_gather_nn_with, lut_matmul, lut_ops, reference, Epilogue, GemmOpts,
+    Kernel, Workspace, MAX_LUT_CENTROIDS,
+};
+use ecqx::util::Rng;
+
+const DET: GemmOpts = GemmOpts { kernel: Kernel::Scalar, threads: 1 };
+
+/// A fast-tier option set that is still available on every host: the
+/// scalar micro-kernel with an intra-op split. What matters for these
+/// tests is only that it is *not* `GemmOpts::deterministic()`, so the
+/// dispatcher takes the LUT branch.
+const FAST: GemmOpts = GemmOpts { kernel: Kernel::Scalar, threads: 2 };
+
+/// Dequantize `idx` through `codebook` with the pack-layer's clamp
+/// semantics into the dense `[k, n]` weight matrix — the B operand every
+/// oracle in this file compares against.
+fn dequant(idx: &[i32], codebook: &[f32], k: usize, n: usize) -> Vec<f32> {
+    if codebook.is_empty() {
+        return vec![0.0; k * n];
+    }
+    let top = (codebook.len() - 1) as i32;
+    idx.iter().map(|&v| codebook[v.clamp(0, top) as usize]).collect()
+}
+
+/// Random codebook-index matrix at sparsity `p` (probability of the zero
+/// centroid) over a `bits`-wide symmetric codebook with `cb[0] == 0`.
+fn quantized(rng: &mut Rng, bits: u32, p: f64, k: usize, n: usize) -> (Vec<i32>, Vec<f32>) {
+    let side = (1usize << (bits - 1)) - 1;
+    let mut cb = vec![0.0f32];
+    for s in 1..=side {
+        cb.push(s as f32 * 0.25);
+        cb.push(-(s as f32) * 0.25);
+    }
+    let idx: Vec<i32> = (0..k * n)
+        .map(|_| if rng.chance(p) { 0 } else { 1 + rng.below(cb.len() - 1) as i32 })
+        .collect();
+    (idx, cb)
+}
+
+fn randn(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+#[test]
+fn deterministic_tier_is_bitwise_the_reference_chain() {
+    let mut rng = Rng::new(41);
+    // ragged shapes on purpose: nothing divides the block/strip sizes
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 7, 5), (13, 33, 17), (5, 64, 31)] {
+        for &(bits, p) in &[(2u32, 0.5f64), (4, 0.0), (4, 0.9), (5, 0.5)] {
+            let a = randn(&mut rng, m * k);
+            let (idx, cb) = quantized(&mut rng, bits, p, k, n);
+            let mut ws = Workspace::new();
+            let mut out = vec![f32::NAN; m * n];
+            lut_gather_nn_with(DET, &mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut out);
+            let b = dequant(&idx, &cb, k, n);
+            let want = reference::matmul(&a, &b, m, k, n);
+            assert_eq!(out, want, "det tier must be bitwise-naive (m={m} k={k} n={n} bits={bits} p={p})");
+        }
+    }
+}
+
+#[test]
+fn fast_tier_is_within_the_conformance_envelope() {
+    let mut rng = Rng::new(42);
+    for &(m, k, n) in &[(2usize, 5usize, 3usize), (7, 48, 9), (16, 127, 33)] {
+        for &(bits, p) in &[(2u32, 0.5f64), (4, 0.5), (4, 0.9), (5, 0.2)] {
+            let a = randn(&mut rng, m * k);
+            let (idx, cb) = quantized(&mut rng, bits, p, k, n);
+            let mut ws = Workspace::new();
+            let mut out = vec![f32::NAN; m * n];
+            lut_gather_nn_with(FAST, &mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut out);
+            let b = dequant(&idx, &cb, k, n);
+            assert_matmul_within_envelope(
+                &out,
+                &a,
+                &b,
+                m,
+                k,
+                n,
+                &format!("lut fast m={m} k={k} n={n} bits={bits} p={p}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn lut_and_gather_disagree_by_at_most_twice_the_envelope() {
+    // Both tiers sit inside the same oracle-centered ball, so their
+    // mutual distance is at most two envelopes — a direct cross-check
+    // that needs no f64 oracle at all.
+    let mut rng = Rng::new(43);
+    let (m, k, n) = (6, 57, 11);
+    let a = randn(&mut rng, m * k);
+    let (idx, cb) = quantized(&mut rng, 4, 0.6, k, n);
+    let mut ws = Workspace::new();
+    let (mut lut, mut gather) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+    lut_matmul(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut lut);
+    gemm_gather_nn_with(DET, &mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut gather);
+    let b = dequant(&idx, &cb, k, n);
+    let (_, mag) = matmul_f64(&a, &b, m, k, n);
+    for (i, (&l, (&g, &mg))) in lut.iter().zip(gather.iter().zip(mag.iter())).enumerate() {
+        let bound = 2.0 * envelope(k, mg);
+        let err = (l as f64 - g as f64).abs();
+        assert!(err <= bound, "element {i}: |lut - gather| {err:.3e} > {bound:.3e}");
+    }
+}
+
+#[test]
+fn epilogues_fuse_with_exact_finish_arithmetic() {
+    // Fusing the epilogue must not change the tolerance story: applying
+    // bias/relu/scale/mask to the *unfused* LUT accumulators reproduces
+    // the fused results bit for bit.
+    let mut rng = Rng::new(44);
+    let (m, k, n) = (4, 19, 6);
+    let a = randn(&mut rng, m * k);
+    let (idx, cb) = quantized(&mut rng, 4, 0.5, k, n);
+    let bias = randn(&mut rng, n);
+    let scale = randn(&mut rng, m * n);
+    let mut ws = Workspace::new();
+    let mut plain = vec![0.0f32; m * n];
+    lut_matmul(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut plain);
+
+    let mut got = vec![0.0f32; m * n];
+    lut_matmul(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::Bias(&bias), &mut got);
+    for i in 0..m {
+        for j in 0..n {
+            assert_eq!(got[i * n + j], plain[i * n + j] + bias[j]);
+        }
+    }
+    lut_matmul(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::BiasRelu(&bias), &mut got);
+    for i in 0..m {
+        for j in 0..n {
+            assert_eq!(got[i * n + j], (plain[i * n + j] + bias[j]).max(0.0));
+        }
+    }
+    lut_matmul(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::Scale(&scale), &mut got);
+    for e in 0..m * n {
+        assert_eq!(got[e], plain[e] * scale[e]);
+    }
+    lut_matmul(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::ReluMask(&scale), &mut got);
+    for e in 0..m * n {
+        assert_eq!(got[e], if scale[e] > 0.0 { plain[e] } else { 0.0 });
+    }
+}
+
+#[test]
+fn sparsity_edges_p0_and_p1() {
+    let mut rng = Rng::new(45);
+    let (m, k, n) = (3, 21, 8);
+    let a = randn(&mut rng, m * k);
+    let mut ws = Workspace::new();
+
+    // p = 1: every index is the zero centroid -> exactly the bias
+    let (idx1, cb) = quantized(&mut rng, 4, 1.0, k, n);
+    assert!(idx1.iter().all(|&v| v == 0));
+    let bias = randn(&mut rng, n);
+    let mut out = vec![f32::NAN; m * n];
+    lut_matmul(&mut ws, &a, &idx1, &cb, m, k, n, Epilogue::Bias(&bias), &mut out);
+    for i in 0..m {
+        for j in 0..n {
+            assert_eq!(out[i * n + j], bias[j]);
+        }
+    }
+    assert_eq!(lut_ops(&idx1, &cb, m, k, n), 0.0, "p=1 does zero arithmetic");
+
+    // p = 0: fully dense indices still conform to the envelope, and the
+    // op count stays below the dense FMA count (centroid reuse)
+    let (idx0, cb) = quantized(&mut rng, 2, 0.0, k, n);
+    let mut out = vec![f32::NAN; m * n];
+    lut_matmul(&mut ws, &a, &idx0, &cb, m, k, n, Epilogue::None, &mut out);
+    let b = dequant(&idx0, &cb, k, n);
+    assert_matmul_within_envelope(&out, &a, &b, m, k, n, "lut p=0");
+    assert!(lut_ops(&idx0, &cb, m, k, n) < ecqx::linalg::gemm_flops(m, k, n));
+}
+
+#[test]
+fn all_zero_centroid_columns_and_empty_codebook_harden() {
+    let (m, k, n) = (4, 9, 5);
+    let mut rng = Rng::new(46);
+    let a = randn(&mut rng, m * k);
+    let cb = [0.0f32, 0.5, -0.5];
+    // columns 1 and 3 are entirely zero-centroid; the rest mixed
+    let idx: Vec<i32> = (0..k * n)
+        .map(|e| {
+            let j = e % n;
+            if j == 1 || j == 3 { 0 } else { (e % 3) as i32 }
+        })
+        .collect();
+    let mut ws = Workspace::new();
+    let mut out = vec![f32::NAN; m * n];
+    lut_matmul(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut out);
+    for i in 0..m {
+        assert_eq!(out[i * n + 1], 0.0);
+        assert_eq!(out[i * n + 3], 0.0);
+    }
+    let b = dequant(&idx, &cb, k, n);
+    assert_matmul_within_envelope(&out, &a, &b, m, k, n, "zero columns");
+
+    // empty codebook: epilogue of zero through every entry point,
+    // matching pack_b_gather's zero-fill hardening
+    let bias = randn(&mut rng, n);
+    let mut out = vec![f32::NAN; m * n];
+    lut_gather_nn_with(FAST, &mut ws, &a, &idx, &[], m, k, n, Epilogue::Bias(&bias), &mut out);
+    for i in 0..m {
+        for j in 0..n {
+            assert_eq!(out[i * n + j], bias[j]);
+        }
+    }
+    assert_eq!(lut_ops(&idx, &[], m, k, n), 0.0);
+}
+
+#[test]
+fn oversized_codebooks_reroute_to_gather_in_both_tiers() {
+    let (m, k, n) = (3, 8, 4);
+    let mut rng = Rng::new(47);
+    let a = randn(&mut rng, m * k);
+    let cb: Vec<f32> = (0..MAX_LUT_CENTROIDS + 3).map(|s| s as f32 * 0.125).collect();
+    let idx: Vec<i32> = (0..k * n).map(|e| (e % cb.len()) as i32).collect();
+    let mut ws = Workspace::new();
+    for opts in [DET, FAST] {
+        let (mut got, mut want) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        lut_gather_nn_with(opts, &mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut got);
+        gemm_gather_nn_with(opts, &mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut want);
+        assert_eq!(got, want, "wide codebook must be gather's exact bits ({opts:?})");
+    }
+}
+
+#[test]
+fn workspace_reuse_is_history_independent() {
+    // A workspace that just packed a big panel must produce the same bits
+    // for a small one: index_panels hands back truncated slices, and the
+    // CSR pack overwrites every entry it reads.
+    let mut rng = Rng::new(48);
+    let mut ws = Workspace::new();
+    let (idx_big, cb_big) = quantized(&mut rng, 5, 0.3, 64, 48);
+    let a_big = randn(&mut rng, 8 * 64);
+    let mut sink = vec![0.0f32; 8 * 48];
+    lut_matmul(&mut ws, &a_big, &idx_big, &cb_big, 8, 64, 48, Epilogue::None, &mut sink);
+
+    let (m, k, n) = (2, 5, 3);
+    let a = randn(&mut rng, m * k);
+    let (idx, cb) = quantized(&mut rng, 2, 0.4, k, n);
+    let (mut warm, mut cold) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+    lut_matmul(&mut ws, &a, &idx, &cb, m, k, n, Epilogue::None, &mut warm);
+    lut_matmul(&mut Workspace::new(), &a, &idx, &cb, m, k, n, Epilogue::None, &mut cold);
+    assert_eq!(warm, cold);
+}

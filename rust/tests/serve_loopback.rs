@@ -1,0 +1,152 @@
+//! Integration tests for `ecqx serve` (DESIGN.md §2.7): a real loopback
+//! HTTP server over the host backend, driven concurrently from scratch
+//! with `std::net` clients.
+//!
+//! The load-bearing assertion is **batch-order independence**: concurrent
+//! requests for the same working point — whatever mix of other requests
+//! shares their microbatch — must return byte-identical bodies, and those
+//! bodies must embed the exact CSV row the offline sweep path
+//! (`SweepRunner::run_trial_spec`) produces for that point. The server
+//! additionally self-checks purity per request (batched accuracy ==
+//! build-time accuracy ⇒ anything else is a 500), so a 200 here is
+//! already a strong claim.
+
+use ecqx::coordinator::binder::ParamSource;
+use ecqx::coordinator::campaign::TrialSpec;
+use ecqx::coordinator::serve::{http_get, ServeOptions, Server};
+use ecqx::coordinator::sweep::{SweepConfig, SweepRunner};
+use ecqx::coordinator::trainer::{evaluate, Pretrainer};
+use ecqx::coordinator::{AssignConfig, Method, QatConfig};
+use ecqx::data::gsc::GscDataset;
+use ecqx::data::DataLoader;
+use ecqx::nn::ModelState;
+use ecqx::runtime::{Engine, Manifest};
+
+fn tiny_cfg() -> SweepConfig {
+    SweepConfig {
+        model: "mlp_tiny".into(),
+        method: Method::Ecqx,
+        bits: 4,
+        lambdas: vec![0.0, 0.5],
+        p: 0.3,
+        qat: QatConfig {
+            assign: AssignConfig::default(),
+            epochs: 1,
+            lr: 4e-4,
+            lrp_warmup: 4,
+            verbose: false,
+            ..Default::default()
+        },
+        baseline_acc: 0.0,
+        seed: 17,
+    }
+}
+
+/// Routing + shutdown protocol, without ever building a model: bind on an
+/// ephemeral port, check /healthz and 404, then /shutdown must both
+/// answer 200 and make `run()` return.
+#[test]
+fn routes_health_unknown_and_shutdown() {
+    let engine = Engine::host_with(Manifest::synthetic_mlp("mlp_tiny", &[360, 32, 12], 32));
+    let spec = engine.manifest.model("mlp_tiny").unwrap().clone();
+    let train = GscDataset::new(64, 5, true);
+    let val = GscDataset::new(32, 5, false);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 5);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 5);
+    let runner = SweepRunner::new(&engine, ModelState::init(&spec, 5));
+    let opts = ServeOptions { port: 0, jobs: 1, max_batch: 2, verbose: false };
+    let server = Server::bind(&runner, tiny_cfg(), &train_dl, &val_dl, opts).unwrap();
+    let addr = server.local_addr();
+    assert_eq!(addr.ip().to_string(), "127.0.0.1");
+    assert_ne!(addr.port(), 0, "--port=0 must resolve to a real ephemeral port");
+
+    std::thread::scope(|scope| {
+        let srv = scope.spawn(|| server.run());
+        let (code, body) = http_get(addr, "/healthz").unwrap();
+        assert_eq!((code, body.as_str()), (200, "ok\n"));
+        let (code, _) = http_get(addr, "/no/such/route").unwrap();
+        assert_eq!(code, 404);
+        // bad query parameters are a clean 500, not a hang or a panic
+        let (code, body) = http_get(addr, "/eval?bits=four").unwrap();
+        assert_eq!(code, 500, "{body}");
+        let (code, body) = http_get(addr, "/eval?method=madeup").unwrap();
+        assert_eq!(code, 500, "{body}");
+        let (code, body) = http_get(addr, "/shutdown").unwrap();
+        assert_eq!((code, body.as_str()), (200, "shutting down\n"));
+        srv.join().expect("server thread panicked").unwrap();
+    });
+}
+
+/// The end-to-end gate: concurrent /eval requests across two working
+/// points, batched together by the server, must (a) all succeed, (b) be
+/// byte-identical per point, and (c) carry the exact sweep CSV row for
+/// their point.
+#[test]
+fn concurrent_eval_matches_offline_sweep_rows() {
+    let engine = Engine::host_with(Manifest::synthetic_mlp("mlp_tiny", &[360, 32, 12], 32));
+    let spec = engine.manifest.model("mlp_tiny").unwrap().clone();
+    let train = GscDataset::new(256, 5, true);
+    let val = GscDataset::new(128, 5, false);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 5);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 5);
+
+    let mut state = ModelState::init(&spec, 5);
+    let pre = Pretrainer { lr: 1e-3, verbose: false, ..Default::default() };
+    pre.run(&engine, &mut state, &train_dl, 2).unwrap();
+    let baseline = evaluate(&engine, &state, &val_dl, ParamSource::Fp).unwrap();
+
+    let runner = SweepRunner::new(&engine, state);
+    let mut cfg = tiny_cfg();
+    cfg.baseline_acc = baseline.accuracy;
+
+    // offline oracle rows through the exact function sweep trials run
+    let oracle = |lambda: f32| {
+        let trial = TrialSpec { id: 0, method: Method::Ecqx, bits: 4, lambda, p: 0.3 };
+        let (wp, _) = runner.run_trial_spec(&cfg, &trial, &train_dl, &val_dl).unwrap();
+        wp.to_csv()
+    };
+    let (row_a, row_b) = (oracle(0.5), oracle(0.0));
+
+    let opts = ServeOptions { port: 0, jobs: 2, max_batch: 4, verbose: false };
+    let server = Server::bind(&runner, cfg.clone(), &train_dl, &val_dl, opts).unwrap();
+    let addr = server.local_addr();
+
+    std::thread::scope(|scope| {
+        let srv = scope.spawn(|| server.run());
+        // 3 clients on point A + 2 on point B fire at once, so the
+        // batcher mixes the two points (and repeat requests) freely
+        let paths = [
+            "/eval?lambda=0.5",
+            "/eval?lambda=0.5",
+            "/eval?method=ecqx&bits=4&lambda=0.5&p=0.3",
+            "/eval?lambda=0",
+            "/eval?lambda=0",
+        ];
+        let handles: Vec<_> = paths
+            .iter()
+            .map(|p| scope.spawn(move || http_get(addr, p).unwrap()))
+            .collect();
+        let bodies: Vec<(u16, String)> =
+            handles.into_iter().map(|h| h.join().expect("client panicked")).collect();
+        for (code, body) in &bodies {
+            assert_eq!(*code, 200, "{body}");
+        }
+        // batch-order independence: same point -> byte-identical body,
+        // however the microbatches happened to be composed
+        assert_eq!(bodies[0].1, bodies[1].1);
+        assert_eq!(bodies[0].1, bodies[2].1, "explicit params must hit the same cache key");
+        assert_eq!(bodies[3].1, bodies[4].1);
+        assert_ne!(bodies[0].1, bodies[3].1, "distinct points must differ");
+        // served rows are byte-equal to the offline sweep rows
+        assert!(bodies[0].1.contains(&row_a), "served {} missing row {row_a}", bodies[0].1);
+        assert!(bodies[3].1.contains(&row_b), "served {} missing row {row_b}", bodies[3].1);
+
+        // a second wave hits the warm cache and must reproduce wave one
+        let (code, body) = http_get(addr, "/eval?lambda=0.5").unwrap();
+        assert_eq!((code, body), (200, bodies[0].1.clone()));
+
+        let (code, _) = http_get(addr, "/shutdown").unwrap();
+        assert_eq!(code, 200);
+        srv.join().expect("server thread panicked").unwrap();
+    });
+}
