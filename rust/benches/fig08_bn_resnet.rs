@@ -8,18 +8,19 @@ mod sweep_common;
 use ecqx::bench::figure_header;
 use ecqx::coordinator::Method;
 use ecqx::exp;
-use sweep_common::{run_trials, Trial};
+use sweep_common::{run_trials, smoke_scaled, Trial};
 
 fn main() -> anyhow::Result<()> {
     figure_header("Fig.8", "ECQ vs ECQx on BatchNorm architectures, 4 bit");
     let engine = exp::engine()?;
+    let (vgg_bn, resnet) = (smoke_scaled(&exp::VGG_CIFAR_BN), smoke_scaled(&exp::RESNET_VOC));
     for method in [Method::Ecq, Method::Ecqx] {
         let trials = vec![Trial { method, bits: 4, lambda: 8.0, p: 0.15 }];
-        run_trials(&engine, &exp::VGG_CIFAR_BN, "fig8-vgg_bn", &trials, 1)?;
+        run_trials(&engine, &vgg_bn, "fig8-vgg_bn", &trials, 1)?;
     }
     for method in [Method::Ecq, Method::Ecqx] {
         let trials = vec![Trial { method, bits: 4, lambda: 8.0, p: 0.15 }];
-        run_trials(&engine, &exp::RESNET_VOC, "fig8-resnet", &trials, 1)?;
+        run_trials(&engine, &resnet, "fig8-resnet", &trials, 1)?;
     }
     Ok(())
 }

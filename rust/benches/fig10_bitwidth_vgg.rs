@@ -7,14 +7,15 @@ mod sweep_common;
 use ecqx::bench::figure_header;
 use ecqx::coordinator::Method;
 use ecqx::exp;
-use sweep_common::{run_trials, Trial};
+use sweep_common::{run_trials, smoke_scaled, Trial};
 
 fn main() -> anyhow::Result<()> {
     figure_header("Fig.10", "VGG: accuracy vs memory footprint, 2-5 bit ECQx");
     let engine = exp::engine()?;
+    let vgg = smoke_scaled(&exp::VGG_CIFAR);
     for bits in 2..=5u32 {
         let trials = vec![Trial { method: Method::Ecqx, bits, lambda: 8.0, p: 0.15 }];
-        run_trials(&engine, &exp::VGG_CIFAR, &format!("fig10-bw{bits}"), &trials, 1)?;
+        run_trials(&engine, &vgg, &format!("fig10-bw{bits}"), &trials, 1)?;
     }
     Ok(())
 }

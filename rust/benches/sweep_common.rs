@@ -24,6 +24,20 @@ pub struct Trial {
     pub p: f64,
 }
 
+/// `$ECQX_BENCH_SMOKE=1` shrinks a model's dataset/pretraining scale so
+/// the figure benches still emit their row contract inside CI's
+/// bench-smoke budget (same convention as `perf_micro`). The pretrained
+/// cache key includes `train_n`/epochs, so smoke baselines never pass
+/// for full-scale ones.
+#[allow(dead_code)]
+pub fn smoke_scaled(model: &exp::ModelExp) -> exp::ModelExp {
+    if std::env::var("ECQX_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false) {
+        exp::ModelExp { train_n: 256, val_n: 128, pretrain_epochs: 1, ..*model }
+    } else {
+        *model
+    }
+}
+
 /// Run a set of trials on one model serially, printing a row per working
 /// point (the classic figure-bench driver).
 #[allow(dead_code)]

@@ -570,7 +570,14 @@ pub fn run_bench(
     })?;
     let wall_s = wall.elapsed_s();
     let mut all: Vec<f64> = lat.into_iter().flatten().collect();
-    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if all.is_empty() {
+        // per_client = 0: percentiles and req/s would be meaningless
+        // (and a later unwrap-happy consumer could divide by zero)
+        bail!("bench completed zero requests ({} clients x {per_client} each)", clients.max(1));
+    }
+    // total_cmp, not partial_cmp().unwrap(): a NaN latency (however a
+    // timer misbehaves) must not panic mid-bench
+    all.sort_by(f64::total_cmp);
     let requests = all.len();
     Ok(BenchSummary {
         clients: clients.max(1),

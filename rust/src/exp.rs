@@ -154,15 +154,19 @@ pub const RESNET_VOC: ModelExp = ModelExp {
     qat_lr: 1e-4,
 };
 
+/// Every experiment this binary accepts — the accept/refuse contract:
+/// each of these names must run end-to-end on the host backend
+/// (`tests/integration_runtime.rs` drives a one-step trial per entry),
+/// and [`model_exp`] must refuse everything else.
+pub const ALL_MODELS: [ModelExp; 5] = [MLP_GSC, CNN_CIFAR, VGG_CIFAR, VGG_CIFAR_BN, RESNET_VOC];
+
 pub fn model_exp(name: &str) -> Result<ModelExp> {
-    Ok(match name {
-        "mlp_gsc" => MLP_GSC,
-        "cnn_cifar" => CNN_CIFAR,
-        "vgg_cifar" => VGG_CIFAR,
-        "vgg_cifar_bn" => VGG_CIFAR_BN,
-        "resnet_voc" => RESNET_VOC,
-        other => anyhow::bail!("unknown model {other}"),
-    })
+    for m in ALL_MODELS {
+        if m.name == name {
+            return Ok(m);
+        }
+    }
+    anyhow::bail!("unknown model {name}")
 }
 
 /// Boxed dataset pair (train, val) for a model.

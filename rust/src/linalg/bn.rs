@@ -1,0 +1,258 @@
+//! BatchNorm kernels for the host CNN ladder: train-mode forward/backward
+//! over channels-last rows, inference-mode affine application, the
+//! fold-into-conv transform for FP eval, and the running-stat EMA
+//! (DESIGN.md §2.8).
+//!
+//! All tensors are channels-last: a conv output `[n, oh, ow, co]` is
+//! treated as `rows = n·oh·ow` rows of `c = co` channels, which is
+//! exactly the im2col GEMM's row-major output layout — BN slots between
+//! the conv GEMM and the ReLU with no data movement.
+//!
+//! Determinism: every per-channel reduction walks rows in ascending order
+//! into an f64 accumulator (scalar loops, no vector variant), so the
+//! kernels are bitwise run-to-run stable and land in the deterministic
+//! tier unchanged. [`crate::linalg::reference::bn_fold_naive`] keeps an
+//! independently-written fold oracle for the bitwise property suite.
+
+/// BatchNorm variance stabilizer (torch's `BatchNorm2d` default).
+pub const BN_EPS: f32 = 1e-5;
+
+/// Fold inference-mode BN into the preceding conv's weights and bias:
+/// with `s = γ/√(σ²+ε)`, `w'[...,co] = w[...,co]·s[co]` and
+/// `b' = (b − μ)·s + β`, so `bn(conv(x, w) + b) == conv(x, w') + b'`
+/// exactly in real arithmetic (the equivalence suite bounds the f32
+/// rounding difference). `w` is HWIO with `co` innermost.
+pub fn bn_fold(
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+    w: &[f32],
+    b: &[f32],
+    wf: &mut [f32],
+    bf: &mut [f32],
+) {
+    let c = gamma.len();
+    assert!(
+        beta.len() == c && mean.len() == c && var.len() == c && b.len() == c && bf.len() == c,
+        "bn_fold channel shapes"
+    );
+    assert_eq!(w.len(), wf.len(), "bn_fold filter shape");
+    assert_eq!(w.len() % c, 0, "bn_fold filter not a multiple of co");
+    let mut s = vec![0.0f32; c];
+    for ch in 0..c {
+        s[ch] = gamma[ch] / (var[ch] + eps).sqrt();
+        bf[ch] = (b[ch] - mean[ch]) * s[ch] + beta[ch];
+    }
+    for (wo, (wi, &sc)) in wf.iter_mut().zip(w.iter().zip(s.iter().cycle())) {
+        *wo = wi * sc;
+    }
+}
+
+/// Inference-mode BN as a per-channel affine over `[rows, c]` (the
+/// quantized-eval path, where the per-channel fold scale cannot enter a
+/// shared codebook): `z ← (z − μ)·γ/√(σ²+ε) + β`.
+pub fn bn_infer(gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32], eps: f32, z: &mut [f32]) {
+    let c = gamma.len();
+    assert!(beta.len() == c && mean.len() == c && var.len() == c, "bn_infer channel shapes");
+    assert_eq!(z.len() % c, 0, "bn_infer rows not a multiple of c");
+    let mut s = vec![0.0f32; c];
+    let mut t = vec![0.0f32; c];
+    for ch in 0..c {
+        s[ch] = gamma[ch] / (var[ch] + eps).sqrt();
+        t[ch] = beta[ch] - mean[ch] * s[ch];
+    }
+    for row in z.chunks_exact_mut(c) {
+        for (v, (&sc, &tc)) in row.iter_mut().zip(s.iter().zip(&t)) {
+            *v = *v * sc + tc;
+        }
+    }
+}
+
+/// Train-mode BN forward over `[rows, c]`: biased batch statistics
+/// (`var = Σ(z−μ)²/rows`), `y = γ·(z−μ)/√(σ²+ε) + β`. Writes the batch
+/// `mean`/`var` out for the backward pass and the running-stat EMA.
+pub fn bn_train_fwd(
+    z: &[f32],
+    c: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+    y: &mut [f32],
+    mean: &mut [f32],
+    var: &mut [f32],
+) {
+    assert!(c > 0 && z.len() % c == 0, "bn_train_fwd rows not a multiple of c");
+    assert_eq!(y.len(), z.len(), "bn_train_fwd output shape");
+    assert!(
+        gamma.len() == c && beta.len() == c && mean.len() == c && var.len() == c,
+        "bn_train_fwd channel shapes"
+    );
+    let rows = z.len() / c;
+    assert!(rows > 0, "bn_train_fwd needs at least one row");
+    let inv_n = 1.0f64 / rows as f64;
+    // two-pass, ascending rows, f64 accumulators: deterministic and stable
+    let mut acc = vec![0.0f64; c];
+    for row in z.chunks_exact(c) {
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += v as f64;
+        }
+    }
+    for (m, &a) in mean.iter_mut().zip(&acc) {
+        *m = (a * inv_n) as f32;
+    }
+    acc.fill(0.0);
+    for row in z.chunks_exact(c) {
+        for ((a, &v), &m) in acc.iter_mut().zip(row).zip(mean.iter()) {
+            let d = (v - m) as f64;
+            *a += d * d;
+        }
+    }
+    for (s, &a) in var.iter_mut().zip(&acc) {
+        *s = (a * inv_n) as f32;
+    }
+    let mut ivar = vec![0.0f32; c];
+    for (iv, &v) in ivar.iter_mut().zip(var.iter()) {
+        *iv = 1.0 / (v + eps).sqrt();
+    }
+    for (yrow, zrow) in y.chunks_exact_mut(c).zip(z.chunks_exact(c)) {
+        for ch in 0..c {
+            yrow[ch] = gamma[ch] * (zrow[ch] - mean[ch]) * ivar[ch] + beta[ch];
+        }
+    }
+}
+
+/// Train-mode BN backward over `[rows, c]` given the forward's batch
+/// `mean`/`var`: the full batch-coupled gradient (including the `Σ x̂`
+/// terms), `dγ = Σ dy·x̂`, `dβ = Σ dy`. Reductions walk rows ascending
+/// into f64 accumulators, matching the forward's determinism.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_train_bwd(
+    z: &[f32],
+    c: usize,
+    gamma: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+    dy: &[f32],
+    dz: &mut [f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
+    assert!(c > 0 && z.len() % c == 0, "bn_train_bwd rows not a multiple of c");
+    assert!(dy.len() == z.len() && dz.len() == z.len(), "bn_train_bwd grad shapes");
+    assert!(
+        gamma.len() == c && mean.len() == c && var.len() == c,
+        "bn_train_bwd channel shapes"
+    );
+    assert!(dgamma.len() == c && dbeta.len() == c, "bn_train_bwd dparam shapes");
+    let rows = z.len() / c;
+    let inv_n = 1.0f64 / rows as f64;
+    let mut ivar = vec![0.0f64; c];
+    for (iv, &v) in ivar.iter_mut().zip(var.iter()) {
+        *iv = 1.0 / ((v + eps) as f64).sqrt();
+    }
+    // per-channel reductions: Σdy, Σdy·x̂ (ascending rows)
+    let mut sum_dy = vec![0.0f64; c];
+    let mut sum_dy_xh = vec![0.0f64; c];
+    for (zrow, dyrow) in z.chunks_exact(c).zip(dy.chunks_exact(c)) {
+        for ch in 0..c {
+            let xh = (zrow[ch] - mean[ch]) as f64 * ivar[ch];
+            sum_dy[ch] += dyrow[ch] as f64;
+            sum_dy_xh[ch] += dyrow[ch] as f64 * xh;
+        }
+    }
+    for ch in 0..c {
+        dgamma[ch] = sum_dy_xh[ch] as f32;
+        dbeta[ch] = sum_dy[ch] as f32;
+    }
+    // dz = (γ·ivar/N) · (N·dy − Σdy − x̂·Σdy·x̂)
+    for ((zrow, dyrow), dzrow) in
+        z.chunks_exact(c).zip(dy.chunks_exact(c)).zip(dz.chunks_exact_mut(c))
+    {
+        for ch in 0..c {
+            let xh = (zrow[ch] - mean[ch]) as f64 * ivar[ch];
+            let g = gamma[ch] as f64 * ivar[ch];
+            dzrow[ch] =
+                (g * (dyrow[ch] as f64 - inv_n * (sum_dy[ch] + xh * sum_dy_xh[ch]))) as f32;
+        }
+    }
+}
+
+/// Running-stat EMA: `running ← (1−m)·running + m·batch` (torch
+/// convention — `m` weights the new batch statistic).
+pub fn ema_update(running: &mut [f32], batch: &[f32], momentum: f32) {
+    assert_eq!(running.len(), batch.len(), "ema_update shapes");
+    for (r, &b) in running.iter_mut().zip(batch) {
+        *r = (1.0 - momentum) * *r + momentum * b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwd_normalizes_each_channel() {
+        // 4 rows × 2 channels; identity affine
+        let z = [1.0, 10.0, 3.0, 30.0, 5.0, 50.0, 7.0, 70.0];
+        let (g, b) = ([1.0, 1.0], [0.0, 0.0]);
+        let mut y = [0.0; 8];
+        let (mut m, mut v) = ([0.0; 2], [0.0; 2]);
+        bn_train_fwd(&z, 2, &g, &b, 0.0, &mut y, &mut m, &mut v);
+        assert_eq!(m, [4.0, 40.0]);
+        assert_eq!(v, [5.0, 500.0]);
+        for ch in 0..2 {
+            let mean: f32 = (0..4).map(|r| y[r * 2 + ch]).sum::<f32>() / 4.0;
+            let var: f32 = (0..4).map(|r| (y[r * 2 + ch] - mean).powi(2)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-6 && (var - 1.0).abs() < 1e-5, "ch{ch}: {mean} {var}");
+        }
+    }
+
+    #[test]
+    fn bwd_is_orthogonal_to_shift_and_scale() {
+        // y is invariant under per-channel affine re-parameterizations of
+        // z, so dz must satisfy Σ_rows dz = 0 and Σ_rows dz·z = 0
+        let z = [0.3, -1.0, 1.7, 2.0, -0.4, 0.5, 2.2, -3.0];
+        let dy = [1.0, 0.2, -0.7, 0.5, 0.1, -0.2, 0.9, 1.1];
+        let gamma = [1.3, 0.7];
+        let (mut y, mut m, mut v) = ([0.0; 8], [0.0; 2], [0.0; 2]);
+        bn_train_fwd(&z, 2, &gamma, &[0.0, 0.0], BN_EPS, &mut y, &mut m, &mut v);
+        let (mut dz, mut dg, mut db) = ([0.0; 8], [0.0; 2], [0.0; 2]);
+        bn_train_bwd(&z, 2, &gamma, &m, &v, BN_EPS, &dy, &mut dz, &mut dg, &mut db);
+        for ch in 0..2 {
+            let s: f32 = (0..4).map(|r| dz[r * 2 + ch]).sum();
+            let sz: f32 = (0..4).map(|r| dz[r * 2 + ch] * z[r * 2 + ch]).sum();
+            assert!(s.abs() < 1e-5, "Σdz ch{ch} = {s}");
+            assert!(sz.abs() < 1e-4, "Σdz·z ch{ch} = {sz}");
+        }
+        assert!((db[0] - 1.0).abs() < 1e-6 && (db[1] - 1.6).abs() < 1e-6, "dβ = Σdy");
+    }
+
+    #[test]
+    fn fold_matches_affine_composition() {
+        let (gamma, beta) = ([2.0f32, 0.5], [0.1f32, -0.3]);
+        let (mean, var) = ([1.0f32, -2.0], [4.0f32, 0.25]);
+        let w = [0.5, -1.0, 2.0, 0.0, 1.5, -0.5, 0.25, 1.0]; // 4 taps × 2 co
+        let b = [0.2f32, -0.1];
+        let (mut wf, mut bf) = ([0.0; 8], [0.0; 2]);
+        bn_fold(&gamma, &beta, &mean, &var, 0.0, &w, &b, &mut wf, &mut bf);
+        let s = [gamma[0] / var[0].sqrt(), gamma[1] / var[1].sqrt()];
+        for (i, &v) in wf.iter().enumerate() {
+            assert_eq!(v, w[i] * s[i % 2]);
+        }
+        assert_eq!(bf[0], (b[0] - mean[0]) * s[0] + beta[0]);
+        // bn_infer over a 1-tap "conv output" agrees with the folded bias
+        let mut z = vec![b[0], b[1]];
+        bn_infer(&gamma, &beta, &mean, &var, 0.0, &mut z);
+        assert!((z[0] - bf[0]).abs() < 1e-6 && (z[1] - bf[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_moves_toward_batch() {
+        let mut r = [0.0f32, 10.0];
+        ema_update(&mut r, &[1.0, 0.0], 0.1);
+        assert_eq!(r, [0.1, 9.0]);
+    }
+}

@@ -1,0 +1,218 @@
+//! The paper's α-β conv LRP rule (α=2, β=−1), composed from the im2col
+//! conv kernels (DESIGN.md §2.8).
+//!
+//! Per conv layer with input activations `a` and HWIO filter `w`, split
+//! both operands by sign (`a = a⁺ + a⁻`, `w = w⁺ + w⁻`) and form the
+//! signed pre-activation parts
+//!
+//! ```text
+//! z⁺ = conv(a⁺, w⁺) + conv(a⁻, w⁻)      (every positive product)
+//! z⁻ = conv(a⁺, w⁻) + conv(a⁻, w⁺)      (every negative product)
+//! ```
+//!
+//! then with `s⁺ = α·R/stab(z⁺)` and `s⁻ = β·R/stab(z⁻)`:
+//!
+//! ```text
+//! R_in = a⁺ ⊙ (bwdᵢ(s⁺,w⁺) + bwdᵢ(s⁻,w⁻)) + a⁻ ⊙ (bwdᵢ(s⁺,w⁻) + bwdᵢ(s⁻,w⁺))
+//! R_w  = w⁺ ⊙ (Pᵀ(a⁺)s⁺ + Pᵀ(a⁻)s⁻)     + w⁻ ⊙ (Pᵀ(a⁺)s⁻ + Pᵀ(a⁻)s⁺)
+//! ```
+//!
+//! where `bwdᵢ` is the conv input-VJP (`conv2d_bwd_input`) and `Pᵀ(·)` the
+//! transposed-patch filter-VJP (`conv2d_bwd_filter`) — eight conv-shaped
+//! VJPs per layer versus the epsilon rule's two. Both views of one layer
+//! sum the same product terms, so `Σ R_in = Σ R_w`, and because
+//! `z⁺ + z⁻ = z` and `α + β = 1`, each output's redistributed total is
+//! `R_j·(α·z⁺/stab(z⁺) + β·z⁻/stab(z⁻)) ≈ R_j` — conservation holds up to
+//! the stabilizer, mirroring the epsilon suite
+//! (`tests/conv_props.rs::alpha_beta_*`).
+//!
+//! Bias is deliberately left out of the splits: relevance attaches to
+//! weighted input contributions only (the common LRP convention), and the
+//! conservation statement above is exact for it. Determinism: the
+//! composition only calls the tier-dispatched conv kernels plus fixed
+//! elementwise loops, so the deterministic tier stays bitwise
+//! reproducible with no new kernel surface.
+
+use super::gemm::Epilogue;
+use super::im2col::{conv2d_bwd_filter_with, conv2d_bwd_input_with, conv2d_with, Conv2d};
+use super::simd::GemmOpts;
+use super::workspace::Workspace;
+
+/// The paper's α (Sec. 4.1: α=2, β=−1, α+β=1).
+pub const LRP_ALPHA: f32 = 2.0;
+/// The paper's β.
+pub const LRP_BETA: f32 = -1.0;
+
+/// Epsilon-rule stabilizer `z + eps·sign(z)` with `sign(0) := 1`
+/// (paper Sec. 4.1; the single definition shared by the dense epsilon
+/// ladder, the avg-pool LRP redistribution and the α-β rule).
+pub fn stabilize(z: f32) -> f32 {
+    const EPS: f32 = 1e-6;
+    if z >= 0.0 {
+        z + EPS
+    } else {
+        z - EPS
+    }
+}
+
+fn split_signs(v: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let pos: Vec<f32> = v.iter().map(|&x| if x > 0.0 { x } else { 0.0 }).collect();
+    let neg: Vec<f32> = v.iter().map(|&x| if x < 0.0 { x } else { 0.0 }).collect();
+    (pos, neg)
+}
+
+/// α-β conv LRP with explicit execution options: per-weight relevance
+/// into `r_w` (HWIO, like the filter) and per-input relevance into
+/// `r_in`. `r` is the layer-output relevance `[n·oh·ow, co]` row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn lrp_conv_ab_with(
+    opts: GemmOpts,
+    ws: &mut Workspace,
+    a: &[f32],
+    w: &[f32],
+    r: &[f32],
+    g: &Conv2d,
+    alpha: f32,
+    beta: f32,
+    r_w: &mut [f32],
+    r_in: &mut [f32],
+) {
+    assert_eq!(a.len(), g.in_len(), "lrp_conv_ab input shape");
+    assert_eq!(w.len(), g.filter_len(), "lrp_conv_ab filter shape");
+    assert_eq!(r.len(), g.out_len(), "lrp_conv_ab relevance shape");
+    assert_eq!(r_w.len(), g.filter_len(), "lrp_conv_ab r_w shape");
+    assert_eq!(r_in.len(), g.in_len(), "lrp_conv_ab r_in shape");
+    let (ap, an) = split_signs(a);
+    let (wp, wn) = split_signs(w);
+
+    // signed pre-activation parts, then the scaled relevances in place
+    let mut sp = vec![0.0f32; g.out_len()];
+    let mut sn = vec![0.0f32; g.out_len()];
+    let mut tmp = vec![0.0f32; g.out_len()];
+    conv2d_with(opts, ws, &ap, &wp, g, Epilogue::None, &mut sp);
+    conv2d_with(opts, ws, &an, &wn, g, Epilogue::None, &mut tmp);
+    for (z, &t) in sp.iter_mut().zip(&tmp) {
+        *z += t;
+    }
+    conv2d_with(opts, ws, &ap, &wn, g, Epilogue::None, &mut sn);
+    conv2d_with(opts, ws, &an, &wp, g, Epilogue::None, &mut tmp);
+    for (z, &t) in sn.iter_mut().zip(&tmp) {
+        *z += t;
+    }
+    for j in 0..r.len() {
+        sp[j] = alpha * r[j] / stabilize(sp[j]);
+        sn[j] = beta * r[j] / stabilize(sn[j]);
+    }
+
+    // R_in: two VJP pairs, gated by the input sign masks
+    let mut t1 = vec![0.0f32; g.in_len()];
+    let mut t2 = vec![0.0f32; g.in_len()];
+    conv2d_bwd_input_with(opts, ws, &sp, &wp, g, &mut t1);
+    conv2d_bwd_input_with(opts, ws, &sn, &wn, g, &mut t2);
+    for i in 0..r_in.len() {
+        r_in[i] = ap[i] * (t1[i] + t2[i]);
+    }
+    conv2d_bwd_input_with(opts, ws, &sp, &wn, g, &mut t1);
+    conv2d_bwd_input_with(opts, ws, &sn, &wp, g, &mut t2);
+    for i in 0..r_in.len() {
+        r_in[i] += an[i] * (t1[i] + t2[i]);
+    }
+
+    // R_w: two transposed-patch pairs, gated by the weight sign masks
+    let mut f1 = vec![0.0f32; g.filter_len()];
+    let mut f2 = vec![0.0f32; g.filter_len()];
+    conv2d_bwd_filter_with(opts, ws, &ap, &sp, g, Epilogue::None, &mut f1);
+    conv2d_bwd_filter_with(opts, ws, &an, &sn, g, Epilogue::None, &mut f2);
+    for i in 0..r_w.len() {
+        r_w[i] = wp[i] * (f1[i] + f2[i]);
+    }
+    conv2d_bwd_filter_with(opts, ws, &ap, &sn, g, Epilogue::None, &mut f1);
+    conv2d_bwd_filter_with(opts, ws, &an, &sp, g, Epilogue::None, &mut f2);
+    for i in 0..r_w.len() {
+        r_w[i] += wn[i] * (f1[i] + f2[i]);
+    }
+}
+
+/// [`lrp_conv_ab_with`] under the process-wide execution mode.
+#[allow(clippy::too_many_arguments)]
+pub fn lrp_conv_ab(
+    ws: &mut Workspace,
+    a: &[f32],
+    w: &[f32],
+    r: &[f32],
+    g: &Conv2d,
+    alpha: f32,
+    beta: f32,
+    r_w: &mut [f32],
+    r_in: &mut [f32],
+) {
+    lrp_conv_ab_with(GemmOpts::dispatch(), ws, a, w, r, g, alpha, beta, r_w, r_in);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::im2col::Pad;
+    use super::*;
+
+    #[test]
+    fn positive_only_operands_reduce_to_the_z_plus_rule() {
+        // all-positive a and w: z⁻ = 0, so R_in = α·a⊙bwdᵢ(R/stab(z),w)
+        // (β's share hits the stabilizer alone and vanishes)
+        let g = Conv2d { n: 1, h: 2, w: 2, c: 1, kh: 1, kw: 1, co: 1, stride: 1, pad: Pad::Valid };
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let w = [0.5];
+        let r = [1.0, 1.0, 1.0, 1.0];
+        let mut ws = Workspace::new();
+        let (mut rw, mut rin) = ([0.0; 1], [0.0; 4]);
+        lrp_conv_ab_with(
+            GemmOpts::deterministic(),
+            &mut ws,
+            &a,
+            &w,
+            &r,
+            &g,
+            LRP_ALPHA,
+            LRP_BETA,
+            &mut rw,
+            &mut rin,
+        );
+        // each 1×1 window: R_in = a·w⁺·s⁺ = a·0.5·α/stab(0.5·a) ≈ α = 2;
+        // the β share routes through w⁻ = 0 and vanishes, so the totals
+        // are α·ΣR = 8 for both the R_in and R_w views (z⁻ = 0 is the
+        // stabilizer-dominated case the conservation test excludes)
+        for &v in &rin {
+            assert!((v - 2.0).abs() < 1e-3, "{rin:?}");
+        }
+        let total: f32 = rw.iter().sum();
+        assert!((total - 8.0).abs() < 1e-2, "R_w total {total}");
+    }
+
+    #[test]
+    fn rw_and_rin_views_sum_identically() {
+        let g = Conv2d { n: 1, h: 3, w: 3, c: 2, kh: 2, kw: 2, co: 2, stride: 1, pad: Pad::Valid };
+        let a: Vec<f32> = (0..g.in_len()).map(|i| ((i * 7 % 11) as f32 - 5.0) * 0.3).collect();
+        let w: Vec<f32> = (0..g.filter_len()).map(|i| ((i * 5 % 13) as f32 - 6.0) * 0.2).collect();
+        let r: Vec<f32> = (0..g.out_len()).map(|i| (i as f32 - 3.0) * 0.5).collect();
+        let mut ws = Workspace::new();
+        let mut rw = vec![0.0; g.filter_len()];
+        let mut rin = vec![0.0; g.in_len()];
+        lrp_conv_ab_with(
+            GemmOpts::deterministic(),
+            &mut ws,
+            &a,
+            &w,
+            &r,
+            &g,
+            LRP_ALPHA,
+            LRP_BETA,
+            &mut rw,
+            &mut rin,
+        );
+        let sw: f32 = rw.iter().sum();
+        let si: f32 = rin.iter().sum();
+        assert!(
+            (sw - si).abs() < 1e-3 * (1.0 + sw.abs()),
+            "both views sum the same products: {sw} vs {si}"
+        );
+    }
+}

@@ -28,6 +28,14 @@
 //! * [`im2col`] — NHWC conv2d lowered onto the same core: virtual patch
 //!   operands packed straight into A panels (forward / dW / LRP), the
 //!   tiled col2im backward, and the codebook-gather conv
+//! * [`pool`] — NHWC max/avg pooling (fwd / bwd / LRP routing: WTA for
+//!   max, stabilized proportional for avg) as fixed-order scalar loops —
+//!   deterministic-tier by construction
+//! * [`bn`] — BatchNorm train fwd/bwd over channels-last rows, the
+//!   inference affine, the fold-into-conv transform and the running-stat
+//!   EMA (DESIGN.md §2.8)
+//! * [`lrp_ab`] — the paper's α-β conv LRP rule (α=2, β=−1) composed
+//!   from eight im2col VJPs with sign-split operands
 //! * [`lut`] — the sparse low-bit LUT matmul: CSR index panels that
 //!   structurally skip the zero centroid, per-centroid partial-sum
 //!   accumulation, and the tier dispatch that keeps the gather-GEMM as
@@ -55,11 +63,14 @@
 //! inequality with scalar is inherent to FMA's single rounding) and is
 //! held to the [`conformance`] envelope instead.
 
+pub mod bn;
 pub mod conformance;
 pub mod gemm;
 pub mod im2col;
+pub mod lrp_ab;
 pub mod lut;
 pub mod pack;
+pub mod pool;
 pub mod reference;
 pub mod simd;
 pub mod workspace;
@@ -73,7 +84,12 @@ pub use im2col::{
     conv2d_flops, conv2d_gather, conv2d_gather_with, conv2d_with, lrp_conv_rw, lrp_conv_rw_with,
     Conv2d, Pad,
 };
+pub use bn::{bn_fold, bn_infer, bn_train_bwd, bn_train_fwd, ema_update, BN_EPS};
+pub use lrp_ab::{lrp_conv_ab, lrp_conv_ab_with, stabilize, LRP_ALPHA, LRP_BETA};
 pub use lut::{lut_gather_nn, lut_gather_nn_with, lut_matmul, lut_ops, MAX_LUT_CENTROIDS};
+pub use pool::{
+    avgpool2d, avgpool2d_bwd, avgpool2d_lrp, maxpool2d, maxpool2d_bwd, Pool2d, PoolOp,
+};
 pub use pack::View;
 pub use simd::{deterministic_mode, set_deterministic, GemmOpts, Kernel};
 pub use workspace::{with_thread_workspace, Workspace};

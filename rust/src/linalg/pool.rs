@@ -1,0 +1,255 @@
+//! NHWC max/average pooling: forward, backward, and the LRP
+//! redistribution rules the host CNN ladder composes (DESIGN.md §2.8).
+//!
+//! Pooling windows are VALID-style (`out = (in - k)/stride + 1`, windows
+//! never read outside the image), which covers every token the manifest
+//! `conv_pool` attr can carry: `max2`/`avg2` (2×2, stride 2) and `gap`
+//! (global average = a full-image window). The kernels are plain scalar
+//! loops with a fixed ascending accumulation/scan order and first-index
+//! tie-breaking for max, so they sit in the deterministic tier by
+//! construction — there is no vectorized variant to hold to an envelope.
+//! [`crate::linalg::reference`] keeps independently-written oracles
+//! (`maxpool2d_naive`, `avgpool2d_naive`) that the property suite
+//! compares bitwise.
+
+/// Pooling reduction applied over each window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolOp {
+    /// window max, winner-takes-all backward/LRP routing
+    Max,
+    /// window mean, uniform backward, proportional (stabilized) LRP
+    Avg,
+}
+
+/// Pooling geometry over an NHWC `[n, h, w, c]` input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pool2d {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// window height (VALID: `kh <= h`)
+    pub kh: usize,
+    /// window width (VALID: `kw <= w`)
+    pub kw: usize,
+    pub stride: usize,
+    pub op: PoolOp,
+}
+
+impl Pool2d {
+    /// Output spatial dims (VALID windows: `(in - k)/stride + 1`).
+    pub fn out_hw(&self) -> (usize, usize) {
+        assert!(self.kh <= self.h && self.kw <= self.w, "pool window exceeds image");
+        assert!(self.stride > 0, "pool stride 0");
+        ((self.h - self.kh) / self.stride + 1, (self.w - self.kw) / self.stride + 1)
+    }
+
+    /// Input element count `n*h*w*c`.
+    pub fn in_len(&self) -> usize {
+        self.n * self.h * self.w * self.c
+    }
+
+    /// Output element count.
+    pub fn out_len(&self) -> usize {
+        let (oh, ow) = self.out_hw();
+        self.n * oh * ow * self.c
+    }
+}
+
+/// Iterate output positions in row-major NHWC order, handing each
+/// `(flat output index, window top-left flat input offset of channel ch)`
+/// to `f` — the single definition of the window walk shared by every
+/// kernel here, which is what keeps forward, backward and LRP scatter
+/// orders identical (and therefore deterministic).
+fn for_each_window(g: &Pool2d, mut f: impl FnMut(usize, usize, usize)) {
+    let (oh, ow) = g.out_hw();
+    let mut j = 0usize;
+    for b in 0..g.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..g.c {
+                    let base = ((b * g.h + oy * g.stride) * g.w + ox * g.stride) * g.c + ch;
+                    f(j, base, ch);
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Max-pool forward. `argmax[j]` records the flat input index of the
+/// winning tap for output `j` (first window index wins ties — the scan is
+/// ascending `(ph, pw)`), giving the backward/LRP passes an O(1) scatter.
+pub fn maxpool2d(g: &Pool2d, x: &[f32], argmax: &mut [usize], out: &mut [f32]) {
+    assert_eq!(x.len(), g.in_len(), "maxpool2d input shape");
+    assert_eq!(out.len(), g.out_len(), "maxpool2d output shape");
+    assert_eq!(argmax.len(), out.len(), "maxpool2d argmax shape");
+    assert_eq!(g.op, PoolOp::Max, "maxpool2d on non-max geometry");
+    for_each_window(g, |j, base, _ch| {
+        let mut best = x[base];
+        let mut best_i = base;
+        for ph in 0..g.kh {
+            for pw in 0..g.kw {
+                let i = base + (ph * g.w + pw) * g.c;
+                if x[i] > best {
+                    best = x[i];
+                    best_i = i;
+                }
+            }
+        }
+        out[j] = best;
+        argmax[j] = best_i;
+    });
+}
+
+/// Max-pool backward: route `dy[j]` to the recorded winner (the same
+/// winner-takes-all scatter is the max-pool LRP rule). Ascending output
+/// scan, so overlapping windows accumulate in a fixed order.
+pub fn maxpool2d_bwd(g: &Pool2d, argmax: &[usize], dy: &[f32], dx: &mut [f32]) {
+    assert_eq!(dy.len(), g.out_len(), "maxpool2d_bwd dy shape");
+    assert_eq!(dx.len(), g.in_len(), "maxpool2d_bwd dx shape");
+    assert_eq!(argmax.len(), dy.len(), "maxpool2d_bwd argmax shape");
+    dx.fill(0.0);
+    for (j, &i) in argmax.iter().enumerate() {
+        dx[i] += dy[j];
+    }
+}
+
+/// Average-pool forward: window mean (VALID windows are always fully
+/// in-image, so the divisor is the constant `kh·kw`). Taps accumulate in
+/// ascending `(ph, pw)` order.
+pub fn avgpool2d(g: &Pool2d, x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), g.in_len(), "avgpool2d input shape");
+    assert_eq!(out.len(), g.out_len(), "avgpool2d output shape");
+    assert_eq!(g.op, PoolOp::Avg, "avgpool2d on non-avg geometry");
+    let inv = 1.0f32 / (g.kh * g.kw) as f32;
+    for_each_window(g, |j, base, _ch| {
+        let mut acc = 0.0f32;
+        for ph in 0..g.kh {
+            for pw in 0..g.kw {
+                acc += x[base + (ph * g.w + pw) * g.c];
+            }
+        }
+        out[j] = acc * inv;
+    });
+}
+
+/// Average-pool backward: `dy[j]/(kh·kw)` to every tap of window `j`,
+/// ascending scatter order.
+pub fn avgpool2d_bwd(g: &Pool2d, dy: &[f32], dx: &mut [f32]) {
+    assert_eq!(dy.len(), g.out_len(), "avgpool2d_bwd dy shape");
+    assert_eq!(dx.len(), g.in_len(), "avgpool2d_bwd dx shape");
+    dx.fill(0.0);
+    let inv = 1.0f32 / (g.kh * g.kw) as f32;
+    for_each_window(g, |j, base, _ch| {
+        let d = dy[j] * inv;
+        for ph in 0..g.kh {
+            for pw in 0..g.kw {
+                dx[base + (ph * g.w + pw) * g.c] += d;
+            }
+        }
+    });
+}
+
+/// Average-pool LRP: redistribute each output's relevance over its window
+/// proportionally to the tap values — `R_i += x_i · R_j / stab(Σ window)`
+/// — the stabilized z-rule on the (unnormalized) window sum. Conserves
+/// `Σ R_in ≈ Σ R` away from stabilizer-dominated windows; on an all-ReLU
+/// ladder the taps are non-negative, so the shares lie in `[0, 1]`.
+pub fn avgpool2d_lrp(g: &Pool2d, x: &[f32], r: &[f32], rin: &mut [f32]) {
+    assert_eq!(x.len(), g.in_len(), "avgpool2d_lrp input shape");
+    assert_eq!(r.len(), g.out_len(), "avgpool2d_lrp relevance shape");
+    assert_eq!(rin.len(), g.in_len(), "avgpool2d_lrp rin shape");
+    rin.fill(0.0);
+    for_each_window(g, |j, base, _ch| {
+        let mut z = 0.0f32;
+        for ph in 0..g.kh {
+            for pw in 0..g.kw {
+                z += x[base + (ph * g.w + pw) * g.c];
+            }
+        }
+        let s = r[j] / super::lrp_ab::stabilize(z);
+        for ph in 0..g.kh {
+            for pw in 0..g.kw {
+                let i = base + (ph * g.w + pw) * g.c;
+                rin[i] += x[i] * s;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g2(n: usize, h: usize, w: usize, c: usize, op: PoolOp) -> Pool2d {
+        Pool2d { n, h, w, c, kh: 2, kw: 2, stride: 2, op }
+    }
+
+    #[test]
+    fn maxpool_picks_window_max_and_first_index_ties() {
+        let g = g2(1, 2, 4, 1, PoolOp::Max);
+        let x = [1.0, 3.0, 2.0, 2.0, 0.5, -1.0, 2.0, 2.0];
+        let mut out = vec![0.0; 2];
+        let mut am = vec![0usize; 2];
+        maxpool2d(&g, &x, &mut am, &mut out);
+        assert_eq!(out, vec![3.0, 2.0]);
+        assert_eq!(am[0], 1);
+        // four-way tie in the second window: the ascending scan keeps the
+        // first tap (flat index 2)
+        assert_eq!(am[1], 2);
+    }
+
+    #[test]
+    fn maxpool_bwd_routes_to_winner() {
+        let g = g2(1, 2, 2, 1, PoolOp::Max);
+        let x = [0.0, 4.0, 1.0, 2.0];
+        let (mut out, mut am) = (vec![0.0; 1], vec![0usize; 1]);
+        maxpool2d(&g, &x, &mut am, &mut out);
+        let mut dx = vec![9.0; 4];
+        maxpool2d_bwd(&g, &am, &[5.0], &mut dx);
+        assert_eq!(dx, vec![0.0, 5.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn avgpool_and_gap_mean_the_window() {
+        let g = g2(1, 2, 2, 2, PoolOp::Avg);
+        // NHWC: channel 0 = [1,2,3,4], channel 1 = [10,20,30,40]
+        let x = [1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let mut out = vec![0.0; 2];
+        avgpool2d(&g, &x, &mut out);
+        assert_eq!(out, vec![2.5, 25.0]);
+        // gap == avg with a full-image window
+        let gap = Pool2d { kh: 2, kw: 2, stride: 1, ..g };
+        let mut out2 = vec![0.0; 2];
+        avgpool2d(&gap, &x, &mut out2);
+        assert_eq!(out2, out);
+    }
+
+    #[test]
+    fn avgpool_bwd_spreads_uniformly() {
+        let g = g2(1, 2, 2, 1, PoolOp::Avg);
+        let mut dx = vec![0.0; 4];
+        avgpool2d_bwd(&g, &[8.0], &mut dx);
+        assert_eq!(dx, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn avgpool_lrp_is_proportional_and_conserving() {
+        let g = g2(1, 2, 2, 1, PoolOp::Avg);
+        let x = [1.0, 3.0, 0.0, 4.0];
+        let mut rin = vec![0.0; 4];
+        avgpool2d_lrp(&g, &x, &[8.0], &mut rin);
+        let total: f32 = rin.iter().sum();
+        assert!((total - 8.0).abs() < 1e-4, "conservation, got {total}");
+        assert_eq!(rin[2], 0.0, "zero tap gets zero relevance");
+        assert!(rin[3] > rin[1] && rin[1] > rin[0], "proportional shares");
+    }
+
+    #[test]
+    fn valid_window_arithmetic_drops_the_ragged_edge() {
+        let g = Pool2d { n: 1, h: 5, w: 7, c: 1, kh: 2, kw: 2, stride: 2, op: PoolOp::Max };
+        assert_eq!(g.out_hw(), (2, 3));
+        assert_eq!(g.out_len(), 6);
+    }
+}

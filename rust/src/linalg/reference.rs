@@ -25,6 +25,7 @@
 //! finite inputs.
 
 use super::im2col::Conv2d;
+use super::pool::{Pool2d, PoolOp};
 
 /// Row-major `a[m,k] @ b[k,n]`.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -205,6 +206,98 @@ pub fn conv2d_bwd_input_naive(gout: &[f32], w: &[f32], g: &Conv2d) -> Vec<f32> {
         }
     }
     dx
+}
+
+/// Independently-written max-pool oracle: per output element, collect the
+/// window taps and reduce (versus the kernel's running-max scan). Same
+/// first-index tie-breaking, so agreement with
+/// [`crate::linalg::maxpool2d`] is bitwise.
+pub fn maxpool2d_naive(g: &Pool2d, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), g.in_len(), "maxpool2d_naive input shape");
+    assert_eq!(g.op, PoolOp::Max, "maxpool2d_naive on non-max geometry");
+    let (oh, ow) = g.out_hw();
+    let mut out = vec![0.0f32; g.out_len()];
+    for b in 0..g.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..g.c {
+                    let mut taps = Vec::with_capacity(g.kh * g.kw);
+                    for ph in 0..g.kh {
+                        for pw in 0..g.kw {
+                            let iy = oy * g.stride + ph;
+                            let ix = ox * g.stride + pw;
+                            taps.push(x[((b * g.h + iy) * g.w + ix) * g.c + ch]);
+                        }
+                    }
+                    let mut best = taps[0];
+                    for &t in &taps[1..] {
+                        if t > best {
+                            best = t;
+                        }
+                    }
+                    out[((b * oh + oy) * ow + ox) * g.c + ch] = best;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Independently-written average-pool oracle (tap-collection form, same
+/// ascending accumulation order ⇒ bitwise agreement with
+/// [`crate::linalg::avgpool2d`]).
+pub fn avgpool2d_naive(g: &Pool2d, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), g.in_len(), "avgpool2d_naive input shape");
+    assert_eq!(g.op, PoolOp::Avg, "avgpool2d_naive on non-avg geometry");
+    let (oh, ow) = g.out_hw();
+    let mut out = vec![0.0f32; g.out_len()];
+    for b in 0..g.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..g.c {
+                    let mut acc = 0.0f32;
+                    for ph in 0..g.kh {
+                        for pw in 0..g.kw {
+                            let iy = oy * g.stride + ph;
+                            let ix = ox * g.stride + pw;
+                            acc += x[((b * g.h + iy) * g.w + ix) * g.c + ch];
+                        }
+                    }
+                    out[((b * oh + oy) * ow + ox) * g.c + ch] =
+                        acc * (1.0 / (g.kh * g.kw) as f32);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Independently-written BN-fold oracle: per-element double loop over
+/// `(tap, co)` instead of the kernel's cycled-scale zip. Same per-element
+/// expression ⇒ bitwise agreement with [`crate::linalg::bn_fold`].
+#[allow(clippy::too_many_arguments)]
+pub fn bn_fold_naive(
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+    w: &[f32],
+    b: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let c = gamma.len();
+    assert_eq!(w.len() % c, 0, "bn_fold_naive filter not a multiple of co");
+    let taps = w.len() / c;
+    let mut wf = vec![0.0f32; w.len()];
+    let mut bf = vec![0.0f32; c];
+    for co in 0..c {
+        let s = gamma[co] / (var[co] + eps).sqrt();
+        for t in 0..taps {
+            wf[t * c + co] = w[t * c + co] * s;
+        }
+        bf[co] = (b[co] - mean[co]) * s + beta[co];
+    }
+    (wf, bf)
 }
 
 #[cfg(test)]

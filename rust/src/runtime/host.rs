@@ -11,11 +11,11 @@
 //! Execution is driven entirely by the manifest's shape/dtype contract:
 //! the dense-layer ladder is recovered from the `p_w<i>`/`idx_w<i>` input
 //! signatures, and conv ladders from the `p_c<i>`/`idx_c<i>` signatures
-//! plus the `conv_strides`/`conv_pads` artifact attrs (executed by
-//! [`super::host_cnn`] over the im2col lowering in
-//! [`crate::linalg::im2col`]). BatchNorm/maxpool models (`vgg_*`,
-//! `resnet_*`) are *not* host-executable and fail loudly at
-//! [`Backend::prepare`] time.
+//! plus the `conv_strides`/`conv_pads` (and, for the BatchNorm / pooled /
+//! residual models `vgg_*` and `resnet_*`, `conv_bn`/`conv_pool`/
+//! `conv_res`) artifact attrs — executed by [`super::host_cnn`] over the
+//! im2col lowering in [`crate::linalg::im2col`] plus the pool/BN kernels
+//! in [`crate::linalg::pool`] / [`crate::linalg::bn`] (DESIGN.md §2.8).
 //!
 //! The backend is stateless and every kernel is a deterministic pure
 //! function, which is what lets [`crate::runtime::Engine::call_batch`]
@@ -164,13 +164,11 @@ pub(crate) fn relu_inplace(z: &mut [f32]) {
     }
 }
 
-/// `z + eps·sign(z)` with `sign(0) := 1` (paper Sec. 4.1).
+/// `z + eps·sign(z)` with `sign(0) := 1` (paper Sec. 4.1) — the shared
+/// definition lives in [`crate::linalg::stabilize`] (used by the α-β
+/// conv rule and the avg-pool LRP redistribution as well).
 pub(crate) fn stabilize(z: f32) -> f32 {
-    if z >= 0.0 {
-        z + EPS
-    } else {
-        z - EPS
-    }
+    crate::linalg::stabilize(z)
 }
 
 /// Round half to even, matching `jnp.round` (f32::round rounds half away).
@@ -907,20 +905,25 @@ impl Backend for HostBackend {
     }
 }
 
-/// Default host manifest: the paper's MLP_GSC ladder plus the CIFAR-shaped
-/// CNN workload and the shared assign buckets (the host twin of
-/// `python -m compile.aot` for the host-executable models).
+/// Default host manifest: the paper's MLP_GSC ladder, the CIFAR-shaped
+/// plain CNN, the pooled VGG-slim ladders (with and without BatchNorm)
+/// and the residual ResNet-VOC ladder, plus the shared assign buckets
+/// (the host twin of `python -m compile.aot` for the host-executable
+/// models — every name `exp::model_exp` accepts must be servable here;
+/// `tests/integration_runtime.rs` holds that contract).
 pub fn default_manifest() -> Manifest {
-    Manifest::synthetic_mlp("mlp_gsc", &Manifest::MLP_GSC_DIMS, 128).merge(
-        Manifest::synthetic_cnn(
+    Manifest::synthetic_mlp("mlp_gsc", &Manifest::MLP_GSC_DIMS, 128)
+        .merge(Manifest::synthetic_cnn(
             "cnn_cifar",
             (32, 32),
             3,
             &Manifest::CNN_CIFAR_CONVS,
             &Manifest::CNN_CIFAR_FC,
             32,
-        ),
-    )
+        ))
+        .merge(Manifest::synthetic_vgg("vgg_cifar", false, 32))
+        .merge(Manifest::synthetic_vgg_bn("vgg_cifar_bn", 32))
+        .merge(Manifest::synthetic_resnet("resnet_voc", 32))
 }
 
 #[cfg(test)]

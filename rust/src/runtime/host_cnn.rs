@@ -2,26 +2,40 @@
 //!
 //! The host backend recovers a CNN from an artifact signature the same
 //! way it recovers an MLP: the conv chain from the 4D HWIO `p_c<i>` /
-//! `idx_c<i>` slots (strides and padding travel in the `conv_strides` /
-//! `conv_pads` artifact attrs, since tensor shapes cannot carry them),
-//! and the dense head from the `p_w<i>` / `idx_w<i>` slots chaining off
-//! the flattened conv output. Because NHWC output rows are exactly the
-//! im2col GEMM's row-major layout, the flatten between the conv stack
-//! and the dense head never moves data.
+//! `idx_c<i>` slots, and the dense head from the `p_w<i>` / `idx_w<i>`
+//! slots chaining off the flattened conv output. Everything tensor
+//! shapes cannot carry travels in artifact attrs: `conv_strides` /
+//! `conv_pads` (geometry) and, when the model uses them, `conv_bn`
+//! (BatchNorm after the conv), `conv_pool` (`max2`/`avg2`/`gap`
+//! downsampling) and `conv_res` (identity residual spans). Per-block op
+//! order is `conv+bias → BN → +skip → ReLU → pool`; because NHWC output
+//! rows are exactly the im2col GEMM's row-major layout, BN slots in as a
+//! per-channel pass over GEMM rows and the flatten before the dense head
+//! never moves data.
 //!
 //! All convolutions run on the im2col lowering in
-//! [`crate::linalg::im2col`]: forward with bias/ReLU fused into the GEMM
-//! epilogue, dW via the transposed-patch GEMM, dX via the tiled col2im,
-//! and quantized conv weights dequantized at pack time
-//! ([`crate::linalg::conv2d_gather`]) exactly like `qdense_gather`.
+//! [`crate::linalg::im2col`]: forward with bias (and, when no BN or skip
+//! intervenes, ReLU) fused into the GEMM epilogue, dW via the
+//! transposed-patch GEMM, dX via the tiled col2im, and quantized conv
+//! weights dequantized at pack time ([`crate::linalg::conv2d_gather`]).
 //!
-//! LRP: the host CNN uses the epsilon rule uniformly — per-weight
-//! relevance `R_w = w ⊙ (P(a)ᵀ @ s)` and `R_in = a ⊙ col2im(s @ wᵀ)`,
-//! the direct conv generalization of the dense path. This is a
-//! documented substitution for the paper's alpha-beta conv rule
-//! (DESIGN.md §2.3): it keeps the same conservation structure (asserted
-//! by `tests/conv_props.rs`) with one bwd_filter + one bwd_input per
-//! layer instead of eight conv VJPs.
+//! BatchNorm (DESIGN.md §2.8): training uses batch statistics with the
+//! full batch-coupled backward ([`crate::linalg::bn_train_bwd`]) and
+//! emits the running-stat EMA through the `p_bnm<i>` / `p_bnv<i>` slots
+//! (γ/β are ordinary Adam-trained params). FP eval folds inference-mode
+//! BN into the conv weights ([`crate::linalg::bn_fold`]); quantized eval
+//! cannot rescale codebook weights per channel, so it applies the
+//! equivalent post-conv affine ([`crate::linalg::bn_infer`]) instead.
+//!
+//! LRP is the composite ladder the paper's Fig. 8/10 scenarios need:
+//! the dense head keeps the epsilon rule, conv layers use the paper's
+//! α-β rule (α=2, β=−1, [`crate::linalg::lrp_conv_ab`]), BN layers pass
+//! relevance through unchanged at inference-mode statistics, max-pool
+//! routes winner-takes-all through the recorded argmax, avg/global-avg
+//! pool redistributes proportionally ([`crate::linalg::avgpool2d_lrp`]),
+//! and a residual add splits relevance between branches in proportion to
+//! their stabilized contributions. Conservation is asserted by
+//! `tests/conv_props.rs`.
 
 use std::collections::HashMap;
 
@@ -30,17 +44,44 @@ use anyhow::{bail, Context, Result};
 use super::host::{
     act_fake_quant, adam_emit, backward, correct_count, dense_params, emit, eval_dense_ladder,
     forward_collect, lrp_dense_ladder, q_slots, qdense_gather_ws, relu_inplace, scalar_out,
-    softmax_xent_grad, softmax_xent_loss, stabilize, ste_scale_grads, MlpSig, Slots,
+    softmax_xent_grad, softmax_xent_loss, ste_scale_grads, MlpSig, Slots,
 };
 use super::ArtifactSpec;
-use crate::linalg::{self, Conv2d, Epilogue, Pad, Workspace};
+use crate::linalg::{
+    self, stabilize, Conv2d, Epilogue, Pad, Pool2d, PoolOp, Workspace, BN_EPS, LRP_ALPHA, LRP_BETA,
+};
 use crate::tensor::{Tensor, Value};
+
+/// Running-stat EMA momentum (torch's `BatchNorm2d` default: the new
+/// batch statistic gets weight 0.1).
+const BN_MOMENTUM: f32 = 0.1;
+
+/// One conv block recovered from the signature: the conv geometry plus
+/// the attr-carried topology around it (op order: conv+bias → BN →
+/// +skip → ReLU → pool).
+pub(crate) struct ConvBlock {
+    pub(crate) geom: Conv2d,
+    /// BatchNorm after the conv (`conv_bn` attr)
+    pub(crate) bn: bool,
+    /// pooling stage after the ReLU (`conv_pool` attr)
+    pub(crate) pool: Option<Pool2d>,
+    /// residual span `r` (`conv_res` attr; 0 = none): this block's
+    /// pre-ReLU sum adds the *input* of block `i+1−r` (identity skips
+    /// only — the signature rejects shape mismatches)
+    pub(crate) res: usize,
+}
+
+impl ConvBlock {
+    /// Output element count of the whole block (post-pool).
+    fn out_len(&self) -> usize {
+        self.pool.as_ref().map_or(self.geom.out_len(), |p| p.out_len())
+    }
+}
 
 /// Conv ladder + dense head recovered from an artifact's signature.
 pub(crate) struct CnnSig {
     pub(crate) batch: usize,
-    /// per-conv-layer geometry (batch baked into `n`)
-    pub(crate) convs: Vec<Conv2d>,
+    pub(crate) blocks: Vec<ConvBlock>,
     /// the dense head, starting at the flattened conv output
     pub(crate) dense: MlpSig,
 }
@@ -75,13 +116,59 @@ fn parse_strides(spec: &ArtifactSpec) -> Result<Vec<usize>> {
     }
 }
 
+fn parse_bn(spec: &ArtifactSpec) -> Result<Vec<bool>> {
+    match spec.attrs.get("conv_bn") {
+        None => Ok(Vec::new()),
+        Some(s) => s
+            .split(',')
+            .map(|v| match v {
+                "0" => Ok(false),
+                "1" => Ok(true),
+                other => Err(anyhow::anyhow!(
+                    "artifact {}: bad conv_bn token {other}",
+                    spec.name
+                )),
+            })
+            .collect(),
+    }
+}
+
+fn parse_res(spec: &ArtifactSpec) -> Result<Vec<usize>> {
+    match spec.attrs.get("conv_res") {
+        None => Ok(Vec::new()),
+        Some(s) => s
+            .split(',')
+            .map(|v| {
+                v.parse::<usize>()
+                    .with_context(|| format!("artifact {}: bad conv_res span {v}", spec.name))
+            })
+            .collect(),
+    }
+}
+
+fn parse_pool(spec: &ArtifactSpec) -> Vec<&str> {
+    spec.attrs
+        .get("conv_pool")
+        .map(|s| s.split(',').collect())
+        .unwrap_or_default()
+}
+
+/// One entry of a present-must-cover attr list (an attr that exists must
+/// carry one entry per conv layer, or the signature is rejected).
+fn attr_at<'a, T>(list: &'a [T], i: usize, spec: &ArtifactSpec, key: &str) -> Result<&'a T> {
+    list.get(i).with_context(|| {
+        format!("artifact {}: {key} has no entry for conv layer {i}", spec.name)
+    })
+}
+
 /// Recover the conv ladder from `<conv_prefix><i>` slots and the dense
-/// head from `<w_prefix><i>` slots. A manifest without the
-/// `conv_strides`/`conv_pads` attrs defaults every layer to stride 1 /
-/// SAME; an attr that is *present* must carry one entry per conv layer
-/// (and strides must be ≥ 1) or the signature is rejected — geometry
-/// mistakes fail loudly at `prepare` instead of surfacing as a
-/// confusing dense-chain mismatch later.
+/// head from `<w_prefix><i>` slots. A manifest without the conv attrs
+/// defaults every layer to stride 1 / SAME / no BN / no pool / no skip;
+/// an attr that is *present* must carry one entry per conv layer (and
+/// strides must be ≥ 1, pool tokens known, residual spans in range with
+/// shape-matched identity sources) or the signature is rejected —
+/// geometry and topology mistakes fail loudly at `prepare` instead of
+/// surfacing as a confusing dense-chain mismatch later.
 pub(crate) fn cnn_sig(spec: &ArtifactSpec, conv_prefix: &str, w_prefix: &str) -> Result<CnnSig> {
     let shape_of = |name: &str| -> Option<&Vec<usize>> {
         spec.inputs.iter().find(|s| s.name == name).map(|s| &s.shape)
@@ -97,7 +184,12 @@ pub(crate) fn cnn_sig(spec: &ArtifactSpec, conv_prefix: &str, w_prefix: &str) ->
     let (batch, mut h, mut w, mut c) = (x[0], x[1], x[2], x[3]);
     let strides = parse_strides(spec)?;
     let pads = parse_pads(spec)?;
-    let mut convs = Vec::new();
+    let bns = parse_bn(spec)?;
+    let pools = parse_pool(spec);
+    let ress = parse_res(spec)?;
+    let mut blocks = Vec::new();
+    // (h, w, c) feeding each block — residual skip validation
+    let mut block_ins: Vec<(usize, usize, usize)> = Vec::new();
     let mut i = 0usize;
     while let Some(shape) = shape_of(&format!("{conv_prefix}{i}")) {
         if shape.len() != 4 || shape[2] != c {
@@ -108,29 +200,16 @@ pub(crate) fn cnn_sig(spec: &ArtifactSpec, conv_prefix: &str, w_prefix: &str) ->
                 shape
             );
         }
+        block_ins.push((h, w, c));
         let stride = if strides.is_empty() {
             1
         } else {
-            *strides.get(i).with_context(|| {
-                format!(
-                    "artifact {}: conv_strides has no entry for conv layer {i}",
-                    spec.name
-                )
-            })?
+            *attr_at(&strides, i, spec, "conv_strides")?
         };
         if stride == 0 {
             bail!("artifact {}: conv layer {i} has stride 0", spec.name);
         }
-        let pad = if pads.is_empty() {
-            Pad::Same
-        } else {
-            *pads.get(i).with_context(|| {
-                format!(
-                    "artifact {}: conv_pads has no entry for conv layer {i}",
-                    spec.name
-                )
-            })?
-        };
+        let pad = if pads.is_empty() { Pad::Same } else { *attr_at(&pads, i, spec, "conv_pads")? };
         let g = Conv2d {
             n: batch,
             h,
@@ -152,7 +231,54 @@ pub(crate) fn cnn_sig(spec: &ArtifactSpec, conv_prefix: &str, w_prefix: &str) ->
         h = oh;
         w = ow;
         c = g.co;
-        convs.push(g);
+        let bn = if bns.is_empty() { false } else { *attr_at(&bns, i, spec, "conv_bn")? };
+        let res = if ress.is_empty() { 0 } else { *attr_at(&ress, i, spec, "conv_res")? };
+        if res > 0 {
+            if res < 2 || res > i + 1 {
+                bail!(
+                    "artifact {}: conv layer {i} residual span {res} out of range \
+                     (need 2 <= r <= layer index + 1)",
+                    spec.name
+                );
+            }
+            let src = block_ins[i + 1 - res];
+            if src != (h, w, c) {
+                bail!(
+                    "artifact {}: conv layer {i} residual skip shape mismatch \
+                     ({src:?} vs {:?} — identity skips only)",
+                    spec.name,
+                    (h, w, c)
+                );
+            }
+        }
+        let pool = match if pools.is_empty() {
+            "0"
+        } else {
+            *attr_at(&pools, i, spec, "conv_pool")?
+        } {
+            "0" => None,
+            tok @ ("max2" | "avg2") => {
+                if h < 2 || w < 2 {
+                    bail!(
+                        "artifact {}: conv layer {i} is {h}x{w} — too small for a 2x2 pool",
+                        spec.name
+                    );
+                }
+                let op = if tok == "max2" { PoolOp::Max } else { PoolOp::Avg };
+                Some(Pool2d { n: batch, h, w, c, kh: 2, kw: 2, stride: 2, op })
+            }
+            "gap" => Some(Pool2d { n: batch, h, w, c, kh: h, kw: w, stride: 1, op: PoolOp::Avg }),
+            other => bail!(
+                "artifact {}: conv layer {i} unknown conv_pool token {other}",
+                spec.name
+            ),
+        };
+        if let Some(p) = &pool {
+            let (ph, pw) = p.out_hw();
+            h = ph;
+            w = pw;
+        }
+        blocks.push(ConvBlock { geom: g, bn, pool, res });
         i += 1;
     }
     if i == 0 {
@@ -181,7 +307,7 @@ pub(crate) fn cnn_sig(spec: &ArtifactSpec, conv_prefix: &str, w_prefix: &str) ->
     if j == 0 {
         bail!("artifact {}: conv model has no dense head", spec.name);
     }
-    Ok(CnnSig { batch, convs, dense: MlpSig { dims, batch } })
+    Ok(CnnSig { batch, blocks, dense: MlpSig { dims, batch } })
 }
 
 /// Collect the per-conv-layer `c`/`cb` slices from `p_c<i>` / `p_cb<i>`.
@@ -195,29 +321,57 @@ fn conv_params<'a>(slots: &Slots<'a>, nc: usize) -> Result<(Vec<&'a [f32]>, Vec<
     Ok((cs, cbs))
 }
 
-/// Conv-stack forward keeping every layer input (the backward pass needs
-/// them): `acts[0] = x`, `acts[i>0] = relu(conv_i-1 + bias)` with the
-/// ReLU fused into the GEMM epilogue.
-fn conv_forward_collect(
-    scratch: &mut Workspace,
-    sig: &CnnSig,
-    cws: &[&[f32]],
-    cbs: &[&[f32]],
-    x: &[f32],
-) -> Vec<Vec<f32>> {
-    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(sig.convs.len() + 1);
-    acts.push(x.to_vec());
-    for (i, g) in sig.convs.iter().enumerate() {
-        let mut z = vec![0.0f32; g.out_len()];
-        linalg::conv2d(scratch, &acts[i], cws[i], g, Epilogue::BiasRelu(cbs[i]), &mut z);
-        acts.push(z);
+/// The four BN param slices of layer `i`: `(γ, β, running μ, running σ²)`.
+type BnParams<'a> = (&'a [f32], &'a [f32], &'a [f32], &'a [f32]);
+
+fn bn_params<'a>(slots: &Slots<'a>, i: usize) -> Result<BnParams<'a>> {
+    Ok((
+        slots.f32(&format!("p_bng{i}"))?,
+        slots.f32(&format!("p_bnb{i}"))?,
+        slots.f32(&format!("p_bnm{i}"))?,
+        slots.f32(&format!("p_bnv{i}"))?,
+    ))
+}
+
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
     }
-    acts
+}
+
+/// Pool forward; records the max winners into `argmax` (resized) so the
+/// backward/LRP passes get their O(1) scatter.
+fn pool_fwd(p: &Pool2d, u: &[f32], argmax: &mut Vec<usize>) -> Vec<f32> {
+    let mut o = vec![0.0f32; p.out_len()];
+    match p.op {
+        PoolOp::Max => {
+            argmax.resize(p.out_len(), 0);
+            linalg::maxpool2d(p, u, argmax, &mut o);
+        }
+        PoolOp::Avg => linalg::avgpool2d(p, u, &mut o),
+    }
+    o
+}
+
+/// Per-block forward state the training backward pass consumes.
+struct TrainState {
+    /// conv + bias (pre-BN); left empty for non-BN blocks (the backward
+    /// only needs it for `bn_train_bwd`)
+    z: Vec<f32>,
+    /// batch statistics (BN blocks only)
+    mean: Vec<f32>,
+    var: Vec<f32>,
+    /// post-ReLU, pre-pool (the ReLU backward mask)
+    act: Vec<f32>,
+    /// max-pool winners (max blocks only)
+    argmax: Vec<usize>,
 }
 
 /// Shared CNN train-step core: conv + dense forward/backward at the
 /// (optionally STE-substituted) weights, Adam applied to the `p_`
-/// background parameters — the conv twin of `host::train_step`.
+/// background parameters, BN running stats EMA-updated — the conv twin
+/// of `host::train_step`.
 pub(crate) fn train_step(
     spec: &ArtifactSpec,
     inputs: &[Value],
@@ -225,7 +379,7 @@ pub(crate) fn train_step(
     scratch: &mut Workspace,
 ) -> Result<Vec<Value>> {
     let sig = cnn_sig(spec, "p_c", "p_w")?;
-    let nc = sig.convs.len();
+    let nc = sig.blocks.len();
     let nd = sig.dense.layers();
     let slots = Slots::new(spec, inputs);
     let (cws, cbs) = conv_params(&slots, nc)?;
@@ -244,10 +398,46 @@ pub(crate) fn train_step(
     let eval_dw: Vec<&[f32]> =
         dws_p.iter().zip(qds.iter()).map(|(&w, q)| q.unwrap_or(w)).collect();
 
-    // forward: conv stack (ReLU fused), then the dense head
-    let conv_acts = conv_forward_collect(scratch, &sig, &eval_cw, &cbs, x);
+    // forward: conv blocks (batch-stat BN, skips, pooling), keeping every
+    // block input plus the state the backward needs
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nc + 1);
+    acts.push(x.to_vec());
+    let mut states: Vec<TrainState> = Vec::with_capacity(nc);
+    for (i, blk) in sig.blocks.iter().enumerate() {
+        let g = &blk.geom;
+        let mut st = TrainState {
+            z: vec![0.0f32; g.out_len()],
+            mean: Vec::new(),
+            var: Vec::new(),
+            act: Vec::new(),
+            argmax: Vec::new(),
+        };
+        linalg::conv2d(scratch, &acts[i], eval_cw[i], g, Epilogue::Bias(cbs[i]), &mut st.z);
+        let mut u = if blk.bn {
+            let (gamma, beta, _, _) = bn_params(&slots, i)?;
+            st.mean = vec![0.0f32; g.co];
+            st.var = vec![0.0f32; g.co];
+            let mut y_bn = vec![0.0f32; st.z.len()];
+            linalg::bn_train_fwd(&st.z, g.co, gamma, beta, BN_EPS, &mut y_bn, &mut st.mean, &mut st.var);
+            y_bn
+        } else {
+            // z is not needed again without BN — move it out
+            std::mem::take(&mut st.z)
+        };
+        if blk.res > 0 {
+            add_assign(&mut u, &acts[i + 1 - blk.res]);
+        }
+        relu_inplace(&mut u);
+        let out = match &blk.pool {
+            Some(p) => pool_fwd(p, &u, &mut st.argmax),
+            None => u.clone(),
+        };
+        st.act = u;
+        states.push(st);
+        acts.push(out);
+    }
     let (dacts, logits) =
-        forward_collect(scratch, &sig.dense, &eval_dw, &dbs_p, conv_acts.last().unwrap());
+        forward_collect(scratch, &sig.dense, &eval_dw, &dbs_p, acts.last().unwrap());
     let classes = sig.dense.classes();
     let (loss, g0) = softmax_xent_grad(&logits, y, sig.batch, classes);
     let correct = correct_count(&logits, y, sig.batch, classes);
@@ -257,30 +447,72 @@ pub(crate) fn train_step(
         backward(scratch, &sig.dense, &eval_dw, &dacts, g0, true);
     let mut g = gflat.expect("input_grad requested");
 
-    // conv backward: dW via the transposed-patch GEMM, dX via col2im
+    // conv backward: pool scatter → ReLU mask → (residual fan-out) → BN →
+    // dW via the transposed-patch GEMM, dX via col2im. `pending[j]` holds
+    // skip-branch gradients addressed to the *input* of block j, merged
+    // when the main path reaches that tensor.
     let mut d_cw: Vec<Vec<f32>> = vec![Vec::new(); nc];
     let mut d_cb: Vec<Vec<f32>> = vec![Vec::new(); nc];
+    let mut d_bng: Vec<Vec<f32>> = vec![Vec::new(); nc];
+    let mut d_bnb: Vec<Vec<f32>> = vec![Vec::new(); nc];
+    let mut pending: Vec<Option<Vec<f32>>> = (0..nc).map(|_| None).collect();
     for i in (0..nc).rev() {
-        let geom = &sig.convs[i];
+        let blk = &sig.blocks[i];
+        let geom = &blk.geom;
+        let st = &states[i];
+        let mut gu = match &blk.pool {
+            Some(p) => {
+                let mut d = vec![0.0f32; p.in_len()];
+                match p.op {
+                    PoolOp::Max => linalg::maxpool2d_bwd(p, &st.argmax, &g, &mut d),
+                    PoolOp::Avg => linalg::avgpool2d_bwd(p, &g, &mut d),
+                }
+                d
+            }
+            None => std::mem::take(&mut g),
+        };
+        // ReLU backward: act is the block's fused ReLU output
+        for (gv, &av) in gu.iter_mut().zip(st.act.iter()) {
+            if av <= 0.0 {
+                *gv = 0.0;
+            }
+        }
+        // the pre-ReLU gradient flows to the skip source unchanged
+        if blk.res > 0 {
+            let j = i + 1 - blk.res;
+            match &mut pending[j] {
+                Some(p) => add_assign(p, &gu),
+                slot => *slot = Some(gu.clone()),
+            }
+        }
+        let dz = if blk.bn {
+            let (gamma, _, _, _) = bn_params(&slots, i)?;
+            let mut dz = vec![0.0f32; gu.len()];
+            let (mut dg, mut db) = (vec![0.0f32; geom.co], vec![0.0f32; geom.co]);
+            linalg::bn_train_bwd(
+                &st.z, geom.co, gamma, &st.mean, &st.var, BN_EPS, &gu, &mut dz, &mut dg, &mut db,
+            );
+            d_bng[i] = dg;
+            d_bnb[i] = db;
+            dz
+        } else {
+            gu
+        };
         let mut dw = vec![0.0f32; geom.filter_len()];
-        linalg::conv2d_bwd_filter(scratch, &conv_acts[i], &g, geom, Epilogue::None, &mut dw);
+        linalg::conv2d_bwd_filter(scratch, &acts[i], &dz, geom, Epilogue::None, &mut dw);
         d_cw[i] = dw;
         let mut db = vec![0.0f32; geom.co];
-        for row in g.chunks_exact(geom.co) {
-            for (d, &gv) in db.iter_mut().zip(row) {
-                *d += gv;
-            }
+        for row in dz.chunks_exact(geom.co) {
+            add_assign(&mut db, row);
         }
         d_cb[i] = db;
         if i > 0 {
             let mut gin = vec![0.0f32; geom.in_len()];
-            linalg::conv2d_bwd_input(scratch, &g, eval_cw[i], geom, &mut gin);
-            // relu backward: conv_acts[i] is the previous layer's fused
-            // ReLU output, so the mask is act > 0
-            for (gv, &av) in gin.iter_mut().zip(conv_acts[i].iter()) {
-                if av <= 0.0 {
-                    *gv = 0.0;
-                }
+            linalg::conv2d_bwd_input(scratch, &dz, eval_cw[i], geom, &mut gin);
+            // merge skip-branch gradients addressed to this tensor; a
+            // pending[0] entry (skip from x) would be the unused x grad
+            if let Some(p) = pending[i].take() {
+                add_assign(&mut gin, &p);
             }
             g = gin;
         }
@@ -296,6 +528,10 @@ pub(crate) fn train_step(
     for i in 0..nc {
         grads.push((format!("c{i}"), std::mem::take(&mut d_cw[i])));
         grads.push((format!("cb{i}"), std::mem::take(&mut d_cb[i])));
+        if sig.blocks[i].bn {
+            grads.push((format!("bng{i}"), std::mem::take(&mut d_bng[i])));
+            grads.push((format!("bnb{i}"), std::mem::take(&mut d_bnb[i])));
+        }
     }
     for i in 0..nd {
         grads.push((format!("w{i}"), std::mem::take(&mut d_dw[i])));
@@ -303,22 +539,55 @@ pub(crate) fn train_step(
     }
     let mut out: HashMap<String, Value> = HashMap::new();
     adam_emit(spec, &slots, &grads, t, lr, &mut out)?;
+    // BN running stats bypass Adam: EMA toward this batch's statistics,
+    // Adam moments echoed unchanged (they are dead slots for bnm/bnv)
+    for (i, blk) in sig.blocks.iter().enumerate() {
+        if !blk.bn {
+            continue;
+        }
+        let (_, _, rmean, rvar) = bn_params(&slots, i)?;
+        let co = blk.geom.co;
+        let (mut rm, mut rv) = (rmean.to_vec(), rvar.to_vec());
+        linalg::ema_update(&mut rm, &states[i].mean, BN_MOMENTUM);
+        linalg::ema_update(&mut rv, &states[i].var, BN_MOMENTUM);
+        out.insert(format!("p_bnm{i}"), Value::F32(Tensor::new(vec![co], rm)));
+        out.insert(format!("p_bnv{i}"), Value::F32(Tensor::new(vec![co], rv)));
+        for name in [format!("bnm{i}"), format!("bnv{i}")] {
+            for prefix in ["m_", "v_"] {
+                let slot = format!("{prefix}{name}");
+                let echo = slots.f32(&slot)?.to_vec();
+                out.insert(slot, Value::F32(Tensor::new(vec![co], echo)));
+            }
+        }
+    }
     out.insert("loss".into(), scalar_out(loss));
     out.insert("correct".into(), scalar_out(correct));
     emit(spec, out)
 }
 
-/// Composite epsilon-LRP through the dense head and the conv stack:
-/// per-weight relevances, batch-aggregated, signed — the conv twin of
-/// `host::lrp_step` (see the module docs on the epsilon-rule
-/// substitution for conv layers).
+/// Per-block forward state the LRP backward ladder consumes.
+struct LrpState {
+    /// post-BN, pre-skip (the main-branch value at the residual add)
+    zb: Vec<f32>,
+    /// post-ReLU, pre-pool (the avg-pool LRP input)
+    act: Vec<f32>,
+    /// max-pool winners (max blocks only)
+    argmax: Vec<usize>,
+}
+
+/// Composite LRP through the dense head and the conv stack: epsilon rule
+/// on the dense ladder, the paper's α-β rule on every conv, BN as an
+/// inference-mode identity for relevance, winner-takes-all max-pool /
+/// proportional avg-pool routing, and stabilized proportional splits at
+/// residual adds. Per-weight relevances, batch-aggregated, signed — the
+/// conv twin of `host::lrp_step`.
 pub(crate) fn lrp_step(
     spec: &ArtifactSpec,
     inputs: &[Value],
     scratch: &mut Workspace,
 ) -> Result<Vec<Value>> {
     let sig = cnn_sig(spec, "p_c", "p_w")?;
-    let nc = sig.convs.len();
+    let nc = sig.blocks.len();
     let nd = sig.dense.layers();
     let slots = Slots::new(spec, inputs);
     let (cws, cbs) = conv_params(&slots, nc)?;
@@ -327,17 +596,32 @@ pub(crate) fn lrp_step(
     let y = slots.i32("y")?;
     let eqw = slots.scalar("eqw")?;
 
-    // conv forward keeping both the layer inputs and the pre-activations
-    // (the epsilon rule needs z itself, so ReLU cannot fuse here)
-    let mut cacts: Vec<Vec<f32>> = vec![x.to_vec()];
-    let mut czs: Vec<Vec<f32>> = Vec::with_capacity(nc);
-    for (i, g) in sig.convs.iter().enumerate() {
-        let mut z = vec![0.0f32; g.out_len()];
-        linalg::conv2d(scratch, &cacts[i], cws[i], g, Epilogue::Bias(cbs[i]), &mut z);
-        let mut h = z.clone();
-        relu_inplace(&mut h);
-        czs.push(z);
-        cacts.push(h);
+    // forward at inference-mode BN statistics, keeping the block inputs
+    // (the α-β rule re-derives its own signed pre-activations from them)
+    // plus the residual/pool routing state
+    let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+    let mut states: Vec<LrpState> = Vec::with_capacity(nc);
+    for (i, blk) in sig.blocks.iter().enumerate() {
+        let g = &blk.geom;
+        let mut zb = vec![0.0f32; g.out_len()];
+        linalg::conv2d(scratch, &acts[i], cws[i], g, Epilogue::Bias(cbs[i]), &mut zb);
+        if blk.bn {
+            let (gamma, beta, rmean, rvar) = bn_params(&slots, i)?;
+            linalg::bn_infer(gamma, beta, rmean, rvar, BN_EPS, &mut zb);
+        }
+        let mut u = zb.clone();
+        if blk.res > 0 {
+            add_assign(&mut u, &acts[i + 1 - blk.res]);
+        }
+        relu_inplace(&mut u);
+        let mut st = LrpState { zb, act: Vec::new(), argmax: Vec::new() };
+        let out = match &blk.pool {
+            Some(p) => pool_fwd(p, &u, &mut st.argmax),
+            None => u.clone(),
+        };
+        st.act = u;
+        states.push(st);
+        acts.push(out);
     }
     // dense head: shared epsilon-rule ladder, handing the relevance at
     // the flatten boundary back to the conv stack
@@ -347,31 +631,67 @@ pub(crate) fn lrp_step(
         &sig.dense,
         &dws_p,
         &dbs_p,
-        cacts.last().unwrap(),
+        acts.last().unwrap(),
         y,
         eqw,
         true,
         &mut out,
     )
     .expect("input_relevance requested");
-    // conv stack backward (epsilon rule on the im2col lowering)
+    // conv stack: pool routing → ReLU pass-through → residual split →
+    // (BN identity) → α-β conv rule. `pending[j]` holds skip-branch
+    // relevance addressed to the input of block j.
+    let mut pending: Vec<Option<Vec<f32>>> = (0..nc).map(|_| None).collect();
     for i in (0..nc).rev() {
-        let geom = &sig.convs[i];
-        let a = &cacts[i];
-        let z = &czs[i];
-        let s: Vec<f32> =
-            r.iter().zip(z.iter()).map(|(&rv, &zv)| rv / stabilize(zv)).collect();
+        let blk = &sig.blocks[i];
+        let geom = &blk.geom;
+        let st = &states[i];
+        // relevance at the post-ReLU act; ReLU itself passes it through
+        let mut ru = match &blk.pool {
+            Some(p) => {
+                let mut d = vec![0.0f32; p.in_len()];
+                match p.op {
+                    // winner-takes-all: the max-pool LRP rule is its
+                    // gradient scatter
+                    PoolOp::Max => linalg::maxpool2d_bwd(p, &st.argmax, &r, &mut d),
+                    PoolOp::Avg => linalg::avgpool2d_lrp(p, &st.act, &r, &mut d),
+                }
+                d
+            }
+            None => std::mem::take(&mut r),
+        };
+        // residual add u = zb + skip: split R proportionally to the
+        // stabilized branch contributions
+        if blk.res > 0 {
+            let j = i + 1 - blk.res;
+            let skip = &acts[j];
+            let mut rskip = vec![0.0f32; ru.len()];
+            for k in 0..ru.len() {
+                let s = ru[k] / stabilize(st.zb[k] + skip[k]);
+                rskip[k] = skip[k] * s;
+                ru[k] = st.zb[k] * s;
+            }
+            match &mut pending[j] {
+                Some(p) => add_assign(p, &rskip),
+                slot => *slot = Some(rskip),
+            }
+        }
+        // BN is identity for relevance; α-β redistributes through the conv
         let mut rw = vec![0.0f32; geom.filter_len()];
-        linalg::lrp_conv_rw(scratch, a, &s, cws[i], geom, &mut rw);
+        let mut rin = vec![0.0f32; geom.in_len()];
+        linalg::lrp_conv_ab(
+            scratch, &acts[i], cws[i], &ru, geom, LRP_ALPHA, LRP_BETA, &mut rw, &mut rin,
+        );
         out.insert(
             format!("r_c{i}"),
             Value::F32(Tensor::new(vec![geom.kh, geom.kw, geom.c, geom.co], rw)),
         );
         if i > 0 {
-            let mut rin = vec![0.0f32; geom.in_len()];
-            linalg::conv2d_bwd_input(scratch, &s, cws[i], geom, &mut rin);
-            for (rv, &av) in rin.iter_mut().zip(a.iter()) {
-                *rv *= av;
+            // merge skip-branch relevance addressed to this tensor; a
+            // pending[0] entry (skip from x) would be the unemitted
+            // input-image relevance
+            if let Some(p) = pending[i].take() {
+                add_assign(&mut rin, &p);
             }
             r = rin;
         }
@@ -379,8 +699,12 @@ pub(crate) fn lrp_step(
     emit(spec, out)
 }
 
-/// Plain CNN eval (optionally with fake-quantized activations) — the conv
-/// twin of `host::eval_step`.
+/// FP-weight eval (optionally with fake-quantized activations) — the conv
+/// twin of `host::eval_step`. Inference-mode BN folds into the conv
+/// weights ([`crate::linalg::bn_fold`]), so a BN block costs exactly one
+/// conv; blocks without a residual add keep ReLU fused in the GEMM
+/// epilogue. Block outputs are kept (not rolled) because residual spans
+/// reach back across layers.
 pub(crate) fn eval_step(
     spec: &ArtifactSpec,
     inputs: &[Value],
@@ -388,7 +712,7 @@ pub(crate) fn eval_step(
     scratch: &mut Workspace,
 ) -> Result<Vec<Value>> {
     let sig = cnn_sig(spec, "p_c", "p_w")?;
-    let nc = sig.convs.len();
+    let nc = sig.blocks.len();
     let nd = sig.dense.layers();
     let slots = Slots::new(spec, inputs);
     let (cws, cbs) = conv_params(&slots, nc)?;
@@ -397,17 +721,43 @@ pub(crate) fn eval_step(
     let y = slots.i32("y")?;
     let levels = if actq { Some(2.0f32.powf(slots.scalar("abits")?)) } else { None };
 
-    // rolling activation buffer: eval never needs earlier conv outputs
-    let mut a = x.to_vec();
-    for (i, g) in sig.convs.iter().enumerate() {
-        let mut z = vec![0.0f32; g.out_len()];
-        linalg::conv2d(scratch, &a, cws[i], g, Epilogue::BiasRelu(cbs[i]), &mut z);
-        if let Some(lv) = levels {
-            act_fake_quant(&mut z, lv);
+    let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+    let mut scratch_am: Vec<usize> = Vec::new();
+    for (i, blk) in sig.blocks.iter().enumerate() {
+        let g = &blk.geom;
+        // fold BN (running stats) into the conv weights + bias
+        let folded = if blk.bn {
+            let (gamma, beta, rmean, rvar) = bn_params(&slots, i)?;
+            let mut wf = vec![0.0f32; g.filter_len()];
+            let mut bf = vec![0.0f32; g.co];
+            linalg::bn_fold(gamma, beta, rmean, rvar, BN_EPS, cws[i], cbs[i], &mut wf, &mut bf);
+            Some((wf, bf))
+        } else {
+            None
+        };
+        let (w_eff, b_eff): (&[f32], &[f32]) = match &folded {
+            Some((wf, bf)) => (wf, bf),
+            None => (cws[i], cbs[i]),
+        };
+        let mut u = vec![0.0f32; g.out_len()];
+        if blk.res > 0 {
+            // the skip lands between bias and ReLU, so ReLU cannot fuse
+            linalg::conv2d(scratch, &acts[i], w_eff, g, Epilogue::Bias(b_eff), &mut u);
+            add_assign(&mut u, &acts[i + 1 - blk.res]);
+            relu_inplace(&mut u);
+        } else {
+            linalg::conv2d(scratch, &acts[i], w_eff, g, Epilogue::BiasRelu(b_eff), &mut u);
         }
-        a = z;
+        let mut out = match &blk.pool {
+            Some(p) => pool_fwd(p, &u, &mut scratch_am),
+            None => u,
+        };
+        if let Some(lv) = levels {
+            act_fake_quant(&mut out, lv);
+        }
+        acts.push(out);
     }
-    let a = eval_dense_ladder(scratch, &sig.dense, &dws_p, &dbs_p, &a, levels);
+    let a = eval_dense_ladder(scratch, &sig.dense, &dws_p, &dbs_p, acts.last().unwrap(), levels);
     let classes = sig.dense.classes();
     let loss = softmax_xent_loss(&a, y, sig.batch, classes);
     let correct = correct_count(&a, y, sig.batch, classes);
@@ -422,7 +772,10 @@ pub(crate) fn eval_step(
 /// im2col pack time ([`crate::linalg::conv2d_gather`] — patch extraction
 /// dominates, so the LUT form buys little there), while the dense head
 /// goes through `qdense_gather_ws` and thus takes the sparse LUT fast
-/// path (gather-GEMM oracle under `--deterministic`).
+/// path (gather-GEMM oracle under `--deterministic`). BN cannot fold
+/// into codebook-indexed weights (the per-channel scale would leave the
+/// shared codebook), so it applies as the equivalent post-conv affine
+/// ([`crate::linalg::bn_infer`]) at running statistics.
 pub(crate) fn eval_gather_step(
     spec: &ArtifactSpec,
     inputs: &[Value],
@@ -434,8 +787,10 @@ pub(crate) fn eval_gather_step(
     let x = slots.f32("x")?;
     let y = slots.i32("y")?;
 
-    let mut a = x.to_vec();
-    for (i, g) in sig.convs.iter().enumerate() {
+    let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+    let mut scratch_am: Vec<usize> = Vec::new();
+    for (i, blk) in sig.blocks.iter().enumerate() {
+        let g = &blk.geom;
         let idx = slots.i32(&format!("idx_c{i}"))?;
         let cb = slots.f32(&format!("cb_c{i}"))?;
         let bias = slots.f32(&format!("p_cb{i}"))?;
@@ -445,10 +800,27 @@ pub(crate) fn eval_gather_step(
                 spec.name
             );
         }
-        let mut z = vec![0.0f32; g.out_len()];
-        linalg::conv2d_gather(scratch, &a, idx, cb, g, Epilogue::BiasRelu(bias), &mut z);
-        a = z;
+        let mut u = vec![0.0f32; g.out_len()];
+        if !blk.bn && blk.res == 0 {
+            linalg::conv2d_gather(scratch, &acts[i], idx, cb, g, Epilogue::BiasRelu(bias), &mut u);
+        } else {
+            linalg::conv2d_gather(scratch, &acts[i], idx, cb, g, Epilogue::Bias(bias), &mut u);
+            if blk.bn {
+                let (gamma, beta, rmean, rvar) = bn_params(&slots, i)?;
+                linalg::bn_infer(gamma, beta, rmean, rvar, BN_EPS, &mut u);
+            }
+            if blk.res > 0 {
+                add_assign(&mut u, &acts[i + 1 - blk.res]);
+            }
+            relu_inplace(&mut u);
+        }
+        let out = match &blk.pool {
+            Some(p) => pool_fwd(p, &u, &mut scratch_am),
+            None => u,
+        };
+        acts.push(out);
     }
+    let mut a = acts.pop().expect("at least the input activation");
     for i in 0..nd {
         let idx = slots.i32(&format!("idx_w{i}"))?;
         let cb = slots.f32(&format!("cb_w{i}"))?;
@@ -478,11 +850,67 @@ pub(crate) fn eval_gather_step(
 
 #[cfg(test)]
 mod tests {
-    use super::super::Manifest;
+    use super::super::{ConvLayer, DType, Manifest};
     use super::*;
 
     fn tiny() -> Manifest {
         Manifest::synthetic_cnn("t", (8, 8), 3, &[(4, 2), (8, 2)], &[16, 5], 2)
+    }
+
+    /// A residual + BN + pool ladder small enough for unit tests: stem,
+    /// then a shape-preserving pair whose second conv skips from the
+    /// pair's input, max-pooled down, then gap → dense.
+    fn tiny_topo() -> Manifest {
+        let l = |co: usize, bn: bool, pool: &'static str, res: usize| ConvLayer {
+            co,
+            stride: 1,
+            bn,
+            pool,
+            res,
+        };
+        Manifest::synthetic_convnet(
+            "tt",
+            (8, 8),
+            3,
+            &[l(4, true, "0", 0), l(4, false, "0", 0), l(4, true, "max2", 2), l(6, true, "gap", 0)],
+            &[5],
+            2,
+        )
+    }
+
+    /// Deterministic small-magnitude inputs for every slot of an
+    /// artifact, with the named scalars pinned to sane values.
+    fn dummy_inputs(spec: &ArtifactSpec) -> Vec<Value> {
+        spec.inputs
+            .iter()
+            .map(|t| {
+                let n: usize = t.shape.iter().product();
+                match t.dtype {
+                    DType::I32 => {
+                        // y labels (or idx slots) stay in range as zeros
+                        Value::I32(crate::tensor::TensorI32::new(t.shape.clone(), vec![0; n]))
+                    }
+                    DType::F32 => {
+                        let v = match t.name.as_str() {
+                            "t" => vec![1.0],
+                            "lr" => vec![1e-3],
+                            "gs" | "eqw" => vec![0.0],
+                            "abits" => vec![4.0],
+                            name if name.starts_with("p_bng") || name.starts_with("p_bnv") => {
+                                vec![1.0; n]
+                            }
+                            name if name.starts_with("cb_") => {
+                                (0..n).map(|k| 0.1 + 0.05 * (k % 7) as f32).collect()
+                            }
+                            _ => (0..n)
+                                .map(|k| ((k * 37 + 11) % 23) as f32 * 0.02 - 0.2)
+                                .collect(),
+                        };
+                        Value::F32(Tensor::new(t.shape.clone(), v))
+                    }
+                }
+            })
+            .collect()
     }
 
     #[test]
@@ -491,16 +919,35 @@ mod tests {
         let spec = m.artifact("t_fp_train").unwrap();
         let sig = cnn_sig(spec, "p_c", "p_w").unwrap();
         assert_eq!(sig.batch, 2);
-        assert_eq!(sig.convs.len(), 2);
-        assert_eq!(sig.convs[0].stride, 2);
-        assert_eq!(sig.convs[0].pad, Pad::Same);
-        assert_eq!(sig.convs[1].c, 4);
-        assert_eq!(sig.convs[1].out_hw(), (2, 2));
+        assert_eq!(sig.blocks.len(), 2);
+        assert_eq!(sig.blocks[0].geom.stride, 2);
+        assert_eq!(sig.blocks[0].geom.pad, Pad::Same);
+        assert!(!sig.blocks[0].bn && sig.blocks[0].pool.is_none() && sig.blocks[0].res == 0);
+        assert_eq!(sig.blocks[1].geom.c, 4);
+        assert_eq!(sig.blocks[1].geom.out_hw(), (2, 2));
         assert_eq!(sig.dense.dims, vec![2 * 2 * 8, 16, 5]);
         // gather signature recovers the same ladder from idx_ slots
         let evq = m.artifact("t_eval_q").unwrap();
         let gsig = cnn_sig(evq, "idx_c", "idx_w").unwrap();
         assert_eq!(gsig.dense.dims, sig.dense.dims);
+    }
+
+    #[test]
+    fn cnn_sig_recovers_bn_pool_and_residual_topology() {
+        let m = tiny_topo();
+        let spec = m.artifact("tt_fp_train").unwrap();
+        let sig = cnn_sig(spec, "p_c", "p_w").unwrap();
+        assert_eq!(sig.blocks.len(), 4);
+        assert!(sig.blocks[0].bn && !sig.blocks[1].bn);
+        assert_eq!(sig.blocks[2].res, 2);
+        let p2 = sig.blocks[2].pool.as_ref().unwrap();
+        assert_eq!((p2.op, p2.kh, p2.stride), (PoolOp::Max, 2, 2));
+        assert_eq!(p2.out_hw(), (4, 4));
+        // gap = full-window average over the 4×4 map
+        let p3 = sig.blocks[3].pool.as_ref().unwrap();
+        assert_eq!((p3.op, p3.kh, p3.kw, p3.stride), (PoolOp::Avg, 4, 4, 1));
+        assert_eq!(sig.dense.dims, vec![6, 5]);
+        assert_eq!(sig.blocks[3].out_len(), 2 * 6);
     }
 
     #[test]
@@ -525,5 +972,98 @@ mod tests {
         spec.attrs.insert("conv_strides".into(), "0,2".into());
         let err = cnn_sig(&spec, "p_c", "p_w").unwrap_err();
         assert!(format!("{err:?}").contains("stride 0"), "{err:?}");
+    }
+
+    #[test]
+    fn cnn_sig_rejects_broken_topology_attrs() {
+        let m = tiny();
+        // present-but-short conv_pool
+        let mut spec = m.artifact("t_eval").unwrap().clone();
+        spec.attrs.insert("conv_pool".into(), "max2".into());
+        let err = cnn_sig(&spec, "p_c", "p_w").unwrap_err();
+        assert!(format!("{err:?}").contains("conv_pool has no entry"), "{err:?}");
+        // unknown pool token
+        let mut spec = m.artifact("t_eval").unwrap().clone();
+        spec.attrs.insert("conv_pool".into(), "0,max3".into());
+        let err = cnn_sig(&spec, "p_c", "p_w").unwrap_err();
+        assert!(format!("{err:?}").contains("unknown conv_pool token"), "{err:?}");
+        // present-but-short conv_bn
+        let mut spec = m.artifact("t_eval").unwrap().clone();
+        spec.attrs.insert("conv_bn".into(), "1".into());
+        let err = cnn_sig(&spec, "p_c", "p_w").unwrap_err();
+        assert!(format!("{err:?}").contains("conv_bn has no entry"), "{err:?}");
+        // residual span 1 is out of range (r ≥ 2: a block cannot skip to
+        // its own input twice)
+        let mut spec = m.artifact("t_eval").unwrap().clone();
+        spec.attrs.insert("conv_res".into(), "0,1".into());
+        let err = cnn_sig(&spec, "p_c", "p_w").unwrap_err();
+        assert!(format!("{err:?}").contains("residual span 1 out of range"), "{err:?}");
+        // residual across a shape change (stride-2 convs) is rejected
+        let mut spec = m.artifact("t_eval").unwrap().clone();
+        spec.attrs.insert("conv_res".into(), "0,2".into());
+        let err = cnn_sig(&spec, "p_c", "p_w").unwrap_err();
+        assert!(format!("{err:?}").contains("residual skip shape mismatch"), "{err:?}");
+    }
+
+    #[test]
+    fn topo_train_step_runs_and_moves_running_stats() {
+        let m = tiny_topo();
+        let spec = m.artifact("tt_fp_train").unwrap();
+        let inputs = dummy_inputs(spec);
+        let mut ws = Workspace::new();
+        let outs = train_step(spec, &inputs, false, &mut ws).unwrap();
+        assert_eq!(outs.len(), spec.outputs.len());
+        let by_name: HashMap<&str, &Value> = spec
+            .outputs
+            .iter()
+            .map(|t| t.name.as_str())
+            .zip(outs.iter())
+            .collect();
+        let loss = by_name["loss"].as_f32().as_scalar();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        // the EMA moved the running variance off its all-ones init
+        // (batch variance of a non-constant conv output is not 1)
+        let rv = by_name["p_bnv0"].as_f32();
+        assert!(rv.data.iter().any(|&v| (v - 1.0).abs() > 1e-6), "{:?}", rv.data);
+        // γ picked up a gradient through Adam
+        let g0 = by_name["p_bng0"].as_f32();
+        assert!(g0.data.iter().any(|&v| (v - 1.0).abs() > 1e-9));
+        // Adam moment slots for the EMA-updated stats are echoed, not NaN
+        assert!(by_name["m_bnm0"].as_f32().data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn topo_lrp_step_emits_conv_relevances() {
+        let m = tiny_topo();
+        let spec = m.artifact("tt_lrp").unwrap();
+        let inputs = dummy_inputs(spec);
+        let mut ws = Workspace::new();
+        let outs = lrp_step(spec, &inputs, &mut ws).unwrap();
+        assert_eq!(outs.len(), spec.outputs.len());
+        for (t, v) in spec.outputs.iter().zip(outs.iter()) {
+            let f = v.as_f32();
+            assert_eq!(f.shape, t.shape, "{}", t.name);
+            assert!(f.data.iter().all(|x| x.is_finite()), "{} not finite", t.name);
+        }
+        // the conv relevances are not all dead
+        let rc0 = outs[spec.outputs.iter().position(|t| t.name == "r_c0").unwrap()].as_f32();
+        assert!(rc0.data.iter().any(|&x| x != 0.0), "r_c0 all zero");
+    }
+
+    #[test]
+    fn topo_eval_paths_run() {
+        let m = tiny_topo();
+        let mut ws = Workspace::new();
+        for art in ["tt_eval", "tt_eval_actq", "tt_eval_q"] {
+            let spec = m.artifact(art).unwrap();
+            let inputs = dummy_inputs(spec);
+            let outs = match art {
+                "tt_eval" => eval_step(spec, &inputs, false, &mut ws).unwrap(),
+                "tt_eval_actq" => eval_step(spec, &inputs, true, &mut ws).unwrap(),
+                _ => eval_gather_step(spec, &inputs, &mut ws).unwrap(),
+            };
+            let loss = outs[0].as_f32().as_scalar();
+            assert!(loss.is_finite(), "{art} loss {loss}");
+        }
     }
 }

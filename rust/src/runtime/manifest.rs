@@ -109,6 +109,22 @@ pub struct ArtifactSpec {
     pub attrs: BTreeMap<String, String>,
 }
 
+/// One conv layer of a [`Manifest::synthetic_convnet`] ladder: a 3×3
+/// SAME conv to `co` channels at `stride`, optionally BatchNormed
+/// (`bn`), followed by a pooling stage (`pool`: `"0"` none, `"max2"` /
+/// `"avg2"` 2×2 stride-2, `"gap"` global average) and optionally fed an
+/// identity residual skip (`res = 0` none, else the span `r ≥ 2`: this
+/// layer's pre-ReLU output adds the *input* of conv layer `i−r+1`).
+/// Per-layer op order: conv+bias → BN → +skip → ReLU → pool.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvLayer {
+    pub co: usize,
+    pub stride: usize,
+    pub bn: bool,
+    pub pool: &'static str,
+    pub res: usize,
+}
+
 /// The whole manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
@@ -305,22 +321,19 @@ impl Manifest {
 
     /// Conv ladder of the host CNN workload (`cnn_cifar`): `(cout,
     /// stride)` per 3×3 SAME conv layer. Downsampling is by strided convs
-    /// (32→16→8→4), keeping the host kernel set to conv + dense — the
-    /// CIFAR-shaped stand-in for the paper's VGG-slim stack (DESIGN.md
-    /// §2.3).
+    /// (32→16→8→4), keeping the kernel set to conv + dense — the
+    /// CIFAR-shaped plain-ladder workload alongside the pooled/BN models
+    /// below (DESIGN.md §2.3).
     pub const CNN_CIFAR_CONVS: [(usize, usize); 4] = [(16, 1), (32, 2), (64, 2), (64, 2)];
     /// Dense head of the host CNN workload: hidden width + classes.
     pub const CNN_CIFAR_FC: [usize; 2] = [128, 10];
 
-    /// Synthesize the manifest of a conv-ladder + dense-head CNN (the
-    /// conv twin of [`Manifest::synthetic_mlp`]): 3×3 SAME conv layers
-    /// `convs = [(cout, stride), ..]` over an `hw.0 × hw.1 × cin` NHWC
-    /// input, flattened into the dense ladder `fc = [hidden.., classes]`.
-    /// Emits the same six artifact kinds plus the shared `assign_<bucket>`
-    /// artifacts; conv geometry that tensor shapes cannot carry (stride,
-    /// padding) travels in the `conv_strides` / `conv_pads` artifact
-    /// attrs, which is what makes the host backend's signature-driven
-    /// execution work for CNNs.
+    /// Synthesize the manifest of a plain conv-ladder + dense-head CNN:
+    /// 3×3 SAME conv layers `convs = [(cout, stride), ..]` over an
+    /// `hw.0 × hw.1 × cin` NHWC input, flattened into the dense ladder
+    /// `fc = [hidden.., classes]` — [`Manifest::synthetic_convnet`] with
+    /// no BN, pooling or residual topology (and therefore no
+    /// `conv_bn`/`conv_pool`/`conv_res` attrs).
     pub fn synthetic_cnn(
         model: &str,
         hw: (usize, usize),
@@ -329,24 +342,122 @@ impl Manifest {
         fc: &[usize],
         batch: usize,
     ) -> Manifest {
-        assert!(!convs.is_empty(), "a CNN needs at least one conv layer");
+        let layers: Vec<ConvLayer> = convs
+            .iter()
+            .map(|&(co, stride)| ConvLayer { co, stride, bn: false, pool: "0", res: 0 })
+            .collect();
+        Self::synthetic_convnet(model, hw, cin, &layers, fc, batch)
+    }
+
+    /// The paper's VGG-slim CIFAR ladder (Fig. 10, and Fig. 8 with BN):
+    /// stride-1 3×3 SAME convs with 2×2 max-pool downsampling
+    /// (32→16→8→4), flattened into a `[128, 10]` dense head.
+    pub fn synthetic_vgg(model: &str, bn: bool, batch: usize) -> Manifest {
+        let l = |co: usize, pool: &'static str| ConvLayer { co, stride: 1, bn, pool, res: 0 };
+        let layers =
+            [l(16, "0"), l(16, "max2"), l(32, "0"), l(32, "max2"), l(64, "max2")];
+        Self::synthetic_convnet(model, (32, 32), 3, &layers, &[128, 10], batch)
+    }
+
+    /// [`Manifest::synthetic_vgg`] with BatchNorm after every conv — the
+    /// Fig. 8 `vgg_cifar_bn` workload.
+    pub fn synthetic_vgg_bn(model: &str, batch: usize) -> Manifest {
+        Self::synthetic_vgg(model, true, batch)
+    }
+
+    /// The Fig. 8 ResNet-style Pascal-VOC workload (`resnet_voc`): a BN
+    /// stem, three stages of identity-skip residual pairs (`res = 2`: the
+    /// block's second conv adds the first conv's input) with 2×2 max-pool
+    /// transitions, global average pooling, and a single 20-class dense
+    /// head.
+    pub fn synthetic_resnet(model: &str, batch: usize) -> Manifest {
+        let c = |co: usize, pool: &'static str, res: usize| ConvLayer {
+            co,
+            stride: 1,
+            bn: true,
+            pool,
+            res,
+        };
+        let layers = [
+            c(16, "0", 0), // stem
+            c(16, "0", 0),
+            c(16, "max2", 2), // stage 1 residual pair, then downsample
+            c(32, "0", 0), // transition
+            c(32, "0", 0),
+            c(32, "max2", 2), // stage 2
+            c(64, "0", 0), // transition
+            c(64, "0", 0),
+            c(64, "gap", 2), // stage 3, then global average pool
+        ];
+        Self::synthetic_convnet(model, (32, 32), 3, &layers, &[20], batch)
+    }
+
+    /// Synthesize the manifest of a general conv-net (the conv twin of
+    /// [`Manifest::synthetic_mlp`]): 3×3 SAME conv layers over an
+    /// `hw.0 × hw.1 × cin` NHWC input — each optionally BatchNormed,
+    /// pooled and/or fed an identity residual skip — flattened into the
+    /// dense ladder `fc = [hidden.., classes]`. Emits the same six
+    /// artifact kinds plus the shared `assign_<bucket>` artifacts.
+    ///
+    /// Geometry and topology that tensor shapes cannot carry travel in
+    /// artifact attrs, which is what makes the host backend's
+    /// signature-driven execution work for CNNs: `conv_strides` /
+    /// `conv_pads` always, and — only when some layer uses the feature,
+    /// so plain-ladder manifests are byte-identical to what
+    /// [`Manifest::synthetic_cnn`] always produced — `conv_bn`
+    /// (`0`/`1`), `conv_pool` (`0`/`max2`/`avg2`/`gap`) and `conv_res`
+    /// (`0` or the residual span `r ≥ 2`; the skip source is the *input*
+    /// of conv layer `i−r+1`, identity skips only).
+    ///
+    /// A BN layer `i` contributes four non-quantized `[co]` params:
+    /// `bng<i>`/`bnb<i>` (γ init 1, β init 0 — Adam-trained) and
+    /// `bnm<i>`/`bnv<i>` (running mean/var, init 0/1 — EMA-updated by the
+    /// train artifacts, consumed by eval/LRP and the fold-into-conv
+    /// inference path).
+    pub fn synthetic_convnet(
+        model: &str,
+        hw: (usize, usize),
+        cin: usize,
+        layers: &[ConvLayer],
+        fc: &[usize],
+        batch: usize,
+    ) -> Manifest {
+        assert!(!layers.is_empty(), "a CNN needs at least one conv layer");
         assert!(!fc.is_empty(), "a CNN needs a dense head");
         let (mut h, mut w) = hw;
         let mut c = cin;
         let mut params = Vec::new();
-        for (i, &(cout, stride)) in convs.iter().enumerate() {
+        // (h, w, c) feeding each conv layer — residual shape validation
+        let mut in_dims: Vec<(usize, usize, usize)> = Vec::with_capacity(layers.len());
+        for (i, l) in layers.iter().enumerate() {
+            in_dims.push((h, w, c));
             params.push(ParamSpec {
                 name: format!("c{i}"),
-                shape: vec![3, 3, c, cout],
+                shape: vec![3, 3, c, l.co],
                 init: Init::HeIn,
                 quantize: true,
             });
             params.push(ParamSpec {
                 name: format!("cb{i}"),
-                shape: vec![cout],
+                shape: vec![l.co],
                 init: Init::Zeros,
                 quantize: false,
             });
+            if l.bn {
+                for (name, init) in [
+                    (format!("bng{i}"), Init::Ones),
+                    (format!("bnb{i}"), Init::Zeros),
+                    (format!("bnm{i}"), Init::Zeros),
+                    (format!("bnv{i}"), Init::Ones),
+                ] {
+                    params.push(ParamSpec {
+                        name,
+                        shape: vec![l.co],
+                        init,
+                        quantize: false,
+                    });
+                }
+            }
             let g = crate::linalg::Conv2d {
                 n: batch,
                 h,
@@ -354,15 +465,37 @@ impl Manifest {
                 c,
                 kh: 3,
                 kw: 3,
-                co: cout,
-                stride,
+                co: l.co,
+                stride: l.stride,
                 pad: crate::linalg::Pad::Same,
             };
             let (oh, ow) = g.out_hw();
             assert!(oh > 0 && ow > 0, "conv ladder collapsed the spatial dims");
             h = oh;
             w = ow;
-            c = cout;
+            c = l.co;
+            if l.res > 0 {
+                assert!(l.res >= 2 && l.res <= i + 1, "layer {i}: bad residual span {}", l.res);
+                let src = in_dims[i + 1 - l.res];
+                assert_eq!(
+                    src,
+                    (h, w, c),
+                    "layer {i}: residual skip shape mismatch (identity skips only)"
+                );
+            }
+            match l.pool {
+                "0" => {}
+                "max2" | "avg2" => {
+                    assert!(h >= 2 && w >= 2, "layer {i}: 2×2 pool needs h,w >= 2");
+                    h = (h - 2) / 2 + 1;
+                    w = (w - 2) / 2 + 1;
+                }
+                "gap" => {
+                    h = 1;
+                    w = 1;
+                }
+                other => panic!("layer {i}: unknown pool token {other}"),
+            }
         }
         let flat = h * w * c;
         let mut dims = vec![flat];
@@ -418,12 +551,25 @@ impl Manifest {
         };
         let eval_outs = vec![f32s("loss", vec![]), f32s("correct", vec![])];
 
-        let strides_attr = convs
-            .iter()
-            .map(|&(_, s)| s.to_string())
-            .collect::<Vec<_>>()
-            .join(",");
-        let pads_attr = vec!["same"; convs.len()].join(",");
+        let join = |f: &dyn Fn(&ConvLayer) -> String| {
+            layers.iter().map(f).collect::<Vec<_>>().join(",")
+        };
+        let mut conv_attrs = BTreeMap::from([
+            ("conv_strides".to_string(), join(&|l| l.stride.to_string())),
+            ("conv_pads".to_string(), vec!["same"; layers.len()].join(",")),
+        ]);
+        // topology attrs only when some layer uses the feature, so plain
+        // ladders stay byte-identical to the historical synthetic_cnn form
+        if layers.iter().any(|l| l.bn) {
+            let v = join(&|l| if l.bn { "1" } else { "0" }.to_string());
+            conv_attrs.insert("conv_bn".to_string(), v);
+        }
+        if layers.iter().any(|l| l.pool != "0") {
+            conv_attrs.insert("conv_pool".to_string(), join(&|l| l.pool.to_string()));
+        }
+        if layers.iter().any(|l| l.res > 0) {
+            conv_attrs.insert("conv_res".to_string(), join(&|l| l.res.to_string()));
+        }
         let mut artifacts = BTreeMap::new();
         let mut add = |name: String, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
             artifacts.insert(
@@ -433,10 +579,7 @@ impl Manifest {
                     name,
                     inputs,
                     outputs,
-                    attrs: BTreeMap::from([
-                        ("conv_strides".to_string(), strides_attr.clone()),
-                        ("conv_pads".to_string(), pads_attr.clone()),
-                    ]),
+                    attrs: conv_attrs.clone(),
                 },
             );
         };
@@ -814,6 +957,63 @@ mod tests {
         let x = ev.inputs.iter().find(|s| s.name == "x").unwrap();
         assert_eq!(x.shape, vec![2, 8, 8, 3]);
         assert!(m.artifact("assign_1024").is_ok());
+    }
+
+    #[test]
+    fn plain_ladder_emits_no_topology_attrs() {
+        let m = Manifest::synthetic_cnn("tcnn", (8, 8), 3, &[(4, 2), (8, 2)], &[16, 5], 2);
+        let a = m.artifact("tcnn_eval").unwrap();
+        for key in ["conv_bn", "conv_pool", "conv_res"] {
+            assert!(!a.attrs.contains_key(key), "plain ladder leaked {key}");
+        }
+    }
+
+    #[test]
+    fn vgg_bn_ladder_carries_bn_and_pool_attrs() {
+        let m = Manifest::synthetic_vgg_bn("v", 2);
+        let spec = m.model("v").unwrap();
+        // 5 convs × (c, cb + 4 BN params) + 2 dense layers × (w, b)
+        assert_eq!(spec.params.len(), 5 * 6 + 4);
+        let bng0 = spec.params.iter().find(|p| p.name == "bng0").unwrap();
+        assert_eq!(bng0.shape, vec![16]);
+        assert!(!bng0.quantize, "BN params stay fp");
+        assert_eq!(bng0.init, Init::Ones);
+        let bnv4 = spec.params.iter().find(|p| p.name == "bnv4").unwrap();
+        assert_eq!((bnv4.shape.clone(), bnv4.init), (vec![64], Init::Ones));
+        // pooled ladder: 32→16→8→4, flat = 4·4·64 = 1024
+        let w0 = spec.params.iter().find(|p| p.name == "w0").unwrap();
+        assert_eq!(w0.shape, vec![1024, 128]);
+        let a = m.artifact("v_fp_train").unwrap();
+        assert_eq!(a.attrs["conv_strides"], "1,1,1,1,1");
+        assert_eq!(a.attrs["conv_bn"], "1,1,1,1,1");
+        assert_eq!(a.attrs["conv_pool"], "0,max2,0,max2,max2");
+        assert!(!a.attrs.contains_key("conv_res"));
+        // BN running stats come back as train outputs (EMA path)
+        assert!(a.outputs.iter().any(|t| t.name == "p_bnm0"));
+        // but are not quantized: no idx_/cb_/r_ slots for them
+        let lrp = m.artifact("v_lrp").unwrap();
+        assert!(lrp.outputs.iter().all(|t| !t.name.contains("bn")));
+    }
+
+    #[test]
+    fn resnet_ladder_carries_residual_spans() {
+        let m = Manifest::synthetic_resnet("r", 2);
+        let spec = m.model("r").unwrap();
+        assert_eq!(spec.classes, 20);
+        // gap collapses to 1·1·64, single dense layer 64→20
+        let w0 = spec.params.iter().find(|p| p.name == "w0").unwrap();
+        assert_eq!(w0.shape, vec![64, 20]);
+        let a = m.artifact("r_eval_q").unwrap();
+        assert_eq!(a.attrs["conv_res"], "0,0,2,0,0,2,0,0,2");
+        assert_eq!(a.attrs["conv_pool"], "0,0,max2,0,0,max2,0,0,gap");
+        assert_eq!(a.attrs["conv_bn"], "1,1,1,1,1,1,1,1,1");
+    }
+
+    #[test]
+    #[should_panic(expected = "residual skip shape mismatch")]
+    fn residual_across_a_channel_change_is_rejected() {
+        let l = |co: usize, res: usize| ConvLayer { co, stride: 1, bn: false, pool: "0", res };
+        Manifest::synthetic_convnet("bad", (8, 8), 3, &[l(4, 0), l(8, 2)], &[5], 2);
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::linalg::with_thread_workspace;
 use crate::tensor::Value;
 pub use crate::linalg::Workspace;
 pub use host::HostBackend;
-pub use manifest::{ArtifactSpec, DType, Init, Manifest, ModelSpec, ParamSpec, TensorSpec};
+pub use manifest::{ArtifactSpec, ConvLayer, DType, Init, Manifest, ModelSpec, ParamSpec, TensorSpec};
 pub use pjrt::{smoke, PjrtBackend};
 
 /// True when the vendored offline `xla` stand-in is active (no PJRT device

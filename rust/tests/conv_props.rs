@@ -3,8 +3,8 @@
 //! 0-sized dims — the blocked conv kernels must agree with the retained
 //! naive direct kernels (`linalg::reference`) **exactly**, the backward
 //! kernels must be true adjoints of the forward, and the epsilon-rule
-//! conv LRP must conserve relevance (mirroring
-//! `python/tests/test_lrp_properties.py`).
+//! and α-β-rule (`alpha_beta_*`) conv LRP must conserve relevance
+//! (mirroring `python/tests/test_lrp_properties.py`).
 //!
 //! Forward/backward comparisons use `assert_eq!`-style exact equality
 //! and pin the *deterministic tier* (`DET`: scalar micro-kernel): on that
@@ -305,6 +305,167 @@ fn lrp_conv_rw_conserves_relevance() {
         }
         if (sum_rin - total).abs() > tol {
             return Err(format!("Σ R_in = {sum_rin} vs Σ R_out = {total} ({g:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn alpha_beta_conv_lrp_conserves_relevance() {
+    // the α-β rule (α+β=1) conserves relevance through a bias-free conv
+    // layer: Σ R_w ≈ Σ R_in ≈ Σ R_out. Each output redistributes
+    // R_j·(α·z⁺/stab(z⁺) + β·z⁻/stab(z⁻)) ≈ R_j·(α+β), so — exactly as
+    // the epsilon suite does — outputs whose z⁺ or z⁻ is stabilizer-scale
+    // get zero relevance instead of asserting through the eps spike. The
+    // signed parts are recomputed here with the *naive* direct kernels,
+    // so the check is independent of the blocked composition under test.
+    let mut ws = Workspace::new();
+    check("α-β conv LRP conservation", 30, |rng| {
+        let g = Conv2d {
+            n: 1 + rng.below(2),
+            h: 4 + rng.below(4),
+            w: 4 + rng.below(4),
+            c: 2 + rng.below(2),
+            kh: 3,
+            kw: 3,
+            co: 3 + rng.below(3),
+            stride: 1 + rng.below(2),
+            pad: Pad::Same,
+        };
+        let a = normal_vec(rng, g.in_len(), 1.0);
+        let w = normal_vec(rng, g.filter_len(), 0.4);
+        let split = |v: &[f32]| -> (Vec<f32>, Vec<f32>) {
+            (
+                v.iter().map(|&x| x.max(0.0)).collect(),
+                v.iter().map(|&x| x.min(0.0)).collect(),
+            )
+        };
+        let (ap, an) = split(&a);
+        let (wp, wn) = split(&w);
+        let add = |x: Vec<f32>, y: Vec<f32>| -> Vec<f32> {
+            x.iter().zip(&y).map(|(&u, &v)| u + v).collect()
+        };
+        let zp = add(
+            reference::conv2d_naive(&ap, &wp, &g),
+            reference::conv2d_naive(&an, &wn, &g),
+        );
+        let zn = add(
+            reference::conv2d_naive(&ap, &wn, &g),
+            reference::conv2d_naive(&an, &wp, &g),
+        );
+        let r: Vec<f32> = zp
+            .iter()
+            .zip(&zn)
+            .map(|(&p, &n)| {
+                if p.abs() < 1e-2 || n.abs() < 1e-2 {
+                    0.0
+                } else {
+                    rng.range(0.0, 1.0)
+                }
+            })
+            .collect();
+
+        let mut rw = vec![0.0f32; g.filter_len()];
+        let mut rin = vec![0.0f32; g.in_len()];
+        linalg::lrp_conv_ab_with(
+            DET,
+            &mut ws,
+            &a,
+            &w,
+            &r,
+            &g,
+            linalg::LRP_ALPHA,
+            linalg::LRP_BETA,
+            &mut rw,
+            &mut rin,
+        );
+
+        let total: f64 = r.iter().map(|&v| v as f64).sum();
+        let sum_rw: f64 = rw.iter().map(|&v| v as f64).sum();
+        let sum_rin: f64 = rin.iter().map(|&v| v as f64).sum();
+        // |β|·R/stab amplifies roundoff relative to the epsilon rule;
+        // the tolerance scales with the α/β magnitudes
+        let tol = (linalg::LRP_ALPHA.abs() + linalg::LRP_BETA.abs()) as f64
+            * 1e-2
+            * (1.0 + total.abs());
+        if (sum_rw - total).abs() > tol {
+            return Err(format!("Σ R_w = {sum_rw} vs Σ R_out = {total} ({g:?})"));
+        }
+        if (sum_rin - total).abs() > tol {
+            return Err(format!("Σ R_in = {sum_rin} vs Σ R_out = {total} ({g:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn alpha_beta_views_sum_identically_for_any_conserving_pair() {
+    // Σ R_w = Σ R_in for *every* (α, 1−α) pair and geometry — both views
+    // regroup the same product terms, with no stabilizer caveat needed
+    let mut ws = Workspace::new();
+    check("α-β R_w/R_in view identity", 30, |rng| {
+        let g = rand_geom(rng);
+        if g.out_len() == 0 || g.in_len() == 0 || g.filter_len() == 0 {
+            return Ok(());
+        }
+        let a = normal_vec(rng, g.in_len(), 1.0);
+        let w = normal_vec(rng, g.filter_len(), 0.5);
+        let r = normal_vec(rng, g.out_len(), 1.0);
+        let alpha = rng.range(0.5, 3.0);
+        let beta = 1.0 - alpha;
+        let mut rw = vec![0.0f32; g.filter_len()];
+        let mut rin = vec![0.0f32; g.in_len()];
+        linalg::lrp_conv_ab_with(DET, &mut ws, &a, &w, &r, &g, alpha, beta, &mut rw, &mut rin);
+        if rw.iter().chain(rin.iter()).any(|v| !v.is_finite()) {
+            return Err(format!("non-finite relevance ({g:?})"));
+        }
+        let sum_rw: f64 = rw.iter().map(|&v| v as f64).sum();
+        let sum_rin: f64 = rin.iter().map(|&v| v as f64).sum();
+        let tol = 1e-3 * (1.0 + sum_rw.abs().max(sum_rin.abs()));
+        if (sum_rw - sum_rin).abs() > tol {
+            return Err(format!("Σ R_w = {sum_rw} vs Σ R_in = {sum_rin} (α={alpha}, {g:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn alpha_beta_with_alpha_one_degenerates_to_the_z_plus_rule() {
+    // (α, β) = (1, 0): the negative branch must contribute nothing, and
+    // on all-positive operands the rule coincides with the epsilon rule
+    // (z⁻ = 0 ⇒ z⁺ = z), up to the shared stabilizer
+    let mut ws = Workspace::new();
+    check("α=1 z⁺ degeneration", 20, |rng| {
+        let g = Conv2d {
+            n: 1,
+            h: 3 + rng.below(3),
+            w: 3 + rng.below(3),
+            c: 1 + rng.below(3),
+            kh: 1 + rng.below(3),
+            kw: 1 + rng.below(3),
+            co: 1 + rng.below(4),
+            stride: 1,
+            pad: Pad::Same,
+        };
+        let a: Vec<f32> = (0..g.in_len()).map(|_| rng.range(0.1, 1.0)).collect();
+        let w: Vec<f32> = (0..g.filter_len()).map(|_| rng.range(0.1, 0.5)).collect();
+        let r: Vec<f32> = (0..g.out_len()).map(|_| rng.range(0.0, 1.0)).collect();
+        let mut rw = vec![0.0f32; g.filter_len()];
+        let mut rin = vec![0.0f32; g.in_len()];
+        linalg::lrp_conv_ab_with(DET, &mut ws, &a, &w, &r, &g, 1.0, 0.0, &mut rw, &mut rin);
+
+        // epsilon-rule reference on the same (all-positive) layer
+        let z = reference::conv2d_naive(&a, &w, &g);
+        let s: Vec<f32> = r.iter().zip(&z).map(|(&rv, &zv)| rv / stabilize(zv)).collect();
+        let mut rin_eps = vec![0.0f32; g.in_len()];
+        linalg::conv2d_bwd_input(&mut ws, &s, &w, &g, &mut rin_eps);
+        for (rv, &av) in rin_eps.iter_mut().zip(&a) {
+            *rv *= av;
+        }
+        for (i, (&got, &want)) in rin.iter().zip(&rin_eps).enumerate() {
+            if (got - want).abs() > 1e-4 * (1.0 + want.abs()) {
+                return Err(format!("R_in[{i}] = {got} vs epsilon {want} ({g:?})"));
+            }
         }
         Ok(())
     });

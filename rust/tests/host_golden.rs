@@ -6,7 +6,7 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use ecqx::linalg::{self, Conv2d, Epilogue, Pad, Workspace};
+use ecqx::linalg::{self, Conv2d, Epilogue, Pad, Pool2d, PoolOp, Workspace, BN_EPS};
 use ecqx::quant::assign_raw;
 use ecqx::runtime::host::{lrp_dense_rw, qdense, qdense_gather};
 use ecqx::util::prop::assert_close;
@@ -195,6 +195,126 @@ fn golden_conv2d_gather_matches_python_reference() {
         &mut y,
     );
     assert_close(&y, &fx.f32s("y"), 1e-5).unwrap();
+}
+
+/// Pool geometry from the fixture's NHWC input shape (2×2 stride 2 —
+/// the window the generators use).
+fn pool_geom(fx: &Fixture, op: PoolOp) -> Pool2d {
+    let xs = fx.shape("x");
+    assert_eq!(xs.len(), 4, "x must be NHWC");
+    Pool2d { n: xs[0], h: xs[1], w: xs[2], c: xs[3], kh: 2, kw: 2, stride: 2, op }
+}
+
+#[test]
+fn golden_maxpool2d_matches_python_reference() {
+    let fx = Fixture::load("maxpool2d");
+    let g = pool_geom(&fx, PoolOp::Max);
+    let x = fx.f32s("x");
+    let mut y = vec![0.0f32; g.out_len()];
+    let mut argmax = vec![0usize; g.out_len()];
+    linalg::maxpool2d(&g, &x, &mut argmax, &mut y);
+    // forward and WTA backward copy/scatter values untouched, and the
+    // %.9g fixture format round-trips f32 exactly — so bitwise equality
+    assert_eq!(y, fx.f32s("y"), "maxpool forward");
+    let mut dx = vec![f32::NAN; g.in_len()];
+    linalg::maxpool2d_bwd(&g, &argmax, &fx.f32s("dy"), &mut dx);
+    assert_eq!(dx, fx.f32s("dx"), "maxpool WTA backward");
+}
+
+#[test]
+fn golden_avgpool2d_matches_python_reference() {
+    let fx = Fixture::load("avgpool2d");
+    let g = pool_geom(&fx, PoolOp::Avg);
+    let x = fx.f32s("x");
+    let mut y = vec![0.0f32; g.out_len()];
+    linalg::avgpool2d(&g, &x, &mut y);
+    assert_close(&y, &fx.f32s("y"), 1e-5).unwrap();
+    let mut dx = vec![f32::NAN; g.in_len()];
+    linalg::avgpool2d_bwd(&g, &fx.f32s("dy"), &mut dx);
+    assert_close(&dx, &fx.f32s("dx"), 1e-5).unwrap();
+    let mut rin = vec![f32::NAN; g.in_len()];
+    linalg::avgpool2d_lrp(&g, &x, &fx.f32s("r"), &mut rin);
+    assert_close(&rin, &fx.f32s("rin"), 1e-5).unwrap();
+}
+
+#[test]
+fn golden_bn_fold_matches_python_reference() {
+    let fx = Fixture::load("bn_fold");
+    let c = fx.shape("gamma")[0];
+    let w = fx.f32s("w");
+    let mut wf = vec![f32::NAN; w.len()];
+    let mut bf = vec![f32::NAN; c];
+    linalg::bn_fold(
+        &fx.f32s("gamma"),
+        &fx.f32s("beta"),
+        &fx.f32s("mean"),
+        &fx.f32s("var"),
+        BN_EPS,
+        &w,
+        &fx.f32s("b"),
+        &mut wf,
+        &mut bf,
+    );
+    assert_close(&wf, &fx.f32s("wf"), 1e-5).unwrap();
+    assert_close(&bf, &fx.f32s("bf"), 1e-5).unwrap();
+}
+
+#[test]
+fn golden_bn_train_matches_python_reference() {
+    let fx = Fixture::load("bn_train");
+    let (rows, c) = (fx.shape("z")[0], fx.shape("z")[1]);
+    let z = fx.f32s("z");
+    let gamma = fx.f32s("gamma");
+    let mut y = vec![0.0f32; rows * c];
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    linalg::bn_train_fwd(&z, c, &gamma, &fx.f32s("beta"), BN_EPS, &mut y, &mut mean, &mut var);
+    assert_close(&y, &fx.f32s("y"), 1e-5).unwrap();
+    assert_close(&mean, &fx.f32s("mean"), 1e-5).unwrap();
+    assert_close(&var, &fx.f32s("var"), 1e-5).unwrap();
+    let mut dz = vec![0.0f32; rows * c];
+    let mut dgamma = vec![0.0f32; c];
+    let mut dbeta = vec![0.0f32; c];
+    linalg::bn_train_bwd(
+        &z,
+        c,
+        &gamma,
+        &mean,
+        &var,
+        BN_EPS,
+        &fx.f32s("dy"),
+        &mut dz,
+        &mut dgamma,
+        &mut dbeta,
+    );
+    assert_close(&dz, &fx.f32s("dz"), 1e-5).unwrap();
+    assert_close(&dgamma, &fx.f32s("dgamma"), 1e-5).unwrap();
+    assert_close(&dbeta, &fx.f32s("dbeta"), 1e-5).unwrap();
+}
+
+#[test]
+fn golden_lrp_conv_ab_matches_python_reference() {
+    let fx = Fixture::load("lrp_conv_ab");
+    let g = conv_geom(&fx, "a", "w", 1, Pad::Same);
+    let mut ws = Workspace::new();
+    let mut rw = vec![0.0f32; g.filter_len()];
+    let mut rin = vec![0.0f32; g.in_len()];
+    linalg::lrp_conv_ab(
+        &mut ws,
+        &fx.f32s("a"),
+        &fx.f32s("w"),
+        &fx.f32s("r"),
+        &g,
+        linalg::LRP_ALPHA,
+        linalg::LRP_BETA,
+        &mut rw,
+        &mut rin,
+    );
+    // the stabilized divisions amplify gemm accumulation-order noise a
+    // touch beyond the plain-conv fixtures; the generator keeps |z±|
+    // > 0.05 away from the stabilizer, 5e-5 absorbs the rest
+    assert_close(&rw, &fx.f32s("rw"), 5e-5).unwrap();
+    assert_close(&rin, &fx.f32s("rin"), 5e-5).unwrap();
 }
 
 #[test]

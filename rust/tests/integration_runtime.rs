@@ -468,6 +468,62 @@ fn host_cnn_lrp_emits_finite_per_layer_relevances() {
     assert_eq!(outs["r_c0"].shape(), &[3, 3, 3, 4]);
 }
 
+/// The accept/refuse contract (`exp::ALL_MODELS`): every model name
+/// `exp::model_exp` accepts must run on the host backend — one fp_train
+/// step plus one eval per model against the default manifest — and
+/// names outside the list must be refused. Guards against re-growing
+/// "registered but hollow" models (the old `vgg_*`/`resnet_*` state).
+#[test]
+fn host_runs_every_model_the_experiment_registry_accepts() {
+    let eng = Engine::host();
+    for m in ecqx::exp::ALL_MODELS {
+        assert_eq!(ecqx::exp::model_exp(m.name).unwrap().name, m.name);
+        let spec = eng
+            .manifest
+            .model(m.name)
+            .unwrap_or_else(|e| panic!("{}: accepted but not in the default manifest: {e}", m.name))
+            .clone();
+        // one real batch from the model's own dataset family (lazy
+        // synthetic generators — constructing the full-size set is free)
+        let (train, _val) = ecqx::exp::datasets(&m, 41);
+        let dl = DataLoader::new(&train, spec.batch, false, 41);
+        let batch = dl.epoch(0).next().unwrap();
+        let state = ModelState::init(&spec, 41);
+
+        let scalars = Scalars { t: 1.0, lr: 1e-3, gs: 1.0, ..Default::default() };
+        let art = eng.manifest.artifact(&format!("{}_fp_train", m.name)).unwrap().clone();
+        let inputs =
+            bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &scalars).unwrap();
+        let outs = eng
+            .call_named(&art.name, &inputs)
+            .unwrap_or_else(|e| panic!("{}: fp_train refused on host: {e}", m.name));
+        let loss = outs["loss"].as_f32().as_scalar();
+        assert!(loss.is_finite() && loss > 0.0, "{}: fp_train loss {loss}", m.name);
+        for (name, v) in &outs {
+            if let Value::F32(t) = v {
+                assert!(
+                    t.data.iter().all(|x| x.is_finite()),
+                    "{}: fp_train output {name} not finite",
+                    m.name
+                );
+            }
+        }
+
+        let art = eng.manifest.artifact(&format!("{}_eval", m.name)).unwrap().clone();
+        let inputs =
+            bind_inputs(&art, &state, ParamSource::Fp, Some(&batch), &Scalars::default())
+                .unwrap();
+        let outs = eng
+            .call_named(&art.name, &inputs)
+            .unwrap_or_else(|e| panic!("{}: eval refused on host: {e}", m.name));
+        assert!(outs["loss"].as_f32().as_scalar().is_finite(), "{}: eval loss", m.name);
+    }
+    // the refuse half: names outside ALL_MODELS must not be accepted
+    for bogus in ["mlp_tiny", "vgg", "resnet", ""] {
+        assert!(ecqx::exp::model_exp(bogus).is_err(), "{bogus:?} must be refused");
+    }
+}
+
 #[test]
 fn host_evaluate_many_fans_out_and_matches_serial() {
     let eng = host_engine();

@@ -13,7 +13,7 @@
 
 use ecqx::coordinator::binder::ParamSource;
 use ecqx::coordinator::campaign::TrialSpec;
-use ecqx::coordinator::serve::{http_get, ServeOptions, Server};
+use ecqx::coordinator::serve::{http_get, run_bench, ServeOptions, Server};
 use ecqx::coordinator::sweep::{SweepConfig, SweepRunner};
 use ecqx::coordinator::trainer::{evaluate, Pretrainer};
 use ecqx::coordinator::{AssignConfig, Method, QatConfig};
@@ -73,6 +73,39 @@ fn routes_health_unknown_and_shutdown() {
         assert_eq!(code, 500, "{body}");
         let (code, body) = http_get(addr, "/shutdown").unwrap();
         assert_eq!((code, body.as_str()), (200, "shutting down\n"));
+        srv.join().expect("server thread panicked").unwrap();
+    });
+}
+
+/// `run_bench` degenerate inputs: zero requests per client must be a
+/// clean error (not a percentile over an empty latency vector), while a
+/// small real run returns a coherent summary.
+#[test]
+fn bench_rejects_zero_requests_and_summarizes_real_ones() {
+    let engine = Engine::host_with(Manifest::synthetic_mlp("mlp_tiny", &[360, 32, 12], 32));
+    let spec = engine.manifest.model("mlp_tiny").unwrap().clone();
+    let train = GscDataset::new(64, 5, true);
+    let val = GscDataset::new(32, 5, false);
+    let train_dl = DataLoader::new(&train, spec.batch, true, 5);
+    let val_dl = DataLoader::new(&val, spec.batch, false, 5);
+    let runner = SweepRunner::new(&engine, ModelState::init(&spec, 5));
+    let opts = ServeOptions { port: 0, jobs: 1, max_batch: 2, verbose: false };
+    let server = Server::bind(&runner, tiny_cfg(), &train_dl, &val_dl, opts).unwrap();
+    let addr = server.local_addr();
+
+    std::thread::scope(|scope| {
+        let srv = scope.spawn(|| server.run());
+        let err = run_bench(addr, "/healthz", 2, 0).unwrap_err();
+        assert!(
+            format!("{err:?}").contains("zero requests"),
+            "want the empty-bench guard, got {err:?}"
+        );
+        let summary = run_bench(addr, "/healthz", 2, 3).unwrap();
+        assert_eq!((summary.clients, summary.requests), (2, 6));
+        assert!(summary.p50_s.is_finite() && summary.p99_s >= summary.p50_s);
+        assert!(summary.req_s > 0.0);
+        let (code, _) = http_get(addr, "/shutdown").unwrap();
+        assert_eq!(code, 200);
         srv.join().expect("server thread panicked").unwrap();
     });
 }
